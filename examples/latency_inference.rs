@@ -1,0 +1,59 @@
+//! §7 scenario: single-query inference on memory-bound accelerators — the
+//! model does NOT fit on one device, so a split is mandatory; minimize
+//! latency with the Fig.-3 IP and compare the baselines.
+//!
+//! ```sh
+//! cargo run --release --example latency_inference
+//! ```
+
+use dnn_partition::algos::{dp, ip_latency, objective};
+use dnn_partition::baselines::{greedy, scotch_like};
+use dnn_partition::workloads::{self, bert};
+use std::time::Duration;
+
+fn main() {
+    let graph = bert::bert_op_graph(3, false);
+    let sc = workloads::latency_scenario(&graph);
+    let model_mb: f64 = graph.nodes.iter().map(|n| n.mem).sum();
+    println!(
+        "BERT-3 op graph, model {:.0} MB; {} accelerators x {:.0} MB (total {:.1}x model)",
+        model_mb,
+        sc.k,
+        sc.mem_cap,
+        sc.k as f64 * sc.mem_cap / model_mb
+    );
+
+    // baselines
+    let g = greedy::solve(&graph, &sc);
+    println!("greedy:       latency {:.2}", g.objective);
+    let sco = scotch_like::solve_latency(&graph, &sc, 7);
+    let viol = scotch_like::memory_violation(&graph, &sc, &sco);
+    println!(
+        "scotch-like:  latency {:.2}{}",
+        sco.objective,
+        if viol > 1.0 {
+            format!("  (memory violated by {:.0}%)", (viol - 1.0) * 100.0)
+        } else {
+            String::new()
+        }
+    );
+    if let Ok(ml) = dp::solve(&graph, &sc) {
+        println!("max-load DP:  latency {:.2}", objective::latency(&graph, &sc, &ml));
+    }
+
+    // the latency IP
+    let opts = ip_latency::LatencyIpOptions {
+        time_limit: Duration::from_secs(15),
+        warm_starts: vec![g],
+        ..Default::default()
+    };
+    let r = ip_latency::solve(&graph, &sc, &opts).expect("latency IP failed");
+    println!(
+        "IP (latency): latency {:.2}  [status {:?}, gap {:.1}%, incumbent at {:?}]",
+        r.placement.objective,
+        r.status,
+        r.gap * 100.0,
+        r.incumbent_at
+    );
+    r.placement.check_memory(&graph, &sc).expect("IP split must respect memory");
+}

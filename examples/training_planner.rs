@@ -1,0 +1,57 @@
+//! Pipelined training planning (§5.3): BERT-24 layer graph, PipeDream and
+//! GPipe schedules, with the Appendix-C extensions (replication,
+//! interleaved communication, hierarchy).
+//!
+//! ```sh
+//! cargo run --release --example training_planner
+//! ```
+
+use dnn_partition::algos::{dp, hierarchy, replication};
+use dnn_partition::coordinator::placement::{CommModel, Scenario, TrainSchedule};
+use dnn_partition::pipeline::sim::{self, Schedule};
+use dnn_partition::workloads::bert;
+
+fn main() {
+    let graph = bert::bert24_layer_graph(true);
+    println!("BERT-24 training layer graph: {} nodes", graph.n());
+
+    // 1. PipeDream-objective optimal split on 6 devices
+    let sc = Scenario::new(6, 1, 16.0 * 1024.0);
+    let p = dp::solve(&graph, &sc).unwrap();
+    println!("DP split, PipeDream objective max(FW+BW): TPS = {:.3}", p.objective);
+
+    // 2. simulate both schedules on the same split (App. A: close together)
+    for (sched, name) in [(Schedule::PipeDream1F1B, "1F1B"), (Schedule::GPipe, "GPipe")] {
+        let r = sim::simulate(&graph, &sc, &p, sched, 24);
+        println!("  simulated {name:<6} steady-state TPS = {:.3}", r.steady_tps);
+    }
+
+    // 3. App. C.1 — interleaved communication (load = max(compute, comm))
+    let sc_overlap = Scenario { comm_model: CommModel::Overlap, ..sc.clone() };
+    let p2 = dp::solve(&graph, &sc_overlap).unwrap();
+    println!("with comm/compute overlap: TPS = {:.3}", p2.objective);
+
+    // 4. App. C.2 — replication (hybrid model/data parallel)
+    let sc_rep = Scenario { bandwidth: 1000.0, ..sc.clone() };
+    let rep = replication::solve(&graph, &sc_rep, 1_000_000).unwrap();
+    let replicated_stages = rep.stage_devices.iter().filter(|d| d.len() > 1).count();
+    println!(
+        "replication DP: TPS = {:.3} ({} stages replicated)",
+        rep.objective, replicated_stages
+    );
+
+    // 5. App. C.3 — two clusters of 3 with a 4x slower inter-cluster link
+    let hier = hierarchy::Hierarchy {
+        num_clusters: 2,
+        accs_per_cluster: 3,
+        inter_factor: 4.0,
+        mem_cap: 16.0 * 1024.0,
+    };
+    let h = hierarchy::solve(&graph, &hier, 1_000_000).unwrap();
+    println!("hierarchical (2x3, 4x slower inter-cluster): TPS = {:.3}", h.objective);
+
+    // 6. GPipe objective variant
+    let sc_gpipe = Scenario { train_schedule: TrainSchedule::GPipe, ..sc };
+    let pg = dp::solve(&graph, &sc_gpipe).unwrap();
+    println!("GPipe objective maxFW+maxBW: TPS = {:.3}", pg.objective);
+}

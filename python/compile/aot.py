@@ -1,0 +1,156 @@
+"""AOT compile path: lower the L2 model (with its L1 Pallas kernel) to HLO
+*text* artifacts the Rust runtime loads through PJRT, plus export the
+model's operator graph as a paper-format workload JSON.
+
+Run once via ``make artifacts``; Python never runs on the request path.
+
+HLO text (NOT ``lowered.compiler_ir("hlo")``'s proto serialization): jax
+>= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: default HLO printing ELIDES large constants — the model
+    # weights would silently become zeros on the Rust side. Print through
+    # HloModule.to_string with print_large_constants.
+    module = comp.as_hlo_module()
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax's new metadata fields (source_end_line etc.) are unknown to the
+    # xla_extension-0.5.1 text parser — drop metadata entirely.
+    opts.print_metadata = False
+    return module.to_string(opts)
+
+
+def export_stages(cfg, params, num_stages, batch, out_dir):
+    """One HLO artifact per pipeline stage + a manifest."""
+    manifest = {"num_stages": num_stages, "batch": batch,
+                "seq": cfg.seq, "hidden": cfg.hidden, "vocab": cfg.vocab,
+                "stages": []}
+    for s in range(num_stages):
+        fn, is_last = model.stage_fn(params, cfg, s, num_stages)
+        spec = jax.ShapeDtypeStruct((batch, cfg.seq, cfg.hidden), jnp.float32)
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        name = f"stage_{s}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        out_feat = cfg.vocab if is_last else cfg.hidden
+        manifest["stages"].append({
+            "path": name,
+            "features_in": cfg.seq * cfg.hidden,
+            "features_out": cfg.seq * out_feat,
+        })
+        print(f"  wrote {name} ({len(text)} chars)")
+    # full model too, for single-device comparison
+    full = jax.jit(lambda x: (model.forward(params, cfg, x),)).lower(
+        jax.ShapeDtypeStruct((batch, cfg.seq, cfg.hidden), jnp.float32))
+    with open(os.path.join(out_dir, "model_full.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(full))
+    manifest["full"] = "model_full.hlo.txt"
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("  wrote manifest.json + model_full.hlo.txt")
+
+
+def export_reference_io(cfg, params, batch, out_dir):
+    """Golden input/output pair so the Rust e2e test can check numerics."""
+    key = jax.random.PRNGKey(42)
+    x = jax.random.normal(key, (batch, cfg.seq, cfg.hidden), dtype=jnp.float32)
+    y = model.forward(params, cfg, x)
+    ref = {
+        "input": [float(v) for v in x.reshape(-1)],
+        "output_sample": [float(v) for v in y.reshape(-1)[:64]],
+        "output_mean": float(y.mean()),
+        "output_shape": list(y.shape),
+    }
+    with open(os.path.join(out_dir, "reference_io.json"), "w") as f:
+        json.dump(ref, f)
+    print("  wrote reference_io.json")
+
+
+def export_op_graph(cfg, params, batch, out_dir):
+    """Export the jitted model's operator graph as a workload JSON (paper
+    format) by parsing the lowered HLO *text* — a real operator graph,
+    with naive per-op cost estimates, for the L3 partitioner to chew on."""
+    import re
+
+    spec = jax.ShapeDtypeStruct((batch, cfg.seq, cfg.hidden), jnp.float32)
+    lowered = jax.jit(lambda x: (model.forward(params, cfg, x),)).lower(spec)
+    text = to_hlo_text(lowered)
+    nodes, edges = [], []
+    name_to_id = {}
+    in_entry = False
+    instr_re = re.compile(r"^\s+(?:ROOT\s+)?(%?[\w.-]+)\s*=\s*\S+\s+([\w-]+)\(([^)]*)\)")
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if in_entry and line.startswith("}"):
+            break
+        if not in_entry:
+            continue
+        mt = instr_re.match(line)
+        if not mt:
+            continue
+        name, opcode, operands = mt.groups()
+        nid = len(nodes)
+        name_to_id[name] = nid
+        is_dot = opcode in ("dot", "convolution", "fusion")
+        nodes.append({
+            "id": nid, "name": f"{opcode}_{nid}",
+            "cpuLatency": 1.0 if is_dot else 0.05,
+            "acceleratorLatency": 0.05 if is_dot else 0.01,
+            "size": 0.1, "communicationCost": 0.02,
+        })
+        for ref in re.findall(r"%?[\w.-]+", operands):
+            if ref in name_to_id and name_to_id[ref] != nid:
+                edges.append({"sourceId": name_to_id[ref], "destId": nid})
+    edges = [dict(t) for t in {tuple(sorted(e.items())) for e in edges}]
+    wl = {"name": "mini-bert-hlo", "maxMemoryPerDevice": 1e9,
+          "numAccelerators": 3, "numCpus": 1, "nodes": nodes, "edges": edges}
+    with open(os.path.join(out_dir, "mini_bert_opgraph.json"), "w") as f:
+        json.dump(wl, f)
+    print(f"  wrote mini_bert_opgraph.json ({len(nodes)} ops, {len(edges)} edges)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--stages", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--hidden", type=int, default=128)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = model.Config(hidden=args.hidden, layers=args.layers)
+    params = model.init_params(cfg)
+    n_params = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    print(f"mini-BERT: {cfg.layers} layers, hidden {cfg.hidden}, {n_params/1e6:.2f}M params")
+    export_stages(cfg, params, args.stages, args.batch, args.out_dir)
+    export_reference_io(cfg, params, args.batch, args.out_dir)
+    try:
+        export_op_graph(cfg, params, args.batch, args.out_dir)
+    except Exception as e:  # HLO-walking API varies across jax versions
+        print(f"  op-graph export skipped: {e}")
+
+
+if __name__ == "__main__":
+    main()

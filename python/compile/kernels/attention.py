@@ -1,0 +1,93 @@
+"""L1 — fused scaled-dot-product attention as a Pallas kernel.
+
+Flash-attention-style tiling rethought for TPU (DESIGN.md
+§Hardware-Adaptation): the query block lives in VMEM across the whole
+key/value sweep, K/V stream in block-by-block via ``BlockSpec`` (the
+HBM→VMEM schedule that a CUDA implementation would express with
+threadblocks + shared memory), and softmax is computed *online* (running
+max/denominator) so the S = QKᵀ matrix never materializes outside VMEM.
+Both matmuls per grid step are (block_q × d)·(d × block_k) — MXU-shaped.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* from the VMEM footprint
+and MXU utilization in DESIGN.md, not measured here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k, scale):
+    """One (batch·head, q-block) grid step: sweep K/V blocks online."""
+    q = q_ref[...]  # [block_q, d] — resident in VMEM for the whole sweep
+    block_q, d = q.shape
+    kv_len = k_ref.shape[0]
+
+    def body(i, carry):
+        acc, m_prev, l_prev = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], i * block_k, block_k)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], i * block_k, block_k)
+        # MXU matmul #1: [block_q, d] x [d, block_k]
+        s = jnp.dot(q, k.T) * scale
+        # online softmax update
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        # MXU matmul #2: [block_q, block_k] x [block_k, d]
+        acc = acc * alpha[:, None] + jnp.dot(p, v)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    m0 = jnp.full((block_q,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, kv_len // block_k, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def attention(q, k, v, block_q=64, block_k=64):
+    """Fused attention over [B, H, S, D] tensors (S divisible by blocks)."""
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    scale = 1.0 / (d**0.5)
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, "seq must divide blocks"
+
+    q3 = q.reshape(b * h, s, d)
+    k3 = k.reshape(b * h, t, d)
+    v3 = v.reshape(b * h, t, d)
+
+    grid = (b * h, s // block_q)
+    out = pl.pallas_call(
+        functools.partial(_attention_kernel, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            # q: one block per grid step — stays in VMEM for the sweep
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            # k/v: the full sequence for this (batch, head); the inner loop
+            # slices block_k-sized chunks (the HBM→VMEM stream)
+            pl.BlockSpec((None, t, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q3, k3, v3)
+    return out.reshape(b, h, s, d)
+
+
+def vmem_footprint_bytes(block_q, block_k, d, dtype_bytes=4):
+    """Per-grid-step VMEM residency estimate (see DESIGN.md §Perf):
+    q block + one k/v block pair + probs tile + accumulator + stats."""
+    return dtype_bytes * (
+        block_q * d  # q
+        + 2 * block_k * d  # k, v (current chunk)
+        + block_q * block_k  # p tile
+        + block_q * d  # acc
+        + 3 * block_q  # m, l, alpha
+    )

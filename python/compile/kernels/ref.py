@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every Pallas kernel in this package must match its reference here to
+``assert_allclose`` tolerances across the shape/dtype grid exercised by
+``python/tests``.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, scale=None):
+    """Plain scaled-dot-product attention: softmax(q @ k.T * scale) @ v.
+
+    Shapes: q [*, S, D], k [*, T, D], v [*, T, D] (leading dims arbitrary).
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.einsum("...sd,...td->...st", q, k) * scale
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("...st,...td->...sd", probs, v)
+
+
+def transformer_block_ref(x, params, num_heads):
+    """Reference transformer encoder block (pre-LN), mirroring model.py.
+
+    x: [B, S, H]; params: dict with wq, wk, wv, wo [H, H], w1 [H, F],
+    w2 [F, H], ln1_g/ln1_b/ln2_g/ln2_b [H].
+    """
+    b, s, h = x.shape
+    d = h // num_heads
+
+    def ln(y, g, beta):
+        mu = y.mean(-1, keepdims=True)
+        var = y.var(-1, keepdims=True)
+        return (y - mu) / jnp.sqrt(var + 1e-5) * g + beta
+
+    y = ln(x, params["ln1_g"], params["ln1_b"])
+    q = (y @ params["wq"]).reshape(b, s, num_heads, d).transpose(0, 2, 1, 3)
+    k = (y @ params["wk"]).reshape(b, s, num_heads, d).transpose(0, 2, 1, 3)
+    v = (y @ params["wv"]).reshape(b, s, num_heads, d).transpose(0, 2, 1, 3)
+    attn = attention_ref(q, k, v)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, h)
+    x = x + attn @ params["wo"]
+    y = ln(x, params["ln2_g"], params["ln2_b"])
+    ff = jnp.maximum(y @ params["w1"], 0.0) @ params["w2"]  # ReLU MLP
+    return x + ff

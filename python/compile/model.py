@@ -1,0 +1,116 @@
+"""L2 — the mini-BERT transformer whose operator graph the Rust
+coordinator partitions and whose pipeline stages it executes.
+
+The forward pass calls the L1 Pallas attention kernel
+(:mod:`compile.kernels.attention`) so the fused kernel lowers into the
+same HLO as the surrounding jnp ops. ``stage_fn`` slices the model into
+`num_stages` contiguous stages (embedding+early layers … late
+layers+head) so ``aot.py`` can export one HLO artifact per pipeline
+stage; stage composition is pytest-checked against the full model.
+
+Default config is ~100k parameters per layer at H=128 — big enough to be
+a real model on the CPU backend, small enough to iterate quickly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+
+
+class Config:
+    def __init__(self, hidden=128, layers=4, heads=2, ffn=512, seq=64, vocab=1000):
+        self.hidden = hidden
+        self.layers = layers
+        self.heads = heads
+        self.ffn = ffn
+        self.seq = seq
+        self.vocab = vocab
+
+
+def init_params(cfg, seed=0):
+    """Deterministic parameter pytree."""
+    key = jax.random.PRNGKey(seed)
+    params = {"emb": jax.random.normal(key, (cfg.vocab, cfg.hidden)) * 0.02}
+    for l in range(cfg.layers):
+        key, *ks = jax.random.split(key, 7)
+        h, f = cfg.hidden, cfg.ffn
+        params[f"l{l}"] = {
+            "wq": jax.random.normal(ks[0], (h, h)) * h**-0.5,
+            "wk": jax.random.normal(ks[1], (h, h)) * h**-0.5,
+            "wv": jax.random.normal(ks[2], (h, h)) * h**-0.5,
+            "wo": jax.random.normal(ks[3], (h, h)) * h**-0.5,
+            "w1": jax.random.normal(ks[4], (h, f)) * h**-0.5,
+            "w2": jax.random.normal(ks[5], (f, h)) * f**-0.5,
+            "ln1_g": jnp.ones((h,)),
+            "ln1_b": jnp.zeros((h,)),
+            "ln2_g": jnp.ones((h,)),
+            "ln2_b": jnp.zeros((h,)),
+        }
+    key, k2 = jax.random.split(key)
+    params["head"] = jax.random.normal(k2, (cfg.hidden, cfg.vocab)) * cfg.hidden**-0.5
+    return params
+
+
+def _ln(y, g, b):
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    return (y - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def block(x, p, heads):
+    """Pre-LN transformer block; attention runs through the Pallas kernel."""
+    b, s, h = x.shape
+    d = h // heads
+    y = _ln(x, p["ln1_g"], p["ln1_b"])
+    q = (y @ p["wq"]).reshape(b, s, heads, d).transpose(0, 2, 1, 3)
+    k = (y @ p["wk"]).reshape(b, s, heads, d).transpose(0, 2, 1, 3)
+    v = (y @ p["wv"]).reshape(b, s, heads, d).transpose(0, 2, 1, 3)
+    a = attention(q, k, v, block_q=min(64, s), block_k=min(64, s))
+    a = a.transpose(0, 2, 1, 3).reshape(b, s, h)
+    x = x + a @ p["wo"]
+    y = _ln(x, p["ln2_g"], p["ln2_b"])
+    return x + jnp.maximum(y @ p["w1"], 0.0) @ p["w2"]
+
+
+def forward(params, cfg, x):
+    """Full model: activations in [B, S, H] → logits [B, S, vocab].
+
+    Takes pre-embedded activations (the serving path feeds f32 tensors);
+    use `embed` for token ids.
+    """
+    for l in range(cfg.layers):
+        x = block(x, params[f"l{l}"], cfg.heads)
+    return x @ params["head"]
+
+
+def embed(params, ids):
+    return params["emb"][ids]
+
+
+def stage_bounds(cfg, num_stages):
+    """Split layer indices into contiguous stages (plus head in the last)."""
+    assert 1 <= num_stages <= cfg.layers
+    bounds = []
+    per = cfg.layers / num_stages
+    for s in range(num_stages):
+        lo = round(s * per)
+        hi = round((s + 1) * per)
+        bounds.append((lo, hi))
+    return bounds
+
+
+def stage_fn(params, cfg, stage, num_stages):
+    """The callable for one pipeline stage: activations → activations
+    (logits for the last stage). Returns (fn, out_is_logits)."""
+    lo, hi = stage_bounds(cfg, num_stages)[stage]
+    last = stage == num_stages - 1
+
+    def fn(x):
+        for l in range(lo, hi):
+            x = block(x, params[f"l{l}"], cfg.heads)
+        if last:
+            x = x @ params["head"]
+        return (x,)
+
+    return fn, last

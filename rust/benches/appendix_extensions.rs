@@ -1,0 +1,68 @@
+//! Regenerates the **Appendix** experiments:
+//!
+//! * App. A — GPipe objective `max FW + max BW` vs PipeDream objective
+//!   `max(FW+BW)` on the training workloads (paper: ≤ ~6% apart).
+//! * App. C.1 — interleaved communication (load = max instead of sum).
+//! * App. C.2 — replication DP: sparse vs dense models.
+//! * App. C.3 — accelerator hierarchies: slowdown vs inter-cluster factor.
+
+use dnn_partition::algos::{dp, hierarchy, replication};
+use dnn_partition::coordinator::placement::{CommModel, Scenario, TrainSchedule};
+use dnn_partition::workloads::{table1_workloads, Granularity};
+
+fn main() {
+    // --- Appendix A ---
+    println!("# Appendix A — PipeDream vs GPipe objective on the same optimal split");
+    println!("{:<14} {:>12} {:>12} {:>7}", "workload", "max(FW+BW)", "maxFW+maxBW", "delta");
+    for w in table1_workloads() {
+        if !w.training || w.granularity != Granularity::Layer {
+            continue;
+        }
+        let sc_pd = Scenario { train_schedule: TrainSchedule::PipeDream, ..w.scenario.clone() };
+        let sc_gp = Scenario { train_schedule: TrainSchedule::GPipe, ..w.scenario.clone() };
+        let Ok(p) = dp::solve_with_cap(&w.graph, &w.scenario, 20_000) else { continue };
+        let pd = dnn_partition::algos::objective::max_load(&w.graph, &sc_pd, &p);
+        let gp = dnn_partition::algos::objective::max_load(&w.graph, &sc_gp, &p);
+        println!("{:<14} {:>12.2} {:>12.2} {:>6.1}%", w.name, pd, gp, (gp / pd - 1.0) * 100.0);
+    }
+
+    // --- Appendix C.1 ---
+    println!("\n# Appendix C.1 — communication/computation interleaving (BERT-24 training)");
+    let g = dnn_partition::workloads::bert::bert24_layer_graph(true);
+    for (model, name) in [
+        (CommModel::Sequential, "sequential (sum)"),
+        (CommModel::Overlap, "overlap (max)"),
+        (CommModel::FullDuplex, "full duplex"),
+    ] {
+        let sc = Scenario { comm_model: model, k: 6, l: 1, ..Default::default() };
+        let p = dp::solve(&g, &sc).unwrap();
+        println!("  {name:<18} optimal TPS {:.3}", p.objective);
+    }
+
+    // --- Appendix C.2 ---
+    println!("\n# Appendix C.2 — replication (hybrid model/data parallelism)");
+    println!("  bandwidth  plain-DP  replication-DP  replicated-stages");
+    for bw in [0.1, 100.0, 1e5] {
+        let sc = Scenario { k: 6, l: 0, bandwidth: bw, ..Default::default() };
+        let plain = dp::solve(&g, &sc).unwrap().objective;
+        let rep = replication::solve(&g, &sc, 20_000).unwrap();
+        let nrep = rep.stage_devices.iter().filter(|d| d.len() > 1).count();
+        println!("  {bw:>9} {plain:>9.3} {:>15.3} {nrep:>18}", rep.objective);
+    }
+
+    // --- Appendix C.3 ---
+    println!("\n# Appendix C.3 — accelerator hierarchy (2 clusters x 3 accs, BERT-24 training)");
+    println!("  inter-cluster slowdown  optimal TPS");
+    for factor in [1.0, 4.0, 16.0, 64.0] {
+        let hier = hierarchy::Hierarchy {
+            num_clusters: 2,
+            accs_per_cluster: 3,
+            inter_factor: factor,
+            mem_cap: 16.0 * 1024.0,
+        };
+        match hierarchy::solve(&g, &hier, 20_000) {
+            Ok(r) => println!("  {factor:>22} {:>12.3}", r.objective),
+            Err(e) => println!("  {factor:>22}  failed: {e}"),
+        }
+    }
+}

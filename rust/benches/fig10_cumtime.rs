@@ -1,0 +1,61 @@
+//! Regenerates **Figure 10** (Appendix A): cumulative forward and backward
+//! layer times for the ResNet-50 training layer graph — the correlation
+//! argument behind using max(FW+BW) as a proxy for the GPipe objective.
+//! Prints an ASCII plot and writes `fig10.csv`.
+
+use dnn_partition::graph::{topo, NodeKind};
+use dnn_partition::workloads::resnet;
+use std::fmt::Write as _;
+
+fn main() {
+    let g = resnet::resnet50_layer_graph(true);
+    let order = topo::toposort(&g).unwrap();
+    let fw: Vec<f64> = order
+        .iter()
+        .filter(|&&v| g.nodes[v].kind == NodeKind::Forward)
+        .map(|&v| g.nodes[v].p_acc)
+        .collect();
+    // backward in forward order (bw nodes are mirrored; walk partners)
+    let mut bw = vec![0.0; fw.len()];
+    let fw_ids: Vec<usize> = order
+        .iter()
+        .copied()
+        .filter(|&v| g.nodes[v].kind == NodeKind::Forward)
+        .collect();
+    for v in 0..g.n() {
+        if let (NodeKind::Backward, Some(f)) = (g.nodes[v].kind, g.nodes[v].fw_partner) {
+            if let Some(pos) = fw_ids.iter().position(|&x| x == f) {
+                bw[pos] = g.nodes[v].p_acc;
+            }
+        }
+    }
+    let mut cum_fw = 0.0;
+    let mut cum_bw = 0.0;
+    let mut csv = String::from("layer,cum_forward_ms,cum_backward_ms\n");
+    let total_fw: f64 = fw.iter().sum();
+    let total_bw: f64 = bw.iter().sum();
+    println!("# Fig. 10 — cumulative fw/bw times, ResNet-50 layer graph");
+    println!("layer  cumFW(ms)  cumBW(ms)   (F = forward curve, B = backward)");
+    for (i, (f, b)) in fw.iter().zip(&bw).enumerate() {
+        cum_fw += f;
+        cum_bw += b;
+        let _ = writeln!(csv, "{i},{cum_fw:.4},{cum_bw:.4}");
+        if i % 10 == 0 || i + 1 == fw.len() {
+            let fpos = (cum_fw / total_fw * 50.0) as usize;
+            let bpos = (cum_bw / total_bw * 50.0) as usize;
+            let mut row = vec![' '; 52];
+            row[fpos.min(51)] = 'F';
+            row[bpos.min(51)] = if row[bpos.min(51)] == 'F' { '*' } else { 'B' };
+            println!("{i:>5}  {cum_fw:>9.2}  {cum_bw:>9.2}  |{}|", row.iter().collect::<String>());
+        }
+    }
+    // correlation of increments (the App-A argument)
+    let n = fw.len() as f64;
+    let (mf, mb) = (total_fw / n, total_bw / n);
+    let cov: f64 = fw.iter().zip(&bw).map(|(a, b)| (a - mf) * (b - mb)).sum::<f64>() / n;
+    let sf = (fw.iter().map(|a| (a - mf).powi(2)).sum::<f64>() / n).sqrt();
+    let sb = (bw.iter().map(|b| (b - mb).powi(2)).sum::<f64>() / n).sqrt();
+    println!("\nper-layer fw/bw time correlation: {:.3} (paper: curves grow at a similar pace)", cov / (sf * sb));
+    std::fs::write("fig10.csv", csv).unwrap();
+    println!("wrote fig10.csv");
+}

@@ -1,0 +1,72 @@
+//! Regenerates **Figure 8**: the Table-2 ratios as bar charts (ASCII) —
+//! throughput of each technique relative to the contiguous DP (1.00x),
+//! four panels: (a) op/inference, (b) op/training, (c) layer/inference,
+//! (d) layer/training. Also emits `fig8.csv` for external plotting.
+
+use dnn_partition::algos::{dp, dpl, ip_throughput};
+use dnn_partition::baselines::{expert, local_search, pipedream, scotch_like};
+use dnn_partition::workloads::{table1_workloads, Granularity};
+use std::fmt::Write as _;
+use std::time::Duration;
+
+fn bar(ratio: f64) -> String {
+    let n = (ratio * 24.0).round().clamp(0.0, 60.0) as usize;
+    "█".repeat(n)
+}
+
+fn main() {
+    let budget = Duration::from_secs(
+        std::env::var("F8_IP_SECS").ok().and_then(|s| s.parse().ok()).unwrap_or(8),
+    );
+    let mut csv = String::from("panel,workload,technique,relative_throughput\n");
+    for (panel, op, training) in [
+        ("(a) operator graphs, inference", Granularity::Operator, false),
+        ("(b) operator graphs, training", Granularity::Operator, true),
+        ("(c) layer graphs, inference", Granularity::Layer, false),
+        ("(d) layer graphs, training", Granularity::Layer, true),
+    ] {
+        println!("\n## Fig. 8 {panel} — throughput relative to DP (contiguous)");
+        for w in table1_workloads() {
+            if w.granularity != op || w.training != training {
+                continue;
+            }
+            let base = match dp::solve_with_cap(&w.graph, &w.scenario, 20_000)
+                .or_else(|_| dpl::solve(&w.graph, &w.scenario))
+            {
+                Ok(p) => p.objective,
+                Err(_) => continue,
+            };
+            println!("{}:", w.name);
+            let mut emit = |label: &str, tps: f64| {
+                let r = base / tps;
+                println!("  {label:<18} {r:>5.2}x |{}", bar(r));
+                let _ = writeln!(csv, "{panel},{},{label},{r:.4}", w.name);
+            };
+            emit("DP (contiguous)", base);
+            if let Ok(r) = ip_throughput::solve(
+                &w.graph,
+                &w.scenario,
+                &ip_throughput::IpOptions {
+                    contiguous: false,
+                    time_limit: budget,
+                    ..Default::default()
+                },
+            ) {
+                emit("IP (non-contig)", r.placement.objective);
+            }
+            if let Ok(p) = dpl::solve(&w.graph, &w.scenario) {
+                emit("DPL", p.objective);
+            }
+            if let Some(style) = w.expert {
+                emit("Expert", expert::solve(&w.graph, &w.scenario, style).objective);
+            }
+            emit("Local search", local_search::solve(&w.graph, &w.scenario, 10, 1).objective);
+            if w.granularity == Granularity::Layer {
+                emit("PipeDream", pipedream::solve(&w.graph, &w.scenario).objective);
+            }
+            emit("Scotch", scotch_like::solve(&w.graph, &w.scenario, 2).objective);
+        }
+    }
+    std::fs::write("fig8.csv", csv).unwrap();
+    println!("\nwrote fig8.csv");
+}

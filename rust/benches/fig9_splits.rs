@@ -1,0 +1,47 @@
+//! Regenerates **Figure 9**: optimal contiguous vs non-contiguous splits
+//! of the BERT-3 operator inference graph onto 3 accelerators + 1 CPU,
+//! rendered as Graphviz DOT (colors = devices, red = CPU), plus the
+//! throughput gain (paper: 27%).
+
+use dnn_partition::algos::{dp, ip_throughput};
+use dnn_partition::coordinator::placement::Scenario;
+use dnn_partition::workloads::bert;
+use std::time::Duration;
+
+fn main() {
+    let g = bert::bert_op_graph(3, false);
+    let sc = Scenario::new(3, 1, 16.0 * 1024.0);
+    let contig = dp::solve(&g, &sc).expect("DP failed");
+    let noncontig = ip_throughput::solve(
+        &g,
+        &sc,
+        &ip_throughput::IpOptions {
+            contiguous: false,
+            time_limit: Duration::from_secs(
+                std::env::var("F9_IP_SECS").ok().and_then(|s| s.parse().ok()).unwrap_or(20),
+            ),
+            ..Default::default()
+        },
+    )
+    .expect("IP failed");
+
+    // device color mapping: dense index 0..k accs, k = CPU (rotate so CPU
+    // renders red = palette[0])
+    let k = sc.k;
+    let rotate = |dense: Vec<usize>| -> Vec<usize> {
+        dense.into_iter().map(|d| if d >= k { 0 } else { d + 1 }).collect()
+    };
+    std::fs::write("fig9_contiguous.dot", g.to_dot(&rotate(contig.dense(k)), "BERT-3 contiguous"))
+        .unwrap();
+    std::fs::write(
+        "fig9_noncontiguous.dot",
+        g.to_dot(&rotate(noncontig.placement.dense(k)), "BERT-3 non-contiguous"),
+    )
+    .unwrap();
+    let gain = (contig.objective / noncontig.placement.objective - 1.0) * 100.0;
+    println!(
+        "Fig. 9 — BERT-3 op inference on 3 accs + 1 CPU:\n  contiguous TPS {:.2}, non-contiguous TPS {:.2} (gain {:.0}%; paper: 27%)",
+        contig.objective, noncontig.placement.objective, gain
+    );
+    println!("wrote fig9_contiguous.dot / fig9_noncontiguous.dot (render with `dot -Tsvg`)");
+}

@@ -1,0 +1,62 @@
+//! Criterion-style micro benchmarks of the crate's hot paths (in-tree
+//! harness — no criterion offline): ideal enumeration, the DP inner loop,
+//! reachability, the simplex, and objective evaluation. These are the
+//! §Perf tracking numbers in EXPERIMENTS.md.
+
+use dnn_partition::algos::{dp, objective};
+use dnn_partition::coordinator::placement::Scenario;
+use dnn_partition::graph::ideals::IdealLattice;
+use dnn_partition::graph::topo;
+use dnn_partition::solver::lp::{Lp, Sense};
+use dnn_partition::util::bench::bench;
+use dnn_partition::util::rng::Rng;
+use dnn_partition::workloads::{bert, gnmt, resnet};
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("MICRO_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500),
+    );
+
+    // ideal enumeration on the branchiest real workloads
+    let gnmt_g = gnmt::gnmt_layer_graph(false);
+    bench("ideals/enumerate/gnmt", budget, 3, || {
+        IdealLattice::enumerate(&gnmt_g, usize::MAX).map(|l| l.len()).unwrap_or(0)
+    });
+    let rn = resnet::resnet50_layer_graph(false);
+    bench("ideals/enumerate/resnet50-layer", budget, 3, || {
+        IdealLattice::enumerate(&rn, usize::MAX).map(|l| l.len()).unwrap_or(0)
+    });
+
+    // full DP solves
+    let sc6 = Scenario::new(6, 1, 16.0 * 1024.0);
+    bench("dp/solve/resnet50-layer", budget, 3, || dp::solve(&rn, &sc6).map(|p| p.objective));
+    let b3 = bert::bert_op_graph(3, false);
+    let sc3 = Scenario::new(3, 1, 16.0 * 1024.0);
+    bench("dp/solve/bert3-op", budget, 3, || dp::solve(&b3, &sc3).map(|p| p.objective));
+    bench("dp/solve/gnmt-layer", budget, 1, || dp::solve(&gnmt_g, &sc6).map(|p| p.objective));
+
+    // reachability / toposort on the biggest op graph
+    let b12 = bert::bert_op_graph(12, true);
+    bench("graph/reachability/bert12-train", budget, 3, || topo::reachability(&b12).len());
+    bench("graph/toposort/bert12-train", budget, 10, || topo::toposort(&b12).map(|o| o.len()));
+
+    // objective evaluation (the baselines' inner loop)
+    let p = dp::solve(&rn, &sc6).unwrap();
+    bench("objective/max_load/resnet50", budget, 10, || objective::max_load(&rn, &sc6, &p));
+    bench("objective/latency/resnet50", budget, 10, || objective::latency(&rn, &sc6, &p));
+
+    // simplex on a dense random LP (60 vars x 40 rows)
+    let mut rng = Rng::new(42);
+    let mut lp = Lp::new(60);
+    for j in 0..60 {
+        lp.objective[j] = rng.gen_f64_range(-1.0, 1.0);
+        lp.upper[j] = 10.0;
+    }
+    for _ in 0..40 {
+        let coeffs: Vec<(usize, f64)> =
+            (0..60).map(|j| (j, rng.gen_f64_range(0.0, 1.0))).collect();
+        lp.add(coeffs, Sense::Le, 50.0);
+    }
+    bench("solver/simplex/60x40", budget, 5, || lp.solve());
+}

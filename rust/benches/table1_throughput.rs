@@ -1,0 +1,131 @@
+//! Regenerates **Table 1** (and the ratio form, **Table 2**): throughput
+//! maximization across the 16 pipelined workloads — DP / IP(contiguous) /
+//! IP(non-contiguous) / DPL vs Expert / Local search / PipeDream / Scotch.
+//!
+//! Shape expectations vs the paper (absolute numbers differ — our costs
+//! are FLOP-derived, theirs profiled): DP == IP(contig); non-contiguous
+//! gain ≥ 0, largest on small-k BERT op graphs; DPL ≈ DP; baselines ≤ DP.
+//!
+//! Env knobs: `T1_IP_SECS` (per-IP budget, default 5),
+//! `T1_IDEAL_CAP` (DP lattice cap, default 20k; graphs whose lattice
+//! exceeds it — Inception-v3, like the paper's 36.6k-ideal instance that
+//! took the authors' C++ DP 32–58 min — report ">cap" and rely on DPL,
+//! which is the paper's own recommendation for such graphs),
+//! `T1_FILTER` (substring filter on workload names).
+
+use dnn_partition::algos::{dp, dpl, ip_throughput};
+use dnn_partition::baselines::{expert, local_search, pipedream, scotch_like};
+use dnn_partition::graph::ideals::IdealLattice;
+use dnn_partition::util::bench::{paper_runtime, time_once};
+use dnn_partition::workloads::table1_workloads;
+use std::time::Duration;
+
+fn main() {
+    let ip_secs: u64 =
+        std::env::var("T1_IP_SECS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let cap: usize =
+        std::env::var("T1_IDEAL_CAP").ok().and_then(|s| s.parse().ok()).unwrap_or(20_000);
+    let filter = std::env::var("T1_FILTER").unwrap_or_default();
+
+    println!("# Table 1 — pipelined throughput (TPS = max-load; lower is better)");
+    println!(
+        "{:<12} {:>5} {:>8} | {:>7} {:>8} | {:>7} {:>8} | {:>7} {:>8} {:>6} | {:>9} | {:>9} {:>9} {:>9} {:>9}",
+        "workload", "nodes", "ideals", "DP-t", "DP", "IPc-t", "IPc", "IPnc-t", "IPnc", "gain",
+        "DPL", "Expert", "LocalS", "PipeDr", "Scotch"
+    );
+
+    let mut rows: Vec<(String, f64, [f64; 4])> = Vec::new();
+    for (i, w) in table1_workloads().into_iter().enumerate() {
+        if !filter.is_empty() && !w.name.contains(&filter) {
+            continue;
+        }
+        let section = match i {
+            0..=3 => "op/inference",
+            4..=7 => "op/training",
+            8..=11 => "layer/inference",
+            _ => "layer/training",
+        };
+        let ideals = IdealLattice::count(&w.graph, cap);
+        // DP (DPL fallback when the lattice exceeds the cap)
+        let (dp_res, dp_t) = time_once(|| dp::solve_with_cap(&w.graph, &w.scenario, cap));
+        let (dp_tps, dp_time) = match &dp_res {
+            Ok(p) => (p.objective, paper_runtime(dp_t)),
+            Err(_) => (f64::NAN, ">cap".into()),
+        };
+        // DPL
+        let (dpl_res, _) = time_once(|| dpl::solve(&w.graph, &w.scenario));
+        let dpl_tps = dpl_res.as_ref().map(|p| p.objective).unwrap_or(f64::NAN);
+        // IP contiguous / non-contiguous
+        let budget = Duration::from_secs(ip_secs);
+        let (ipc, _) = time_once(|| {
+            ip_throughput::solve(
+                &w.graph,
+                &w.scenario,
+                &ip_throughput::IpOptions { time_limit: budget, ..Default::default() },
+            )
+        });
+        let (ipnc, _) = time_once(|| {
+            ip_throughput::solve(
+                &w.graph,
+                &w.scenario,
+                &ip_throughput::IpOptions {
+                    contiguous: false,
+                    time_limit: budget,
+                    ..Default::default()
+                },
+            )
+        });
+        let ipc_tps = ipc.as_ref().map(|r| r.placement.objective).unwrap_or(f64::NAN);
+        let ipnc_tps = ipnc.as_ref().map(|r| r.placement.objective).unwrap_or(f64::NAN);
+        let contig_best = if dp_tps.is_finite() { dp_tps.min(ipc_tps) } else { ipc_tps };
+        let gain = (contig_best / ipnc_tps - 1.0) * 100.0;
+        // baselines
+        let exp = w.expert.map(|style| expert::solve(&w.graph, &w.scenario, style).objective);
+        let ls = local_search::solve(&w.graph, &w.scenario, 10, 0xC0FFEE).objective;
+        let pd = if w.granularity == dnn_partition::workloads::Granularity::Layer {
+            Some(pipedream::solve(&w.graph, &w.scenario).objective)
+        } else {
+            None
+        };
+        let sco = scotch_like::solve(&w.graph, &w.scenario, 0x5C07C4).objective;
+
+        println!(
+            "{:<12} {:>5} {:>8} | {:>7} {:>8.2} | {:>7} {:>8.2} | {:>7} {:>8.2} {:>5.0}% | {:>9.2} | {:>9} {:>9.2} {:>9} {:>9.2}   [{section}]",
+            w.name,
+            w.graph.n(),
+            ideals,
+            dp_time,
+            dp_tps,
+            ipc.as_ref().map(|r| paper_runtime(r.elapsed)).unwrap_or_default(),
+            ipc_tps,
+            ipnc.as_ref().map(|r| paper_runtime(r.elapsed)).unwrap_or_default(),
+            ipnc_tps,
+            gain,
+            dpl_tps,
+            exp.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+            ls,
+            pd.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+            sco,
+        );
+        rows.push((
+            format!("{} [{}]", w.name, section),
+            contig_best,
+            [ipnc_tps, exp.unwrap_or(f64::NAN), ls, sco],
+        ));
+    }
+
+    // Table-2 form: throughput relative to contiguous DP = 1.0×
+    println!("\n# Table 2 — throughput improvement relative to DP (contiguous) = 1.00x");
+    println!("{:<30} {:>6} {:>8} {:>8} {:>8}", "workload", "IPnc", "Expert", "LocalS", "Scotch");
+    for (name, base, vals) in &rows {
+        let rel = |v: f64| if v.is_finite() { format!("{:.2}x", base / v) } else { "-".into() };
+        println!(
+            "{:<30} {:>6} {:>8} {:>8} {:>8}",
+            name,
+            rel(vals[0]),
+            rel(vals[1]),
+            rel(vals[2]),
+            rel(vals[3])
+        );
+    }
+}

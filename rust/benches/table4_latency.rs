@@ -1,0 +1,90 @@
+//! Regenerates **Table 4**: single-sample latency minimization under
+//! memory-bound accelerators (§7) — the latency IP vs Greedy, max-load DP,
+//! Scotch-like and Expert, with MIP-gap reporting.
+//!
+//! Expected shape: the IP never loses to a baseline; max-load DP is the
+//! strongest baseline most rows; Scotch violates memory (daggers).
+//! Env knobs: `T4_IP_SECS` (default 8), `T4_FILTER`.
+
+use dnn_partition::algos::{dp, ip_latency, objective};
+use dnn_partition::baselines::{expert, greedy, scotch_like};
+use dnn_partition::util::bench::paper_runtime;
+use dnn_partition::workloads::{latency_scenario, table1_workloads};
+use std::time::Duration;
+
+fn main() {
+    let ip_secs: u64 =
+        std::env::var("T4_IP_SECS").ok().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let filter = std::env::var("T4_FILTER").unwrap_or_default();
+
+    println!("# Table 4 — single-query inference latency (memory-bound accelerators)");
+    println!(
+        "{:<12} {:>5} {:>3} {:>7} | {:>9} {:>11} {:>11} {:>9} | {:>9} {:>7} {:>6} {:>6}",
+        "workload", "nodes", "k", "M(MB)", "Greedy", "MaxLoadDP", "Scotch", "Expert", "IP", "IP-t", "gap", "gain"
+    );
+
+    for w in table1_workloads() {
+        if w.training {
+            continue; // §7 uses the inference workloads
+        }
+        if !filter.is_empty() && !w.name.contains(&filter) {
+            continue;
+        }
+        let g = &w.graph;
+        let sc = latency_scenario(g);
+
+        let gr = greedy::solve(g, &sc);
+        let ml_placement = dp::solve_with_cap(g, &sc, 20_000).ok();
+        let ml = ml_placement.as_ref().map(|p| objective::latency(g, &sc, p));
+        let sco = scotch_like::solve_latency(g, &sc, 7);
+        let sco_viol = scotch_like::memory_violation(g, &sc, &sco);
+        let exp = w.expert.map(|style| {
+            let p = expert::solve_latency(g, &sc, style);
+            (p.objective, scotch_like::memory_violation(g, &sc, &p))
+        });
+
+        let mut warm = vec![gr.clone()];
+        warm.extend(ml_placement.clone());
+        let opts = ip_latency::LatencyIpOptions {
+            time_limit: Duration::from_secs(ip_secs),
+            warm_starts: warm,
+            ..Default::default()
+        };
+        let ip = ip_latency::solve(g, &sc, &opts);
+        let (ip_lat, ip_t, ip_gap) = match &ip {
+            Ok(r) => (r.placement.objective, paper_runtime(r.elapsed), r.gap),
+            Err(_) => (f64::NAN, "-".into(), f64::NAN),
+        };
+        let best_baseline = [Some(gr.objective), ml, Some(sco.objective), exp.map(|e| e.0)]
+            .into_iter()
+            .flatten()
+            .fold(f64::INFINITY, f64::min);
+        let gain = (best_baseline / ip_lat - 1.0) * 100.0;
+
+        let dag = |v: f64, viol: f64| {
+            if viol > 3.0 {
+                format!("OOM")
+            } else if viol > 1.0 {
+                format!("{v:.1}†")
+            } else {
+                format!("{v:.1}")
+            }
+        };
+        println!(
+            "{:<12} {:>5} {:>3} {:>7.0} | {:>9.1} {:>11} {:>11} {:>9} | {:>9.1} {:>7} {:>5.0}% {:>5.0}%",
+            w.name,
+            g.n(),
+            sc.k,
+            sc.mem_cap,
+            gr.objective,
+            ml.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
+            dag(sco.objective, sco_viol),
+            exp.map(|(v, viol)| dag(v, viol)).unwrap_or_else(|| "-".into()),
+            ip_lat,
+            ip_t,
+            ip_gap * 100.0,
+            gain,
+        );
+    }
+    println!("† = memory constraints violated (Scotch/Expert ignore M, as in the paper)");
+}

@@ -1,0 +1,778 @@
+//! Integer Programming for throughput maximization (Fig. 6, §5.1.3/§5.2).
+//!
+//! Two interchangeable engines, both exact:
+//!
+//! * [`build_model`] emits the *literal* Fig.-6 MILP (binary `x_vi`,
+//!   `CommIn/CommOut`, the Lemma-4.1 `z`-variable linearization of the
+//!   contiguity constraint (16), per-device loads and the `MaxLoad`
+//!   objective) for the LP-based branch-and-bound in [`crate::solver`].
+//!   The dense simplex limits this path to small instances; it serves as
+//!   the executable specification and cross-check.
+//! * [`solve`] is a specialized combinatorial branch-and-bound over
+//!   node→device assignments in topological order with incremental load
+//!   bookkeeping, reachability-based contiguity propagation, device-
+//!   symmetry breaking, a work/devices lower bound, DP warm start, and a
+//!   node-move polish pass (the "primal heuristic") — this scales to the
+//!   paper's workload sizes and natively supports the non-contiguous
+//!   setting of §5.2 by dropping the contiguity check.
+
+use super::dp::{self, Prepared};
+use super::objective;
+use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::graph::{topo, OpGraph};
+use crate::solver::lp::{Lp, Sense};
+use crate::solver::milp::{Milp, SolveStatus};
+use crate::util::bitset::BitSet;
+use std::time::{Duration, Instant};
+
+/// Options for the specialized search.
+#[derive(Clone, Debug)]
+pub struct IpOptions {
+    pub time_limit: Duration,
+    /// Stop once the proven gap is below this (paper uses 1%).
+    pub gap_target: f64,
+    /// Enforce Def.-3.1 contiguity on every device (constraint (16)).
+    pub contiguous: bool,
+    /// Run the node-move polish on the incumbent (primal heuristic).
+    pub polish: bool,
+}
+
+impl Default for IpOptions {
+    fn default() -> Self {
+        IpOptions {
+            time_limit: Duration::from_secs(20),
+            gap_target: 0.01,
+            contiguous: true,
+            polish: true,
+        }
+    }
+}
+
+/// Result: a placement plus the solver's proof state.
+#[derive(Clone, Debug)]
+pub struct IpResult {
+    pub placement: Placement,
+    pub status: SolveStatus,
+    /// Proven lower bound on the optimum (on the preprocessed cost model).
+    pub bound: f64,
+    pub gap: f64,
+    pub nodes_explored: usize,
+    pub elapsed: Duration,
+    /// Time at which the final incumbent was found (the paper's
+    /// parenthesized asterisk column).
+    pub incumbent_at: Duration,
+}
+
+/// Solve the Fig.-6 IP with the specialized branch-and-bound.
+pub fn solve(g: &OpGraph, sc: &Scenario, opts: &IpOptions) -> Result<IpResult, dp::DpError> {
+    let prepared = Prepared::build(g)?;
+    // search cost model: fold the gradient comm into node comm (the
+    // PipeDream-style proxy); the final incumbent is re-scored on the
+    // original graph by `Prepared::expand`
+    let mut proxy = prepared.dp_graph.clone();
+    for (v, node) in proxy.nodes.iter_mut().enumerate() {
+        node.comm += prepared.bw_comm[v];
+    }
+    let gg = &proxy;
+
+    // Warm start from the DP (or DPL when the lattice is too big): any
+    // optimal contiguous split is also feasible for the non-contiguous IP.
+    // The lattice cap keeps the warm start cheap relative to the IP budget.
+    let warm = dp::solve_with_cap(g, sc, 20_000)
+        .or_else(|_| super::dpl::solve(g, sc))
+        .ok()
+        .map(|p| (p.objective, prepared_assignment(&prepared, &p, sc)));
+
+    let mut search = Search::new(gg, sc, opts.clone());
+    if let Some((obj, dense)) = warm {
+        search.incumbent = Some((obj, dense));
+        search.incumbent_at = Duration::ZERO;
+    }
+    search.run();
+
+    let (obj, dense) = search.incumbent.clone().ok_or(dp::DpError::Infeasible)?;
+    let mut placement = prepared.expand(g, sc, obj, &dense);
+    placement.algorithm = if opts.contiguous {
+        "IP (contiguous)".into()
+    } else {
+        "IP (non-contiguous)".into()
+    };
+    let gap = ((placement.objective - search.best_bound) / placement.objective.max(1e-12)).max(0.0);
+    Ok(IpResult {
+        status: search.status,
+        bound: search.best_bound,
+        gap,
+        nodes_explored: search.nodes,
+        elapsed: search.start.elapsed(),
+        incumbent_at: search.incumbent_at,
+        placement,
+    })
+}
+
+/// Translate a placement on the original graph into a dense assignment on
+/// the prepared graph.
+fn prepared_assignment(prep: &Prepared, p: &Placement, sc: &Scenario) -> Vec<usize> {
+    let mut dense = vec![0usize; prep.dp_graph.n()];
+    for (v, &c) in prep.map.iter().enumerate() {
+        dense[c] = p.assignment[v].index(sc.k);
+    }
+    dense
+}
+
+// ---------------------------------------------------------------------------
+// Specialized branch & bound
+// ---------------------------------------------------------------------------
+
+struct DeviceState {
+    compute: f64,
+    mem: f64,
+    comm_in: f64,
+    comm_out: f64,
+    set: BitSet,
+    /// Union of `reach[u]` over members u (for contiguity propagation).
+    reach: BitSet,
+    /// External producers already charged to this device's comm_in.
+    in_paid: BitSet,
+}
+
+struct Search<'a> {
+    g: &'a OpGraph,
+    sc: &'a Scenario,
+    opts: IpOptions,
+    order: Vec<usize>,
+    reach: Vec<BitSet>,
+    co_reach: Vec<BitSet>,
+    /// min(p_acc, p_cpu) suffix sums along `order` for the work bound.
+    suffix_min_work: Vec<f64>,
+    devices: Vec<DeviceState>,
+    assignment: Vec<usize>,
+    assigned: BitSet,
+    out_paid: Vec<bool>,
+    incumbent: Option<(f64, Vec<usize>)>,
+    incumbent_at: Duration,
+    best_bound: f64,
+    nodes: usize,
+    status: SolveStatus,
+    start: Instant,
+    deadline: Instant,
+    complete: bool,
+}
+
+impl<'a> Search<'a> {
+    fn new(g: &'a OpGraph, sc: &'a Scenario, opts: IpOptions) -> Self {
+        let order = topo::toposort(g).expect("IP requires a DAG");
+        let reach = topo::reachability(g);
+        let co_reach = topo::co_reachability(g);
+        let nd = sc.k + sc.l;
+        let mut suffix = vec![0.0; order.len() + 1];
+        for (pos, &v) in order.iter().enumerate().rev() {
+            suffix[pos] = suffix[pos + 1] + g.nodes[v].p_acc.min(g.nodes[v].p_cpu);
+        }
+        let root_bound = if nd > 0 { suffix[0] / nd as f64 } else { f64::INFINITY };
+        let start = Instant::now();
+        Search {
+            g,
+            sc,
+            deadline: start + opts.time_limit,
+            opts,
+            reach,
+            co_reach,
+            suffix_min_work: suffix,
+            devices: (0..nd)
+                .map(|_| DeviceState {
+                    compute: 0.0,
+                    mem: 0.0,
+                    comm_in: 0.0,
+                    comm_out: 0.0,
+                    set: BitSet::new(g.n()),
+                    reach: BitSet::new(g.n()),
+                    in_paid: BitSet::new(g.n()),
+                })
+                .collect(),
+            assignment: vec![usize::MAX; g.n()],
+            assigned: BitSet::new(g.n()),
+            out_paid: vec![false; g.n()],
+            incumbent: None,
+            incumbent_at: Duration::ZERO,
+            best_bound: root_bound,
+            nodes: 0,
+            status: SolveStatus::Unknown,
+            start,
+            order,
+            complete: true,
+        }
+    }
+
+    fn device_load(&self, d: usize) -> f64 {
+        let ds = &self.devices[d];
+        if d < self.sc.k {
+            self.sc.combine(ds.compute, ds.comm_in, ds.comm_out)
+        } else {
+            ds.compute
+        }
+    }
+
+    fn max_load(&self) -> f64 {
+        (0..self.devices.len()).map(|d| self.device_load(d)).fold(0.0, f64::max)
+    }
+
+    fn run(&mut self) {
+        self.dfs(0);
+        let inc = self.incumbent.as_ref().map(|(o, _)| *o);
+        if self.complete {
+            // exhausted the tree: incumbent is optimal
+            if let Some(obj) = inc {
+                self.best_bound = obj;
+                self.status = SolveStatus::Optimal;
+            } else {
+                self.status = SolveStatus::Infeasible;
+            }
+        } else {
+            self.status = match inc {
+                Some(obj) if (obj - self.best_bound) / obj.max(1e-12) <= self.opts.gap_target => {
+                    SolveStatus::GapReached
+                }
+                Some(_) => SolveStatus::TimeLimit,
+                None => SolveStatus::Unknown,
+            };
+        }
+        // polish pass (primal heuristic): best-single-move descent
+        if self.opts.polish {
+            if let Some((obj, dense)) = self.incumbent.clone() {
+                if let Some((better_obj, better)) = self.polish(obj, dense) {
+                    self.incumbent = Some((better_obj, better));
+                    self.incumbent_at = self.start.elapsed();
+                }
+            }
+        }
+    }
+
+    fn dfs(&mut self, pos: usize) {
+        self.nodes += 1;
+        if self.nodes % 4096 == 0 && Instant::now() > self.deadline {
+            self.complete = false;
+            return;
+        }
+        if pos == self.order.len() {
+            let obj = self.max_load();
+            if self
+                .incumbent
+                .as_ref()
+                .is_none_or(|(best, _)| obj < best - 1e-12)
+            {
+                self.incumbent = Some((obj, self.assignment.clone()));
+                self.incumbent_at = self.start.elapsed();
+            }
+            return;
+        }
+        let v = self.order[pos];
+        let nd = self.devices.len();
+
+        // Candidate devices, cheapest resulting load first; symmetry break:
+        // at most one *empty* accelerator and one empty CPU considered.
+        let mut cands: Vec<(f64, usize)> = Vec::with_capacity(nd);
+        let mut seen_empty_acc = false;
+        let mut seen_empty_cpu = false;
+        for d in 0..nd {
+            let is_acc = d < self.sc.k;
+            let empty = self.devices[d].set.is_empty();
+            if empty {
+                if is_acc {
+                    if seen_empty_acc {
+                        continue;
+                    }
+                    seen_empty_acc = true;
+                } else {
+                    if seen_empty_cpu {
+                        continue;
+                    }
+                    seen_empty_cpu = true;
+                }
+            }
+            if is_acc {
+                if self.g.nodes[v].p_acc.is_infinite()
+                    || self.devices[d].mem + self.g.nodes[v].mem > self.sc.mem_cap
+                {
+                    continue;
+                }
+            } else if self.g.nodes[v].p_cpu.is_infinite() {
+                continue;
+            }
+            if self.opts.contiguous && !self.contiguity_ok(v, d) {
+                continue;
+            }
+            let p = if is_acc { self.g.nodes[v].p_acc } else { self.g.nodes[v].p_cpu };
+            cands.push((self.device_load(d) + p, d));
+        }
+        cands.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+        for (_, d) in cands {
+            let undo = self.assign(v, d);
+            // lower bound: current max load vs remaining-work average
+            let placed: f64 = (0..nd).map(|x| self.devices[x].compute).sum();
+            let lb = self
+                .max_load()
+                .max((placed + self.suffix_min_work[pos + 1]) / nd as f64);
+            let prune = self
+                .incumbent
+                .as_ref()
+                .is_some_and(|(best, _)| lb >= best - 1e-12);
+            if !prune {
+                self.dfs(pos + 1);
+            }
+            self.unassign(v, d, undo);
+            if !self.complete {
+                return;
+            }
+        }
+    }
+
+    /// Would assigning `v` to device `d` keep `set_d ∪ {v}` contiguous
+    /// *given what is already assigned*? In topological order, any
+    /// violating middle vertex x (u ∈ S_d ⇝ x ⇝ v, x ∉ S_d) is already
+    /// assigned, so the check is exact: the violation exists iff some
+    /// already-assigned non-member lies on a path from S_d to v.
+    fn contiguity_ok(&self, v: usize, d: usize) -> bool {
+        let ds = &self.devices[d];
+        if ds.set.is_empty() {
+            return true;
+        }
+        // x ∈ reach(S_d) ∩ ancestors(v), x assigned, x ∉ S_d, x ≠ v
+        let mut mid = ds.reach.clone();
+        mid.intersect_with(&self.co_reach[v]);
+        mid.intersect_with(&self.assigned);
+        mid.difference_with(&ds.set);
+        mid.remove(v);
+        mid.is_empty()
+    }
+
+    fn assign(&mut self, v: usize, d: usize) -> Undo {
+        let is_acc = d < self.sc.k;
+        let mut undo = Undo { in_paid_added: Vec::new(), out_paid_added: Vec::new() };
+        self.assignment[v] = d;
+        self.assigned.insert(v);
+        let ds = &mut self.devices[d];
+        ds.set.insert(v);
+        ds.reach.union_with(&self.reach[v]);
+        ds.compute += if is_acc { self.g.nodes[v].p_acc } else { self.g.nodes[v].p_cpu };
+        ds.mem += self.g.nodes[v].mem;
+        // communication: only accelerator devices pay (Fig. 6 (20) vs (21))
+        for pi in 0..self.g.preds[v].len() {
+            let u = self.g.preds[v][pi];
+            let du = self.assignment[u];
+            if du == d {
+                continue;
+            }
+            // u → v crosses du → d
+            if is_acc && !self.devices[d].in_paid.contains(u) {
+                self.devices[d].in_paid.insert(u);
+                self.devices[d].comm_in += self.g.nodes[u].comm;
+                undo.in_paid_added.push(u);
+            }
+            if du < self.sc.k && !self.out_paid[u] {
+                self.out_paid[u] = true;
+                self.devices[du].comm_out += self.g.nodes[u].comm;
+                undo.out_paid_added.push(u);
+            }
+        }
+        undo
+    }
+
+    fn unassign(&mut self, v: usize, d: usize, undo: Undo) {
+        let is_acc = d < self.sc.k;
+        for u in undo.in_paid_added {
+            self.devices[d].in_paid.remove(u);
+            self.devices[d].comm_in -= self.g.nodes[u].comm;
+        }
+        for u in undo.out_paid_added {
+            self.out_paid[u] = false;
+            let du = self.assignment[u];
+            self.devices[du].comm_out -= self.g.nodes[u].comm;
+        }
+        let ds = &mut self.devices[d];
+        ds.set.remove(v);
+        ds.compute -= if is_acc { self.g.nodes[v].p_acc } else { self.g.nodes[v].p_cpu };
+        ds.mem -= self.g.nodes[v].mem;
+        self.assignment[v] = usize::MAX;
+        self.assigned.remove(v);
+        // rebuild reach for d (a union has no cheap undo)
+        let members: Vec<usize> = self.devices[d].set.iter().collect();
+        let mut reach = BitSet::new(self.g.n());
+        for u in members {
+            reach.union_with(&self.reach[u]);
+        }
+        self.devices[d].reach = reach;
+    }
+
+    /// Best-single-node-move descent on the full objective (evaluated via
+    /// a scratch placement). Respects memory; respects contiguity when the
+    /// options demand it.
+    fn polish(&self, obj: f64, dense: Vec<usize>) -> Option<(f64, Vec<usize>)> {
+        let nd = self.devices.len();
+        let mut cur = dense;
+        let mut cur_obj = obj;
+        let mut improved_any = false;
+        let polish_deadline = Instant::now() + Duration::from_secs(5);
+        'outer: loop {
+            let mut best: Option<(f64, usize, usize)> = None;
+            for v in 0..self.g.n() {
+                if Instant::now() > polish_deadline {
+                    break 'outer;
+                }
+                let orig = cur[v];
+                for d in 0..nd {
+                    if d == orig {
+                        continue;
+                    }
+                    cur[v] = d;
+                    let cand = self.eval_dense(&cur);
+                    if cand < cur_obj - 1e-12
+                        && best.as_ref().is_none_or(|&(b, _, _)| cand < b)
+                    {
+                        best = Some((cand, v, d));
+                    }
+                }
+                cur[v] = orig;
+            }
+            match best {
+                Some((val, v, d)) if Instant::now() < polish_deadline => {
+                    cur[v] = d;
+                    cur_obj = val;
+                    improved_any = true;
+                }
+                _ => break,
+            }
+        }
+        improved_any.then_some((cur_obj, cur))
+    }
+
+    /// Evaluate a dense assignment (INF if infeasible / contiguity broken
+    /// in contiguous mode).
+    fn eval_dense(&self, dense: &[usize]) -> f64 {
+        let p = Placement::new(
+            dense.iter().map(|&d| Device::from_index(d, self.sc.k)).collect(),
+            0.0,
+            "tmp",
+        );
+        if self.opts.contiguous {
+            for d in 0..self.devices.len() {
+                let set = p.set_of(Device::from_index(d, self.sc.k), self.g.n());
+                if !crate::graph::contiguity::is_contiguous(self.g, &set) {
+                    return f64::INFINITY;
+                }
+            }
+        }
+        objective::max_load(self.g, self.sc, &p)
+    }
+}
+
+struct Undo {
+    in_paid_added: Vec<usize>,
+    out_paid_added: Vec<usize>,
+}
+
+// ---------------------------------------------------------------------------
+// Literal Fig.-6 MILP (executable specification, small instances)
+// ---------------------------------------------------------------------------
+
+/// Variable layout for the Fig.-6 model.
+pub struct ThroughputModel {
+    pub milp: Milp,
+    pub num_devices: usize,
+    n: usize,
+}
+
+impl ThroughputModel {
+    pub fn x(&self, v: usize, i: usize) -> usize {
+        v * self.num_devices + i
+    }
+
+    /// Extract a dense assignment from a MILP solution vector.
+    pub fn assignment(&self, sol: &[f64]) -> Vec<usize> {
+        (0..self.n)
+            .map(|v| {
+                (0..self.num_devices)
+                    .max_by(|&a, &b| sol[self.x(v, a)].total_cmp(&sol[self.x(v, b)]))
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// Build the Fig.-6 MILP. Devices `0..k` are accelerators, `k..k+ℓ` CPUs.
+/// With `contiguous`, the Lemma-4.1 `z`-linearization of constraint (16) is
+/// added for every device. The `CommIn/CommOut` variables exist per
+/// (node, accelerator); loads and `MaxLoad` close the model.
+pub fn build_model(g: &OpGraph, sc: &Scenario, contiguous: bool) -> ThroughputModel {
+    let n = g.n();
+    let nd = sc.k + sc.l;
+    let k = sc.k;
+    // layout: x[v][i] (n*nd) | cin[v][acc i] (n*k) | cout[v][acc i] (n*k)
+    //         | z[v][i] (n*nd, only if contiguous) | load[i] (nd) | maxload
+    let x0 = 0;
+    let cin0 = x0 + n * nd;
+    let cout0 = cin0 + n * k;
+    let z0 = cout0 + n * k;
+    let load0 = z0 + if contiguous { n * nd } else { 0 };
+    let ml = load0 + nd;
+    let num_vars = ml + 1;
+
+    let mut lp = Lp::new(num_vars);
+    let x = |v: usize, i: usize| x0 + v * nd + i;
+    let cin = |v: usize, i: usize| cin0 + v * k + i;
+    let cout = |v: usize, i: usize| cout0 + v * k + i;
+    let z = |v: usize, i: usize| z0 + v * nd + i;
+
+    for v in 0..n {
+        for i in 0..nd {
+            lp.upper[x(v, i)] = 1.0;
+            if contiguous {
+                lp.upper[z(v, i)] = 1.0;
+            }
+        }
+        for i in 0..k {
+            lp.upper[cin(v, i)] = 1.0;
+            lp.upper[cout(v, i)] = 1.0;
+        }
+    }
+    lp.objective[ml] = 1.0;
+
+    // (15) Σ_i x_vi = 1
+    for v in 0..n {
+        lp.add((0..nd).map(|i| (x(v, i), 1.0)).collect(), Sense::Eq, 1.0);
+    }
+    // (17)/(18) CommIn_ui ≥ x_vi − x_ui ; CommOut_ui ≥ x_ui − x_vi (accs)
+    for (u, v) in g.edges() {
+        for i in 0..k {
+            lp.add(vec![(cin(u, i), 1.0), (x(v, i), -1.0), (x(u, i), 1.0)], Sense::Ge, 0.0);
+            lp.add(vec![(cout(u, i), 1.0), (x(u, i), -1.0), (x(v, i), 1.0)], Sense::Ge, 0.0);
+        }
+    }
+    // (19) memory per accelerator
+    for i in 0..k {
+        lp.add(
+            (0..n).map(|v| (x(v, i), g.nodes[v].mem)).collect(),
+            Sense::Le,
+            sc.mem_cap.min(1e15),
+        );
+    }
+    // (20) accelerator load; (21) CPU load; MaxLoad ≥ Load_i
+    for i in 0..nd {
+        let mut coeffs: Vec<(usize, f64)> = vec![(load0 + i, -1.0)];
+        if i < k {
+            for v in 0..n {
+                coeffs.push((x(v, i), g.nodes[v].p_acc));
+                coeffs.push((cin(v, i), g.nodes[v].comm));
+                coeffs.push((cout(v, i), g.nodes[v].comm));
+            }
+        } else {
+            for v in 0..n {
+                coeffs.push((x(v, i), g.nodes[v].p_cpu));
+            }
+        }
+        lp.add(coeffs, Sense::Eq, 0.0);
+        lp.add(vec![(ml, 1.0), (load0 + i, -1.0)], Sense::Ge, 0.0);
+    }
+    // (16) contiguity via Lemma 4.1: z ≥ x ; z_v ≤ z_u ; z_v ≤ x_v − x_u + 1
+    if contiguous {
+        for v in 0..n {
+            for i in 0..nd {
+                lp.add(vec![(z(v, i), 1.0), (x(v, i), -1.0)], Sense::Ge, 0.0);
+            }
+        }
+        for (u, v) in g.edges() {
+            for i in 0..nd {
+                lp.add(vec![(z(v, i), 1.0), (z(u, i), -1.0)], Sense::Le, 0.0);
+                lp.add(
+                    vec![(z(v, i), 1.0), (x(v, i), -1.0), (x(u, i), 1.0)],
+                    Sense::Le,
+                    1.0,
+                );
+            }
+        }
+    }
+    // colocation (App. B): same color class ⇒ identical x rows
+    let mut classes: std::collections::BTreeMap<u32, Vec<usize>> = Default::default();
+    for (v, node) in g.nodes.iter().enumerate() {
+        if let Some(c) = node.color_class {
+            classes.entry(c).or_default().push(v);
+        }
+    }
+    for members in classes.values() {
+        for w in members.windows(2) {
+            for i in 0..nd {
+                lp.add(vec![(x(w[0], i), 1.0), (x(w[1], i), -1.0)], Sense::Eq, 0.0);
+            }
+        }
+    }
+
+    let integers: Vec<usize> = (0..n * nd).collect();
+    ThroughputModel { milp: Milp { lp, integers }, num_devices: nd, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::milp::MilpOptions;
+    use crate::util::proptest::random_dag;
+    use crate::util::rng::Rng;
+
+    fn chain_g(n: usize) -> OpGraph {
+        use crate::graph::Node;
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(10.0).acc(1.0).mem(1.0).comm(0.1));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn specialized_matches_dp_on_chain() {
+        let g = chain_g(6);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let dp_p = dp::solve(&g, &sc).unwrap();
+        let ip = solve(&g, &sc, &IpOptions::default()).unwrap();
+        assert_eq!(ip.status, SolveStatus::Optimal);
+        assert!((ip.placement.objective - dp_p.objective).abs() < 1e-9);
+    }
+
+    #[test]
+    fn specialized_matches_brute_force_and_bounds_dp() {
+        // The Fig.-6 feasible set (per-device contiguity) is a superset of
+        // the DP's pipeline-orderable partitions, so IP ≤ DP; equality on
+        // the paper's workloads but not on every random DAG.
+        let mut rng = Rng::new(0x1790);
+        for case in 0..12 {
+            let g = random_dag(&mut rng, 7, 0.3);
+            let sc = Scenario::new(2, 1, 5.0);
+            let dp_r = dp::solve(&g, &sc);
+            let ip_r = solve(&g, &sc, &IpOptions { gap_target: 0.0, ..Default::default() });
+            match (dp_r, ip_r) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(b.status, SolveStatus::Optimal, "case {case}");
+                    assert!(
+                        b.placement.objective <= a.objective + 1e-6,
+                        "case {case}: ip={} worse than dp={}",
+                        b.placement.objective,
+                        a.objective
+                    );
+                    let bf = brute_force_fig6(&g, &sc).unwrap();
+                    assert!(
+                        (b.placement.objective - bf).abs() < 1e-6,
+                        "case {case}: ip={} bf={bf}",
+                        b.placement.objective
+                    );
+                }
+                (Err(_), Err(_)) => {}
+                (a, b) => {
+                    panic!("case {case}: feasibility disagreement {a:?} vs {:?}", b.map(|r| r.status))
+                }
+            }
+        }
+    }
+
+    /// Brute force over the literal Fig.-6 feasible set: per-device
+    /// contiguity (Def. 3.1) + memory, scored by the shared evaluator.
+    fn brute_force_fig6(g: &OpGraph, sc: &Scenario) -> Option<f64> {
+        let nd = sc.k + sc.l;
+        let n = g.n();
+        let mut best: Option<f64> = None;
+        let mut assign = vec![0usize; n];
+        loop {
+            let placement = Placement::new(
+                assign.iter().map(|&d| Device::from_index(d, sc.k)).collect(),
+                0.0,
+                "bf",
+            );
+            let all_contig = (0..nd).all(|d| {
+                let set = placement.set_of(Device::from_index(d, sc.k), n);
+                crate::graph::contiguity::is_contiguous(g, &set)
+            });
+            if all_contig && placement.validate(g, sc, false).is_ok() {
+                let obj = objective::max_load(g, sc, &placement);
+                if obj.is_finite() {
+                    best = Some(best.map_or(obj, |b: f64| b.min(obj)));
+                }
+            }
+            let mut i = 0;
+            loop {
+                if i == n {
+                    return best;
+                }
+                assign[i] += 1;
+                if assign[i] < nd {
+                    break;
+                }
+                assign[i] = 0;
+                i += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn non_contiguous_no_worse_than_contiguous() {
+        let mut rng = Rng::new(0x1791);
+        for _ in 0..8 {
+            let g = random_dag(&mut rng, 7, 0.35);
+            let sc = Scenario::new(2, 1, f64::INFINITY);
+            let c = solve(&g, &sc, &IpOptions { gap_target: 0.0, ..Default::default() }).unwrap();
+            let nc = solve(
+                &g,
+                &sc,
+                &IpOptions { gap_target: 0.0, contiguous: false, ..Default::default() },
+            )
+            .unwrap();
+            assert!(
+                nc.placement.objective <= c.placement.objective + 1e-9,
+                "non-contig {} > contig {}",
+                nc.placement.objective,
+                c.placement.objective
+            );
+        }
+    }
+
+    #[test]
+    fn milp_model_agrees_with_specialized_on_tiny_graph() {
+        let g = chain_g(4);
+        let sc = Scenario::new(2, 0, f64::INFINITY);
+        // literal Fig.-6 model through the LP-based branch & bound
+        let model = build_model(&g, &sc, true);
+        let r = model.milp.solve(&MilpOptions {
+            gap_target: 0.0,
+            time_limit: Duration::from_secs(30),
+            ..Default::default()
+        });
+        assert_eq!(r.status, SolveStatus::Optimal);
+        let ip = solve(&g, &sc, &IpOptions { gap_target: 0.0, ..Default::default() }).unwrap();
+        assert!(
+            (r.objective - ip.placement.objective).abs() < 1e-6,
+            "milp {} vs specialized {}",
+            r.objective,
+            ip.placement.objective
+        );
+    }
+
+    #[test]
+    fn respects_memory_and_reports_feasible_split() {
+        let g = chain_g(6);
+        let sc = Scenario::new(3, 1, 2.0);
+        let ip = solve(&g, &sc, &IpOptions::default()).unwrap();
+        ip.placement.validate(&g, &sc, true).unwrap();
+        assert!(ip.placement.objective.is_finite());
+    }
+
+    #[test]
+    fn training_graph_supported() {
+        use crate::util::proptest::random_training_dag;
+        let mut rng = Rng::new(0x1793);
+        let g = random_training_dag(&mut rng, 5, 0.3);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let ip = solve(&g, &sc, &IpOptions::default()).unwrap();
+        ip.placement.check_colocation(&g).unwrap();
+        let dp_p = dp::solve(&g, &sc).unwrap();
+        assert!(ip.placement.objective <= dp_p.objective + 1e-9);
+    }
+}

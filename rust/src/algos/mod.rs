@@ -1,0 +1,21 @@
+//! The paper's optimization algorithms.
+//!
+//! * [`dp`] — exact DP over ideals for pipelined throughput (§5.1.1), with
+//!   App.-B training preprocessing built in.
+//! * [`dpl`] — the linearization heuristic (§5.1.2).
+//! * [`ip_throughput`] — the Fig.-6 Integer Program (contiguous and
+//!   non-contiguous, §5.1.3/§5.2), on the in-tree MILP solver.
+//! * [`ip_latency`] — the Figs.-3/4 Integer Programs for single-sample
+//!   latency (§4), incl. `q` subgraph slots per accelerator (§4.1).
+//! * [`replication`] — App.-C.2 hybrid model/data-parallel DP.
+//! * [`hierarchy`] — App.-C.3 two-level accelerator topologies.
+//! * [`objective`] — the shared cost-model evaluators all of the above
+//!   (and the baselines) are scored with.
+
+pub mod dp;
+pub mod dpl;
+pub mod hierarchy;
+pub mod ip_latency;
+pub mod ip_throughput;
+pub mod objective;
+pub mod replication;

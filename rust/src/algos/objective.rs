@@ -1,0 +1,434 @@
+//! Ground-truth evaluators for the paper's two objectives. Every optimizer
+//! and baseline is scored through these functions, so DP/IP/heuristics are
+//! compared on one cost model (as in Tables 1–4):
+//!
+//! * [`max_load`] — throughput objective (§5): Time-Per-Sample = the
+//!   maximum device load, with the training variants of §5.3 and the
+//!   Appendix-C.1 communication models.
+//! * [`latency`] — latency objective (§4): end-to-end makespan of the
+//!   uninterrupted-subgraph schedule, evaluated for arbitrary (even
+//!   non-contiguous) placements by decomposing each accelerator's set into
+//!   contiguous virtual pieces and serializing them (constraint (14)).
+
+use crate::coordinator::placement::{Device, Placement, Scenario, TrainSchedule};
+use crate::graph::{contiguity, NodeKind, OpGraph};
+use crate::util::bitset::BitSet;
+
+/// Load components of one device for one pass direction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadParts {
+    pub compute: f64,
+    pub comm_in: f64,
+    pub comm_out: f64,
+}
+
+impl LoadParts {
+    pub fn total(&self, sc: &Scenario) -> f64 {
+        sc.combine(self.compute, self.comm_in, self.comm_out)
+    }
+}
+
+/// Per-device, per-direction loads of a placement.
+#[derive(Clone, Debug)]
+pub struct DeviceLoads {
+    /// Indexed by dense device id (`0..k` accs then `k..k+ℓ` CPUs).
+    pub fw: Vec<LoadParts>,
+    pub bw: Vec<LoadParts>,
+    pub k: usize,
+}
+
+impl DeviceLoads {
+    /// Compute loads of every device. Accelerator comm follows §3 (pay
+    /// `c_u` for boundary crossings, once per direction per node); CPU
+    /// devices pay compute only (RAM access is free in the model).
+    pub fn of(g: &OpGraph, sc: &Scenario, p: &Placement) -> DeviceLoads {
+        let nd = sc.k + sc.l.max(1);
+        let mut fw = vec![LoadParts::default(); nd];
+        let mut bw = vec![LoadParts::default(); nd];
+
+        for v in 0..g.n() {
+            let d = p.assignment[v];
+            let idx = d.index(sc.k);
+            let parts = match g.nodes[v].kind {
+                NodeKind::Forward => &mut fw,
+                NodeKind::Backward => &mut bw,
+            };
+            match d {
+                Device::Cpu(_) => parts[idx].compute += g.nodes[v].p_cpu,
+                Device::Acc(_) => {
+                    parts[idx].compute += g.nodes[v].p_acc;
+                    // out-comm: v's output leaves the device
+                    if g.succs[v].iter().any(|&w| p.assignment[w] != d) {
+                        parts[idx].comm_out += g.nodes[v].comm;
+                    }
+                }
+            }
+        }
+        // in-comm: for each accelerator, each external producer u feeding it
+        // is paid once (per §3 / Fig. 6 CommIn), in the direction of the
+        // *consumer* side nodes.
+        for i in 0..sc.k {
+            let d = Device::Acc(i);
+            for dir in [NodeKind::Forward, NodeKind::Backward] {
+                let mut paid = BitSet::new(g.n());
+                for v in 0..g.n() {
+                    if p.assignment[v] != d || g.nodes[v].kind != dir {
+                        continue;
+                    }
+                    for &u in &g.preds[v] {
+                        if p.assignment[u] != d && !paid.contains(u) {
+                            paid.insert(u);
+                            let parts =
+                                if dir == NodeKind::Forward { &mut fw } else { &mut bw };
+                            parts[i].comm_in += g.nodes[u].comm;
+                        }
+                    }
+                }
+            }
+        }
+        DeviceLoads { fw, bw, k: sc.k }
+    }
+
+    /// Combined load of device `idx` under the scenario's comm model and
+    /// training schedule (FW + BW for PipeDream-style accounting).
+    pub fn device_total(&self, idx: usize, sc: &Scenario) -> f64 {
+        self.fw[idx].total(sc) + self.bw[idx].total(sc)
+    }
+}
+
+/// Throughput objective: Time-Per-Sample of the pipelined schedule.
+///
+/// * Inference graphs: `max_i load_i` (§5.1).
+/// * Training graphs, PipeDream schedule: `max_i (FW_i + BW_i)` (§5.3).
+/// * Training graphs, GPipe schedule: `max_i FW_i + max_i BW_i` (App. A).
+///
+/// Returns `INFINITY` for memory-infeasible or accelerator-unsupported
+/// placements.
+pub fn max_load(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
+    // memory feasibility
+    if p.check_memory(g, sc).is_err() {
+        return f64::INFINITY;
+    }
+    for v in 0..g.n() {
+        if p.assignment[v].is_acc() && g.nodes[v].p_acc.is_infinite() {
+            return f64::INFINITY;
+        }
+    }
+    let loads = DeviceLoads::of(g, sc, p);
+    let nd = sc.k + sc.l.max(1);
+    let is_training = g.nodes.iter().any(|n| n.kind == NodeKind::Backward);
+    if !is_training || sc.train_schedule == TrainSchedule::PipeDream {
+        (0..nd).map(|i| loads.device_total(i, sc)).fold(0.0, f64::max)
+    } else {
+        let max_fw = (0..nd).map(|i| loads.fw[i].total(sc)).fold(0.0, f64::max);
+        let max_bw = (0..nd).map(|i| loads.bw[i].total(sc)).fold(0.0, f64::max);
+        max_fw + max_bw
+    }
+}
+
+/// Latency objective (§4): makespan of the single-sample schedule where
+/// each accelerator piece runs uninterrupted (in-transfer → compute →
+/// out-transfer) once all its external inputs are in RAM, pieces on one
+/// accelerator serialize, and CPU nodes run whenever their inputs are ready
+/// (width ≤ ℓ assumed, as in the paper).
+///
+/// Non-contiguous accelerator sets are decomposed into contiguous virtual
+/// pieces first (§4.1 semantics with `q` = number of pieces).
+pub fn latency(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
+    latency_with_granularity(g, sc, p, false)
+        .unwrap_or_else(|| {
+            // Mutually-dependent pieces (two contiguous sets CAN depend on
+            // each other through direct edges) make the macro graph cyclic;
+            // fall back to per-node accelerator invocations (Fig. 4 with
+            // q = |S|), which is always schedulable.
+            latency_with_granularity(g, sc, p, true)
+                .expect("singleton pieces must be schedulable")
+        })
+}
+
+fn latency_with_granularity(
+    g: &OpGraph,
+    sc: &Scenario,
+    p: &Placement,
+    singleton_pieces: bool,
+) -> Option<f64> {
+    let n = g.n();
+    if n == 0 {
+        return Some(0.0);
+    }
+    // Build pieces: every accelerator's node set split into contiguous
+    // chunks; CPU nodes are singleton "pieces" with piece id usize::MAX.
+    let mut piece_of: Vec<usize> = vec![usize::MAX; n];
+    let mut pieces: Vec<(usize, BitSet)> = Vec::new(); // (device, nodes)
+    for i in 0..sc.k {
+        let set = p.set_of(Device::Acc(i), n);
+        if set.is_empty() {
+            continue;
+        }
+        let chunks = if singleton_pieces {
+            set.iter().map(|v| BitSet::from_iter(n, [v])).collect()
+        } else {
+            contiguity::virtual_device_split(g, &set)
+        };
+        for chunk in chunks {
+            let id = pieces.len();
+            for v in chunk.iter() {
+                piece_of[v] = id;
+            }
+            pieces.push((i, chunk));
+        }
+    }
+
+    // Build the macro-DAG: each piece is one macro node, each CPU node a
+    // singleton. A piece can only start when ALL its external inputs are
+    // done — which need not precede its first member in a node-level topo
+    // order — so scheduling walks the macro graph in macro-topological
+    // order instead. (Contiguity of the pieces guarantees the macro graph
+    // is acyclic: a macro cycle through a piece would be a Def.-3.1
+    // violation for that piece.)
+    let num_macro = pieces.len()
+        + (0..n).filter(|&v| piece_of[v] == usize::MAX).count();
+    let mut macro_of: Vec<usize> = vec![usize::MAX; n];
+    let mut next_macro = pieces.len();
+    for v in 0..n {
+        if piece_of[v] == usize::MAX {
+            macro_of[v] = next_macro;
+            next_macro += 1;
+        } else {
+            macro_of[v] = piece_of[v];
+        }
+    }
+    let mut madj: Vec<Vec<usize>> = vec![Vec::new(); num_macro];
+    let mut mindeg = vec![0usize; num_macro];
+    let mut seen = std::collections::HashSet::new();
+    for (u, v) in g.edges() {
+        let (a, b) = (macro_of[u], macro_of[v]);
+        if a != b && seen.insert((a, b)) {
+            madj[a].push(b);
+            mindeg[b] += 1;
+        }
+    }
+    let mut queue: Vec<usize> = (0..num_macro).filter(|&m| mindeg[m] == 0).collect();
+    let mut done_at: Vec<f64> = vec![0.0; n];
+    let mut acc_free: Vec<f64> = vec![0.0; sc.k]; // device serialization (14)
+    let mut head = 0;
+    let mut processed = 0;
+    // map macro id back to its cpu node for singletons
+    let mut cpu_node_of: Vec<usize> = vec![usize::MAX; num_macro];
+    for v in 0..n {
+        if piece_of[v] == usize::MAX {
+            cpu_node_of[macro_of[v]] = v;
+        }
+    }
+    while head < queue.len() {
+        let m = queue[head];
+        head += 1;
+        processed += 1;
+        if m < pieces.len() {
+            let (dev, ref set) = pieces[m];
+            let mut start: f64 = acc_free[dev];
+            let mut comm_in = 0.0;
+            let mut paid = BitSet::new(n);
+            let mut compute = 0.0;
+            let mut comm_out = 0.0;
+            for w in set.iter() {
+                compute += g.nodes[w].p_acc;
+                for &u in &g.preds[w] {
+                    if !set.contains(u) {
+                        start = start.max(done_at[u]);
+                        if !paid.contains(u) {
+                            paid.insert(u);
+                            comm_in += g.nodes[u].comm;
+                        }
+                    }
+                }
+                if g.succs[w].iter().any(|&x| !set.contains(x)) {
+                    comm_out += g.nodes[w].comm;
+                }
+            }
+            let finish = start + comm_in + compute + comm_out;
+            acc_free[dev] = finish;
+            for w in set.iter() {
+                done_at[w] = finish;
+            }
+        } else {
+            // CPU node: longest-path recurrence (constraints (8)–(9)).
+            let v = cpu_node_of[m];
+            let ready = g.preds[v].iter().map(|&u| done_at[u]).fold(0.0, f64::max);
+            done_at[v] = ready + g.nodes[v].p_cpu;
+        }
+        for &nxt in &madj[m] {
+            mindeg[nxt] -= 1;
+            if mindeg[nxt] == 0 {
+                queue.push(nxt);
+            }
+        }
+    }
+    if processed != num_macro {
+        return None; // macro cycle between pieces of different devices
+    }
+    Some(done_at.iter().copied().fold(0.0, f64::max))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Node;
+
+    fn chain_g(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(4.0).acc(1.0).mem(1.0).comm(0.5));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn max_load_single_device() {
+        let g = chain_g(4);
+        let sc = Scenario::new(1, 1, f64::INFINITY);
+        let p = Placement::new(vec![Device::Acc(0); 4], 0.0, "t");
+        // all on one accelerator: no boundary comm, load = 4
+        assert!((max_load(&g, &sc, &p) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_load_balanced_split_pays_comm() {
+        let g = chain_g(4);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let p = Placement::new(
+            vec![Device::Acc(0), Device::Acc(0), Device::Acc(1), Device::Acc(1)],
+            0.0,
+            "t",
+        );
+        // acc0: compute 2 + out c_1=0.5 → 2.5 ; acc1: in c_1 + compute 2 → 2.5
+        assert!((max_load(&g, &sc, &p) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_load_overlap_model() {
+        let g = chain_g(4);
+        let mut sc = Scenario::new(2, 1, f64::INFINITY);
+        sc.comm_model = crate::coordinator::placement::CommModel::Overlap;
+        let p = Placement::new(
+            vec![Device::Acc(0), Device::Acc(0), Device::Acc(1), Device::Acc(1)],
+            0.0,
+            "t",
+        );
+        // max(compute=2, comm=0.5) per device
+        assert!((max_load(&g, &sc, &p) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_load_memory_infeasible() {
+        let g = chain_g(4);
+        let sc = Scenario::new(1, 1, 2.0);
+        let p = Placement::new(vec![Device::Acc(0); 4], 0.0, "t");
+        assert!(max_load(&g, &sc, &p).is_infinite());
+    }
+
+    #[test]
+    fn training_schedules_differ() {
+        // fw 0->1, bw 2 (partner 1) -> 3 (partner 0), heavy bw
+        let mut g = OpGraph::new();
+        g.add_node(Node::new("f0").acc(1.0));
+        g.add_node(Node::new("f1").acc(3.0));
+        let mut b1 = Node::new("b1").acc(3.0).backward();
+        b1.fw_partner = Some(1);
+        g.add_node(b1);
+        let mut b0 = Node::new("b0").acc(1.0).backward();
+        b0.fw_partner = Some(0);
+        g.add_node(b0);
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g.add_edge(2, 3);
+        let p = Placement::new(
+            vec![Device::Acc(0), Device::Acc(1), Device::Acc(1), Device::Acc(0)],
+            0.0,
+            "t",
+        );
+        let mut sc = Scenario::new(2, 1, f64::INFINITY);
+        // zero comm for clarity
+        let pd = max_load(&g, &sc, &p); // max(1+1, 3+3) = 6
+        assert!((pd - 6.0).abs() < 1e-9);
+        sc.train_schedule = TrainSchedule::GPipe;
+        let gp = max_load(&g, &sc, &p); // max FW (3) + max BW (3) = 6
+        assert!((gp - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_all_cpu_is_critical_path() {
+        let g = chain_g(3);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let p = Placement::new(vec![Device::Cpu(0); 3], 0.0, "t");
+        assert!((latency(&g, &sc, &p) - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_single_acc_subgraph() {
+        let g = chain_g(3);
+        let sc = Scenario::new(1, 1, f64::INFINITY);
+        let p = Placement::new(vec![Device::Acc(0); 3], 0.0, "t");
+        // one piece, no external inputs/outputs: latency = compute 3
+        assert!((latency(&g, &sc, &p) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_mixed_chain() {
+        // cpu node then accelerator pair: cpu 4, then in-comm c_0 0.5 +
+        // compute 2 (no out) = 6.5
+        let g = chain_g(3);
+        let sc = Scenario::new(1, 1, f64::INFINITY);
+        let p = Placement::new(vec![Device::Cpu(0), Device::Acc(0), Device::Acc(0)], 0.0, "t");
+        assert!((latency(&g, &sc, &p) - 6.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_noncontiguous_serializes_pieces() {
+        // chain of 5; acc0 holds {0, 2, 4} (3 pieces), cpu holds {1, 3}
+        let g = chain_g(5);
+        let sc = Scenario::new(1, 1, f64::INFINITY);
+        let p = Placement::new(
+            vec![
+                Device::Acc(0),
+                Device::Cpu(0),
+                Device::Acc(0),
+                Device::Cpu(0),
+                Device::Acc(0),
+            ],
+            0.0,
+            "t",
+        );
+        // piece {0}: compute 1 + out 0.5 = 1.5 → node0 done 1.5
+        // cpu 1: 1.5 + 4 = 5.5
+        // piece {2}: start max(5.5, acc free 1.5) = 5.5 + in 0.5 + 1 + out 0.5 = 7.5
+        // cpu 3: 7.5 + 4 = 11.5
+        // piece {4}: 11.5 + in 0.5 + 1 = 13
+        assert!((latency(&g, &sc, &p) - 13.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_parallel_branches_overlap() {
+        // diamond with branch nodes on different accelerators runs branches
+        // in parallel.
+        let mut g = OpGraph::new();
+        for i in 0..4 {
+            g.add_node(Node::new(format!("n{i}")).cpu(1.0).acc(2.0).comm(0.0));
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let p = Placement::new(
+            vec![Device::Cpu(0), Device::Acc(0), Device::Acc(1), Device::Cpu(0)],
+            0.0,
+            "t",
+        );
+        // cpu0: 1; branches in parallel on separate accs: +2 → 3; sink: +1 → 4
+        assert!((latency(&g, &sc, &p) - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,156 @@
+//! Human-expert placements (§6): rule-based splits for *layer* graphs only
+//! (the paper: operator graphs are "infeasible to split manually").
+//!
+//! Rules follow the paper's description:
+//! * GNMT / BERT-24: place each repeated block (LSTM / transformer layer)
+//!   on its own device, then balance blocks across the `k` devices in
+//!   round-robin bands — "in line with prior work [SVL14, WSC+16]".
+//! * ResNet-50 / Inception-v3: stripe the conv/bn/relu layers equally
+//!   (by count) across all devices in topological order.
+//!
+//! Expert splits ignore the memory cap (Table 4 reports OOM for two of
+//! them), so no feasibility repair is attempted.
+
+use crate::algos::objective;
+use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::graph::{topo, NodeKind, OpGraph};
+
+/// Expert style per workload family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpertStyle {
+    /// Band the repeated blocks (GNMT, BERT-24): contiguous bands of equal
+    /// *block* count per device, blocks identified by a name prefix like
+    /// "layerN" / "lstmN".
+    BlockBands,
+    /// Equal-count striping of layers across devices in topo order
+    /// (ResNet, Inception).
+    EqualStripes,
+}
+
+/// Produce the expert placement. `style` chooses the rule; blocks are
+/// derived from node names of the form `<block>_<rest>` (the workload
+/// generators emit these).
+pub fn solve(g: &OpGraph, sc: &Scenario, style: ExpertStyle) -> Placement {
+    let order = topo::toposort(g).expect("expert split requires a DAG");
+    let nd = sc.k.max(1);
+    // the expert stripes/bands FORWARD work; backward nodes follow their
+    // forward partner (humans keep a layer's weights on one device)
+    let fw_order: Vec<usize> = order
+        .iter()
+        .copied()
+        .filter(|&v| g.nodes[v].kind == NodeKind::Forward)
+        .collect();
+    let mut dense: Vec<usize> = vec![usize::MAX; g.n()];
+    match style {
+        ExpertStyle::EqualStripes => {
+            let n = fw_order.len().max(1);
+            for (pos, &v) in fw_order.iter().enumerate() {
+                dense[v] = (pos * nd / n).min(nd - 1);
+            }
+        }
+        ExpertStyle::BlockBands => {
+            // identify blocks by name prefix before the last '_' (bw nodes
+            // share the block of their forward counterpart)
+            let mut block_of = vec![0usize; g.n()];
+            let mut blocks: std::collections::BTreeMap<String, usize> = Default::default();
+            for &v in &fw_order {
+                let name = g.nodes[v].name.strip_prefix("bw_").unwrap_or(&g.nodes[v].name);
+                let prefix = name.rsplit_once('_').map(|(p, _)| p).unwrap_or(name);
+                let next = blocks.len();
+                let b = *blocks.entry(prefix.to_string()).or_insert(next);
+                block_of[v] = b;
+            }
+            let nb = blocks.len().max(1);
+            for &v in &fw_order {
+                dense[v] = (block_of[v] * nd / nb).min(nd - 1);
+            }
+        }
+    }
+    // backward nodes inherit the partner's device; orphans follow topo pos
+    for v in 0..g.n() {
+        if dense[v] == usize::MAX {
+            dense[v] = match g.nodes[v].fw_partner {
+                Some(f) if dense[f] != usize::MAX => dense[f],
+                _ => nd - 1,
+            };
+        }
+    }
+    let dense: Vec<usize> = dense;
+    let assignment: Vec<Device> = dense.iter().map(|&d| Device::Acc(d)).collect();
+    let mut p = Placement::new(assignment, 0.0, "Expert");
+    // score without the memory constraint; callers report violations
+    let relaxed = Scenario { mem_cap: f64::INFINITY, ..sc.clone() };
+    p.objective = objective::max_load(g, &relaxed, &p);
+    p
+}
+
+/// Latency variant of the expert scoring.
+pub fn solve_latency(g: &OpGraph, sc: &Scenario, style: ExpertStyle) -> Placement {
+    let mut p = solve(g, sc, style);
+    let relaxed = Scenario { mem_cap: f64::INFINITY, ..sc.clone() };
+    p.objective = objective::latency(g, &relaxed, &p);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Node;
+
+    fn blocky_chain() -> OpGraph {
+        // 4 blocks of 2 layers: block0_a block0_b block1_a ...
+        let mut g = OpGraph::new();
+        for b in 0..4 {
+            for part in ["a", "b"] {
+                g.add_node(Node::new(format!("block{b}_{part}")).cpu(4.0).acc(1.0).comm(0.1));
+            }
+        }
+        for i in 1..8 {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn block_bands_keep_blocks_whole() {
+        let g = blocky_chain();
+        let sc = Scenario::new(2, 0, f64::INFINITY);
+        let p = solve(&g, &sc, ExpertStyle::BlockBands);
+        // nodes of the same block land on the same device
+        for b in 0..4 {
+            assert_eq!(p.assignment[2 * b], p.assignment[2 * b + 1], "block {b} split");
+        }
+        // both devices used
+        assert!(p.assignment.iter().any(|&d| d == Device::Acc(0)));
+        assert!(p.assignment.iter().any(|&d| d == Device::Acc(1)));
+    }
+
+    #[test]
+    fn equal_stripes_balance_counts() {
+        let g = blocky_chain();
+        let sc = Scenario::new(4, 0, f64::INFINITY);
+        let p = solve(&g, &sc, ExpertStyle::EqualStripes);
+        for d in 0..4 {
+            assert_eq!(p.set_of(Device::Acc(d), 8).len(), 2);
+        }
+    }
+
+    #[test]
+    fn expert_never_beats_dp() {
+        let g = blocky_chain();
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let dp = crate::algos::dp::solve(&g, &sc).unwrap();
+        for style in [ExpertStyle::BlockBands, ExpertStyle::EqualStripes] {
+            let e = solve(&g, &sc, style);
+            assert!(e.objective >= dp.objective - 1e-9);
+        }
+    }
+
+    #[test]
+    fn latency_variant_scores_latency() {
+        let g = blocky_chain();
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let p = solve_latency(&g, &sc, ExpertStyle::EqualStripes);
+        assert!(p.objective.is_finite());
+    }
+}

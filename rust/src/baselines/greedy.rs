@@ -1,0 +1,105 @@
+//! Greedy latency baseline (§7): contract colocated nodes and SCCs, fix a
+//! topological ordering, fill each accelerator in turn with as many nodes
+//! as fit, park the remainder on the CPU. Feasible by construction,
+//! oblivious to processing times and communication costs — the paper's
+//! sanity floor for Table 4.
+
+use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::graph::{contract, topo, OpGraph};
+
+pub fn solve(g: &OpGraph, sc: &Scenario) -> Placement {
+    let con = contract::preprocess_colocation(g);
+    let order = topo::toposort(&con.graph).expect("greedy requires a DAG after contraction");
+
+    let mut dense = vec![usize::MAX; con.graph.n()];
+    let mut acc = 0usize;
+    let mut used = 0.0_f64;
+    for &v in &order {
+        let m = con.graph.nodes[v].mem;
+        while acc < sc.k && (used + m > sc.mem_cap || con.graph.nodes[v].p_acc.is_infinite()) {
+            if con.graph.nodes[v].p_acc.is_infinite() {
+                break;
+            }
+            acc += 1;
+            used = 0.0;
+        }
+        if acc < sc.k && used + m <= sc.mem_cap && con.graph.nodes[v].p_acc.is_finite() {
+            dense[v] = acc;
+            used += m;
+        } else {
+            dense[v] = sc.k; // CPU pool
+        }
+    }
+
+    let assignment: Vec<Device> = con
+        .map
+        .iter()
+        .map(|&c| {
+            if dense[c] < sc.k {
+                Device::Acc(dense[c])
+            } else {
+                Device::Cpu(0)
+            }
+        })
+        .collect();
+    let mut p = Placement::new(assignment, 0.0, "Greedy");
+    p.objective = crate::algos::objective::latency(g, sc, &p);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Node;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(9.0).acc(1.0).mem(1.0).comm(0.2));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn fills_accelerators_in_topo_order() {
+        let g = chain(6);
+        let sc = Scenario::new(2, 1, 2.0);
+        let p = solve(&g, &sc);
+        p.validate(&g, &sc, true).unwrap();
+        // 2 per accelerator, remaining 2 on CPU
+        assert_eq!(p.set_of(Device::Acc(0), 6).len(), 2);
+        assert_eq!(p.set_of(Device::Acc(1), 6).len(), 2);
+        assert_eq!(p.set_of(Device::Cpu(0), 6).len(), 2);
+        assert!(p.objective.is_finite());
+    }
+
+    #[test]
+    fn all_fit_no_cpu_needed() {
+        let g = chain(4);
+        let sc = Scenario::new(2, 1, 2.0);
+        let p = solve(&g, &sc);
+        assert!(p.set_of(Device::Cpu(0), 4).is_empty());
+    }
+
+    #[test]
+    fn respects_colocation() {
+        let mut g = chain(4);
+        g.nodes[0].color_class = Some(1);
+        g.nodes[3].color_class = Some(1);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let p = solve(&g, &sc);
+        p.check_colocation(&g).unwrap();
+    }
+
+    #[test]
+    fn acc_unsupported_ops_go_to_cpu() {
+        let mut g = chain(3);
+        g.nodes[1].p_acc = f64::INFINITY;
+        let sc = Scenario::new(1, 1, f64::INFINITY);
+        let p = solve(&g, &sc);
+        assert_eq!(p.assignment[1], Device::Cpu(0));
+    }
+}

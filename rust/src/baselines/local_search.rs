@@ -1,0 +1,187 @@
+//! Local search baseline [MKA07] (§6): start from a random assignment,
+//! repeatedly apply the best single-node reassignment until no move
+//! improves the max-load objective; restart `restarts` times and keep the
+//! best. Produces (almost always) non-contiguous splits. As the paper
+//! observes, it fares badly on these instances — the optimization landscape
+//! is non-local.
+
+use crate::algos::objective;
+use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::graph::OpGraph;
+use crate::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+/// Wall-clock budget per restart: the paper's local search runs to a local
+/// optimum; on 1k+-node operator graphs a full best-improvement sweep is
+/// O(V·devices) objective evaluations per move, so we cap each descent —
+/// the truncation only makes the baseline *weaker*, consistent with its
+/// role.
+const RESTART_BUDGET: Duration = Duration::from_secs(3);
+
+pub fn solve(g: &OpGraph, sc: &Scenario, restarts: usize, seed: u64) -> Placement {
+    let mut rng = Rng::new(seed);
+    let nd = sc.k + sc.l.max(1);
+    let mut best: Option<(f64, Vec<usize>)> = None;
+
+    for _ in 0..restarts.max(1) {
+        // random colocation-respecting start
+        let mut dense: Vec<usize> = vec![0; g.n()];
+        let mut class_dev: std::collections::BTreeMap<u32, usize> = Default::default();
+        for v in 0..g.n() {
+            dense[v] = match g.nodes[v].color_class {
+                Some(c) => *class_dev.entry(c).or_insert_with(|| rng.gen_range(nd)),
+                None => rng.gen_range(nd),
+            };
+        }
+        let mut cur = eval(g, sc, &dense);
+        let deadline = Instant::now() + RESTART_BUDGET;
+        // best-improvement hill climbing over single-node moves (moving a
+        // whole color class together)
+        'descent: loop {
+            let mut improved: Option<(f64, usize, usize)> = None;
+            for v in 0..g.n() {
+                if Instant::now() > deadline {
+                    break 'descent;
+                }
+                // only the representative of a color class moves
+                if let Some(c) = g.nodes[v].color_class {
+                    let rep = (0..g.n())
+                        .find(|&u| g.nodes[u].color_class == Some(c))
+                        .unwrap();
+                    if rep != v {
+                        continue;
+                    }
+                }
+                let orig = dense[v];
+                for d in 0..nd {
+                    if d == orig {
+                        continue;
+                    }
+                    set_class(g, &mut dense, v, d);
+                    let cand = eval(g, sc, &dense);
+                    if cand < cur - 1e-12
+                        && improved.as_ref().is_none_or(|&(b, _, _)| cand < b)
+                    {
+                        improved = Some((cand, v, d));
+                    }
+                    set_class(g, &mut dense, v, orig);
+                }
+            }
+            match improved {
+                Some((val, v, d)) => {
+                    set_class(g, &mut dense, v, d);
+                    cur = val;
+                }
+                None => break,
+            }
+        }
+        if cur.is_finite() && best.as_ref().is_none_or(|(b, _)| cur < *b) {
+            best = Some((cur, dense));
+        }
+    }
+
+    match best {
+        Some((obj, dense)) => {
+            let assignment =
+                dense.iter().map(|&d| Device::from_index(d, sc.k)).collect();
+            Placement::new(assignment, obj, "Local search")
+        }
+        None => {
+            // no feasible local optimum found: park everything on CPU
+            let p = Placement::new(vec![Device::Cpu(0); g.n()], 0.0, "Local search");
+            let obj = objective::max_load(g, sc, &p);
+            Placement { objective: obj, ..p }
+        }
+    }
+}
+
+fn set_class(g: &OpGraph, dense: &mut [usize], v: usize, d: usize) {
+    match g.nodes[v].color_class {
+        Some(c) => {
+            for u in 0..g.n() {
+                if g.nodes[u].color_class == Some(c) {
+                    dense[u] = d;
+                }
+            }
+        }
+        None => dense[v] = d,
+    }
+}
+
+fn eval(g: &OpGraph, sc: &Scenario, dense: &[usize]) -> f64 {
+    let p = Placement::new(
+        dense.iter().map(|&d| Device::from_index(d, sc.k)).collect(),
+        0.0,
+        "tmp",
+    );
+    objective::max_load(g, sc, &p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Node;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(9.0).acc(1.0).mem(1.0).comm(0.2));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn deterministic_for_seed_and_feasible() {
+        let g = chain(8);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let a = solve(&g, &sc, 5, 42);
+        let b = solve(&g, &sc, 5, 42);
+        assert_eq!(a.assignment, b.assignment);
+        a.validate(&g, &sc, false).unwrap();
+        assert!(a.objective.is_finite());
+    }
+
+    #[test]
+    fn never_better_than_optimum() {
+        use crate::util::proptest::random_dag;
+        let mut rng = Rng::new(0x15);
+        for _ in 0..5 {
+            let g = random_dag(&mut rng, 8, 0.3);
+            let sc = Scenario::new(2, 1, f64::INFINITY);
+            let opt = crate::algos::ip_throughput::solve(
+                &g,
+                &sc,
+                &crate::algos::ip_throughput::IpOptions {
+                    contiguous: false,
+                    gap_target: 0.0,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let ls = solve(&g, &sc, 10, 7);
+            assert!(ls.objective >= opt.placement.objective - 1e-6);
+        }
+    }
+
+    #[test]
+    fn respects_colocation_classes() {
+        let mut g = chain(6);
+        g.nodes[1].color_class = Some(3);
+        g.nodes[4].color_class = Some(3);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let p = solve(&g, &sc, 5, 1);
+        p.check_colocation(&g).unwrap();
+    }
+
+    #[test]
+    fn restarts_help_or_equal() {
+        let g = chain(10);
+        let sc = Scenario::new(3, 1, f64::INFINITY);
+        let one = solve(&g, &sc, 1, 9);
+        let many = solve(&g, &sc, 10, 9);
+        assert!(many.objective <= one.objective + 1e-12);
+    }
+}

@@ -1,0 +1,9 @@
+//! The comparison baselines of §6/§7: greedy topological bin-filling,
+//! a Scotch-style multilevel partitioner, random-restart local search,
+//! PipeDream's linear-chain DP, and rule-based human-expert placements.
+
+pub mod expert;
+pub mod greedy;
+pub mod local_search;
+pub mod pipedream;
+pub mod scotch_like;

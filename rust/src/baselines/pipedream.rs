@@ -1,0 +1,251 @@
+//! PipeDream's optimizer [NHP+19] as a baseline (§6): a DP restricted to
+//! *linear* layer graphs. Branchings are contracted to single nodes first
+//! (the paper: "it requires the input to be a linear path, thus it
+//! contracts all branchings to single nodes"), then the optimal split of
+//! the resulting path into `k + ℓ` consecutive segments minimizes max-load.
+//!
+//! Only meaningful for layer-granularity graphs; on heavily branching
+//! operator graphs the contraction collapses most of the network and the
+//! result degrades — exactly the effect Table 1 shows.
+
+use crate::algos::objective;
+use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::graph::{contract, topo, OpGraph};
+
+/// Contract every "branching region" so the remaining graph is a path:
+/// walk in topological order; whenever more than one node is ready at once
+/// (parallel branches), merge everything until the graph re-converges.
+/// Returns `group_of[v]`.
+pub fn linearize_by_contraction(g: &OpGraph) -> Vec<usize> {
+    let order = topo::toposort(g).expect("pipedream baseline requires a DAG");
+    let n = g.n();
+    // longest-path level of each node
+    let mut level = vec![0usize; n];
+    for &v in &order {
+        for &u in &g.preds[v] {
+            level[v] = level[v].max(level[u] + 1);
+        }
+    }
+    // a node is a "cut" if it is the ONLY node at its level and every
+    // earlier node precedes it (path graph of cut nodes); between cuts,
+    // contract everything into one group.
+    let mut by_level: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+    for v in 0..n {
+        by_level.entry(level[v]).or_default().push(v);
+    }
+    let reach = topo::reachability(g);
+    let mut group_of = vec![usize::MAX; n];
+    let mut next_group = 0usize;
+    let mut open: Vec<usize> = Vec::new(); // nodes in the current region
+    for (_lvl, nodes) in by_level.iter() {
+        let is_cut = nodes.len() == 1 && {
+            let c = nodes[0];
+            // all open nodes must reach c (so the region converges here)
+            open.iter().all(|&u| reach[u].contains(c))
+        };
+        if is_cut && !open.is_empty() {
+            // close the region (open nodes form one group), cut starts new
+            for &u in &open {
+                group_of[u] = next_group;
+            }
+            next_group += 1;
+            open.clear();
+        }
+        open.extend(nodes.iter().copied());
+        if is_cut && open.len() == 1 {
+            group_of[open[0]] = next_group;
+            next_group += 1;
+            open.clear();
+        }
+    }
+    if !open.is_empty() {
+        for &u in &open {
+            group_of[u] = next_group;
+        }
+    }
+    group_of
+}
+
+/// PipeDream baseline: contract to a path, then optimal consecutive
+/// segmentation over the devices by DP.
+pub fn solve(g: &OpGraph, sc: &Scenario) -> Placement {
+    // PipeDream treats a layer's forward and backward work as ONE unit
+    // (its path nodes carry combined fw+bw costs), so colocation classes
+    // are merged across BOTH directions here — unlike the DP's App.-B
+    // preprocessing, which keeps the directions as separate (colocated)
+    // contiguous subgraphs.
+    let mut class_group: std::collections::BTreeMap<u32, usize> = Default::default();
+    let mut group_of = vec![usize::MAX; g.n()];
+    let mut next = 0usize;
+    for (v, node) in g.nodes.iter().enumerate() {
+        group_of[v] = match node.color_class {
+            Some(c) => *class_group.entry(c).or_insert_with(|| {
+                let id = next;
+                next += 1;
+                id
+            }),
+            None => {
+                let id = next;
+                next += 1;
+                id
+            }
+        };
+    }
+    let c1 = contract::contract_groups(g, &group_of);
+    let scc = contract::sccs(&c1.graph);
+    let c2 = contract::contract_groups(&c1.graph, &scc);
+    let map: Vec<usize> = c1.map.iter().map(|&m| c2.map[m]).collect();
+    let con = contract::Contraction {
+        graph: c2.graph,
+        groups: {
+            let mut groups = vec![Vec::new(); map.iter().max().map_or(0, |m| m + 1)];
+            for (v, &m) in map.iter().enumerate() {
+                groups[m].push(v);
+            }
+            groups
+        },
+        map,
+    };
+    let group_of = linearize_by_contraction(&con.graph);
+    let path = contract::contract_groups(&con.graph, &group_of);
+    let order = topo::toposort(&path.graph).expect("path contraction broke acyclicity");
+    let m = order.len();
+    let nd = sc.k + sc.l.max(1);
+
+    // dp[i][d] = best max-load splitting the first i path nodes over d
+    // devices (consecutive segments). Device type chosen greedily per
+    // segment: accelerators first (they are faster on these workloads),
+    // falling back to CPU when out of accelerators.
+    // We model devices as an ordered multiset: first k segments on accs.
+    let big = f64::INFINITY;
+    let mut dp = vec![vec![big; nd + 1]; m + 1];
+    let mut choice = vec![vec![0usize; nd + 1]; m + 1];
+    dp[0][0] = 0.0;
+    // prefix sums of acc/cpu costs along the path
+    for i in 1..=m {
+        for d in 1..=nd {
+            for j in 0..i {
+                // segment j..i on device index d-1 (accs are 0..k)
+                let seg: Vec<usize> = order[j..i].to_vec();
+                let set = crate::util::bitset::BitSet::from_iter(path.graph.n(), seg);
+                let load = if d - 1 < sc.k {
+                    path.graph.acc_load(&set, sc.mem_cap)
+                } else {
+                    path.graph.cpu_load(&set)
+                };
+                let cand = dp[j][d - 1].max(load);
+                if cand < dp[i][d] {
+                    dp[i][d] = cand;
+                    choice[i][d] = j;
+                }
+            }
+        }
+    }
+    let (mut best_d, mut best) = (nd, dp[m][nd]);
+    for d in 1..=nd {
+        if dp[m][d] < best {
+            best = dp[m][d];
+            best_d = d;
+        }
+    }
+
+    // reconstruct segment boundaries
+    let mut dense_path = vec![0usize; path.graph.n()];
+    let (mut i, mut d) = (m, best_d);
+    while d > 0 && i > 0 {
+        let j = choice[i][d];
+        for &v in &order[j..i] {
+            dense_path[v] = d - 1;
+        }
+        i = j;
+        d -= 1;
+    }
+
+    // expand: original node → colocation group → path group → device
+    let assignment: Vec<Device> = (0..g.n())
+        .map(|v| {
+            let pg = path.map[con.map[v]];
+            Device::from_index(dense_path[pg], sc.k)
+        })
+        .collect();
+    let mut placement = Placement::new(assignment, 0.0, "PipeDream");
+    placement.objective = objective::max_load(g, sc, &placement);
+    placement
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Node;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(9.0).acc(1.0).mem(1.0).comm(0.1));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn linear_graph_matches_dp_exactly() {
+        // On a true path, PipeDream's optimizer IS optimal.
+        let g = chain(8);
+        let sc = Scenario::new(3, 1, f64::INFINITY);
+        let pd = solve(&g, &sc);
+        let dp = crate::algos::dp::solve(&g, &sc).unwrap();
+        assert!(
+            (pd.objective - dp.objective).abs() < 1e-9,
+            "pipedream {} vs dp {}",
+            pd.objective,
+            dp.objective
+        );
+    }
+
+    #[test]
+    fn branching_contracted_to_single_node() {
+        // diamond: branches contracted → path src, {branches}, sink
+        let mut g = OpGraph::new();
+        for i in 0..4 {
+            g.add_node(Node::new(format!("n{i}")));
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        let groups = linearize_by_contraction(&g);
+        assert_eq!(groups[1], groups[2], "parallel branches must merge");
+        assert_ne!(groups[0], groups[1]);
+        assert_ne!(groups[1], groups[3]);
+    }
+
+    #[test]
+    fn branchy_graph_no_better_than_dp() {
+        use crate::util::proptest::random_dag;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x9d);
+        for _ in 0..6 {
+            let g = random_dag(&mut rng, 10, 0.25);
+            let sc = Scenario::new(2, 1, f64::INFINITY);
+            let pd = solve(&g, &sc);
+            let dp = crate::algos::dp::solve(&g, &sc).unwrap();
+            assert!(
+                pd.objective >= dp.objective - 1e-9,
+                "pipedream {} beat dp {}",
+                pd.objective,
+                dp.objective
+            );
+        }
+    }
+
+    #[test]
+    fn produces_valid_placement() {
+        let g = chain(6);
+        let sc = Scenario::new(2, 1, 3.0);
+        let p = solve(&g, &sc);
+        p.validate(&g, &sc, false).unwrap();
+        assert!(p.objective.is_finite());
+    }
+}

@@ -1,0 +1,8 @@
+//! The coordinator: glues workloads → optimizers → placements → deployment.
+//!
+//! [`placement`] defines the shared [`placement::Scenario`] /
+//! [`placement::Placement`] vocabulary; [`planner`] is the one-call façade
+//! (`plan(workload, algorithm)`) used by the CLI, examples and benches.
+
+pub mod placement;
+pub mod planner;

@@ -1,0 +1,350 @@
+//! Deployment scenarios and device placements — the input/output
+//! specification of §3, shared by every optimizer, baseline, simulator and
+//! the serving runtime.
+
+use crate::graph::{NodeKind, OpGraph};
+use crate::util::bitset::BitSet;
+
+/// A device in the deployment: accelerator `i ∈ 0..k` or CPU `j ∈ 0..ℓ`.
+/// In the latency setting all CPU cores act as one pool, `Cpu(0)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Device {
+    Acc(usize),
+    Cpu(usize),
+}
+
+impl Device {
+    pub fn is_acc(self) -> bool {
+        matches!(self, Device::Acc(_))
+    }
+
+    /// Dense index: accelerators first (`0..k`), then CPUs (`k..k+ℓ`).
+    pub fn index(self, k: usize) -> usize {
+        match self {
+            Device::Acc(i) => i,
+            Device::Cpu(j) => k + j,
+        }
+    }
+
+    pub fn from_index(idx: usize, k: usize) -> Device {
+        if idx < k {
+            Device::Acc(idx)
+        } else {
+            Device::Cpu(idx - k)
+        }
+    }
+}
+
+impl std::fmt::Display for Device {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Device::Acc(i) => write!(f, "acc{i}"),
+            Device::Cpu(j) => write!(f, "cpu{j}"),
+        }
+    }
+}
+
+/// How communication overlaps computation when computing a device's load
+/// (Appendix C.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CommModel {
+    /// §3 default: transfers serialize with compute → load = comm + compute.
+    #[default]
+    Sequential,
+    /// C.1: transfers overlap compute (one channel) → load = max(comm, compute).
+    Overlap,
+    /// C.1 full-duplex: separate in/out channels → max(in, compute, out).
+    FullDuplex,
+}
+
+/// Pipelined-training schedule flavor (§5.3, Fig. 7). Affects the training
+/// objective: PipeDream (1F1B) uses `max_i (FW_i + BW_i)`; GPipe uses
+/// `max_i FW_i + max_i BW_i`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TrainSchedule {
+    #[default]
+    PipeDream,
+    GPipe,
+}
+
+/// A deployment scenario: the non-graph half of the paper's input.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Number of accelerators (`k`).
+    pub k: usize,
+    /// Number of CPUs (`ℓ`). Throughput algorithms treat these as separate
+    /// pipeline devices; the latency IP pools them.
+    pub l: usize,
+    /// Accelerator memory capacity `M` (same unit as node `mem`).
+    pub mem_cap: f64,
+    pub comm_model: CommModel,
+    pub train_schedule: TrainSchedule,
+    /// Interconnect bandwidth used by the App.-C.2 replication DP's
+    /// AllReduce weight-sync term (size units per time unit).
+    pub bandwidth: f64,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            k: 6,
+            l: 1,
+            mem_cap: f64::INFINITY,
+            comm_model: CommModel::Sequential,
+            train_schedule: TrainSchedule::PipeDream,
+            bandwidth: 1.0,
+        }
+    }
+}
+
+impl Scenario {
+    pub fn new(k: usize, l: usize, mem_cap: f64) -> Self {
+        Scenario { k, l, mem_cap, ..Default::default() }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.k + self.l
+    }
+
+    /// Combine a device's computation and communication loads per the
+    /// scenario's comm model.
+    pub fn combine(&self, compute: f64, comm_in: f64, comm_out: f64) -> f64 {
+        match self.comm_model {
+            CommModel::Sequential => compute + comm_in + comm_out,
+            CommModel::Overlap => compute.max(comm_in + comm_out),
+            CommModel::FullDuplex => compute.max(comm_in).max(comm_out),
+        }
+    }
+}
+
+/// A device placement: every node assigned to exactly one device.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub assignment: Vec<Device>,
+    /// Objective value claimed by the producing algorithm (TPS for
+    /// throughput = max-load; end-to-end latency for the latency IP).
+    pub objective: f64,
+    /// Human-readable producer tag ("DP", "IP (non-contiguous)", …).
+    pub algorithm: String,
+}
+
+impl Placement {
+    pub fn new(assignment: Vec<Device>, objective: f64, algorithm: impl Into<String>) -> Self {
+        Placement { assignment, objective, algorithm: algorithm.into() }
+    }
+
+    /// Node set on a given device.
+    pub fn set_of(&self, device: Device, n: usize) -> BitSet {
+        BitSet::from_iter(
+            n,
+            self.assignment
+                .iter()
+                .enumerate()
+                .filter(|(_, &d)| d == device)
+                .map(|(v, _)| v),
+        )
+    }
+
+    /// All nodes on accelerators.
+    pub fn acc_nodes(&self) -> BitSet {
+        BitSet::from_iter(
+            self.assignment.len(),
+            self.assignment
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| d.is_acc())
+                .map(|(v, _)| v),
+        )
+    }
+
+    /// Dense device indices (`0..k` accs, `k..k+ℓ` CPUs) for rendering.
+    pub fn dense(&self, k: usize) -> Vec<usize> {
+        self.assignment.iter().map(|d| d.index(k)).collect()
+    }
+
+    /// Memory-feasibility check (constraint (3)): accelerator memory only.
+    pub fn check_memory(&self, g: &OpGraph, sc: &Scenario) -> Result<(), String> {
+        for i in 0..sc.k {
+            let set = self.set_of(Device::Acc(i), g.n());
+            let used = g.mem_of(&set);
+            if used > sc.mem_cap * (1.0 + 1e-9) {
+                return Err(format!(
+                    "accelerator {i} over capacity: {used:.3} > {:.3}",
+                    sc.mem_cap
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Colocation check (App. B): same color class ⇒ same device.
+    pub fn check_colocation(&self, g: &OpGraph) -> Result<(), String> {
+        use std::collections::BTreeMap;
+        let mut seen: BTreeMap<u32, Device> = BTreeMap::new();
+        for (v, node) in g.nodes.iter().enumerate() {
+            if let Some(c) = node.color_class {
+                match seen.get(&c) {
+                    None => {
+                        seen.insert(c, self.assignment[v]);
+                    }
+                    Some(&d) if d != self.assignment[v] => {
+                        return Err(format!(
+                            "color class {c} split across {d} and {}",
+                            self.assignment[v]
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Contiguity check (Def. 3.1) per accelerator; for training graphs the
+    /// forward and backward parts are checked separately (§5.3). CPUs are
+    /// never contiguity-constrained (§4 treats the CPU pool specially, and
+    /// §5 pipelines may assign CPUs arbitrary sets).
+    pub fn check_contiguity(&self, g: &OpGraph, sc: &Scenario) -> Result<(), String> {
+        let has_bw = g.nodes.iter().any(|n| n.kind == NodeKind::Backward);
+        for i in 0..sc.k {
+            let set = self.set_of(Device::Acc(i), g.n());
+            if !has_bw {
+                if !crate::graph::contiguity::is_contiguous(g, &set) {
+                    return Err(format!("accelerator {i} holds a non-contiguous set"));
+                }
+            } else {
+                for kind in [NodeKind::Forward, NodeKind::Backward] {
+                    let part = BitSet::from_iter(
+                        g.n(),
+                        set.iter().filter(|&v| g.nodes[v].kind == kind),
+                    );
+                    if !crate::graph::contiguity::is_contiguous(g, &part) {
+                        return Err(format!(
+                            "accelerator {i} holds a non-contiguous {kind:?} set"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate everything an optimizer output must satisfy; `contiguous`
+    /// toggles the Def.-3.1 check (non-contiguous optimizers skip it).
+    pub fn validate(&self, g: &OpGraph, sc: &Scenario, contiguous: bool) -> Result<(), String> {
+        if self.assignment.len() != g.n() {
+            return Err("assignment length mismatch".into());
+        }
+        for &d in &self.assignment {
+            match d {
+                Device::Acc(i) if i >= sc.k => return Err(format!("device {d} out of range")),
+                Device::Cpu(j) if j >= sc.l.max(1) => {
+                    return Err(format!("device {d} out of range"))
+                }
+                _ => {}
+            }
+        }
+        self.check_memory(g, sc)?;
+        self.check_colocation(g)?;
+        if contiguous {
+            self.check_contiguity(g, sc)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Node;
+
+    fn g4() -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..4 {
+            g.add_node(Node::new(format!("n{i}")).mem(1.0));
+        }
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g.add_edge(2, 3);
+        g
+    }
+
+    #[test]
+    fn device_index_roundtrip() {
+        let k = 3;
+        for idx in 0..6 {
+            assert_eq!(Device::from_index(idx, k).index(k), idx);
+        }
+        assert_eq!(Device::Acc(2).index(3), 2);
+        assert_eq!(Device::Cpu(0).index(3), 3);
+    }
+
+    #[test]
+    fn memory_validation() {
+        let g = g4();
+        let sc = Scenario::new(2, 1, 1.5);
+        let p = Placement::new(
+            vec![Device::Acc(0), Device::Acc(0), Device::Acc(1), Device::Cpu(0)],
+            0.0,
+            "t",
+        );
+        assert!(p.check_memory(&g, &sc).is_err()); // acc0 holds 2 > 1.5
+        let sc_ok = Scenario::new(2, 1, 2.0);
+        assert!(p.check_memory(&g, &sc_ok).is_ok());
+    }
+
+    #[test]
+    fn contiguity_validation() {
+        let g = g4();
+        let sc = Scenario::new(1, 1, f64::INFINITY);
+        let bad = Placement::new(
+            vec![Device::Acc(0), Device::Cpu(0), Device::Acc(0), Device::Cpu(0)],
+            0.0,
+            "t",
+        );
+        assert!(bad.check_contiguity(&g, &sc).is_err());
+        assert!(bad.validate(&g, &sc, false).is_ok()); // ok if non-contiguous allowed
+        let good = Placement::new(
+            vec![Device::Acc(0), Device::Acc(0), Device::Cpu(0), Device::Cpu(0)],
+            0.0,
+            "t",
+        );
+        assert!(good.validate(&g, &sc, true).is_ok());
+    }
+
+    #[test]
+    fn colocation_validation() {
+        let mut g = g4();
+        g.nodes[0].color_class = Some(1);
+        g.nodes[3].color_class = Some(1);
+        let split = Placement::new(
+            vec![Device::Acc(0), Device::Acc(0), Device::Acc(0), Device::Cpu(0)],
+            0.0,
+            "t",
+        );
+        assert!(split.check_colocation(&g).is_err());
+        let together = Placement::new(vec![Device::Acc(0); 4], 0.0, "t");
+        assert!(together.check_colocation(&g).is_ok());
+    }
+
+    #[test]
+    fn comm_models_combine() {
+        let sc = |m| Scenario { comm_model: m, ..Default::default() };
+        assert_eq!(sc(CommModel::Sequential).combine(5.0, 2.0, 1.0), 8.0);
+        assert_eq!(sc(CommModel::Overlap).combine(5.0, 2.0, 1.0), 5.0);
+        assert_eq!(sc(CommModel::Overlap).combine(2.0, 4.0, 1.0), 5.0);
+        assert_eq!(sc(CommModel::FullDuplex).combine(2.0, 4.0, 1.0), 4.0);
+    }
+
+    #[test]
+    fn set_of_and_dense() {
+        let p = Placement::new(
+            vec![Device::Acc(1), Device::Cpu(0), Device::Acc(1), Device::Acc(0)],
+            0.0,
+            "t",
+        );
+        let s = p.set_of(Device::Acc(1), 4);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(p.dense(2), vec![1, 2, 1, 0]);
+    }
+}

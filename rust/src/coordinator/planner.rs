@@ -1,0 +1,160 @@
+//! One-call planning façade over every algorithm and baseline, returning
+//! uniformly shaped results for tables and the CLI.
+
+use crate::algos::{dp, dpl, ip_latency, ip_throughput, objective};
+use crate::baselines::{expert, greedy, local_search, pipedream, scotch_like};
+use crate::coordinator::placement::{Placement, Scenario};
+use crate::graph::OpGraph;
+use crate::workloads::Workload;
+use std::time::{Duration, Instant};
+
+/// Algorithm selector (CLI surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Dp,
+    Dpl,
+    IpContiguous,
+    IpNonContiguous,
+    Expert,
+    LocalSearch,
+    PipeDream,
+    Scotch,
+    Greedy,
+    IpLatency,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "dp" => Algorithm::Dp,
+            "dpl" => Algorithm::Dpl,
+            "ip" | "ip-contiguous" => Algorithm::IpContiguous,
+            "ip-noncontiguous" | "ipnc" => Algorithm::IpNonContiguous,
+            "expert" => Algorithm::Expert,
+            "local-search" | "ls" => Algorithm::LocalSearch,
+            "pipedream" => Algorithm::PipeDream,
+            "scotch" => Algorithm::Scotch,
+            "greedy" => Algorithm::Greedy,
+            "ip-latency" => Algorithm::IpLatency,
+            _ => return None,
+        })
+    }
+
+    pub const ALL_THROUGHPUT: [Algorithm; 8] = [
+        Algorithm::Dp,
+        Algorithm::IpContiguous,
+        Algorithm::IpNonContiguous,
+        Algorithm::Dpl,
+        Algorithm::Expert,
+        Algorithm::LocalSearch,
+        Algorithm::PipeDream,
+        Algorithm::Scotch,
+    ];
+}
+
+/// Planner outcome: a placement + run metadata for the tables.
+pub struct PlanResult {
+    pub placement: Placement,
+    pub runtime: Duration,
+    /// solver-found-incumbent time (IP engines)
+    pub incumbent_at: Option<Duration>,
+    pub gap: Option<f64>,
+    pub note: String,
+}
+
+/// Plan a throughput (pipelined) split. IP time budget via `ip_budget`.
+pub fn plan(
+    w: &Workload,
+    alg: Algorithm,
+    ip_budget: Duration,
+) -> Result<PlanResult, String> {
+    let g = &w.graph;
+    let sc = &w.scenario;
+    let start = Instant::now();
+    let (placement, incumbent_at, gap, note) = match alg {
+        Algorithm::Dp => {
+            let p = dp::solve(g, sc).map_err(|e| e.to_string())?;
+            (p, None, None, String::new())
+        }
+        Algorithm::Dpl => {
+            let p = dpl::solve(g, sc).map_err(|e| e.to_string())?;
+            (p, None, None, String::new())
+        }
+        Algorithm::IpContiguous | Algorithm::IpNonContiguous => {
+            let opts = ip_throughput::IpOptions {
+                contiguous: alg == Algorithm::IpContiguous,
+                time_limit: ip_budget,
+                ..Default::default()
+            };
+            let r = ip_throughput::solve(g, sc, &opts).map_err(|e| e.to_string())?;
+            (r.placement, Some(r.incumbent_at), Some(r.gap), format!("{:?}", r.status))
+        }
+        Algorithm::Expert => {
+            let style = w.expert.ok_or("no expert rule for this workload")?;
+            (expert::solve(g, sc, style), None, None, String::new())
+        }
+        Algorithm::LocalSearch => (local_search::solve(g, sc, 10, 0xC0FFEE), None, None, String::new()),
+        Algorithm::PipeDream => (pipedream::solve(g, sc), None, None, String::new()),
+        Algorithm::Scotch => (scotch_like::solve(g, sc, 0x5C07C4), None, None, String::new()),
+        Algorithm::Greedy => (greedy::solve(g, sc), None, None, String::new()),
+        Algorithm::IpLatency => {
+            let warm = vec![greedy::solve(g, sc)];
+            let opts = ip_latency::LatencyIpOptions {
+                time_limit: ip_budget,
+                warm_starts: warm,
+                ..Default::default()
+            };
+            let r = ip_latency::solve(g, sc, &opts)?;
+            (r.placement, Some(r.incumbent_at), Some(r.gap), format!("{:?}", r.status))
+        }
+    };
+    Ok(PlanResult { placement, runtime: start.elapsed(), incumbent_at, gap, note })
+}
+
+/// Latency of any placement under the §4 schedule (for Table-4 baselines).
+pub fn latency_of(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
+    objective::latency(g, sc, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::table1_workloads;
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for (s, a) in [
+            ("dp", Algorithm::Dp),
+            ("DPL", Algorithm::Dpl),
+            ("ip", Algorithm::IpContiguous),
+            ("ipnc", Algorithm::IpNonContiguous),
+            ("scotch", Algorithm::Scotch),
+        ] {
+            assert_eq!(Algorithm::parse(s), Some(a));
+        }
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn plan_small_workload_all_algorithms() {
+        // BERT-24 layer inference: small enough to run everything quickly
+        let w = table1_workloads().into_iter().find(|w| w.name == "BERT-24").unwrap();
+        let budget = Duration::from_secs(2);
+        let dp = plan(&w, Algorithm::Dp, budget).unwrap();
+        for alg in [
+            Algorithm::Dpl,
+            Algorithm::Expert,
+            Algorithm::LocalSearch,
+            Algorithm::PipeDream,
+            Algorithm::Scotch,
+        ] {
+            let r = plan(&w, alg, budget).unwrap();
+            assert!(
+                r.placement.objective >= dp.placement.objective - 1e-9,
+                "{alg:?} beat the DP: {} < {}",
+                r.placement.objective,
+                dp.placement.objective
+            );
+        }
+    }
+}

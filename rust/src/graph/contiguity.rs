@@ -1,0 +1,222 @@
+//! Contiguity (paper Definition 3.1 and Fact 5.2).
+//!
+//! A set `S` is *contiguous* when there is no triple `u ∈ S, v ∉ S, w ∈ S`
+//! with `u ⇝ v ⇝ w`: execution of S can then be invoked as one
+//! uninterrupted accelerator call (all inputs in, compute, all outputs out).
+
+use super::{topo, OpGraph};
+use crate::util::bitset::BitSet;
+
+/// Direct check of Definition 3.1 via reachability. `O(V·E/64)` per call —
+/// meant for validation and tests; the optimizers never need it on their
+/// hot paths (they construct contiguous sets by Fact 5.2).
+pub fn is_contiguous(g: &OpGraph, set: &BitSet) -> bool {
+    if set.is_empty() {
+        return true;
+    }
+    // reachable_from_s = nodes v ∉ S reachable from S (candidates for the
+    // middle of a violating triple). Then check whether any of them reaches
+    // back into S.
+    let reach = topo::reachability(g);
+    // v outside S that some u ∈ S reaches
+    let mut outside_below = BitSet::new(g.n());
+    for u in set.iter() {
+        let mut r = reach[u].clone();
+        r.difference_with(set);
+        outside_below.union_with(&r);
+    }
+    for v in outside_below.iter() {
+        // does v reach any w ∈ S? (v itself is not in S)
+        if reach[v].intersects(set) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Fact 5.2, "only if" direction: decompose a contiguous `S` into nested
+/// ideals `(I, I')` with `S = I \ I'`. Returns `None` if `S` is not
+/// contiguous. `I = {v : some node of S reachable from v}`, `I' = I \ S`.
+pub fn to_ideal_pair(g: &OpGraph, set: &BitSet) -> Option<(BitSet, BitSet)> {
+    let reach = topo::reachability(g);
+    let mut i = BitSet::new(g.n());
+    for v in 0..g.n() {
+        if reach[v].intersects(set) {
+            i.insert(v);
+        }
+    }
+    let i_prime = i.difference(set);
+    // verify both are ideals — exactly when S was contiguous
+    if super::ideals::is_ideal(g, &i) && super::ideals::is_ideal(g, &i_prime) {
+        Some((i, i_prime))
+    } else {
+        None
+    }
+}
+
+/// Split an arbitrary (possibly non-contiguous) set into the minimum chain
+/// of contiguous pieces ordered topologically — the "virtual devices" of
+/// §5.2 / Fig. 5b. Greedy: walk nodes in topological order, start a new
+/// piece whenever adding the node would break contiguity of the current
+/// piece *given the nodes of S that are still to come*.
+pub fn virtual_device_split(g: &OpGraph, set: &BitSet) -> Vec<BitSet> {
+    if set.is_empty() {
+        return Vec::new();
+    }
+    let order = topo::toposort(g).expect("DAG required");
+    let reach = topo::reachability(g);
+    let members: Vec<usize> = order.iter().copied().filter(|&v| set.contains(v)).collect();
+
+    let mut pieces: Vec<BitSet> = Vec::new();
+    let mut current = BitSet::new(g.n());
+    for &v in &members {
+        // would `current + v` stay contiguous? it breaks iff some node u in
+        // current reaches, through a vertex outside S∪current... simpler
+        // exact check: u ∈ current, x ∉ current∪{v}, u ⇝ x ⇝ v.
+        let mut trial = current.clone();
+        trial.insert(v);
+        let breaks = current.iter().any(|u| {
+            // any intermediate x outside trial with u ⇝ x ⇝ v?
+            reach[u].iter().any(|x| x != u && x != v && !trial.contains(x) && reach[x].contains(v))
+        });
+        if breaks {
+            pieces.push(current);
+            current = BitSet::new(g.n());
+        }
+        current.insert(v);
+    }
+    if !current.is_empty() {
+        pieces.push(current);
+    }
+    pieces
+}
+
+/// Is the device-level condensation of a partition acyclic? This is the
+/// *pipeline-orderable* property: exactly the partitions expressible as a
+/// chain of ideals, i.e. the search space of the §5.1.1 DP. Note it is
+/// strictly stronger than per-device contiguity (the Fig.-6 IP constraint
+/// (16)): two contiguous sets can be mutually dependent through direct
+/// edges, which the DP excludes but the IP admits (such splits are still
+/// schedulable at max-load via the §5.2 virtual-device construction).
+pub fn partition_pipeline_orderable(g: &OpGraph, device_of: &[usize], nd: usize) -> bool {
+    // condensation: macro edge d1 -> d2 when some edge (u,v) has
+    // device(u)=d1 != d2=device(v); check acyclicity via Kahn.
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); nd];
+    let mut indeg = vec![0usize; nd];
+    let mut seen = std::collections::BTreeSet::new();
+    for (u, v) in g.edges() {
+        let (a, b) = (device_of[u], device_of[v]);
+        if a != b && seen.insert((a, b)) {
+            adj[a].push(b);
+            indeg[b] += 1;
+        }
+    }
+    let mut queue: Vec<usize> = (0..nd).filter(|&d| indeg[d] == 0).collect();
+    let mut done = 0;
+    while let Some(d) = queue.pop() {
+        done += 1;
+        for &e in &adj[d] {
+            indeg[e] -= 1;
+            if indeg[e] == 0 {
+                queue.push(e);
+            }
+        }
+    }
+    done == nd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::test_graphs::*;
+    use crate::graph::{ideals::is_ideal, Node, OpGraph};
+
+    #[test]
+    fn pipeline_orderable_vs_contiguous() {
+        // a1 -> b1, b2 -> a2: A = {a1, a2}, B = {b1, b2} are each contiguous
+        // but mutually dependent — contiguous yet NOT pipeline-orderable.
+        let mut g = OpGraph::new();
+        let a1 = g.add_node(Node::new("a1"));
+        let a2 = g.add_node(Node::new("a2"));
+        let b1 = g.add_node(Node::new("b1"));
+        let b2 = g.add_node(Node::new("b2"));
+        g.add_edge(a1, b1);
+        g.add_edge(b2, a2);
+        let assign = vec![0, 0, 1, 1];
+        assert!(is_contiguous(&g, &BitSet::from_iter(4, [a1, a2])));
+        assert!(is_contiguous(&g, &BitSet::from_iter(4, [b1, b2])));
+        assert!(!partition_pipeline_orderable(&g, &assign, 2));
+        // chain split is orderable
+        let g2 = chain(4);
+        assert!(partition_pipeline_orderable(&g2, &[0, 0, 1, 1], 2));
+    }
+
+    #[test]
+    fn fig1_examples() {
+        // Fig. 1a: in the diamond, {1, 2} is contiguous (parallel branches,
+        // no path through the complement), and for a chain {0, 2} is not.
+        assert!(is_contiguous(&diamond(), &BitSet::from_iter(4, [1, 2])));
+        assert!(!is_contiguous(&chain(3), &BitSet::from_iter(3, [0, 2])));
+    }
+
+    #[test]
+    fn empty_and_full_are_contiguous() {
+        let g = diamond();
+        assert!(is_contiguous(&g, &BitSet::new(4)));
+        assert!(is_contiguous(&g, &BitSet::full(4)));
+    }
+
+    #[test]
+    fn connected_but_not_contiguous() {
+        // Fig. 1b flavor: 0->1->2, 0->3->2 ; S={0,1,2} is contiguous,
+        // but in 0->1, 0->2, 1->3, 2->3 take S={0,1,3}: 0⇝2⇝3 with 2∉S.
+        let mut g = OpGraph::new();
+        for i in 0..4 {
+            g.add_node(Node::new(format!("n{i}")));
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        assert!(!is_contiguous(&g, &BitSet::from_iter(4, [0, 1, 3])));
+    }
+
+    #[test]
+    fn fact_5_2_roundtrip() {
+        let g = diamond();
+        let s = BitSet::from_iter(4, [1, 2, 3]);
+        assert!(is_contiguous(&g, &s));
+        let (i, i_prime) = to_ideal_pair(&g, &s).unwrap();
+        assert!(is_ideal(&g, &i));
+        assert!(is_ideal(&g, &i_prime));
+        assert!(i_prime.is_subset(&i));
+        assert_eq!(i.difference(&i_prime), s);
+    }
+
+    #[test]
+    fn fact_5_2_rejects_non_contiguous() {
+        let g = chain(3);
+        assert!(to_ideal_pair(&g, &BitSet::from_iter(3, [0, 2])).is_none());
+    }
+
+    #[test]
+    fn virtual_devices_cover_and_are_contiguous() {
+        let g = chain(5);
+        let s = BitSet::from_iter(5, [0, 1, 3, 4]); // two runs
+        let pieces = virtual_device_split(&g, &s);
+        assert_eq!(pieces.len(), 2);
+        let mut union = BitSet::new(5);
+        for p in &pieces {
+            assert!(is_contiguous(&g, p));
+            union.union_with(p);
+        }
+        assert_eq!(union, s);
+    }
+
+    #[test]
+    fn virtual_devices_single_piece_when_contiguous() {
+        let g = diamond();
+        let s = BitSet::from_iter(4, [1, 2]);
+        assert_eq!(virtual_device_split(&g, &s).len(), 1);
+    }
+}

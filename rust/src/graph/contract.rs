@@ -1,0 +1,359 @@
+//! Appendix-B preprocessing: colocation contraction, SCC contraction, and
+//! the forward-mirror construction for orphaned backward nodes.
+//!
+//! Training graphs carry colocation constraints (`colorClass`): forward and
+//! backward ops sharing weights must land on one device. The DP operates on
+//! a *contracted* graph where each forward color class and each backward
+//! color class is a single node; contraction can create cycles, whose SCCs
+//! are then contracted too (any colocation-respecting contiguous split must
+//! keep an SCC together). A [`Contraction`] remembers the node mapping so
+//! placements on the contracted graph can be expanded back.
+
+use super::{Node, NodeId, NodeKind, OpGraph};
+use std::collections::BTreeMap;
+
+/// Result of contracting a graph: the smaller graph plus the mapping from
+/// original node to contracted node.
+pub struct Contraction {
+    pub graph: OpGraph,
+    /// `map[orig] = contracted node id`.
+    pub map: Vec<NodeId>,
+    /// Reverse mapping: original nodes merged into each contracted node.
+    pub groups: Vec<Vec<NodeId>>,
+}
+
+impl Contraction {
+    /// Expand a per-contracted-node device assignment back to the original
+    /// graph's nodes.
+    pub fn expand_assignment(&self, device_of_contracted: &[usize]) -> Vec<usize> {
+        self.map.iter().map(|&c| device_of_contracted[c]).collect()
+    }
+}
+
+/// Merge nodes into groups given by `group_of[v]` (same value ⇒ merged).
+/// Costs are summed; `comm` of a merged node is the sum of member comms
+/// whose outputs leave the group (approximation consistent with App. B);
+/// memory and processing times add up. Edges are deduplicated; self-loops
+/// dropped. Per-edge costs are summed across merged parallel edges.
+pub fn contract_groups(g: &OpGraph, group_of: &[usize]) -> Contraction {
+    let num_groups = group_of.iter().copied().max().map_or(0, |m| m + 1);
+    let mut groups: Vec<Vec<NodeId>> = vec![Vec::new(); num_groups];
+    for (v, &grp) in group_of.iter().enumerate() {
+        groups[grp].push(v);
+    }
+
+    let mut out = OpGraph::new();
+    for (gi, members) in groups.iter().enumerate() {
+        assert!(!members.is_empty(), "empty contraction group {gi}");
+        let mut node = Node::new(contracted_name(g, members));
+        node.p_cpu = members.iter().map(|&v| g.nodes[v].p_cpu).sum();
+        node.p_acc = members.iter().map(|&v| g.nodes[v].p_acc).sum();
+        node.mem = members.iter().map(|&v| g.nodes[v].mem).sum();
+        // comm = sum of member outputs crossing the group boundary
+        node.comm = members
+            .iter()
+            .filter(|&&v| g.succs[v].iter().any(|&w| group_of[w] != gi))
+            .map(|&v| g.nodes[v].comm)
+            .sum();
+        // group is backward iff all members are backward
+        node.kind = if members.iter().all(|&v| g.nodes[v].kind == NodeKind::Backward) {
+            NodeKind::Backward
+        } else {
+            NodeKind::Forward
+        };
+        // keep first color class for reference (colocation already encoded
+        // in the contraction itself)
+        node.color_class = g.nodes[members[0]].color_class;
+        out.add_node(node);
+    }
+
+    let mut edge_costs: BTreeMap<(NodeId, NodeId), f64> = BTreeMap::new();
+    for (u, v) in g.edges() {
+        let (gu, gv) = (group_of[u], group_of[v]);
+        if gu != gv {
+            out.add_edge(gu, gv);
+            if let Some(&c) = g.edge_costs.get(&(u, v)) {
+                *edge_costs.entry((gu, gv)).or_insert(0.0) += c;
+            }
+        }
+    }
+    out.edge_costs = edge_costs;
+
+    Contraction { graph: out, map: group_of.to_vec(), groups }
+}
+
+fn contracted_name(g: &OpGraph, members: &[NodeId]) -> String {
+    if members.len() == 1 {
+        g.nodes[members[0]].name.clone()
+    } else {
+        format!("{}+{}", g.nodes[members[0]].name, members.len() - 1)
+    }
+}
+
+/// Contract color classes, separately for forward and backward members
+/// (App. B: contract each `C_FW` and each `C_BW`).
+pub fn contract_color_classes(g: &OpGraph) -> Contraction {
+    // group key: (colorClass, kind) or unique id for uncolored nodes
+    let mut key_to_group: BTreeMap<(u32, bool), usize> = BTreeMap::new();
+    let mut group_of = vec![usize::MAX; g.n()];
+    let mut next = 0;
+    for (v, node) in g.nodes.iter().enumerate() {
+        match node.color_class {
+            Some(c) => {
+                let key = (c, node.kind == NodeKind::Backward);
+                let grp = *key_to_group.entry(key).or_insert_with(|| {
+                    let id = next;
+                    next += 1;
+                    id
+                });
+                group_of[v] = grp;
+            }
+            None => {
+                group_of[v] = next;
+                next += 1;
+            }
+        }
+    }
+    contract_groups(g, &group_of)
+}
+
+/// Tarjan SCC (iterative). Returns `scc_of[v]`, with components numbered in
+/// reverse topological order of the condensation.
+pub fn sccs(g: &OpGraph) -> Vec<usize> {
+    let n = g.n();
+    let mut index = vec![usize::MAX; n];
+    let mut low = vec![0usize; n];
+    let mut on_stack = vec![false; n];
+    let mut stack: Vec<usize> = Vec::new();
+    let mut scc_of = vec![usize::MAX; n];
+    let mut next_index = 0;
+    let mut next_scc = 0;
+
+    // Explicit DFS stack: (node, next-succ-cursor)
+    for start in 0..n {
+        if index[start] != usize::MAX {
+            continue;
+        }
+        let mut dfs: Vec<(usize, usize)> = vec![(start, 0)];
+        index[start] = next_index;
+        low[start] = next_index;
+        next_index += 1;
+        stack.push(start);
+        on_stack[start] = true;
+
+        while let Some(top) = dfs.last_mut() {
+            let (v, ci) = (top.0, top.1);
+            if ci < g.succs[v].len() {
+                top.1 += 1;
+                let w = g.succs[v][ci];
+                if index[w] == usize::MAX {
+                    index[w] = next_index;
+                    low[w] = next_index;
+                    next_index += 1;
+                    stack.push(w);
+                    on_stack[w] = true;
+                    dfs.push((w, 0));
+                } else if on_stack[w] {
+                    low[v] = low[v].min(index[w]);
+                }
+            } else {
+                if low[v] == index[v] {
+                    loop {
+                        let w = stack.pop().unwrap();
+                        on_stack[w] = false;
+                        scc_of[w] = next_scc;
+                        if w == v {
+                            break;
+                        }
+                    }
+                    next_scc += 1;
+                }
+                dfs.pop();
+                if let Some(parent) = dfs.last() {
+                    let p = parent.0;
+                    low[p] = low[p].min(low[v]);
+                }
+            }
+        }
+    }
+    scc_of
+}
+
+/// App.-B full pipeline: contract color classes, then contract any SCCs the
+/// colocation contraction introduced, yielding an acyclic contracted graph.
+/// The composite mapping goes original node → final contracted node.
+pub fn preprocess_colocation(g: &OpGraph) -> Contraction {
+    let c1 = contract_color_classes(g);
+    let scc_of = sccs(&c1.graph);
+    let c2 = contract_groups(&c1.graph, &scc_of);
+    // compose mappings
+    let map: Vec<NodeId> = c1.map.iter().map(|&m| c2.map[m]).collect();
+    let mut groups: Vec<Vec<NodeId>> = vec![Vec::new(); c2.graph.n()];
+    for (v, &m) in map.iter().enumerate() {
+        groups[m].push(v);
+    }
+    Contraction { graph: c2.graph, map, groups }
+}
+
+/// App.-B orphan mirroring for training DP: every backward node must have a
+/// forward partner; for orphaned backward nodes, insert artificial
+/// zero-cost forward nodes (colocated with the orphan) and mirror the
+/// backward edges as reversed forward edges so the ideal lattice does not
+/// blow up and backward contiguity is preserved.
+///
+/// Returns the augmented graph plus `bw_of_fw[f] = Some(b)` linking each
+/// forward node to the backward node whose costs ride along with it.
+pub fn mirror_orphans(g: &OpGraph) -> (OpGraph, Vec<Option<NodeId>>) {
+    let mut out = g.clone();
+    // forward partner of each backward node, via fw_partner metadata
+    let mut fw_of_bw: Vec<Option<NodeId>> = vec![None; g.n()];
+    for (v, node) in g.nodes.iter().enumerate() {
+        if node.kind == NodeKind::Backward {
+            fw_of_bw[v] = node.fw_partner;
+        }
+    }
+    // create artificial forward images for orphans
+    let mut image: Vec<Option<NodeId>> = vec![None; g.n()];
+    for v in 0..g.n() {
+        if g.nodes[v].kind == NodeKind::Backward && fw_of_bw[v].is_none() {
+            let mut art = Node::new(format!("fwimg_{}", g.nodes[v].name));
+            art.p_cpu = 0.0;
+            art.p_acc = 0.0;
+            art.mem = 0.0;
+            art.comm = 0.0;
+            art.color_class = g.nodes[v].color_class;
+            let id = out.add_node(art);
+            image[v] = Some(id);
+        }
+    }
+    // mirror backward edges (u', v') with an orphan endpoint as forward
+    // edge (img(v'), img(u')) — reversed, per App. B.
+    let fw_image = |w: NodeId, image: &[Option<NodeId>], fw_of_bw: &[Option<NodeId>]| {
+        image.get(w).copied().flatten().or(fw_of_bw.get(w).copied().flatten())
+    };
+    for (u, v) in g.edges() {
+        let ub = g.nodes[u].kind == NodeKind::Backward;
+        let vb = g.nodes[v].kind == NodeKind::Backward;
+        if ub && vb && (fw_of_bw[u].is_none() || fw_of_bw[v].is_none()) {
+            if let (Some(iu), Some(iv)) = (fw_image(u, &image, &fw_of_bw), fw_image(v, &image, &fw_of_bw)) {
+                if iu != iv {
+                    out.add_edge(iv, iu); // reversed
+                }
+            }
+        }
+    }
+    // bw_of_fw over the augmented node space
+    let mut bw_of_fw: Vec<Option<NodeId>> = vec![None; out.n()];
+    for v in 0..g.n() {
+        if g.nodes[v].kind == NodeKind::Backward {
+            if let Some(f) = fw_of_bw[v].or(image[v]) {
+                bw_of_fw[f] = Some(v);
+            }
+        }
+    }
+    (out, bw_of_fw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topo::is_dag;
+
+    fn colored_path() -> OpGraph {
+        // 0 -> 1 -> 2, where 0 and 2 share a color class
+        let mut g = OpGraph::new();
+        g.add_node(Node::new("a").cpu(1.0).acc(1.0).color(7));
+        g.add_node(Node::new("b").cpu(2.0).acc(2.0));
+        g.add_node(Node::new("c").cpu(4.0).acc(4.0).color(7));
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g
+    }
+
+    #[test]
+    fn color_contraction_creates_cycle_then_scc_fixes_it() {
+        let g = colored_path();
+        let c1 = contract_color_classes(&g);
+        assert_eq!(c1.graph.n(), 2);
+        assert!(!is_dag(&c1.graph)); // {a,c} <-> {b}
+        let full = preprocess_colocation(&g);
+        assert_eq!(full.graph.n(), 1); // everything must be colocated
+        assert!(is_dag(&full.graph));
+        assert!((full.graph.nodes[0].p_cpu - 7.0).abs() < 1e-9);
+        assert_eq!(full.map, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn contraction_sums_costs_and_dedups_edges() {
+        // 0,1 same group; both have edges to 2
+        let mut g = OpGraph::new();
+        g.add_node(Node::new("a").cpu(1.0).acc(1.5).mem(2.0).comm(0.25).color(1));
+        g.add_node(Node::new("b").cpu(2.0).acc(2.5).mem(3.0).comm(0.75).color(1));
+        g.add_node(Node::new("c").cpu(1.0).acc(1.0));
+        g.add_edge(0, 2);
+        g.add_edge(1, 2);
+        let c = contract_color_classes(&g);
+        assert_eq!(c.graph.n(), 2);
+        assert_eq!(c.graph.num_edges(), 1);
+        let merged = &c.graph.nodes[c.map[0]];
+        assert!((merged.p_cpu - 3.0).abs() < 1e-9);
+        assert!((merged.mem - 5.0).abs() < 1e-9);
+        // both outputs cross the boundary → comm sums
+        assert!((merged.comm - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scc_on_dag_is_identity_partition() {
+        let g = crate::graph::test_graphs::diamond();
+        let s = sccs(&g);
+        let mut uniq = s.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 4);
+    }
+
+    #[test]
+    fn scc_detects_cycle() {
+        let mut g = OpGraph::new();
+        for i in 0..3 {
+            g.add_node(Node::new(format!("n{i}")));
+        }
+        g.add_edge(0, 1);
+        g.add_edge(1, 0);
+        g.add_edge(1, 2);
+        let s = sccs(&g);
+        assert_eq!(s[0], s[1]);
+        assert_ne!(s[0], s[2]);
+    }
+
+    #[test]
+    fn expand_assignment_roundtrip() {
+        let g = colored_path();
+        let c = preprocess_colocation(&g);
+        let devices = c.expand_assignment(&[3]);
+        assert_eq!(devices, vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn mirror_orphans_adds_images() {
+        // fw: 0 -> 1 ; bw: 2(partner of 1) -> 3(orphan)
+        let mut g = OpGraph::new();
+        g.add_node(Node::new("f0"));
+        g.add_node(Node::new("f1"));
+        let mut b2 = Node::new("b2").backward();
+        b2.fw_partner = Some(1);
+        g.add_node(b2);
+        g.add_node(Node::new("b3").backward());
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g.add_edge(2, 3);
+        let (aug, bw_of_fw) = mirror_orphans(&g);
+        assert_eq!(aug.n(), 5); // one artificial forward image for b3
+        assert!(is_dag(&aug));
+        // image node (id 4) gets the reversed edge 4 -> 1
+        assert!(aug.succs[4].contains(&1));
+        assert_eq!(bw_of_fw[1], Some(2));
+        assert_eq!(bw_of_fw[4], Some(3));
+        assert_eq!(aug.nodes[4].p_acc, 0.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! The ideal lattice of a DAG (paper §5.1.1).
+//!
+//! An *ideal* (Definition 5.1) is a downward-closed node set: if `(u,v) ∈ E`
+//! and `v ∈ I` then `u ∈ I`. Ideals are exactly the possible "already
+//! partitioned" prefixes of the throughput DP, and by Fact 5.2 every
+//! contiguous set is a difference `I \ I'` of two nested ideals.
+//!
+//! [`IdealLattice`] enumerates all ideals (BFS over the lattice: extend an
+//! ideal by any *minimal* element of its complement), assigns them dense
+//! ids sorted by cardinality (so a DP can process them bottom-up), and
+//! precomputes, for each ideal, the list of its *immediate* sub-ideals
+//! (remove one maximal element). The DP walks arbitrary nested pairs
+//! `I' ⊆ I` by exploring the lattice downward from `I` through these
+//! immediate predecessors.
+
+use super::{NodeId, OpGraph};
+use crate::util::bitset::BitSet;
+use std::collections::HashMap;
+
+/// Dense id of an ideal within a lattice.
+pub type IdealId = usize;
+
+pub struct IdealLattice {
+    /// All ideals, sorted by (cardinality, hash) — `ideals[0]` is ∅ and the
+    /// last entry is the full node set.
+    pub ideals: Vec<BitSet>,
+    /// `subs[i]` = ids of ideals obtained from `ideals[i]` by removing one
+    /// maximal element, together with the removed node.
+    pub subs: Vec<Vec<(IdealId, NodeId)>>,
+    /// Map from ideal bitset to id.
+    index: HashMap<BitSet, IdealId>,
+}
+
+/// Hard cap to protect against graphs with exponentially many ideals
+/// (e.g. wide antichains). Enumeration aborts with `Err(count_so_far)`.
+pub const DEFAULT_IDEAL_CAP: usize = 2_000_000;
+
+impl IdealLattice {
+    /// Enumerate every ideal of `g`. Errors with the number seen so far if
+    /// more than `cap` ideals exist — callers fall back to DPL (§5.1.2).
+    pub fn enumerate(g: &OpGraph, cap: usize) -> Result<IdealLattice, usize> {
+        let n = g.n();
+        let mut index: HashMap<BitSet, IdealId> = HashMap::new();
+        let mut ideals: Vec<BitSet> = Vec::new();
+
+        let empty = BitSet::new(n);
+        index.insert(empty.clone(), 0);
+        ideals.push(empty);
+
+        // BFS: grow each ideal by every addable node (all preds inside).
+        let mut frontier: Vec<IdealId> = vec![0];
+        while let Some(&id) = frontier.last() {
+            frontier.pop();
+            let ideal = ideals[id].clone();
+            for v in 0..n {
+                if ideal.contains(v) {
+                    continue;
+                }
+                if g.preds[v].iter().all(|&u| ideal.contains(u)) {
+                    let mut bigger = ideal.clone();
+                    bigger.insert(v);
+                    if !index.contains_key(&bigger) {
+                        let new_id = ideals.len();
+                        if new_id >= cap {
+                            return Err(new_id);
+                        }
+                        index.insert(bigger.clone(), new_id);
+                        ideals.push(bigger);
+                        frontier.push(new_id);
+                    }
+                }
+            }
+        }
+
+        // Sort by cardinality for bottom-up DP processing.
+        let mut order: Vec<IdealId> = (0..ideals.len()).collect();
+        order.sort_by_key(|&i| (ideals[i].len(), ideals[i].fast_hash()));
+        let ideals: Vec<BitSet> = order.iter().map(|&i| ideals[i].clone()).collect();
+        let mut index = HashMap::with_capacity(ideals.len());
+        for (i, s) in ideals.iter().enumerate() {
+            index.insert(s.clone(), i);
+        }
+
+        // Immediate sub-ideals: remove any maximal element (no successor
+        // inside the ideal).
+        let mut subs: Vec<Vec<(IdealId, NodeId)>> = vec![Vec::new(); ideals.len()];
+        for (id, ideal) in ideals.iter().enumerate() {
+            for v in ideal.iter() {
+                if g.succs[v].iter().all(|&w| !ideal.contains(w)) {
+                    let mut smaller = ideal.clone();
+                    smaller.remove(v);
+                    let sub_id = index[&smaller];
+                    subs[id].push((sub_id, v));
+                }
+            }
+        }
+
+        Ok(IdealLattice { ideals, subs, index })
+    }
+
+    pub fn len(&self) -> usize {
+        self.ideals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ideals.is_empty()
+    }
+
+    /// Id of the empty ideal (always 0 after sorting).
+    pub fn empty_id(&self) -> IdealId {
+        0
+    }
+
+    /// Id of the full node set (always the last ideal).
+    pub fn full_id(&self) -> IdealId {
+        self.ideals.len() - 1
+    }
+
+    pub fn id_of(&self, set: &BitSet) -> Option<IdealId> {
+        self.index.get(set).copied()
+    }
+
+    /// Count ideals without materializing the lattice (used to report the
+    /// "Ideals" column of Table 1 cheaply); returns `cap` if aborted.
+    pub fn count(g: &OpGraph, cap: usize) -> usize {
+        match Self::enumerate(g, cap) {
+            Ok(l) => l.len(),
+            Err(c) => c,
+        }
+    }
+}
+
+/// Check Definition 5.1 directly (used by tests/property checks).
+pub fn is_ideal(g: &OpGraph, set: &BitSet) -> bool {
+    g.edges().all(|(u, v)| !set.contains(v) || set.contains(u))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::test_graphs::*;
+    use crate::graph::{Node, OpGraph};
+
+    #[test]
+    fn chain_has_n_plus_1_ideals() {
+        let g = chain(7);
+        let lat = IdealLattice::enumerate(&g, usize::MAX).unwrap();
+        assert_eq!(lat.len(), 8);
+        // every ideal is a prefix
+        for ideal in &lat.ideals {
+            let v: Vec<usize> = ideal.iter().collect();
+            assert_eq!(v, (0..v.len()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn antichain_has_2_pow_n_ideals() {
+        let mut g = OpGraph::new();
+        for i in 0..5 {
+            g.add_node(Node::new(format!("a{i}")));
+        }
+        let lat = IdealLattice::enumerate(&g, usize::MAX).unwrap();
+        assert_eq!(lat.len(), 32);
+    }
+
+    #[test]
+    fn diamond_ideal_count() {
+        // Ideals of the diamond: {}, {0}, {0,1}, {0,2}, {0,1,2}, {0,1,2,3} = 6.
+        let lat = IdealLattice::enumerate(&diamond(), usize::MAX).unwrap();
+        assert_eq!(lat.len(), 6);
+        for ideal in &lat.ideals {
+            assert!(is_ideal(&diamond(), ideal));
+        }
+    }
+
+    #[test]
+    fn sorted_by_cardinality_and_bounds() {
+        let lat = IdealLattice::enumerate(&diamond(), usize::MAX).unwrap();
+        for w in lat.ideals.windows(2) {
+            assert!(w[0].len() <= w[1].len());
+        }
+        assert!(lat.ideals[lat.empty_id()].is_empty());
+        assert_eq!(lat.ideals[lat.full_id()].len(), 4);
+    }
+
+    #[test]
+    fn immediate_subs_are_ideals_one_smaller() {
+        let g = diamond();
+        let lat = IdealLattice::enumerate(&g, usize::MAX).unwrap();
+        for (id, subs) in lat.subs.iter().enumerate() {
+            for &(sub, removed) in subs {
+                assert_eq!(lat.ideals[sub].len() + 1, lat.ideals[id].len());
+                assert!(lat.ideals[id].contains(removed));
+                assert!(!lat.ideals[sub].contains(removed));
+                assert!(is_ideal(&g, &lat.ideals[sub]));
+            }
+        }
+        // full ideal of diamond has exactly one maximal element (node 3)
+        assert_eq!(lat.subs[lat.full_id()].len(), 1);
+    }
+
+    #[test]
+    fn cap_aborts() {
+        let mut g = OpGraph::new();
+        for i in 0..20 {
+            g.add_node(Node::new(format!("a{i}")));
+        }
+        assert!(IdealLattice::enumerate(&g, 1000).is_err());
+        assert_eq!(IdealLattice::count(&g, 1000), 1000);
+    }
+}

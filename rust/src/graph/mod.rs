@@ -1,0 +1,329 @@
+//! Computational-model substrate (paper §3).
+//!
+//! An [`OpGraph`] is the DAG `G=(V,E)` of DNN operators (or layers) with the
+//! paper's per-node weights:
+//!
+//! * `p_cpu`  — processing time on a CPU core,
+//! * `p_acc`  — processing time on an accelerator (`f64::INFINITY` when the
+//!   op is unsupported there),
+//! * `mem`    — memory footprint of weights + activations,
+//! * `comm`   — cost of moving the node's output across the host↔accelerator
+//!   boundary (paid once per crossing direction, per §3),
+//! * `color_class` — colocation group (App. B): nodes sharing a class must
+//!   land on the same device (e.g. forward and backward ops on one weight),
+//! * `kind`   — forward / backward, used by the training algorithms (§5.3).
+//!
+//! Submodules implement the graph algorithms the optimizers stand on:
+//! topology ([`topo`]), the ideal lattice ([`ideals`]), contiguity checks
+//! ([`contiguity`]), the App.-B contraction pipeline ([`contract`]), and the
+//! per-edge-cost reduction ([`subdivide`]).
+
+pub mod contiguity;
+pub mod contract;
+pub mod ideals;
+pub mod subdivide;
+pub mod topo;
+
+use crate::util::bitset::BitSet;
+
+/// Index of a node in an [`OpGraph`].
+pub type NodeId = usize;
+
+/// Forward- or backward-pass node (all-inference graphs are all `Forward`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    Forward,
+    Backward,
+}
+
+/// One operator (or layer) and its cost-model weights.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: String,
+    /// Processing time on a CPU core (`p_v^cpu`).
+    pub p_cpu: f64,
+    /// Processing time on an accelerator (`p_v^acc`); `INFINITY` = unsupported.
+    pub p_acc: f64,
+    /// Memory usage of weights + activations (`m_v`).
+    pub mem: f64,
+    /// Host↔accelerator transfer time of this node's output (`c_v`).
+    pub comm: f64,
+    /// Colocation class (App. B `colorClass`): same class ⇒ same device.
+    pub color_class: Option<u32>,
+    pub kind: NodeKind,
+    /// For a backward node, its forward partner (if any). Kept as metadata —
+    /// colocation itself is expressed through `color_class`.
+    pub fw_partner: Option<NodeId>,
+}
+
+impl Node {
+    /// A forward node with uniform defaults; builder-style setters below.
+    pub fn new(name: impl Into<String>) -> Self {
+        Node {
+            name: name.into(),
+            p_cpu: 1.0,
+            p_acc: 1.0,
+            mem: 0.0,
+            comm: 0.0,
+            color_class: None,
+            kind: NodeKind::Forward,
+            fw_partner: None,
+        }
+    }
+
+    pub fn cpu(mut self, t: f64) -> Self {
+        self.p_cpu = t;
+        self
+    }
+
+    pub fn acc(mut self, t: f64) -> Self {
+        self.p_acc = t;
+        self
+    }
+
+    pub fn mem(mut self, m: f64) -> Self {
+        self.mem = m;
+        self
+    }
+
+    pub fn comm(mut self, c: f64) -> Self {
+        self.comm = c;
+        self
+    }
+
+    pub fn color(mut self, c: u32) -> Self {
+        self.color_class = Some(c);
+        self
+    }
+
+    pub fn backward(mut self) -> Self {
+        self.kind = NodeKind::Backward;
+        self
+    }
+}
+
+/// The computation DAG with adjacency in both directions.
+#[derive(Clone, Debug, Default)]
+pub struct OpGraph {
+    pub nodes: Vec<Node>,
+    /// `succs[u]` = nodes v with an edge (u, v).
+    pub succs: Vec<Vec<NodeId>>,
+    /// `preds[v]` = nodes u with an edge (u, v).
+    pub preds: Vec<Vec<NodeId>>,
+    /// Optional per-edge communication costs keyed `(u, v)`; when present
+    /// and non-uniform, [`subdivide::reduce_edge_costs`] converts them to
+    /// the per-node `comm` model (App. B reduction).
+    pub edge_costs: std::collections::BTreeMap<(NodeId, NodeId), f64>,
+}
+
+impl OpGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_node(&mut self, node: Node) -> NodeId {
+        self.nodes.push(node);
+        self.succs.push(Vec::new());
+        self.preds.push(Vec::new());
+        self.nodes.len() - 1
+    }
+
+    /// Add edge `u -> v`. Duplicate edges are ignored (workload exporters
+    /// occasionally emit them).
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId) {
+        assert!(u < self.nodes.len() && v < self.nodes.len(), "edge endpoint out of range");
+        assert_ne!(u, v, "self-loop");
+        if !self.succs[u].contains(&v) {
+            self.succs[u].push(v);
+            self.preds[v].push(u);
+        }
+    }
+
+    /// Add edge with an explicit per-edge communication cost.
+    pub fn add_edge_cost(&mut self, u: NodeId, v: NodeId, cost: f64) {
+        self.add_edge(u, v);
+        self.edge_costs.insert((u, v), cost);
+    }
+
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.succs.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
+        self.succs.iter().enumerate().flat_map(|(u, vs)| vs.iter().map(move |&v| (u, v)))
+    }
+
+    /// Total memory of a node set.
+    pub fn mem_of(&self, set: &BitSet) -> f64 {
+        set.iter().map(|v| self.nodes[v].mem).sum()
+    }
+
+    /// Sum of CPU processing times of a node set (`cpu(S)` in §5.1.1).
+    pub fn cpu_load(&self, set: &BitSet) -> f64 {
+        set.iter().map(|v| self.nodes[v].p_cpu).sum()
+    }
+
+    /// Accelerator load `acc(S)` of §5.1.1: in-communication + processing +
+    /// out-communication. Returns `INFINITY` if the set exceeds `mem_cap`
+    /// or contains an accelerator-unsupported op.
+    ///
+    /// * in-comm: `Σ c_u` over u ∉ S with an edge into S (each such u paid
+    ///   once, even with several edges into S);
+    /// * out-comm: `Σ c_v` over v ∈ S with an edge leaving S.
+    pub fn acc_load(&self, set: &BitSet, mem_cap: f64) -> f64 {
+        if self.mem_of(set) > mem_cap {
+            return f64::INFINITY;
+        }
+        let mut load = 0.0;
+        // Track in-comm contributors to avoid double counting u with
+        // multiple edges into S.
+        let mut in_paid = BitSet::new(self.n());
+        for v in set.iter() {
+            let p = self.nodes[v].p_acc;
+            if p.is_infinite() {
+                return f64::INFINITY;
+            }
+            load += p;
+            for &u in &self.preds[v] {
+                if !set.contains(u) && !in_paid.contains(u) {
+                    in_paid.insert(u);
+                    load += self.nodes[u].comm;
+                }
+            }
+            if self.succs[v].iter().any(|&w| !set.contains(w)) {
+                load += self.nodes[v].comm;
+            }
+        }
+        load
+    }
+
+    /// Number of forward nodes (convenience for training graphs).
+    pub fn num_forward(&self) -> usize {
+        self.nodes.iter().filter(|n| n.kind == NodeKind::Forward).count()
+    }
+
+    /// All-nodes set.
+    pub fn full_set(&self) -> BitSet {
+        BitSet::full(self.n())
+    }
+
+    /// Graphviz DOT rendering with nodes colored by a device assignment
+    /// (used to regenerate Fig. 9). `device[v] = 0` means CPU (red), `i>0`
+    /// an accelerator.
+    pub fn to_dot(&self, device: &[usize], title: &str) -> String {
+        const PALETTE: [&str; 8] = [
+            "#e41a1c", // CPU = red, as in Fig. 9
+            "#377eb8", "#4daf4a", "#984ea3", "#ff7f00", "#a65628", "#f781bf", "#999999",
+        ];
+        let mut out = String::new();
+        out.push_str(&format!("digraph \"{}\" {{\n  rankdir=TB;\n  node [style=filled];\n", title));
+        for (v, node) in self.nodes.iter().enumerate() {
+            let color = PALETTE[device.get(v).copied().unwrap_or(0) % PALETTE.len()];
+            out.push_str(&format!(
+                "  n{} [label=\"{}\", fillcolor=\"{}\"];\n",
+                v, node.name, color
+            ));
+        }
+        for (u, v) in self.edges() {
+            out.push_str(&format!("  n{} -> n{};\n", u, v));
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_graphs {
+    use super::*;
+
+    /// Diamond: 0 -> {1, 2} -> 3.
+    pub fn diamond() -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..4 {
+            g.add_node(Node::new(format!("n{i}")).cpu(2.0).acc(1.0).mem(1.0).comm(0.5));
+        }
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        g
+    }
+
+    /// Chain of `n` nodes.
+    pub fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(2.0).acc(1.0).mem(1.0).comm(0.5));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_graphs::*;
+    use super::*;
+
+    #[test]
+    fn build_and_count() {
+        let g = diamond();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.preds[3], vec![1, 2]);
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut g = chain(2);
+        g.add_edge(0, 1);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn acc_load_counts_boundary_comm_once() {
+        let g = diamond();
+        // S = {1, 2}: in-comm pays c_0 once (0 has edges to both 1 and 2),
+        // out-comm pays c_1 + c_2, processing = 1 + 1.
+        let s = BitSet::from_iter(4, [1, 2]);
+        let load = g.acc_load(&s, f64::INFINITY);
+        assert!((load - (0.5 + 1.0 + 1.0 + 0.5 + 0.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn acc_load_memory_cap() {
+        let g = diamond();
+        let s = BitSet::from_iter(4, [1, 2]);
+        assert!(g.acc_load(&s, 1.5).is_infinite());
+        assert!(g.acc_load(&s, 2.0).is_finite());
+    }
+
+    #[test]
+    fn acc_load_unsupported_op() {
+        let mut g = diamond();
+        g.nodes[1].p_acc = f64::INFINITY;
+        let s = BitSet::from_iter(4, [1]);
+        assert!(g.acc_load(&s, f64::INFINITY).is_infinite());
+    }
+
+    #[test]
+    fn cpu_load_sums() {
+        let g = chain(5);
+        let s = BitSet::from_iter(5, [0, 2, 4]);
+        assert!((g.cpu_load(&s) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dot_renders() {
+        let g = diamond();
+        let dot = g.to_dot(&[0, 1, 2, 1], "t");
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("n0 -> n1"));
+    }
+}

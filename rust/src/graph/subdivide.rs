@@ -1,0 +1,138 @@
+//! Non-uniform outgoing-communication reduction (Appendix B).
+//!
+//! The model of §3 attaches the transfer cost to the *node* (`c_u`), but
+//! ONNX-derived workloads attach it to edges, and a node may send different
+//! outputs to different consumers. When a node's outgoing edges carry
+//! different costs, we subdivide each edge `(u, v_j)` with a zero-cost node
+//! `w_j` colocated with `u`, set `c_{w_j}` to the edge cost, and make `c_u`
+//! unpayable (`u` is colocated with all its successors `w_j`, so its own
+//! comm cost can never be charged).
+
+use super::{Node, NodeId, OpGraph};
+
+/// Outcome of the reduction: the rewritten graph plus, for each new node,
+/// which original edge it represents (for mapping placements back).
+pub struct Subdivision {
+    pub graph: OpGraph,
+    /// `origin[w] = Some((u, v))` when node `w` subdivides original edge
+    /// `(u, v)`; `None` for original nodes.
+    pub origin: Vec<Option<(NodeId, NodeId)>>,
+}
+
+/// Apply the App.-B reduction wherever a node has outgoing edges with
+/// non-uniform costs. Nodes whose outgoing edge costs agree simply get that
+/// cost as `c_u` (the common case). Edges with no recorded cost keep the
+/// node's existing `comm`.
+pub fn reduce_edge_costs(g: &OpGraph) -> Subdivision {
+    let mut out = g.clone();
+    out.edge_costs.clear();
+    let mut origin: Vec<Option<(NodeId, NodeId)>> = vec![None; g.n()];
+
+    // fresh color classes for the forced colocations
+    let mut next_color =
+        g.nodes.iter().filter_map(|n| n.color_class).max().map_or(0, |m| m + 1);
+
+    for u in 0..g.n() {
+        let costs: Vec<Option<f64>> =
+            g.succs[u].iter().map(|&v| g.edge_costs.get(&(u, v)).copied()).collect();
+        let known: Vec<f64> = costs.iter().filter_map(|c| *c).collect();
+        if known.is_empty() {
+            continue; // no per-edge costs: node comm already authoritative
+        }
+        let uniform = known.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-12)
+            && known.len() == costs.len();
+        if uniform {
+            out.nodes[u].comm = known[0];
+            continue;
+        }
+
+        // Non-uniform: subdivide every outgoing edge of u.
+        let succs = g.succs[u].clone();
+        // ensure u has a color class to colocate the w_j with
+        let color = *out.nodes[u].color_class.get_or_insert_with(|| {
+            let c = next_color;
+            next_color += 1;
+            c
+        });
+        // detach u's outgoing edges
+        for &v in &succs {
+            out.succs[u].retain(|&w| w != v);
+            out.preds[v].retain(|&w| w != u);
+        }
+        for &v in &succs {
+            let cost = g.edge_costs.get(&(u, v)).copied().unwrap_or(g.nodes[u].comm);
+            let mut w = Node::new(format!("{}_out{}", g.nodes[u].name, v));
+            w.p_cpu = 0.0;
+            w.p_acc = 0.0;
+            w.mem = 0.0;
+            w.comm = cost;
+            w.color_class = Some(color);
+            w.kind = g.nodes[u].kind;
+            let wid = out.add_node(w);
+            origin.push(Some((u, v)));
+            out.add_edge(u, wid);
+            out.add_edge(wid, v);
+        }
+        // u's own comm can never be charged (all successors colocated)
+        out.nodes[u].comm = 0.0;
+    }
+    Subdivision { graph: out, origin }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topo::is_dag;
+
+    #[test]
+    fn uniform_costs_fold_into_node() {
+        let mut g = OpGraph::new();
+        for i in 0..3 {
+            g.add_node(Node::new(format!("n{i}")).comm(9.0));
+        }
+        g.add_edge_cost(0, 1, 2.5);
+        g.add_edge_cost(0, 2, 2.5);
+        let s = reduce_edge_costs(&g);
+        assert_eq!(s.graph.n(), 3);
+        assert!((s.graph.nodes[0].comm - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_uniform_costs_subdivide() {
+        let mut g = OpGraph::new();
+        for i in 0..3 {
+            g.add_node(Node::new(format!("n{i}")));
+        }
+        g.add_edge_cost(0, 1, 1.0);
+        g.add_edge_cost(0, 2, 5.0);
+        let s = reduce_edge_costs(&g);
+        assert_eq!(s.graph.n(), 5);
+        assert!(is_dag(&s.graph));
+        // u's comm zeroed; w_j nodes carry the edge costs and share u's color
+        assert_eq!(s.graph.nodes[0].comm, 0.0);
+        let color = s.graph.nodes[0].color_class.unwrap();
+        let new_nodes: Vec<usize> = (3..5).collect();
+        let mut seen_costs: Vec<f64> =
+            new_nodes.iter().map(|&w| s.graph.nodes[w].comm).collect();
+        seen_costs.sort_by(f64::total_cmp);
+        assert_eq!(seen_costs, vec![1.0, 5.0]);
+        for &w in &new_nodes {
+            assert_eq!(s.graph.nodes[w].color_class, Some(color));
+            assert_eq!(s.origin[w].unwrap().0, 0);
+            assert_eq!(s.graph.nodes[w].mem, 0.0);
+        }
+        // path structure preserved: 0 -> w -> v
+        assert_eq!(s.graph.succs[0].len(), 2);
+        for &w in &new_nodes {
+            assert_eq!(s.graph.succs[w].len(), 1);
+        }
+    }
+
+    #[test]
+    fn no_edge_costs_is_noop() {
+        let g = crate::graph::test_graphs::diamond();
+        let s = reduce_edge_costs(&g);
+        assert_eq!(s.graph.n(), g.n());
+        assert_eq!(s.graph.num_edges(), g.num_edges());
+    }
+}

@@ -1,0 +1,230 @@
+//! Topological structure: toposort, reachability, DAG width (the paper's
+//! antichain bound on CPU count, §4), and the DFS linearization used by the
+//! DPL heuristic (§5.1.2).
+
+use super::{NodeId, OpGraph};
+use crate::util::bitset::BitSet;
+
+/// Kahn's algorithm. Returns `None` if the graph has a cycle (can happen
+/// after colocation contraction, see `contract::contract_sccs`).
+pub fn toposort(g: &OpGraph) -> Option<Vec<NodeId>> {
+    let mut indeg: Vec<usize> = (0..g.n()).map(|v| g.preds[v].len()).collect();
+    let mut queue: Vec<NodeId> = (0..g.n()).filter(|&v| indeg[v] == 0).collect();
+    let mut order = Vec::with_capacity(g.n());
+    let mut head = 0;
+    while head < queue.len() {
+        let u = queue[head];
+        head += 1;
+        order.push(u);
+        for &v in &g.succs[u] {
+            indeg[v] -= 1;
+            if indeg[v] == 0 {
+                queue.push(v);
+            }
+        }
+    }
+    (order.len() == g.n()).then_some(order)
+}
+
+/// True iff the graph is acyclic.
+pub fn is_dag(g: &OpGraph) -> bool {
+    toposort(g).is_some()
+}
+
+/// Full reachability: `reach[u].contains(v)` ⇔ there is a directed path
+/// u ⇝ v (including u = v). Computed in reverse topological order with
+/// bitset unions — `O(V·E/64)`, fine for the ≤ 2k-node graphs we handle.
+pub fn reachability(g: &OpGraph) -> Vec<BitSet> {
+    let order = toposort(g).expect("reachability requires a DAG");
+    let mut reach: Vec<BitSet> = (0..g.n()).map(|_| BitSet::new(g.n())).collect();
+    for &u in order.iter().rev() {
+        reach[u].insert(u);
+        // union of successors' reach sets
+        let mut acc = std::mem::replace(&mut reach[u], BitSet::new(0));
+        for &v in &g.succs[u] {
+            acc.union_with(&reach[v]);
+        }
+        reach[u] = acc;
+    }
+    reach
+}
+
+/// Transpose reachability: `co_reach[v]` = all ancestors of v (including v).
+pub fn co_reachability(g: &OpGraph) -> Vec<BitSet> {
+    let order = toposort(g).expect("co_reachability requires a DAG");
+    let mut reach: Vec<BitSet> = (0..g.n()).map(|_| BitSet::new(g.n())).collect();
+    for &v in order.iter() {
+        reach[v].insert(v);
+        let mut acc = std::mem::replace(&mut reach[v], BitSet::new(0));
+        for &u in &g.preds[v] {
+            acc.union_with(&reach[u]);
+        }
+        reach[v] = acc;
+    }
+    reach
+}
+
+/// Width of the DAG = size of the largest antichain = the paper's lower
+/// bound on the CPU count `ℓ` for the latency IP (§4, footnote 3).
+///
+/// Computed via Mirsky/Dilworth-free greedy: by Dilworth's theorem the
+/// width equals the minimum number of chains covering the DAG; we compute
+/// the *maximum antichain* exactly with the standard reduction to maximum
+/// bipartite matching on the transitive closure (König/Fulkerson).
+pub fn width(g: &OpGraph) -> usize {
+    let n = g.n();
+    if n == 0 {
+        return 0;
+    }
+    let reach = reachability(g);
+    // Bipartite graph: left u — right v when u ⇝ v, u ≠ v. Minimum chain
+    // cover = n - max_matching; width = min chain cover by Dilworth.
+    let mut match_r: Vec<Option<usize>> = vec![None; n];
+    let mut matching = 0;
+    for u in 0..n {
+        let mut visited = vec![false; n];
+        if try_kuhn(u, &reach, &mut visited, &mut match_r) {
+            matching += 1;
+        }
+    }
+    n - matching
+}
+
+fn try_kuhn(
+    u: usize,
+    reach: &[BitSet],
+    visited: &mut [bool],
+    match_r: &mut [Option<usize>],
+) -> bool {
+    for v in reach[u].iter() {
+        if v == u || visited[v] {
+            continue;
+        }
+        visited[v] = true;
+        if match_r[v].is_none() || try_kuhn(match_r[v].unwrap(), reach, visited, match_r) {
+            match_r[v] = Some(u);
+            return true;
+        }
+    }
+    false
+}
+
+/// DFS-based linearization (§5.1.2): a topological order computed by a
+/// depth-first post-order, which tends to keep branches of the DAG
+/// together. Adding the path `order[0] -> order[1] -> …` as artificial
+/// edges collapses the ideal lattice to `|V|+1` ideals — the DPL heuristic.
+pub fn dfs_linearization(g: &OpGraph) -> Vec<NodeId> {
+    let n = g.n();
+    let mut state = vec![0u8; n]; // 0 unvisited, 1 on stack, 2 done
+    let mut post = Vec::with_capacity(n);
+    // Iterative DFS from every root (in-degree 0), then any leftovers.
+    let roots: Vec<NodeId> =
+        (0..n).filter(|&v| g.preds[v].is_empty()).chain(0..n).collect();
+    for root in roots {
+        if state[root] != 0 {
+            continue;
+        }
+        let mut stack: Vec<(NodeId, usize)> = vec![(root, 0)];
+        state[root] = 1;
+        while let Some(top) = stack.last_mut() {
+            let (u, ci) = (top.0, top.1);
+            if ci < g.succs[u].len() {
+                top.1 += 1;
+                let v = g.succs[u][ci];
+                if state[v] == 0 {
+                    state[v] = 1;
+                    stack.push((v, 0));
+                }
+            } else {
+                state[u] = 2;
+                post.push(u);
+                stack.pop();
+            }
+        }
+    }
+    post.reverse(); // reverse post-order = topological order
+    post
+}
+
+/// Add the artificial Hamiltonian path along `order` (used by DPL). Returns
+/// a copy of the graph with the extra zero-cost precedence edges.
+pub fn add_linearization_edges(g: &OpGraph, order: &[NodeId]) -> OpGraph {
+    let mut out = g.clone();
+    for w in order.windows(2) {
+        out.add_edge(w[0], w[1]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::test_graphs::*;
+    use crate::graph::Node;
+
+    #[test]
+    fn toposort_chain() {
+        let g = chain(5);
+        assert_eq!(toposort(&g).unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn toposort_respects_edges() {
+        let g = diamond();
+        let order = toposort(&g).unwrap();
+        let pos: Vec<usize> =
+            (0..4).map(|v| order.iter().position(|&x| x == v).unwrap()).collect();
+        for (u, v) in g.edges() {
+            assert!(pos[u] < pos[v]);
+        }
+    }
+
+    #[test]
+    fn detects_cycle() {
+        let mut g = chain(3);
+        g.add_edge(2, 0);
+        assert!(toposort(&g).is_none());
+        assert!(!is_dag(&g));
+    }
+
+    #[test]
+    fn reachability_diamond() {
+        let g = diamond();
+        let r = reachability(&g);
+        assert!(r[0].contains(3));
+        assert!(r[0].contains(0));
+        assert!(!r[1].contains(2));
+        assert!(r[1].contains(3));
+        let cr = co_reachability(&g);
+        assert!(cr[3].contains(0));
+        assert!(!cr[1].contains(2));
+    }
+
+    #[test]
+    fn width_examples() {
+        assert_eq!(width(&chain(6)), 1);
+        assert_eq!(width(&diamond()), 2);
+        // 4 isolated nodes: width 4
+        let mut g = crate::graph::OpGraph::new();
+        for i in 0..4 {
+            g.add_node(Node::new(format!("i{i}")));
+        }
+        assert_eq!(width(&g), 4);
+    }
+
+    #[test]
+    fn linearization_is_topological() {
+        let g = diamond();
+        let order = dfs_linearization(&g);
+        assert_eq!(order.len(), 4);
+        let pos: Vec<usize> =
+            (0..4).map(|v| order.iter().position(|&x| x == v).unwrap()).collect();
+        for (u, v) in g.edges() {
+            assert!(pos[u] < pos[v], "{u}->{v} violated in {order:?}");
+        }
+        let lin = add_linearization_edges(&g, &order);
+        assert!(is_dag(&lin));
+        // the linearized graph has a Hamiltonian path → unique toposort
+        assert_eq!(toposort(&lin).unwrap(), order);
+    }
+}

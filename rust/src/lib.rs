@@ -1,0 +1,57 @@
+//! # dnn-partition
+//!
+//! A production-grade reproduction of **"Efficient Algorithms for Device
+//! Placement of DNN Graph Operators"** (Tarnawski, Phanishayee, Devanur,
+//! Mahajan, Nina Paravecino — NeurIPS 2020).
+//!
+//! Given a DNN computation DAG with per-node CPU/accelerator processing
+//! times, memory footprints and transfer costs, plus a deployment scenario
+//! (`k` accelerators with memory cap `M`, `ℓ` CPUs), the crate computes
+//! **provably optimal device placements** for four regimes:
+//!
+//! * single-stream inference → latency minimization (IP, Figs. 3–4),
+//! * model-parallel training without pipelining (IP + colocation),
+//! * pipelined inference → throughput maximization (DP over ideals §5.1.1,
+//!   DPL heuristic §5.1.2, IP §5.1.3 incl. non-contiguous splits §5.2),
+//! * pipelined training, PipeDream & GPipe schedules (§5.3, Appendices A–C).
+//!
+//! Everything the paper leans on is implemented in-tree: a bounded-variable
+//! revised-simplex LP solver plus branch-and-bound MILP (replacing Gurobi),
+//! a Scotch-style multilevel partitioner, local search, PipeDream's
+//! linear-chain DP, expert placement rules, workload generators for the
+//! paper's seven DNNs at operator and layer granularity, and a
+//! discrete-event pipeline simulator that validates the max-load cost model.
+//! A three-layer execution runtime (Rust coordinator → JAX model → Pallas
+//! attention kernel, AOT-compiled to HLO and executed through PJRT) serves
+//! partitioned models for real, end to end.
+//!
+//! ## Layout
+//!
+//! * [`graph`] — the computational model of §3 and its algorithms
+//!   (ideals, contiguity, contraction).
+//! * [`algos`] — the paper's optimizers (DP / DPL / IP, training variants,
+//!   Appendix-C extensions).
+//! * [`solver`] — the from-scratch LP/MILP engine backing the IPs.
+//! * [`baselines`] — greedy / Scotch-like / local search / PipeDream / expert.
+//! * [`workloads`] — BERT, ResNet50, Inception-v3, GNMT generators and the
+//!   paper's JSON interchange format.
+//! * [`pipeline`] — discrete-event simulator of the Figs. 2/5/7 schedules.
+//! * [`runtime`] + [`coordinator`] — PJRT stage executor and the pipelined
+//!   serving loop.
+
+pub mod algos;
+pub mod baselines;
+pub mod coordinator;
+pub mod graph;
+pub mod pipeline;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+pub mod workloads;
+
+/// Common imports for downstream users.
+pub mod prelude {
+    pub use crate::coordinator::placement::{Placement, Scenario};
+    pub use crate::graph::{Node, NodeId, NodeKind, OpGraph};
+    pub use crate::util::bitset::BitSet;
+}

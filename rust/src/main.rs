@@ -1,0 +1,248 @@
+//! `dnn-partition` CLI — the leader entrypoint.
+//!
+//! ```text
+//! dnn-partition list                       # show the built-in workloads
+//! dnn-partition partition <wl> <alg>       # plan a pipelined split
+//! dnn-partition latency <wl>               # §7 latency planning
+//! dnn-partition simulate <wl> <alg> [n]    # pipeline simulation + timeline
+//! dnn-partition export <wl> <out.json>     # dump paper-format JSON
+//! dnn-partition partition-file <in.json> <alg>   # plan an external workload
+//! ```
+//!
+//! Workload names: `bert3op`, `bert6op`, `bert12op`, `resnet50op`,
+//! `bert24`, `resnet50`, `inceptionv3`, `gnmt` — suffix `-train` for the
+//! training variant (e.g. `bert24-train`).
+
+use dnn_partition::coordinator::planner::{self, Algorithm};
+use dnn_partition::pipeline::sim::{self, Schedule};
+use dnn_partition::util::json::Json;
+use dnn_partition::workloads::{self, json as wjson, Workload};
+use std::time::Duration;
+
+fn find_workload(name: &str) -> Option<Workload> {
+    let (base, training) = match name.strip_suffix("-train") {
+        Some(b) => (b, true),
+        None => (name, false),
+    };
+    let all = workloads::table1_workloads();
+    all.into_iter().find(|w| {
+        let key = match (w.name.as_str(), w.granularity) {
+            ("BERT-3", workloads::Granularity::Operator) => "bert3op",
+            ("BERT-6", workloads::Granularity::Operator) => "bert6op",
+            ("BERT-12", workloads::Granularity::Operator) => "bert12op",
+            ("ResNet50", workloads::Granularity::Operator) => "resnet50op",
+            ("BERT-24", _) => "bert24",
+            ("ResNet50", _) => "resnet50",
+            ("InceptionV3", _) => "inceptionv3",
+            ("GNMT", _) => "gnmt",
+            _ => "",
+        };
+        key == base && w.training == training
+    })
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = run(&args);
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> i32 {
+    match args.first().map(String::as_str) {
+        Some("list") => {
+            println!("{:<14} {:>6} {:>7} {:>3}  granularity  task", "workload", "nodes", "edges", "k");
+            for w in workloads::table1_workloads() {
+                println!(
+                    "{:<14} {:>6} {:>7} {:>3}  {:<11}  {}",
+                    format!(
+                        "{}{}",
+                        cli_key(&w),
+                        if w.training { "-train" } else { "" }
+                    ),
+                    w.graph.n(),
+                    w.graph.num_edges(),
+                    w.scenario.k,
+                    format!("{:?}", w.granularity),
+                    if w.training { "training" } else { "inference" },
+                );
+            }
+            0
+        }
+        Some("partition") if args.len() >= 3 => {
+            let Some(w) = find_workload(&args[1]) else {
+                eprintln!("unknown workload {}", args[1]);
+                return 2;
+            };
+            let Some(alg) = Algorithm::parse(&args[2]) else {
+                eprintln!("unknown algorithm {}", args[2]);
+                return 2;
+            };
+            let budget = Duration::from_secs(
+                args.get(3).and_then(|s| s.parse().ok()).unwrap_or(20),
+            );
+            match planner::plan(&w, alg, budget) {
+                Ok(r) => {
+                    println!(
+                        "{} {:?}: TPS {:.2}  runtime {:?}{}",
+                        w.name,
+                        alg,
+                        r.placement.objective,
+                        r.runtime,
+                        r.gap.map(|g| format!("  gap {:.1}%", g * 100.0)).unwrap_or_default()
+                    );
+                    print_split(&w, &r.placement);
+                    0
+                }
+                Err(e) => {
+                    eprintln!("planning failed: {e}");
+                    1
+                }
+            }
+        }
+        Some("latency") if args.len() >= 2 => {
+            let Some(mut w) = find_workload(&args[1]) else {
+                eprintln!("unknown workload {}", args[1]);
+                return 2;
+            };
+            w.scenario = workloads::latency_scenario(&w.graph);
+            let budget =
+                Duration::from_secs(args.get(2).and_then(|s| s.parse().ok()).unwrap_or(20));
+            match planner::plan(&w, Algorithm::IpLatency, budget) {
+                Ok(r) => {
+                    println!(
+                        "{}: latency {:.2} (k={}, M={:.0})  runtime {:?}{}",
+                        w.name,
+                        r.placement.objective,
+                        w.scenario.k,
+                        w.scenario.mem_cap,
+                        r.runtime,
+                        r.gap.map(|g| format!("  gap {:.1}%", g * 100.0)).unwrap_or_default()
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("planning failed: {e}");
+                    1
+                }
+            }
+        }
+        Some("simulate") if args.len() >= 3 => {
+            let Some(w) = find_workload(&args[1]) else {
+                eprintln!("unknown workload {}", args[1]);
+                return 2;
+            };
+            let Some(alg) = Algorithm::parse(&args[2]) else {
+                eprintln!("unknown algorithm {}", args[2]);
+                return 2;
+            };
+            let n = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(12);
+            let r = match planner::plan(&w, alg, Duration::from_secs(10)) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("planning failed: {e}");
+                    return 1;
+                }
+            };
+            let schedule = if w.training { Schedule::PipeDream1F1B } else { Schedule::Pipelined };
+            let res = sim::simulate(&w.graph, &w.scenario, &r.placement, schedule, n);
+            println!(
+                "{} {:?}: predicted TPS {:.2}, simulated steady-state {:.2} over {n} samples",
+                w.name, alg, r.placement.objective, res.steady_tps
+            );
+            println!("{}", sim::render_timeline(&res, 100));
+            0
+        }
+        Some("export") if args.len() >= 3 => {
+            let Some(w) = find_workload(&args[1]) else {
+                eprintln!("unknown workload {}", args[1]);
+                return 2;
+            };
+            let json = wjson::to_json(&w).to_string_pretty();
+            if std::fs::write(&args[2], json).is_err() {
+                eprintln!("cannot write {}", args[2]);
+                return 1;
+            }
+            println!("wrote {}", args[2]);
+            0
+        }
+        Some("partition-file") if args.len() >= 3 => {
+            let Ok(text) = std::fs::read_to_string(&args[1]) else {
+                eprintln!("cannot read {}", args[1]);
+                return 1;
+            };
+            let json = match Json::parse(&text) {
+                Ok(j) => j,
+                Err(e) => {
+                    eprintln!("bad JSON: {e}");
+                    return 1;
+                }
+            };
+            let (graph, scenario, name) = match wjson::from_json(&json) {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!("bad workload: {e}");
+                    return 1;
+                }
+            };
+            let Some(alg) = Algorithm::parse(&args[2]) else {
+                eprintln!("unknown algorithm {}", args[2]);
+                return 2;
+            };
+            let w = Workload {
+                name,
+                graph,
+                scenario,
+                granularity: workloads::Granularity::Operator,
+                training: false,
+                expert: None,
+                layer_of: None,
+            };
+            match planner::plan(&w, alg, Duration::from_secs(20)) {
+                Ok(r) => {
+                    println!("{} {:?}: TPS {:.2} in {:?}", w.name, alg, r.placement.objective, r.runtime);
+                    0
+                }
+                Err(e) => {
+                    eprintln!("planning failed: {e}");
+                    1
+                }
+            }
+        }
+        _ => {
+            eprintln!(
+                "usage: dnn-partition <list|partition|latency|simulate|export|partition-file> …\n\
+                 see `cargo doc` or README.md for details"
+            );
+            2
+        }
+    }
+}
+
+fn cli_key(w: &Workload) -> String {
+    match (w.name.as_str(), w.granularity) {
+        ("BERT-3", workloads::Granularity::Operator) => "bert3op".into(),
+        ("BERT-6", workloads::Granularity::Operator) => "bert6op".into(),
+        ("BERT-12", workloads::Granularity::Operator) => "bert12op".into(),
+        ("ResNet50", workloads::Granularity::Operator) => "resnet50op".into(),
+        ("BERT-24", _) => "bert24".into(),
+        ("ResNet50", _) => "resnet50".into(),
+        ("InceptionV3", _) => "inceptionv3".into(),
+        ("GNMT", _) => "gnmt".into(),
+        _ => w.name.to_lowercase(),
+    }
+}
+
+fn print_split(w: &Workload, p: &dnn_partition::prelude::Placement) {
+    use dnn_partition::coordinator::placement::Device;
+    let n = w.graph.n();
+    for i in 0..w.scenario.k {
+        let set = p.set_of(Device::Acc(i), n);
+        println!("  acc{i}: {} nodes, {:.1} MB", set.len(), w.graph.mem_of(&set));
+    }
+    for j in 0..w.scenario.l.max(1) {
+        let set = p.set_of(Device::Cpu(j), n);
+        if !set.is_empty() {
+            println!("  cpu{j}: {} nodes", set.len());
+        }
+    }
+}

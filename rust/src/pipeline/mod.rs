@@ -1,0 +1,7 @@
+//! Discrete-event simulation of the paper's pipeline schedules (Figs. 2,
+//! 5, 7): single-stream execution, pipelined inference, PipeDream 1F1B and
+//! GPipe training, including non-contiguous splits via virtual devices
+//! (§5.2). The simulator validates the cost model: after ramp-up, the
+//! measured steady-state time-per-sample equals the max-load objective.
+
+pub mod sim;

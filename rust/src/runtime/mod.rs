@@ -1,0 +1,15 @@
+//! Execution runtime: loads AOT-compiled HLO artifacts (produced once by
+//! `python/compile/aot.py` — L2 JAX model + L1 Pallas kernel) and serves
+//! them from Rust through the PJRT C API. Python never runs on the request
+//! path.
+//!
+//! * [`stage`] — one compiled pipeline stage: HLO text → PJRT executable.
+//! * [`server`] — the pipelined serving loop: per-stage worker threads
+//!   connected by channels, a dynamic batcher, and latency/throughput
+//!   metrics. (The offline build has no tokio; OS threads + mpsc channels
+//!   implement the same dataflow.)
+
+pub mod server;
+pub mod stage;
+
+pub use stage::{Stage, StageError};

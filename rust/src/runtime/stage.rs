@@ -1,0 +1,129 @@
+//! One pipeline stage: an AOT-lowered HLO module compiled onto the PJRT
+//! CPU client and executed with `f32` tensors.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+
+#[derive(Debug)]
+pub enum StageError {
+    Io(std::io::Error),
+    Xla(String),
+}
+
+impl std::fmt::Display for StageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StageError::Io(e) => write!(f, "stage I/O error: {e}"),
+            StageError::Xla(e) => write!(f, "XLA error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StageError {}
+
+impl From<xla::Error> for StageError {
+    fn from(e: xla::Error) -> Self {
+        StageError::Xla(e.to_string())
+    }
+}
+
+/// A compiled stage. The xla crate's executables are not `Send` (they hold
+/// `Rc` internals), so a `Stage` must live on the thread that created it —
+/// the serving loop therefore compiles one per worker thread from a
+/// [`StageSpec`].
+pub struct Stage {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of outputs the stage returns (jax lowers with
+    /// `return_tuple=True`, so the result is always a tuple).
+    pub tuple_arity: usize,
+}
+
+/// Thread-portable description of a stage: everything needed to compile it
+/// inside a worker thread.
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub tuple_arity: usize,
+    /// per-sample input shape (the compiled parameter is
+    /// `[batch, ..sample_shape]`)
+    pub sample_shape: Vec<usize>,
+}
+
+impl StageSpec {
+    /// Flattened per-sample element count.
+    pub fn features_in(&self) -> usize {
+        self.sample_shape.iter().product()
+    }
+}
+
+impl StageSpec {
+    /// Compile on a fresh CPU client (call from the owning thread).
+    pub fn compile(&self) -> Result<Stage, StageError> {
+        let client = xla::PjRtClient::cpu()?;
+        Stage::load(&client, self.name.clone(), &self.path, self.tuple_arity)
+    }
+}
+
+impl Stage {
+    /// Load an HLO text artifact and compile it on the given client.
+    pub fn load(
+        client: &xla::PjRtClient,
+        name: impl Into<String>,
+        path: &Path,
+        tuple_arity: usize,
+    ) -> Result<Stage, StageError> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| StageError::Xla("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Stage { name: name.into(), exe, tuple_arity })
+    }
+
+    /// Execute on f32 buffers: each input is (data, shape). Returns the
+    /// flattened f32 outputs.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>, StageError> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // jax lowers with return_tuple=True → unpack
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(self.tuple_arity.max(parts.len()));
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Convenience: the artifacts directory (env `DNN_PARTITION_ARTIFACTS`
+/// overrides; defaults to `artifacts/` relative to the crate root).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("DNN_PARTITION_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        // don't mutate process env in-parallel tests; just check default
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts") || std::env::var("DNN_PARTITION_ARTIFACTS").is_ok());
+    }
+
+    // Stage loading/execution against real artifacts is covered by the
+    // `runtime_e2e` integration test (skips when artifacts are absent).
+}

@@ -1,0 +1,404 @@
+//! Dense two-phase primal simplex — the LP core of the in-tree MILP solver
+//! (the offline environment has no Gurobi; §6 "Algorithm execution setup"
+//! used Gurobi 8.1, which this module + `milp.rs` replace).
+//!
+//! Scope: minimize `c·x` subject to `A x ⋈ b` (⋈ ∈ {≤, ≥, =}), `0 ≤ x ≤ u`.
+//! Finite upper bounds are handled as explicit rows for simplicity; the
+//! tableau is dense, so this engine is intended for models up to a few
+//! hundred columns — exactly the sizes the branch-and-bound layer feeds it
+//! (larger IPs use combinatorial bounds instead; see `milp.rs`).
+//! Degeneracy is handled with Bland's rule after a stall is detected.
+
+/// Constraint sense.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// A linear constraint `Σ coeffs[j]·x[j] ⋈ rhs` in sparse form.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    pub coeffs: Vec<(usize, f64)>,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+/// An LP: minimize `objective · x` subject to `constraints`, `0 ≤ x ≤ upper`.
+#[derive(Clone, Debug, Default)]
+pub struct Lp {
+    pub num_vars: usize,
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+    /// Per-variable upper bound (`f64::INFINITY` = unbounded above).
+    pub upper: Vec<f64>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LpOutcome {
+    Optimal { objective: f64, solution: Vec<f64> },
+    Infeasible,
+    Unbounded,
+}
+
+impl Lp {
+    pub fn new(num_vars: usize) -> Self {
+        Lp {
+            num_vars,
+            objective: vec![0.0; num_vars],
+            constraints: Vec::new(),
+            upper: vec![f64::INFINITY; num_vars],
+        }
+    }
+
+    pub fn add(&mut self, coeffs: Vec<(usize, f64)>, sense: Sense, rhs: f64) {
+        debug_assert!(coeffs.iter().all(|&(j, _)| j < self.num_vars));
+        self.constraints.push(Constraint { coeffs, sense, rhs });
+    }
+
+    /// Solve with the two-phase simplex. `max_iters` bounds pivots
+    /// (guards against numerical cycling on pathological inputs).
+    pub fn solve(&self) -> LpOutcome {
+        self.solve_with_limit(200_000)
+    }
+
+    pub fn solve_with_limit(&self, max_iters: usize) -> LpOutcome {
+        // Assemble rows: constraints + finite upper bounds.
+        let mut rows: Vec<(Vec<(usize, f64)>, Sense, f64)> = Vec::new();
+        for c in &self.constraints {
+            rows.push((c.coeffs.clone(), c.sense, c.rhs));
+        }
+        for (j, &u) in self.upper.iter().enumerate() {
+            if u.is_finite() {
+                rows.push((vec![(j, 1.0)], Sense::Le, u));
+            }
+        }
+        let m = rows.len();
+        let n = self.num_vars;
+
+        // Normalize to b ≥ 0.
+        for row in rows.iter_mut() {
+            if row.2 < 0.0 {
+                for e in row.0.iter_mut() {
+                    e.1 = -e.1;
+                }
+                row.2 = -row.2;
+                row.1 = match row.1 {
+                    Sense::Le => Sense::Ge,
+                    Sense::Ge => Sense::Le,
+                    Sense::Eq => Sense::Eq,
+                };
+            }
+        }
+
+        // Column layout: [x (n)] [slack/surplus (≤/≥ rows)] [artificials].
+        let mut num_slack = 0;
+        for row in &rows {
+            if row.1 != Sense::Eq {
+                num_slack += 1;
+            }
+        }
+        // artificials: for ≥ and = rows
+        let mut num_art = 0;
+        for row in &rows {
+            if row.1 != Sense::Le {
+                num_art += 1;
+            }
+        }
+        let total = n + num_slack + num_art;
+
+        // Dense tableau: m rows × (total + 1), last col = rhs.
+        let mut t = vec![vec![0.0_f64; total + 1]; m];
+        let mut basis = vec![usize::MAX; m];
+        let mut slack_idx = n;
+        let mut art_idx = n + num_slack;
+        let mut artificial_cols: Vec<usize> = Vec::new();
+        for (i, row) in rows.iter().enumerate() {
+            for &(j, a) in &row.0 {
+                t[i][j] += a;
+            }
+            t[i][total] = row.2;
+            match row.1 {
+                Sense::Le => {
+                    t[i][slack_idx] = 1.0;
+                    basis[i] = slack_idx;
+                    slack_idx += 1;
+                }
+                Sense::Ge => {
+                    t[i][slack_idx] = -1.0;
+                    slack_idx += 1;
+                    t[i][art_idx] = 1.0;
+                    basis[i] = art_idx;
+                    artificial_cols.push(art_idx);
+                    art_idx += 1;
+                }
+                Sense::Eq => {
+                    t[i][art_idx] = 1.0;
+                    basis[i] = art_idx;
+                    artificial_cols.push(art_idx);
+                    art_idx += 1;
+                }
+            }
+        }
+
+        // --- Phase 1: minimize sum of artificials ---
+        if !artificial_cols.is_empty() {
+            let mut cost1 = vec![0.0; total];
+            for &a in &artificial_cols {
+                cost1[a] = 1.0;
+            }
+            match simplex_core(&mut t, &mut basis, &cost1, total, max_iters) {
+                CoreOutcome::Optimal(obj) => {
+                    if obj > 1e-7 {
+                        return LpOutcome::Infeasible;
+                    }
+                }
+                CoreOutcome::Unbounded => unreachable!("phase-1 objective is bounded below"),
+                CoreOutcome::IterLimit => return LpOutcome::Infeasible,
+            }
+            // Drive artificials out of the basis where possible.
+            for i in 0..m {
+                if basis[i] >= n + num_slack {
+                    // pivot on any eligible non-artificial column
+                    if let Some(j) = (0..n + num_slack).find(|&j| t[i][j].abs() > 1e-9) {
+                        pivot(&mut t, &mut basis, i, j);
+                    }
+                }
+            }
+        }
+
+        // --- Phase 2 ---
+        let mut cost2 = vec![0.0; total];
+        cost2[..n].copy_from_slice(&self.objective);
+        // artificial columns are banned from entering (allowed = n+num_slack);
+        // any artificial stuck basic at value 0 after phase 1 contributes 0.
+        match simplex_core(&mut t, &mut basis, &cost2, n + num_slack, max_iters) {
+            CoreOutcome::Optimal(_) | CoreOutcome::IterLimit => {
+                let mut x = vec![0.0; n];
+                for (i, &b) in basis.iter().enumerate() {
+                    if b < n {
+                        x[b] = t[i][total];
+                    }
+                }
+                let obj = self
+                    .objective
+                    .iter()
+                    .zip(&x)
+                    .map(|(c, v)| c * v)
+                    .sum();
+                LpOutcome::Optimal { objective: obj, solution: x }
+            }
+            CoreOutcome::Unbounded => LpOutcome::Unbounded,
+        }
+    }
+}
+
+enum CoreOutcome {
+    Optimal(f64),
+    Unbounded,
+    IterLimit,
+}
+
+/// Run primal simplex iterations on the tableau for the given cost vector.
+/// The reduced-cost row is computed once (`O(m·n)`) and maintained through
+/// pivots, so each iteration is `O(m·n)` total. Dantzig pricing, switching
+/// to Bland's rule after a stall streak to escape degeneracy.
+fn simplex_core(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    cost: &[f64],
+    allowed: usize,
+    max_iters: usize,
+) -> CoreOutcome {
+    let m = t.len();
+    if m == 0 {
+        return CoreOutcome::Optimal(0.0);
+    }
+    let total = t[0].len() - 1;
+    // rc[j] = cost[j] - Σ_i cost[basis[i]]·t[i][j]; rc[total] = -objective.
+    let mut rc = vec![0.0_f64; total + 1];
+    rc[..total].copy_from_slice(&cost[..total]);
+    for i in 0..m {
+        let cb = cost[basis[i]];
+        if cb != 0.0 {
+            for j in 0..=total {
+                rc[j] -= cb * t[i][j];
+            }
+        }
+    }
+
+    let mut stall = 0usize;
+    let mut last_obj = f64::INFINITY;
+    for _iter in 0..max_iters {
+        let bland = stall > 2 * m + 20;
+        let mut entering = None;
+        let mut best = -1e-9;
+        for j in 0..allowed {
+            if rc[j] < -1e-9 {
+                if bland {
+                    entering = Some(j);
+                    break;
+                }
+                if rc[j] < best {
+                    best = rc[j];
+                    entering = Some(j);
+                }
+            }
+        }
+        let Some(e) = entering else {
+            return CoreOutcome::Optimal(-rc[total]);
+        };
+        // ratio test
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            if t[i][e] > 1e-9 {
+                let ratio = t[i][total] / t[i][e];
+                if ratio < best_ratio - 1e-12
+                    || (bland
+                        && (ratio - best_ratio).abs() <= 1e-12
+                        && leave.is_some_and(|l| basis[i] < basis[l]))
+                {
+                    best_ratio = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(r) = leave else {
+            return CoreOutcome::Unbounded;
+        };
+        pivot(t, basis, r, e);
+        // maintain reduced costs: rc -= rc[e] * (pivot row, normalized)
+        let f = rc[e];
+        if f.abs() > 1e-12 {
+            for j in 0..=total {
+                rc[j] -= f * t[r][j];
+            }
+        }
+        rc[e] = 0.0;
+        let obj = -rc[total];
+        if (obj - last_obj).abs() < 1e-12 {
+            stall += 1;
+        } else {
+            stall = 0;
+            last_obj = obj;
+        }
+    }
+    CoreOutcome::IterLimit
+}
+
+fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], r: usize, e: usize) {
+    let total = t[0].len() - 1;
+    let piv = t[r][e];
+    for j in 0..=total {
+        t[r][j] /= piv;
+    }
+    for i in 0..t.len() {
+        if i != r && t[i][e].abs() > 1e-12 {
+            let f = t[i][e];
+            for j in 0..=total {
+                t[i][j] -= f * t[r][j];
+            }
+        }
+    }
+    basis[r] = e;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_opt(lp: &Lp, expect_obj: f64, tol: f64) -> Vec<f64> {
+        match lp.solve() {
+            LpOutcome::Optimal { objective, solution } => {
+                assert!(
+                    (objective - expect_obj).abs() < tol,
+                    "objective {objective} != {expect_obj}"
+                );
+                solution
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn textbook_max_problem() {
+        // max 3x + 5y s.t. x ≤ 4, 2y ≤ 12, 3x + 2y ≤ 18 → (2, 6), obj 36
+        let mut lp = Lp::new(2);
+        lp.objective = vec![-3.0, -5.0]; // minimize negative
+        lp.add(vec![(0, 1.0)], Sense::Le, 4.0);
+        lp.add(vec![(1, 2.0)], Sense::Le, 12.0);
+        lp.add(vec![(0, 3.0), (1, 2.0)], Sense::Le, 18.0);
+        let x = assert_opt(&lp, -36.0, 1e-7);
+        assert!((x[0] - 2.0).abs() < 1e-7 && (x[1] - 6.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn equality_and_ge_constraints() {
+        // min x + 2y s.t. x + y = 10, x ≥ 3 → (10-y)... optimal x=10,y=0? x≥3:
+        // min at y=0, x=10 → 10.
+        let mut lp = Lp::new(2);
+        lp.objective = vec![1.0, 2.0];
+        lp.add(vec![(0, 1.0), (1, 1.0)], Sense::Eq, 10.0);
+        lp.add(vec![(0, 1.0)], Sense::Ge, 3.0);
+        let x = assert_opt(&lp, 10.0, 1e-7);
+        assert!((x[0] - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut lp = Lp::new(1);
+        lp.objective = vec![1.0];
+        lp.add(vec![(0, 1.0)], Sense::Ge, 5.0);
+        lp.add(vec![(0, 1.0)], Sense::Le, 3.0);
+        assert_eq!(lp.solve(), LpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut lp = Lp::new(1);
+        lp.objective = vec![-1.0]; // max x, no bound
+        lp.add(vec![(0, 1.0)], Sense::Ge, 0.0);
+        assert_eq!(lp.solve(), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn upper_bounds_respected() {
+        let mut lp = Lp::new(2);
+        lp.objective = vec![-1.0, -1.0];
+        lp.upper = vec![1.0, 0.5];
+        lp.add(vec![(0, 1.0), (1, 1.0)], Sense::Le, 10.0);
+        let x = assert_opt(&lp, -1.5, 1e-7);
+        assert!((x[0] - 1.0).abs() < 1e-7 && (x[1] - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // Classic degenerate corner; must not cycle.
+        let mut lp = Lp::new(3);
+        lp.objective = vec![-0.75, 150.0, -0.02];
+        lp.add(vec![(0, 0.25), (1, -60.0), (2, -0.04)], Sense::Le, 0.0);
+        lp.add(vec![(0, 0.5), (1, -90.0), (2, -0.02)], Sense::Le, 0.0);
+        lp.add(vec![(2, 1.0)], Sense::Le, 1.0);
+        match lp.solve() {
+            LpOutcome::Optimal { .. } | LpOutcome::Unbounded => {}
+            other => panic!("degenerate LP failed: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn transportation_lp() {
+        // 2 sources (supply 20, 30), 3 sinks (demand 10, 25, 15); costs:
+        // [[2,4,5],[3,1,7]]. Optimum 125: x00=5, x02=15 (s0 full), x10=5,
+        // x11=25 (s1 full) → 10 + 75 + 15 + 25 = 125.
+        let mut lp = Lp::new(6);
+        lp.objective = vec![2.0, 4.0, 5.0, 3.0, 1.0, 7.0];
+        lp.add(vec![(0, 1.0), (1, 1.0), (2, 1.0)], Sense::Le, 20.0);
+        lp.add(vec![(3, 1.0), (4, 1.0), (5, 1.0)], Sense::Le, 30.0);
+        lp.add(vec![(0, 1.0), (3, 1.0)], Sense::Eq, 10.0);
+        lp.add(vec![(1, 1.0), (4, 1.0)], Sense::Eq, 25.0);
+        lp.add(vec![(2, 1.0), (5, 1.0)], Sense::Eq, 15.0);
+        assert_opt(&lp, 125.0, 1e-6);
+    }
+}

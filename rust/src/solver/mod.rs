@@ -1,0 +1,8 @@
+//! The in-tree optimization engine that stands in for Gurobi: a dense
+//! two-phase simplex ([`lp`]) and a branch-and-bound MILP driver
+//! ([`milp`]) with incumbent warm-starts, time-limit control and
+//! optimality-gap reporting — the same operational surface the paper uses
+//! ("run until within 1% of optimum, but no longer than 20 minutes").
+
+pub mod lp;
+pub mod milp;

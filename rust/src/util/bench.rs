@@ -1,0 +1,114 @@
+//! Minimal benchmarking harness (no `criterion` offline). Runs a closure
+//! repeatedly with warmup, reports median / mean / p90 wall times, and
+//! prints rows in a stable machine-grepable format consumed by
+//! EXPERIMENTS.md tables.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p90: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {name:<44} iters={iters:<4} median={median:>12?} mean={mean:>12?} p90={p90:>12?} min={min:>12?}",
+            name = self.name,
+            iters = self.iters,
+            median = self.median,
+            mean = self.mean,
+            p90 = self.p90,
+            min = self.min,
+        )
+    }
+}
+
+/// Time `f`, choosing an iteration count so total time ≈ `budget`, with at
+/// least `min_iters` samples. The closure's return value is black-boxed to
+/// keep the optimizer honest.
+pub fn bench<T>(name: &str, budget: Duration, min_iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    // Warmup + calibration run.
+    let t0 = Instant::now();
+    black_box(f());
+    let one = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = ((budget.as_secs_f64() / one.as_secs_f64()).ceil() as usize)
+        .clamp(min_iters, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        black_box(f());
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        median: samples[samples.len() / 2],
+        mean,
+        p90: samples[(samples.len() * 9 / 10).min(samples.len() - 1)],
+        min: samples[0],
+    };
+    println!("{}", stats.report());
+    stats
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Time a single run of `f`, returning (result, elapsed).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Format a Duration like the paper's runtime column ("0s", "5s", "1m",
+/// "32m") for Table-1-style output.
+pub fn paper_runtime(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 0.5 {
+        "0s".into()
+    } else if s < 99.5 {
+        format!("{}s", s.round() as u64)
+    } else {
+        format!("{}m", (s / 60.0).round() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let stats = bench("noop", Duration::from_millis(5), 3, || 1 + 1);
+        assert!(stats.iters >= 3);
+        assert!(stats.median <= stats.p90);
+        assert!(stats.min <= stats.median);
+    }
+
+    #[test]
+    fn paper_runtime_format() {
+        assert_eq!(paper_runtime(Duration::from_millis(100)), "0s");
+        assert_eq!(paper_runtime(Duration::from_secs(5)), "5s");
+        assert_eq!(paper_runtime(Duration::from_secs(119)), "2m");
+        assert_eq!(paper_runtime(Duration::from_secs(32 * 60)), "32m");
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

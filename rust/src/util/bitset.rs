@@ -1,0 +1,220 @@
+//! Fixed-capacity bitset used for node sets (ideals, reachability rows,
+//! subgraphs). The dynamic-programming search space of this crate is a
+//! lattice of *ideals* of a DAG, each represented as one `BitSet`; the DP
+//! hot loop hashes, compares and walks these sets, so the representation is
+//! a flat `Vec<u64>` with no indirection beyond the one allocation.
+
+use std::fmt;
+
+/// A set of `usize` elements in `0..capacity`, stored as 64-bit words.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitSet {
+    words: Vec<u64>,
+    /// Number of addressable bits (not the number of set bits).
+    capacity: usize,
+}
+
+impl BitSet {
+    /// Empty set able to hold elements `0..capacity`.
+    pub fn new(capacity: usize) -> Self {
+        BitSet { words: vec![0; capacity.div_ceil(64)], capacity }
+    }
+
+    /// Set containing every element in `0..capacity`.
+    pub fn full(capacity: usize) -> Self {
+        let mut s = Self::new(capacity);
+        for i in 0..capacity {
+            s.insert(i);
+        }
+        s
+    }
+
+    /// Build from an iterator of elements.
+    pub fn from_iter<I: IntoIterator<Item = usize>>(capacity: usize, iter: I) -> Self {
+        let mut s = Self::new(capacity);
+        for i in iter {
+            s.insert(i);
+        }
+        s
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: usize) {
+        debug_assert!(i < self.capacity);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, i: usize) {
+        debug_assert!(i < self.capacity);
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        debug_assert!(i < self.capacity);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Number of elements in the set.
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// `self ⊆ other`.
+    pub fn is_subset(&self, other: &BitSet) -> bool {
+        self.words.iter().zip(&other.words).all(|(a, b)| a & !b == 0)
+    }
+
+    /// In-place union.
+    pub fn union_with(&mut self, other: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// In-place intersection.
+    pub fn intersect_with(&mut self, other: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// In-place difference (`self \ other`).
+    pub fn difference_with(&mut self, other: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+
+    /// `self ∩ other ≠ ∅` without allocating.
+    pub fn intersects(&self, other: &BitSet) -> bool {
+        self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+    }
+
+    /// New set `self \ other`.
+    pub fn difference(&self, other: &BitSet) -> BitSet {
+        let mut out = self.clone();
+        out.difference_with(other);
+        out
+    }
+
+    /// Iterate set elements in increasing order.
+    pub fn iter(&self) -> BitSetIter<'_> {
+        BitSetIter { set: self, word_idx: 0, current: self.words.first().copied().unwrap_or(0) }
+    }
+
+    /// Stable 64-bit hash (FxHash-style) used to key DP tables without
+    /// re-hashing the whole `Vec` through `std`'s SipHash.
+    pub fn fast_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &w in &self.words {
+            h = (h ^ w).wrapping_mul(0x1000_0000_01b3);
+        }
+        h
+    }
+}
+
+impl fmt::Debug for BitSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_set().entries(self.iter()).finish()
+    }
+}
+
+pub struct BitSetIter<'a> {
+    set: &'a BitSet,
+    word_idx: usize,
+    current: u64,
+}
+
+impl Iterator for BitSetIter<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.current != 0 {
+                let bit = self.current.trailing_zeros() as usize;
+                self.current &= self.current - 1;
+                return Some(self.word_idx * 64 + bit);
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.set.words.len() {
+                return None;
+            }
+            self.current = self.set.words[self.word_idx];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut s = BitSet::new(200);
+        assert!(!s.contains(63));
+        s.insert(63);
+        s.insert(64);
+        s.insert(199);
+        assert!(s.contains(63) && s.contains(64) && s.contains(199));
+        assert_eq!(s.len(), 3);
+        s.remove(64);
+        assert!(!s.contains(64));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn iter_order() {
+        let s = BitSet::from_iter(300, [5, 0, 299, 64, 128]);
+        let v: Vec<usize> = s.iter().collect();
+        assert_eq!(v, vec![0, 5, 64, 128, 299]);
+    }
+
+    #[test]
+    fn subset_and_ops() {
+        let a = BitSet::from_iter(100, [1, 2, 3]);
+        let b = BitSet::from_iter(100, [1, 2, 3, 50]);
+        assert!(a.is_subset(&b));
+        assert!(!b.is_subset(&a));
+        assert!(a.is_subset(&a));
+        let d = b.difference(&a);
+        assert_eq!(d.iter().collect::<Vec<_>>(), vec![50]);
+        assert!(b.intersects(&a));
+        assert!(!d.intersects(&a));
+    }
+
+    #[test]
+    fn full_and_empty() {
+        let f = BitSet::full(65);
+        assert_eq!(f.len(), 65);
+        assert!(!f.is_empty());
+        assert!(BitSet::new(65).is_empty());
+    }
+
+    #[test]
+    fn union_intersect() {
+        let mut a = BitSet::from_iter(100, [1, 2]);
+        let b = BitSet::from_iter(100, [2, 3]);
+        a.union_with(&b);
+        assert_eq!(a.iter().collect::<Vec<_>>(), vec![1, 2, 3]);
+        a.intersect_with(&b);
+        assert_eq!(a.iter().collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn hash_differs() {
+        let a = BitSet::from_iter(100, [1]);
+        let b = BitSet::from_iter(100, [2]);
+        assert_ne!(a.fast_hash(), b.fast_hash());
+        assert_eq!(a.fast_hash(), a.clone().fast_hash());
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree substrates that replace unavailable third-party crates in the
+//! offline build: bitsets, a deterministic PRNG, a JSON parser/writer, a
+//! property-testing harness, and a micro-benchmark timer.
+
+pub mod bench;
+pub mod bitset;
+pub mod json;
+pub mod proptest;
+pub mod rng;

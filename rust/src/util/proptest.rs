@@ -1,0 +1,189 @@
+//! Property-testing harness (no `proptest` crate offline). Provides random
+//! DAG/workload generators and a `check` runner that, on failure, replays a
+//! seed so failures are reproducible, and *shrinks* DAG cases by deleting
+//! nodes while the property still fails.
+
+use crate::graph::{Node, OpGraph};
+use crate::util::rng::Rng;
+
+/// Run `prop` on `cases` random inputs produced by `gen`. On failure,
+/// panics with the failing seed. Generators must be deterministic in the
+/// provided `Rng`.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property '{name}' failed on seed {seed:#x} (case {case}): {msg}");
+        }
+    }
+}
+
+/// Like [`check`] but for DAG-valued properties: shrinks a failing graph by
+/// repeatedly removing single nodes while the property keeps failing, then
+/// reports the minimal graph.
+pub fn check_dag<P>(name: &str, cases: usize, max_nodes: usize, mut prop: P)
+where
+    P: FnMut(&OpGraph) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xda60_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.gen_range(max_nodes.max(3) - 2);
+        let g = random_dag(&mut rng, n, 0.3);
+        if let Err(first_msg) = prop(&g) {
+            // shrink: drop nodes one at a time while still failing
+            let mut current = g;
+            let mut msg = first_msg;
+            'shrink: loop {
+                for drop in 0..current.n() {
+                    let smaller = remove_node(&current, drop);
+                    if smaller.n() < 2 {
+                        continue;
+                    }
+                    if let Err(m) = prop(&smaller) {
+                        current = smaller;
+                        msg = m;
+                        continue 'shrink;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed on seed {seed:#x} (case {case}); shrunk to {} nodes / {} edges: {msg}\n{:?}",
+                current.n(),
+                current.num_edges(),
+                current.edges().collect::<Vec<_>>()
+            );
+        }
+    }
+}
+
+/// Random DAG: nodes 0..n with edges only forward in index order (so it is
+/// a DAG by construction), each forward pair present with probability `p`.
+/// Costs are positive and varied; some nodes get comm-heavy outputs.
+pub fn random_dag(rng: &mut Rng, n: usize, p: f64) -> OpGraph {
+    let mut g = OpGraph::new();
+    for i in 0..n {
+        let node = Node::new(format!("r{i}"))
+            .cpu(rng.gen_f64_range(0.5, 8.0))
+            .acc(rng.gen_f64_range(0.1, 4.0))
+            .mem(rng.gen_f64_range(0.1, 2.0))
+            .comm(rng.gen_f64_range(0.0, 1.5));
+        g.add_node(node);
+    }
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if rng.gen_bool(p) {
+                g.add_edge(u, v);
+            }
+        }
+    }
+    g
+}
+
+/// Random *training-shaped* DAG: a forward random DAG plus a mirrored
+/// backward part with colocation color classes linking partners.
+pub fn random_training_dag(rng: &mut Rng, n_fw: usize, p: f64) -> OpGraph {
+    let mut g = random_dag(rng, n_fw, p);
+    let n = g.n();
+    // backward part: mirror nodes (some orphaned with probability 0.1)
+    let mut bw_id = vec![None; n];
+    for v in (0..n).rev() {
+        if rng.gen_bool(0.9) {
+            let mut node = Node::new(format!("bw{v}"))
+                .cpu(g.nodes[v].p_cpu * 2.0)
+                .acc(g.nodes[v].p_acc * 2.0)
+                .mem(g.nodes[v].mem)
+                .comm(g.nodes[v].comm)
+                .backward();
+            node.fw_partner = Some(v);
+            node.color_class = Some(v as u32);
+            g.nodes[v].color_class = Some(v as u32);
+            bw_id[v] = Some(g.add_node(node));
+        }
+    }
+    // connect last forward node to first backward node; mirror edges
+    let fw_edges: Vec<(usize, usize)> =
+        g.edges().filter(|&(u, v)| u < n && v < n).collect();
+    for (u, v) in fw_edges {
+        if let (Some(bu), Some(bv)) = (bw_id[u], bw_id[v]) {
+            g.add_edge(bv, bu); // reversed
+        }
+    }
+    // bridge fw → bw so the whole thing is connected (loss node)
+    if let Some(first_bw) = (0..n).rev().filter_map(|v| bw_id[v]).next() {
+        // attach to some forward sink
+        let sinks: Vec<usize> = (0..n).filter(|&v| g.succs[v].iter().all(|&w| w >= n)).collect();
+        if let Some(&s) = sinks.first() {
+            g.add_edge(s, first_bw);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topo::is_dag;
+    use crate::graph::NodeKind;
+
+    #[test]
+    fn random_dag_is_dag() {
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let g = random_dag(&mut rng, 12, 0.3);
+            assert!(is_dag(&g));
+            assert_eq!(g.n(), 12);
+        }
+    }
+
+    #[test]
+    fn random_training_dag_is_dag_with_backward() {
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            let g = random_training_dag(&mut rng, 8, 0.3);
+            assert!(is_dag(&g));
+            assert!(g.nodes.iter().any(|n| n.kind == NodeKind::Backward));
+        }
+    }
+
+    #[test]
+    fn check_passes_trivially() {
+        check("trivial", 10, |r| r.gen_range(10), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 5, |r| r.gen_range(10), |&x| {
+            if x < 100 {
+                Err(format!("x={x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+}
+
+/// Remove node `v` (reconnecting nothing — shrinking keeps it simple).
+fn remove_node(g: &OpGraph, v: usize) -> OpGraph {
+    let mut out = OpGraph::new();
+    let mut map = vec![usize::MAX; g.n()];
+    for (i, node) in g.nodes.iter().enumerate() {
+        if i != v {
+            map[i] = out.add_node(node.clone());
+        }
+    }
+    for (a, b) in g.edges() {
+        if a != v && b != v {
+            out.add_edge(map[a], map[b]);
+        }
+    }
+    out
+}

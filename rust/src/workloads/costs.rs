@@ -1,0 +1,105 @@
+//! Cost model turning op shapes into the §3 node weights.
+//!
+//! The paper profiles layer graphs on a GPU and *estimates* operator-graph
+//! costs for a non-GPU accelerator; our substitute derives costs
+//! analytically from FLOPs and bytes with device constants chosen so that
+//! magnitudes land in the paper's range (TPS in tens-to-hundreds of ms).
+//! Units: time = ms, memory/data = MB.
+
+/// Device/interconnect constants.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Accelerator matmul throughput (FLOPs per ms).
+    pub acc_flops_per_ms: f64,
+    /// Accelerator memory bandwidth for elementwise ops (MB per ms).
+    pub acc_mb_per_ms: f64,
+    /// CPU throughput (FLOPs per ms).
+    pub cpu_flops_per_ms: f64,
+    /// CPU memory bandwidth (MB per ms).
+    pub cpu_mb_per_ms: f64,
+    /// Host↔accelerator interconnect (MB per ms) — PCIe 3.0 x16 ≈ 12.
+    pub pcie_mb_per_ms: f64,
+    /// Fixed accelerator kernel-launch overhead (ms).
+    pub acc_overhead_ms: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            acc_flops_per_ms: 1.0e10, // 10 TFLOP/s effective
+            acc_mb_per_ms: 600.0,     // ~600 GB/s HBM
+            cpu_flops_per_ms: 2.0e8,  // 0.2 TFLOP/s
+            cpu_mb_per_ms: 40.0,
+            pcie_mb_per_ms: 12.0,
+            acc_overhead_ms: 0.002,
+        }
+    }
+}
+
+/// Cost triple of an op: (p_cpu, p_acc, comm), plus the memory footprint.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpCost {
+    pub p_cpu: f64,
+    pub p_acc: f64,
+    pub comm: f64,
+    pub mem: f64,
+}
+
+impl CostModel {
+    /// Compute-bound op (matmul/conv): `flops` of math producing
+    /// `out_mb` of output, with `param_mb` resident parameters.
+    pub fn compute_op(&self, flops: f64, out_mb: f64, param_mb: f64) -> OpCost {
+        OpCost {
+            p_cpu: flops / self.cpu_flops_per_ms,
+            p_acc: flops / self.acc_flops_per_ms + self.acc_overhead_ms,
+            comm: out_mb / self.pcie_mb_per_ms,
+            mem: param_mb + out_mb,
+        }
+    }
+
+    /// Memory-bound op (elementwise / norm / softmax): touches
+    /// `touched_mb`, produces `out_mb`.
+    pub fn memory_op(&self, touched_mb: f64, out_mb: f64) -> OpCost {
+        OpCost {
+            p_cpu: touched_mb / self.cpu_mb_per_ms,
+            p_acc: touched_mb / self.acc_mb_per_ms + self.acc_overhead_ms,
+            comm: out_mb / self.pcie_mb_per_ms,
+            mem: out_mb,
+        }
+    }
+}
+
+/// MB of a f32 tensor with the given element count.
+pub fn mb_f32(elements: f64) -> f64 {
+    elements * 4.0 / 1.0e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_op_scales_with_flops() {
+        let m = CostModel::default();
+        let a = m.compute_op(1e9, 1.0, 10.0);
+        let b = m.compute_op(2e9, 1.0, 10.0);
+        assert!(b.p_acc > a.p_acc);
+        assert!((b.p_cpu / a.p_cpu - 2.0).abs() < 1e-9);
+        assert!(a.p_cpu > a.p_acc, "CPU must be slower on compute ops");
+        assert!((a.mem - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_op_bandwidth_bound() {
+        let m = CostModel::default();
+        let c = m.memory_op(4.0, 2.0);
+        assert!((c.p_cpu - 0.1).abs() < 1e-9);
+        assert!(c.p_acc < c.p_cpu);
+        assert!((c.comm - 2.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mb_conversion() {
+        assert!((mb_f32(1_000_000.0) - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,109 @@
+//! GNMT layer graph (≈ 96 layers in the paper's PipeDream input): an
+//! 8-layer bidirectional-ish LSTM encoder, attention block, 8-layer LSTM
+//! decoder with attention feeding every decoder layer (the cross edges are
+//! what give GNMT its ~18k ideals despite only 96 nodes), embedding and
+//! softmax/projection head. Node names use `lstmN_*` prefixes so the
+//! expert BlockBands rule maps each LSTM layer to a device, as in
+//! [SVL14, WSC+16].
+
+use super::costs::{mb_f32, CostModel};
+use super::{add_op, append_backward};
+use crate::graph::{NodeId, OpGraph};
+
+const BATCH: f64 = 64.0;
+const SEQ: f64 = 50.0;
+const H: f64 = 1024.0;
+
+pub fn gnmt_layer_graph(training: bool) -> OpGraph {
+    let m = CostModel::default();
+    let mut g = OpGraph::new();
+    let act = mb_f32(BATCH * SEQ * H);
+    let lstm_flops = 2.0 * BATCH * SEQ * (8.0 * H * H); // 4 gates × 2 matmuls
+    let lstm_params = mb_f32(8.0 * H * H);
+
+    // encoder: embedding + 8 LSTM layers, each layer = 4 sub-nodes
+    // (gates-matmul, recurrent, elementwise, dropout) → names lstmN_*
+    let emb_e = add_op(&mut g, "encemb_0", m.compute_op(BATCH * SEQ * H, act, mb_f32(32000.0 * H)), &[]);
+    let mut x = emb_e;
+    let mut enc_outputs: Vec<NodeId> = Vec::new();
+    for l in 0..8 {
+        let p = |s: &str| format!("lstm{l}_{s}");
+        let gates = add_op(&mut g, p("gates"), m.compute_op(lstm_flops * 0.5, act, lstm_params * 0.5), &[x]);
+        let recur = add_op(&mut g, p("recur"), m.compute_op(lstm_flops * 0.5, act, lstm_params * 0.5), &[gates]);
+        let elem = add_op(&mut g, p("elem"), m.memory_op(4.0 * act, act), &[recur]);
+        let drop = add_op(&mut g, p("drop"), m.memory_op(2.0 * act, act), &[elem]);
+        // residual connections from layer 2 onward (GNMT)
+        if l >= 2 {
+            g.add_edge(x, drop);
+        }
+        x = drop;
+        enc_outputs.push(drop);
+    }
+    // attention block: scores, softmax, context (3 nodes), reads the last
+    // encoder layer and feeds every decoder layer
+    let att_scores = add_op(&mut g, "attn_scores", m.compute_op(2.0 * BATCH * SEQ * SEQ * H, mb_f32(BATCH * SEQ * SEQ), 0.0), &[x]);
+    let att_sm = add_op(&mut g, "attn_softmax", m.memory_op(2.0 * mb_f32(BATCH * SEQ * SEQ), mb_f32(BATCH * SEQ * SEQ)), &[att_scores]);
+    let att_ctx = add_op(&mut g, "attn_context", m.compute_op(2.0 * BATCH * SEQ * SEQ * H, act, 0.0), &[att_sm, x]);
+
+    // decoder: embedding + 8 LSTM layers × 4 sub-nodes, running in
+    // PARALLEL with the encoder (teacher forcing); the attention context
+    // joins at the output combination. This encoder ∥ decoder structure is
+    // what blows up the ideal count relative to |V| (paper: ~18k ideals
+    // for 96 layers).
+    let emb_d = add_op(&mut g, "decemb_0", m.compute_op(BATCH * SEQ * H, act, mb_f32(32000.0 * H)), &[]);
+    let mut y = emb_d;
+    for l in 8..16 {
+        let p = |s: &str| format!("lstm{l}_{s}");
+        let gates = add_op(&mut g, p("gates"), m.compute_op(lstm_flops, 2.0 * act, lstm_params), &[y]);
+        let recur = add_op(&mut g, p("recur"), m.compute_op(lstm_flops * 0.5, act, lstm_params * 0.5), &[gates]);
+        let elem = add_op(&mut g, p("elem"), m.memory_op(4.0 * act, act), &[recur]);
+        let drop = add_op(&mut g, p("drop"), m.memory_op(2.0 * act, act), &[elem]);
+        if l >= 10 {
+            g.add_edge(y, drop);
+        }
+        y = drop;
+    }
+    // head: attention context + decoder state combine, then projection
+    let combine = add_op(&mut g, "attncomb_0", m.memory_op(3.0 * act, act), &[y, att_ctx]);
+    let proj = add_op(&mut g, "proj_0", m.compute_op(2.0 * BATCH * SEQ * H * 32000.0, mb_f32(BATCH * SEQ * 320.0), mb_f32(H * 32000.0)), &[combine]);
+    let sm = add_op(&mut g, "outsm_0", m.memory_op(2.0 * mb_f32(BATCH * SEQ * 320.0), mb_f32(BATCH * SEQ * 320.0)), &[proj]);
+    let _out = add_op(&mut g, "output_0", m.memory_op(0.1, 0.1), &[sm]);
+
+    if training {
+        append_backward(&g, 2.0)
+    } else {
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ideals::IdealLattice;
+    use crate::graph::topo::is_dag;
+
+    #[test]
+    fn node_count_near_paper() {
+        let g = gnmt_layer_graph(false);
+        let ratio = g.n() as f64 / 96.0;
+        assert!((0.6..1.4).contains(&ratio), "layers {} vs paper 96", g.n());
+        assert!(is_dag(&g));
+        assert_eq!(gnmt_layer_graph(true).n(), 2 * g.n());
+    }
+
+    #[test]
+    fn attention_cross_edges_inflate_ideals() {
+        // the decoder/encoder parallel structure gives many ideals relative
+        // to the node count (paper: 17914 for 96 nodes)
+        let g = gnmt_layer_graph(false);
+        let count = IdealLattice::count(&g, 500_000);
+        assert!(count > 10 * g.n(), "ideals {count} nodes {}", g.n());
+    }
+
+    #[test]
+    fn lstm_blocks_are_named_for_expert_banding() {
+        let g = gnmt_layer_graph(false);
+        let lstm_nodes = g.nodes.iter().filter(|n| n.name.starts_with("lstm")).count();
+        assert!(lstm_nodes >= 64);
+    }
+}

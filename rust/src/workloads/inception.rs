@@ -1,0 +1,172 @@
+//! Inception-v3 layer graph (≈ 326 layers in the paper's input). The
+//! defining property for the partitioning problem is the **wide branching**
+//! of the inception modules (4 parallel towers per module), which is what
+//! drives the ideal count to ~36k and makes the exact DP slow (Table 1) —
+//! the generator reproduces that structure faithfully: stem, 11 inception
+//! modules (A×3, B×1, C×4, D×1, E×2) with per-paper tower compositions,
+//! auxiliary head, and classifier.
+
+use super::costs::{mb_f32, CostModel};
+use super::{add_op, append_backward};
+use crate::graph::{NodeId, OpGraph};
+
+const BATCH: f64 = 8.0;
+
+struct Gen {
+    g: OpGraph,
+    m: CostModel,
+}
+
+impl Gen {
+    fn conv(&mut self, name: &str, input: NodeId, cin: f64, cout: f64, k: f64, spatial: f64) -> NodeId {
+        let out_mb = mb_f32(BATCH * cout * spatial * spatial);
+        let flops = 2.0 * BATCH * spatial * spatial * cout * cin * k * k;
+        let conv = add_op(&mut self.g, format!("{name}_conv"), self.m.compute_op(flops, out_mb, mb_f32(cout * cin * k * k)), &[input]);
+        let bn = add_op(&mut self.g, format!("{name}_bn"), self.m.memory_op(2.0 * out_mb, out_mb), &[conv]);
+        add_op(&mut self.g, format!("{name}_relu"), self.m.memory_op(2.0 * out_mb, out_mb), &[bn])
+    }
+
+    fn pool(&mut self, name: &str, input: NodeId, c: f64, spatial: f64) -> NodeId {
+        let mb = mb_f32(BATCH * c * spatial * spatial);
+        add_op(&mut self.g, format!("{name}_pool"), self.m.memory_op(2.0 * mb, mb), &[input])
+    }
+
+    fn concat(&mut self, name: &str, inputs: &[NodeId], c: f64, spatial: f64) -> NodeId {
+        let mb = mb_f32(BATCH * c * spatial * spatial);
+        add_op(&mut self.g, format!("{name}_concat"), self.m.memory_op(2.0 * mb, mb), inputs)
+    }
+
+    /// Inception-A-style module: 4 towers (1x1 | 5x5 | double 3x3 | pool).
+    fn module_a(&mut self, name: &str, input: NodeId, cin: f64, spatial: f64) -> NodeId {
+        let t1 = self.conv(&format!("{name}_t1"), input, cin, 64.0, 1.0, spatial);
+        let t2a = self.conv(&format!("{name}_t2a"), input, cin, 48.0, 1.0, spatial);
+        let t2 = self.conv(&format!("{name}_t2b"), t2a, 48.0, 64.0, 5.0, spatial);
+        let t3a = self.conv(&format!("{name}_t3a"), input, cin, 64.0, 1.0, spatial);
+        let t3b = self.conv(&format!("{name}_t3b"), t3a, 64.0, 96.0, 3.0, spatial);
+        let t3 = self.conv(&format!("{name}_t3c"), t3b, 96.0, 96.0, 3.0, spatial);
+        let p = self.pool(&format!("{name}_t4"), input, cin, spatial);
+        let t4 = self.conv(&format!("{name}_t4b"), p, cin, 64.0, 1.0, spatial);
+        self.concat(name, &[t1, t2, t3, t4], 288.0, spatial)
+    }
+
+    /// Factorized-7x7 module (Inception-B/C style): 4 towers with 1x7/7x1
+    /// chains.
+    fn module_c(&mut self, name: &str, input: NodeId, cin: f64, spatial: f64) -> NodeId {
+        let c = 192.0;
+        let t1 = self.conv(&format!("{name}_t1"), input, cin, c, 1.0, spatial);
+        let t2a = self.conv(&format!("{name}_t2a"), input, cin, c, 1.0, spatial);
+        let t2b = self.conv(&format!("{name}_t2b"), t2a, c, c, 1.7, spatial); // 1x7
+        let t2 = self.conv(&format!("{name}_t2c"), t2b, c, c, 1.7, spatial); // 7x1
+        let t3a = self.conv(&format!("{name}_t3a"), input, cin, c, 1.0, spatial);
+        let t3b = self.conv(&format!("{name}_t3b"), t3a, c, c, 1.7, spatial);
+        let t3c = self.conv(&format!("{name}_t3c"), t3b, c, c, 1.7, spatial);
+        let t3d = self.conv(&format!("{name}_t3d"), t3c, c, c, 1.7, spatial);
+        let t3 = self.conv(&format!("{name}_t3e"), t3d, c, c, 1.7, spatial);
+        let p = self.pool(&format!("{name}_t4"), input, cin, spatial);
+        let t4 = self.conv(&format!("{name}_t4b"), p, cin, c, 1.0, spatial);
+        self.concat(name, &[t1, t2, t3, t4], 768.0, spatial)
+    }
+
+    /// Expanded module (Inception-E style): towers that themselves fan out.
+    fn module_e(&mut self, name: &str, input: NodeId, cin: f64, spatial: f64) -> NodeId {
+        let t1 = self.conv(&format!("{name}_t1"), input, cin, 320.0, 1.0, spatial);
+        let t2a = self.conv(&format!("{name}_t2a"), input, cin, 384.0, 1.0, spatial);
+        let t2b1 = self.conv(&format!("{name}_t2b1"), t2a, 384.0, 384.0, 1.3, spatial);
+        let t2b2 = self.conv(&format!("{name}_t2b2"), t2a, 384.0, 384.0, 1.3, spatial);
+        let t3a = self.conv(&format!("{name}_t3a"), input, cin, 448.0, 1.0, spatial);
+        let t3b = self.conv(&format!("{name}_t3b"), t3a, 448.0, 384.0, 3.0, spatial);
+        let t3c1 = self.conv(&format!("{name}_t3c1"), t3b, 384.0, 384.0, 1.3, spatial);
+        let t3c2 = self.conv(&format!("{name}_t3c2"), t3b, 384.0, 384.0, 1.3, spatial);
+        let p = self.pool(&format!("{name}_t4"), input, cin, spatial);
+        let t4 = self.conv(&format!("{name}_t4b"), p, cin, 192.0, 1.0, spatial);
+        self.concat(name, &[t1, t2b1, t2b2, t3c1, t3c2, t4], 2048.0, spatial)
+    }
+
+    /// Grid-reduction module: 2 conv towers + pool, concatenated.
+    fn reduction(&mut self, name: &str, input: NodeId, cin: f64, cout: f64, spatial: f64) -> NodeId {
+        let t1 = self.conv(&format!("{name}_t1"), input, cin, cout / 2.0, 3.0, spatial);
+        let t2a = self.conv(&format!("{name}_t2a"), input, cin, 64.0, 1.0, spatial);
+        let t2b = self.conv(&format!("{name}_t2b"), t2a, 64.0, 96.0, 3.0, spatial);
+        let t2 = self.conv(&format!("{name}_t2c"), t2b, 96.0, cout / 2.0, 3.0, spatial);
+        let p = self.pool(&format!("{name}_t3"), input, cin, spatial);
+        self.concat(name, &[t1, t2, p], cout, spatial)
+    }
+}
+
+pub fn inception_v3_layer_graph(training: bool) -> OpGraph {
+    let mut gen = Gen { g: OpGraph::new(), m: CostModel::default() };
+    let input = add_op(&mut gen.g, "input_0", gen.m.memory_op(mb_f32(BATCH * 3.0 * 299.0 * 299.0), mb_f32(BATCH * 3.0 * 299.0 * 299.0)), &[]);
+
+    // stem: 5 convs + 2 pools
+    let s1 = gen.conv("stem1", input, 3.0, 32.0, 3.0, 149.0);
+    let s2 = gen.conv("stem2", s1, 32.0, 32.0, 3.0, 147.0);
+    let s3 = gen.conv("stem3", s2, 32.0, 64.0, 3.0, 147.0);
+    let p1 = gen.pool("stem4", s3, 64.0, 73.0);
+    let s5 = gen.conv("stem5", p1, 64.0, 80.0, 1.0, 73.0);
+    let s6 = gen.conv("stem6", s5, 80.0, 192.0, 3.0, 71.0);
+    let p2 = gen.pool("stem7", s6, 192.0, 35.0);
+
+    // 3× module A at 35×35
+    let a1 = gen.module_a("mixA1", p2, 192.0, 35.0);
+    let a2 = gen.module_a("mixA2", a1, 288.0, 35.0);
+    let a3 = gen.module_a("mixA3", a2, 288.0, 35.0);
+    // reduction to 17×17
+    let r1 = gen.reduction("redB", a3, 288.0, 768.0, 17.0);
+    // 4× module C at 17×17
+    let c1 = gen.module_c("mixC1", r1, 768.0, 17.0);
+    let c2 = gen.module_c("mixC2", c1, 768.0, 17.0);
+    let c3 = gen.module_c("mixC3", c2, 768.0, 17.0);
+    let c4 = gen.module_c("mixC4", c3, 768.0, 17.0);
+    // auxiliary classifier branch (training-style aux head kept in graph)
+    let auxp = gen.pool("aux1", c4, 768.0, 5.0);
+    let auxc = gen.conv("aux2", auxp, 768.0, 128.0, 1.0, 5.0);
+    let auxf = gen.conv("aux3", auxc, 128.0, 768.0, 5.0, 1.0);
+    let aux_out = add_op(&mut gen.g, "aux_fc", gen.m.compute_op(2.0 * BATCH * 768.0 * 1000.0, mb_f32(BATCH * 1000.0), mb_f32(768.0 * 1000.0)), &[auxf]);
+    // reduction to 8×8
+    let r2 = gen.reduction("redD", c4, 768.0, 1280.0, 8.0);
+    // 2× module E at 8×8
+    let e1 = gen.module_e("mixE1", r2, 1280.0, 8.0);
+    let e2 = gen.module_e("mixE2", e1, 2048.0, 8.0);
+    // classifier
+    let gap = gen.pool("gap", e2, 2048.0, 1.0);
+    let fc = add_op(&mut gen.g, "fc_0", gen.m.compute_op(2.0 * BATCH * 2048.0 * 1000.0, mb_f32(BATCH * 1000.0), mb_f32(2048.0 * 1000.0)), &[gap]);
+    let _join = add_op(&mut gen.g, "output_0", gen.m.memory_op(0.1, 0.1), &[fc, aux_out]);
+
+    if training {
+        append_backward(&gen.g, 2.0)
+    } else {
+        gen.g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ideals::IdealLattice;
+    use crate::graph::topo::{is_dag, width};
+
+    #[test]
+    fn node_count_near_paper() {
+        let g = inception_v3_layer_graph(false);
+        let ratio = g.n() as f64 / 326.0;
+        assert!((0.6..1.3).contains(&ratio), "layers {} vs paper 326", g.n());
+        assert!(is_dag(&g));
+    }
+
+    #[test]
+    fn strongly_branching() {
+        let g = inception_v3_layer_graph(false);
+        // inception towers make the antichain wide
+        assert!(width(&g) >= 4, "width {}", width(&g));
+        // ideal count far exceeds |V| (paper: 36596 for 326 nodes)
+        let count = IdealLattice::count(&g, 200_000);
+        assert!(count > 5 * g.n(), "ideals {count} vs nodes {}", g.n());
+    }
+
+    #[test]
+    fn training_variant_valid() {
+        let g = inception_v3_layer_graph(true);
+        assert!(is_dag(&g));
+        assert_eq!(g.n(), 2 * inception_v3_layer_graph(false).n());
+    }
+}

@@ -1,0 +1,210 @@
+//! Paper-format JSON interchange (msr-fiddle/dnn-partitioning style).
+//!
+//! Schema:
+//! ```json
+//! {
+//!   "name": "BERT-3",
+//!   "maxMemoryPerDevice": 16384.0,
+//!   "numAccelerators": 3,
+//!   "numCpus": 1,
+//!   "nodes": [{"id": 0, "name": "emb", "cpuLatency": 1.0,
+//!               "acceleratorLatency": 0.1, "size": 2.0,
+//!               "communicationCost": 0.3, "colorClass": 4,
+//!               "isBackward": false}],
+//!   "edges": [{"sourceId": 0, "destId": 1, "cost": 0.25}]
+//! }
+//! ```
+//! `colorClass` and per-edge `cost` are optional, exactly as in App. B.
+
+use super::Workload;
+use crate::coordinator::placement::Scenario;
+use crate::graph::{Node, NodeKind, OpGraph};
+use crate::util::json::Json;
+
+/// Serialize a workload.
+pub fn to_json(w: &Workload) -> Json {
+    let g = &w.graph;
+    let nodes: Vec<Json> = g
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(id, n)| {
+            let mut fields = vec![
+                ("id", Json::num(id as f64)),
+                ("name", Json::str(n.name.clone())),
+                ("cpuLatency", json_latency(n.p_cpu)),
+                ("acceleratorLatency", json_latency(n.p_acc)),
+                ("size", Json::num(n.mem)),
+                ("communicationCost", Json::num(n.comm)),
+                ("isBackward", Json::Bool(n.kind == NodeKind::Backward)),
+            ];
+            if let Some(c) = n.color_class {
+                fields.push(("colorClass", Json::num(c as f64)));
+            }
+            if let Some(f) = n.fw_partner {
+                fields.push(("forwardPartnerId", Json::num(f as f64)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    let edges: Vec<Json> = g
+        .edges()
+        .map(|(u, v)| {
+            let mut fields =
+                vec![("sourceId", Json::num(u as f64)), ("destId", Json::num(v as f64))];
+            if let Some(&c) = g.edge_costs.get(&(u, v)) {
+                fields.push(("cost", Json::num(c)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::str(w.name.clone())),
+        ("maxMemoryPerDevice", Json::num(w.scenario.mem_cap)),
+        ("numAccelerators", Json::num(w.scenario.k as f64)),
+        ("numCpus", Json::num(w.scenario.l as f64)),
+        ("nodes", Json::Arr(nodes)),
+        ("edges", Json::Arr(edges)),
+    ])
+}
+
+fn json_latency(v: f64) -> Json {
+    if v.is_finite() {
+        Json::num(v)
+    } else {
+        Json::Null // unsupported op
+    }
+}
+
+/// Parse a workload file. Unknown fields are ignored; missing optional
+/// fields default per §3.
+pub fn from_json(j: &Json) -> Result<(OpGraph, Scenario, String), String> {
+    let name = j.get("name").as_str().unwrap_or("unnamed").to_string();
+    let nodes = j.get("nodes").as_arr().ok_or("missing 'nodes' array")?;
+    let mut g = OpGraph::new();
+    // ids may be sparse: map id → dense index
+    let mut id_map = std::collections::BTreeMap::new();
+    for nj in nodes {
+        let id = nj.get("id").as_usize().ok_or("node missing 'id'")?;
+        let mut node = Node::new(nj.get("name").as_str().unwrap_or("op"));
+        node.p_cpu = nj.get("cpuLatency").as_f64().unwrap_or(f64::INFINITY);
+        node.p_acc = nj.get("acceleratorLatency").as_f64().unwrap_or(f64::INFINITY);
+        node.mem = nj.get("size").as_f64().unwrap_or(0.0);
+        node.comm = nj.get("communicationCost").as_f64().unwrap_or(0.0);
+        node.color_class = nj.get("colorClass").as_usize().map(|c| c as u32);
+        if nj.get("isBackward").as_bool() == Some(true) {
+            node.kind = NodeKind::Backward;
+        }
+        let dense = g.add_node(node);
+        if id_map.insert(id, dense).is_some() {
+            return Err(format!("duplicate node id {id}"));
+        }
+    }
+    // forward partners need the id map
+    for (pos, nj) in nodes.iter().enumerate() {
+        if let Some(f) = nj.get("forwardPartnerId").as_usize() {
+            let fp = *id_map.get(&f).ok_or(format!("bad forwardPartnerId {f}"))?;
+            g.nodes[pos].fw_partner = Some(fp);
+        }
+    }
+    for ej in j.get("edges").as_arr().ok_or("missing 'edges' array")? {
+        let s = ej.get("sourceId").as_usize().ok_or("edge missing sourceId")?;
+        let d = ej.get("destId").as_usize().ok_or("edge missing destId")?;
+        let (&su, &dv) = (
+            id_map.get(&s).ok_or(format!("unknown sourceId {s}"))?,
+            id_map.get(&d).ok_or(format!("unknown destId {d}"))?,
+        );
+        match ej.get("cost").as_f64() {
+            Some(c) => g.add_edge_cost(su, dv, c),
+            None => g.add_edge(su, dv),
+        }
+    }
+    let scenario = Scenario {
+        k: j.get("numAccelerators").as_usize().unwrap_or(6),
+        l: j.get("numCpus").as_usize().unwrap_or(1),
+        mem_cap: j.get("maxMemoryPerDevice").as_f64().unwrap_or(f64::INFINITY),
+        ..Default::default()
+    };
+    Ok((g, scenario, name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{table1_workloads, Granularity};
+
+    #[test]
+    fn roundtrip_preserves_structure_and_costs() {
+        let w = &table1_workloads()[0]; // BERT-3 op inference
+        let j = to_json(w);
+        let (g, sc, name) = from_json(&j).unwrap();
+        assert_eq!(name, "BERT-3");
+        assert_eq!(g.n(), w.graph.n());
+        assert_eq!(g.num_edges(), w.graph.num_edges());
+        assert_eq!(sc.k, w.scenario.k);
+        for v in 0..g.n() {
+            assert!((g.nodes[v].p_acc - w.graph.nodes[v].p_acc).abs() < 1e-12);
+            assert!((g.nodes[v].comm - w.graph.nodes[v].comm).abs() < 1e-12);
+            assert_eq!(g.nodes[v].color_class, w.graph.nodes[v].color_class);
+        }
+    }
+
+    #[test]
+    fn roundtrip_training_graph_with_colocation() {
+        let w = table1_workloads().into_iter().find(|w| w.training).unwrap();
+        let j = to_json(&w);
+        let (g, _, _) = from_json(&j).unwrap();
+        let bw = g.nodes.iter().filter(|n| n.kind == NodeKind::Backward).count();
+        assert!(bw > 0);
+        // fw partners survive
+        let partnered = g.nodes.iter().filter(|n| n.fw_partner.is_some()).count();
+        assert_eq!(partnered, bw);
+    }
+
+    #[test]
+    fn per_edge_costs_roundtrip() {
+        let mut g = OpGraph::new();
+        g.add_node(Node::new("a"));
+        g.add_node(Node::new("b"));
+        g.add_edge_cost(0, 1, 2.5);
+        let w = Workload {
+            name: "t".into(),
+            graph: g,
+            scenario: Scenario::new(1, 1, 10.0),
+            granularity: Granularity::Operator,
+            training: false,
+            expert: None,
+            layer_of: None,
+        };
+        let (g2, _, _) = from_json(&to_json(&w)).unwrap();
+        assert_eq!(g2.edge_costs.get(&(0, 1)), Some(&2.5));
+    }
+
+    #[test]
+    fn unsupported_ops_roundtrip_as_null() {
+        let mut g = OpGraph::new();
+        let mut n = Node::new("gpuonly");
+        n.p_acc = f64::INFINITY;
+        g.add_node(n);
+        let w = Workload {
+            name: "t".into(),
+            graph: g,
+            scenario: Scenario::new(1, 1, 10.0),
+            granularity: Granularity::Operator,
+            training: false,
+            expert: None,
+            layer_of: None,
+        };
+        let (g2, _, _) = from_json(&to_json(&w)).unwrap();
+        assert!(g2.nodes[0].p_acc.is_infinite());
+    }
+
+    #[test]
+    fn errors_on_malformed() {
+        assert!(from_json(&Json::parse(r#"{"nodes": "x"}"#).unwrap()).is_err());
+        assert!(from_json(
+            &Json::parse(r#"{"nodes": [], "edges": [{"sourceId": 0, "destId": 1}]}"#).unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Cross-module integration tests: optimizers vs each other on real
+//! workloads, JSON round-trips through the planner, simulator-vs-objective
+//! agreement, and CLI-level planning flows.
+
+use dnn_partition::algos::{dp, dpl, ip_throughput, objective};
+use dnn_partition::baselines::{expert, greedy, local_search, pipedream, scotch_like};
+use dnn_partition::coordinator::placement::Scenario;
+use dnn_partition::coordinator::planner::{self, Algorithm};
+use dnn_partition::pipeline::sim::{self, Schedule};
+use dnn_partition::util::json::Json;
+use dnn_partition::workloads::{self, json as wjson, table1_workloads, Granularity};
+use std::time::Duration;
+
+#[test]
+fn dp_beats_or_matches_every_baseline_on_all_layer_workloads() {
+    // Inference: the DP is exactly optimal, so NO baseline may beat it.
+    // Training: the DP optimizes the merged fw/bw communication proxy
+    // (PipeDream-style, DESIGN.md §3) but is scored on the exact
+    // objective, so baselines may edge it out by the proxy error — bound
+    // that discrepancy at 5%.
+    for w in table1_workloads() {
+        if w.granularity != Granularity::Layer || w.name == "InceptionV3" {
+            continue; // Inception's lattice is too big for a quick test
+        }
+        let p = dp::solve_with_cap(&w.graph, &w.scenario, 500_000).unwrap();
+        p.validate(&w.graph, &w.scenario, true).unwrap();
+        let slack = if w.training { 0.95 } else { 1.0 - 1e-12 };
+        let baselines = [
+            local_search::solve(&w.graph, &w.scenario, 3, 1).objective,
+            pipedream::solve(&w.graph, &w.scenario).objective,
+            scotch_like::solve(&w.graph, &w.scenario, 2).objective,
+            w.expert
+                .map(|s| expert::solve(&w.graph, &w.scenario, s).objective)
+                .unwrap_or(f64::INFINITY),
+        ];
+        for (i, b) in baselines.iter().enumerate() {
+            assert!(
+                *b >= p.objective * slack,
+                "{} ({}) baseline {i} ({b}) beat DP ({}) beyond proxy slack",
+                w.name,
+                if w.training { "training" } else { "inference" },
+                p.objective
+            );
+        }
+    }
+}
+
+#[test]
+fn dpl_loss_is_small_on_paper_workloads() {
+    // paper: DPL is lossless for most workloads, ≤9% worst case
+    for w in table1_workloads() {
+        if w.granularity != Granularity::Layer || w.name == "InceptionV3" {
+            continue;
+        }
+        let exact = dp::solve_with_cap(&w.graph, &w.scenario, 500_000).unwrap();
+        let heur = dpl::solve(&w.graph, &w.scenario).unwrap();
+        let loss = heur.objective / exact.objective - 1.0;
+        // training rows can go slightly negative (proxy scoring, see
+        // dp_beats_or_matches_every_baseline_on_all_layer_workloads)
+        let lo = if w.training { -0.05 } else { -1e-9 };
+        assert!(
+            (lo..0.25).contains(&loss),
+            "{}: DPL loss {:.1}% out of range",
+            w.name,
+            loss * 100.0
+        );
+    }
+}
+
+#[test]
+fn simulator_validates_cost_model_on_bert24() {
+    // the central claim behind the max-load objective (§5.1)
+    let w = table1_workloads().into_iter().find(|w| w.name == "BERT-24" && !w.training).unwrap();
+    let p = dp::solve(&w.graph, &w.scenario).unwrap();
+    let res = sim::simulate(&w.graph, &w.scenario, &p, Schedule::Pipelined, 48);
+    let err = (res.steady_tps - p.objective).abs() / p.objective;
+    assert!(err < 0.05, "steady {} vs predicted {}", res.steady_tps, p.objective);
+}
+
+#[test]
+fn training_simulation_matches_objective_bert24() {
+    let w = table1_workloads().into_iter().find(|w| w.name == "BERT-24" && w.training).unwrap();
+    let p = dp::solve(&w.graph, &w.scenario).unwrap();
+    let res = sim::simulate(&w.graph, &w.scenario, &p, Schedule::PipeDream1F1B, 32);
+    let err = (res.steady_tps - p.objective).abs() / p.objective;
+    assert!(err < 0.1, "steady {} vs predicted {}", res.steady_tps, p.objective);
+}
+
+#[test]
+fn json_roundtrip_preserves_planning_result() {
+    let w = table1_workloads().into_iter().find(|w| w.name == "GNMT" && !w.training).unwrap();
+    let before = dp::solve(&w.graph, &w.scenario).unwrap().objective;
+    let json_text = wjson::to_json(&w).to_string();
+    let (g2, sc2, _) = wjson::from_json(&Json::parse(&json_text).unwrap()).unwrap();
+    let after = dp::solve(&g2, &sc2).unwrap().objective;
+    assert!((before - after).abs() < 1e-9, "{before} vs {after}");
+}
+
+#[test]
+fn planner_facade_runs_ip_with_budget() {
+    let w = table1_workloads().into_iter().find(|w| w.name == "BERT-24" && !w.training).unwrap();
+    let r = planner::plan(&w, Algorithm::IpNonContiguous, Duration::from_secs(2)).unwrap();
+    assert!(r.placement.objective.is_finite());
+    assert!(r.gap.is_some());
+    // non-contiguous never worse than the DP
+    let dp_r = planner::plan(&w, Algorithm::Dp, Duration::from_secs(2)).unwrap();
+    assert!(r.placement.objective <= dp_r.placement.objective + 1e-9);
+}
+
+#[test]
+fn latency_scenarios_force_real_splits() {
+    // §7: single-accelerator placement must be infeasible
+    for w in table1_workloads().into_iter().filter(|w| !w.training) {
+        let sc = workloads::latency_scenario(&w.graph);
+        let model: f64 = w.graph.nodes.iter().map(|n| n.mem).sum();
+        assert!(model > sc.mem_cap, "{}: model fits one accelerator", w.name);
+        // greedy must still find something feasible
+        let g = greedy::solve(&w.graph, &sc);
+        g.check_memory(&w.graph, &sc).unwrap();
+    }
+}
+
+#[test]
+fn overlap_comm_model_never_hurts() {
+    // App. C.1: max(compute, comm) ≤ compute + comm pointwise ⇒ optimum ≤
+    let w = table1_workloads().into_iter().find(|w| w.name == "ResNet50" && w.granularity == Granularity::Layer && !w.training).unwrap();
+    let seq = dp::solve(&w.graph, &w.scenario).unwrap().objective;
+    let sc2 = Scenario {
+        comm_model: dnn_partition::coordinator::placement::CommModel::Overlap,
+        ..w.scenario.clone()
+    };
+    let ovl = dp::solve(&w.graph, &sc2).unwrap().objective;
+    assert!(ovl <= seq + 1e-9, "overlap {ovl} > sequential {seq}");
+}
+
+#[test]
+fn ip_noncontiguous_improves_or_ties_contiguous_on_op_graph() {
+    let w = table1_workloads().into_iter().find(|w| w.name == "BERT-3" && !w.training).unwrap();
+    let c = ip_throughput::solve(
+        &w.graph,
+        &w.scenario,
+        &ip_throughput::IpOptions { time_limit: Duration::from_secs(3), ..Default::default() },
+    )
+    .unwrap();
+    let nc = ip_throughput::solve(
+        &w.graph,
+        &w.scenario,
+        &ip_throughput::IpOptions {
+            contiguous: false,
+            time_limit: Duration::from_secs(3),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(nc.placement.objective <= c.placement.objective + 1e-9);
+}
+
+#[test]
+fn objective_consistency_between_evaluator_and_loads() {
+    let w = table1_workloads().into_iter().find(|w| w.name == "GNMT" && !w.training).unwrap();
+    let p = dp::solve(&w.graph, &w.scenario).unwrap();
+    let via_loads = objective::DeviceLoads::of(&w.graph, &w.scenario, &p);
+    let nd = w.scenario.k + w.scenario.l;
+    let manual = (0..nd).map(|i| via_loads.device_total(i, &w.scenario)).fold(0.0, f64::max);
+    assert!((manual - objective::max_load(&w.graph, &w.scenario, &p)).abs() < 1e-9);
+}

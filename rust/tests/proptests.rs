@@ -1,0 +1,176 @@
+//! Property-based tests (in-tree harness, see `util::proptest`): the
+//! paper's structural invariants checked over random DAGs.
+
+use dnn_partition::algos::{dp, dpl, ip_throughput, objective};
+use dnn_partition::coordinator::placement::{Device, Placement, Scenario};
+use dnn_partition::graph::{contiguity, ideals, topo};
+use dnn_partition::util::bitset::BitSet;
+use dnn_partition::util::proptest::{check_dag, random_dag, random_training_dag};
+use dnn_partition::util::rng::Rng;
+
+#[test]
+fn prop_fact_5_2_ideal_differences_are_exactly_contiguous_sets() {
+    check_dag("fact-5.2", 25, 9, |g| {
+        let lat = ideals::IdealLattice::enumerate(g, 100_000)
+            .map_err(|_| "lattice blowup".to_string())?;
+        // every nested ideal pair difference must be contiguous
+        let mut rng = Rng::new(7);
+        for _ in 0..40 {
+            let a = rng.gen_range(lat.len());
+            let b = rng.gen_range(lat.len());
+            let (small, big) = (&lat.ideals[a.min(b)], &lat.ideals[a.max(b)]);
+            if small.is_subset(big) {
+                let s = big.difference(small);
+                if !contiguity::is_contiguous(g, &s) {
+                    return Err(format!("non-contiguous ideal difference {s:?}"));
+                }
+                // and the Fact-5.2 decomposition round-trips
+                if contiguity::to_ideal_pair(g, &s).is_none() && !s.is_empty() {
+                    return Err(format!("to_ideal_pair failed on {s:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_ideal_is_downward_closed() {
+    check_dag("ideal-closure", 25, 9, |g| {
+        let lat = ideals::IdealLattice::enumerate(g, 100_000)
+            .map_err(|_| "lattice blowup".to_string())?;
+        for ideal in &lat.ideals {
+            if !ideals::is_ideal(g, ideal) {
+                return Err(format!("not downward closed: {ideal:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dp_placements_are_valid_and_pipeline_orderable() {
+    check_dag("dp-validity", 20, 10, |g| {
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let p = dp::solve(g, &sc).map_err(|e| e.to_string())?;
+        p.validate(g, &sc, true).map_err(|e| e)?;
+        let dense = p.dense(sc.k);
+        if !contiguity::partition_pipeline_orderable(g, &dense, sc.k + sc.l) {
+            return Err("DP split not pipeline-orderable".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dpl_sandwiched_between_dp_and_infinity() {
+    check_dag("dpl-bounds", 20, 10, |g| {
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let exact = dp::solve(g, &sc).map_err(|e| e.to_string())?.objective;
+        let heur = dpl::solve(g, &sc).map_err(|e| e.to_string())?.objective;
+        if heur < exact - 1e-9 {
+            return Err(format!("DPL {heur} beat exact DP {exact}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_feasibility_respected_by_all_engines() {
+    check_dag("memory", 15, 8, |g| {
+        let sc = Scenario::new(2, 1, g.nodes.iter().map(|n| n.mem).sum::<f64>() / 2.5);
+        if let Ok(p) = dp::solve(g, &sc) {
+            p.check_memory(g, &sc).map_err(|e| format!("dp: {e}"))?;
+        }
+        if let Ok(r) = ip_throughput::solve(
+            g,
+            &sc,
+            &ip_throughput::IpOptions {
+                time_limit: std::time::Duration::from_millis(500),
+                ..Default::default()
+            },
+        ) {
+            r.placement.check_memory(g, &sc).map_err(|e| format!("ip: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_training_colocation_always_respected() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..15 {
+        let g = random_training_dag(&mut rng, 7, 0.3);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        if let Ok(p) = dp::solve(&g, &sc) {
+            p.check_colocation(&g).unwrap();
+        }
+        if let Ok(p) = dpl::solve(&g, &sc) {
+            p.check_colocation(&g).unwrap();
+        }
+    }
+}
+
+#[test]
+fn prop_virtual_device_split_partitions_correctly() {
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..30 {
+        let g = random_dag(&mut rng, 12, 0.25);
+        // random subset
+        let set = BitSet::from_iter(g.n(), (0..g.n()).filter(|_| rng.gen_bool(0.4)));
+        let pieces = contiguity::virtual_device_split(&g, &set);
+        let mut union = BitSet::new(g.n());
+        for p in &pieces {
+            assert!(contiguity::is_contiguous(&g, p), "piece not contiguous");
+            assert!(!p.intersects(&union), "pieces overlap");
+            union.union_with(p);
+        }
+        assert_eq!(union, set, "pieces don't cover the set");
+    }
+}
+
+#[test]
+fn prop_latency_at_least_critical_path() {
+    let mut rng = Rng::new(0xCAFE);
+    for _ in 0..20 {
+        let g = random_dag(&mut rng, 10, 0.3);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        // min-cost critical path is a lower bound for ANY placement
+        let order = topo::toposort(&g).unwrap();
+        let mut done = vec![0.0f64; g.n()];
+        for &v in &order {
+            let ready = g.preds[v].iter().map(|&u| done[u]).fold(0.0, f64::max);
+            done[v] = ready + g.nodes[v].p_cpu.min(g.nodes[v].p_acc);
+        }
+        let lb = done.iter().copied().fold(0.0, f64::max);
+        // random placement
+        let p = Placement::new(
+            (0..g.n())
+                .map(|_| {
+                    if rng.gen_bool(0.5) {
+                        Device::Acc(rng.gen_range(2))
+                    } else {
+                        Device::Cpu(0)
+                    }
+                })
+                .collect(),
+            0.0,
+            "random",
+        );
+        let lat = objective::latency(&g, &sc, &p);
+        assert!(lat >= lb - 1e-9, "latency {lat} below critical path {lb}");
+    }
+}
+
+#[test]
+fn prop_max_load_monotone_in_device_count() {
+    let mut rng = Rng::new(0xABCD);
+    for _ in 0..10 {
+        let g = random_dag(&mut rng, 9, 0.3);
+        let few = dp::solve(&g, &Scenario::new(1, 1, f64::INFINITY)).map(|p| p.objective);
+        let many = dp::solve(&g, &Scenario::new(3, 1, f64::INFINITY)).map(|p| p.objective);
+        if let (Ok(a), Ok(b)) = (few, many) {
+            assert!(b <= a + 1e-9, "more devices made things worse: {b} > {a}");
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! End-to-end runtime tests against the AOT artifacts. These SKIP (pass
+//! vacuously, with a note) when `make artifacts` has not been run — cargo
+//! test must work in a fresh checkout — and fully verify the
+//! Rust-loads-JAX-HLO path when artifacts exist.
+
+use dnn_partition::runtime::server::{self, Request, ServerConfig};
+use dnn_partition::runtime::stage::{artifacts_dir, StageSpec};
+use dnn_partition::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn manifest() -> Option<(Json, std::path::PathBuf)> {
+    let dir = artifacts_dir();
+    let text = std::fs::read_to_string(dir.join("manifest.json")).ok()?;
+    Some((Json::parse(&text).ok()?, dir))
+}
+
+#[test]
+fn stage_artifacts_compile_and_execute() {
+    let Some((m, dir)) = manifest() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let batch = m.get("batch").as_usize().unwrap();
+    let seq = m.get("seq").as_usize().unwrap();
+    let hidden = m.get("hidden").as_usize().unwrap();
+    let vocab = m.get("vocab").as_usize().unwrap();
+    let stages = m.get("stages").as_arr().unwrap();
+    let mut x = vec![0.1f32; batch * seq * hidden];
+    for (i, s) in stages.iter().enumerate() {
+        let spec = StageSpec {
+            name: format!("s{i}"),
+            path: dir.join(s.get("path").as_str().unwrap()),
+            tuple_arity: 1,
+            sample_shape: vec![seq, hidden],
+        };
+        let stage = spec.compile().expect("compile");
+        let outs = stage.run_f32(&[(&x, &[batch, seq, hidden][..])]).expect("exec");
+        x = outs.into_iter().next().unwrap();
+        let expect_feat =
+            if i + 1 == stages.len() { vocab } else { hidden };
+        assert_eq!(x.len(), batch * seq * expect_feat, "stage {i} output size");
+        assert!(x.iter().all(|v| v.is_finite()), "stage {i} produced non-finite values");
+    }
+}
+
+#[test]
+fn full_model_artifact_matches_stage_composition() {
+    let Some((m, dir)) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let batch = m.get("batch").as_usize().unwrap();
+    let seq = m.get("seq").as_usize().unwrap();
+    let hidden = m.get("hidden").as_usize().unwrap();
+    let shape = [batch, seq, hidden];
+    let input: Vec<f32> = (0..batch * seq * hidden).map(|i| ((i % 17) as f32 - 8.0) / 10.0).collect();
+
+    // staged
+    let mut x = input.clone();
+    for (i, s) in m.get("stages").as_arr().unwrap().iter().enumerate() {
+        let spec = StageSpec {
+            name: format!("s{i}"),
+            path: dir.join(s.get("path").as_str().unwrap()),
+            tuple_arity: 1,
+            sample_shape: vec![seq, hidden],
+        };
+        let stage = spec.compile().unwrap();
+        x = stage.run_f32(&[(&x, &shape[..])]).unwrap().into_iter().next().unwrap();
+    }
+    // monolithic
+    let full = StageSpec {
+        name: "full".into(),
+        path: dir.join(m.get("full").as_str().unwrap()),
+        tuple_arity: 1,
+        sample_shape: vec![seq, hidden],
+    }
+    .compile()
+    .unwrap();
+    let y = full.run_f32(&[(&input, &shape[..])]).unwrap().into_iter().next().unwrap();
+    assert_eq!(x.len(), y.len());
+    for (i, (a, b)) in x.iter().zip(&y).enumerate() {
+        assert!((a - b).abs() < 1e-4 + 1e-4 * b.abs(), "elem {i}: staged {a} vs full {b}");
+    }
+}
+
+#[test]
+fn threaded_pipeline_serves_all_requests() {
+    let Some((m, dir)) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let batch = m.get("batch").as_usize().unwrap();
+    let seq = m.get("seq").as_usize().unwrap();
+    let hidden = m.get("hidden").as_usize().unwrap();
+    let per_sample = seq * hidden;
+    let specs: Vec<StageSpec> = m
+        .get("stages")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .enumerate()
+        .map(|(i, s)| StageSpec {
+            name: format!("s{i}"),
+            path: dir.join(s.get("path").as_str().unwrap()),
+            tuple_arity: 1,
+            sample_shape: vec![seq, hidden],
+        })
+        .collect();
+    let n = batch * 4;
+    let requests: Vec<Request> = (0..n)
+        .map(|i| Request { id: i as u64, data: vec![0.01; per_sample], enqueued: Instant::now() })
+        .collect();
+    let cfg = ServerConfig {
+        max_batch: batch,
+        batch_timeout: Duration::from_secs(5),
+        input_elems: per_sample,
+        queue_depth: 2,
+    };
+    let metrics = server::serve(requests, server::stage_factories(specs), &cfg);
+    assert_eq!(metrics.completed, n);
+    assert!(metrics.percentile(0.5) > 0.0);
+}
