@@ -22,11 +22,25 @@
 //! naive `O(V+E)` per pair. A monotone lower bound
 //! `min(cpu(S), compute_acc(S))` prunes lattice subtrees that cannot
 //! improve any `dp[I][·][·]` entry.
+//!
+//! ### Level-synchronous parallel execution
+//!
+//! `dp[I][·][·]` depends only on ideals of strictly smaller cardinality, so
+//! the lattice's cardinality layers ([`IdealLattice::layer`]) form a
+//! dependency-free schedule: all ideals of one layer are solved in
+//! parallel (scoped threads, `util::par`), each worker owning a disjoint
+//! chunk of the flat `dp`/`parent` tables plus its own DFS scratch. Every
+//! ideal's cells are written by exactly one worker and all cross-ideal
+//! reads hit finished layers, so the result is **bitwise identical for any
+//! thread count** (see the determinism property test). Small layers and
+//! small lattices fall back to the sequential path to avoid spawn
+//! overhead; tune with [`DpOptions`].
 
 use super::objective;
 use crate::coordinator::placement::{Device, Placement, Scenario};
-use crate::graph::ideals::{IdealId, IdealLattice, DEFAULT_IDEAL_CAP};
+use crate::graph::ideals::{IdealId, IdealLattice, IdealRef, DEFAULT_IDEAL_CAP};
 use crate::graph::{contract, subdivide, NodeKind, OpGraph};
+use crate::util::par;
 
 /// Error cases for the DP front end.
 #[derive(Debug)]
@@ -50,6 +64,23 @@ impl std::fmt::Display for DpError {
 }
 
 impl std::error::Error for DpError {}
+
+/// Execution knobs for the level-synchronous DP.
+#[derive(Clone, Debug)]
+pub struct DpOptions {
+    /// Worker threads; 0 = use `available_parallelism`.
+    pub threads: usize,
+    /// Minimum ideals in a cardinality layer before that layer is solved
+    /// in parallel (smaller layers run on one thread — spawn overhead
+    /// dominates below this).
+    pub par_threshold: usize,
+}
+
+impl Default for DpOptions {
+    fn default() -> Self {
+        DpOptions { threads: 0, par_threshold: 192 }
+    }
+}
 
 /// Solve throughput maximization on `g` (inference *or* training graph)
 /// with full App.-B preprocessing. Returns an optimal contiguous placement.
@@ -199,16 +230,226 @@ pub fn solve_on_lattice(
     solve_on_lattice_with(g, sc, lattice, &zeros)
 }
 
-/// Run the DP proper. `bw_comm[v]` is the gradient transfer cost of v's
-/// backward partner: billed as bw-out while any pred of v is outside the
-/// carved subgraph, and as bw-in to the device holding v's preds (the
-/// mirror of the forward boundary). Returns the optimal max-load and a
-/// dense device assignment (`0..k` accs, `k..` CPU index `k+j`).
+/// [`solve_on_lattice_with_opts`] with default options.
 pub fn solve_on_lattice_with(
     g: &OpGraph,
     sc: &Scenario,
     lattice: &IdealLattice,
     bw_comm: &[f64],
+) -> Result<(f64, Vec<usize>), DpError> {
+    solve_on_lattice_with_opts(g, sc, lattice, bw_comm, &DpOptions::default())
+}
+
+/// Per-worker reusable DFS state — allocated once per worker for the whole
+/// solve, never per ideal.
+struct DpScratch {
+    /// Stamped visited array over ideal ids.
+    visited: Vec<u32>,
+    stamp: u32,
+    /// Per graph node: edges from the node into the carved set S.
+    in_cnt: Vec<u32>,
+    /// Per S-member: predecessors outside S.
+    pred_out_cnt: Vec<u32>,
+    /// Per outside node: predecessors in S.
+    src_cnt: Vec<u32>,
+    /// DFS stack: (ideal id, cursor into its subs, node added on entry —
+    /// `u32::MAX` for the root frame).
+    stack: Vec<(u32, u32, u32)>,
+}
+
+impl DpScratch {
+    fn new(ni: usize, n: usize) -> Self {
+        DpScratch {
+            visited: vec![0; ni],
+            stamp: 0,
+            in_cnt: vec![0; n],
+            pred_out_cnt: vec![0; n],
+            src_cnt: vec![0; n],
+            stack: Vec::with_capacity(64),
+        }
+    }
+}
+
+/// Relax every `(k', ℓ')` cell of one ideal from sub-ideal `sub`, whose
+/// carved set has accelerator load `acc_load` and CPU load `cpu_load`.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn relax_cells(
+    k: usize,
+    l: usize,
+    slots: usize,
+    sub: usize,
+    done: &[f64],
+    acc_load: f64,
+    cpu_load: f64,
+    cells: &mut [f64],
+    parents: &mut [(u32, bool)],
+) {
+    for k_ in 0..=k {
+        for l_ in 0..=l {
+            let cell = k_ * (l + 1) + l_;
+            if k_ > 0 {
+                let cand = done[sub * slots + (k_ - 1) * (l + 1) + l_].max(acc_load);
+                if cand < cells[cell] {
+                    cells[cell] = cand;
+                    parents[cell] = (sub as u32, true);
+                }
+            }
+            if l_ > 0 {
+                let cand = done[sub * slots + k_ * (l + 1) + (l_ - 1)].max(cpu_load);
+                if cand < cells[cell] {
+                    cells[cell] = cand;
+                    parents[cell] = (sub as u32, false);
+                }
+            }
+        }
+    }
+}
+
+/// Solve all `(k', ℓ')` cells of ideal `i`: DFS down the lattice with
+/// incremental subgraph costs and undo, reading only `done` (the dp cells
+/// of all smaller-cardinality ideals) and writing only this ideal's
+/// `cells`/`parents`.
+#[allow(clippy::too_many_arguments)]
+fn process_ideal(
+    g: &OpGraph,
+    sc: &Scenario,
+    lattice: &IdealLattice,
+    bw_comm: &[f64],
+    i: IdealId,
+    done: &[f64],
+    cells: &mut [f64],
+    parents: &mut [(u32, bool)],
+    scratch: &mut DpScratch,
+) {
+    let (k, l) = (sc.k, sc.l);
+    let slots = (k + 1) * (l + 1);
+    debug_assert_eq!(cells.len(), slots);
+    let DpScratch { visited, stamp, in_cnt, pred_out_cnt, src_cnt, stack } = scratch;
+    *stamp = stamp.wrapping_add(1);
+    if *stamp == 0 {
+        visited.iter_mut().for_each(|v| *v = 0);
+        *stamp = 1;
+    }
+    let stamp = *stamp;
+    visited[i] = stamp;
+    stack.clear();
+    stack.push((i as u32, 0, u32::MAX));
+
+    let full = lattice.ideal(i);
+    // incremental S = ideals[i] \ ideals[current]. Unsupported-op costs
+    // (p_acc/p_cpu = ∞) are tracked as COUNTS, not summed: `inf - inf`
+    // on backtrack would turn the running sums into NaN and silently
+    // corrupt every later relaxation of this ideal.
+    let mut s_cpu = 0.0_f64;
+    let mut s_compute = 0.0_f64;
+    let mut s_mem = 0.0_f64;
+    let mut s_comm_in = 0.0_f64;
+    let mut s_comm_out = 0.0_f64;
+    let mut s_bw_in = 0.0_f64;
+    let mut s_bw_out = 0.0_f64;
+    let mut inf_acc = 0u32;
+    let mut inf_cpu = 0u32;
+
+    while let Some(top) = stack.last_mut() {
+        let (cur, cursor) = (top.0 as usize, top.1 as usize);
+        let subs = lattice.subs(cur);
+        if cursor < subs.len() {
+            top.1 += 1;
+            let (sub32, v32) = subs[cursor];
+            let (sub, v) = (sub32 as usize, v32 as usize);
+            if visited[sub] == stamp {
+                continue;
+            }
+            visited[sub] = stamp;
+            // --- add v to S (incremental cost update) ---
+            add_node(
+                g, v, full, in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem,
+                &mut s_comm_in, &mut s_comm_out, &mut inf_acc, &mut inf_cpu,
+            );
+            add_bw(g, v, full, bw_comm, pred_out_cnt, src_cnt, &mut s_bw_in, &mut s_bw_out);
+            // Prune: both cpu(S) and compute(S) grow monotonically as S
+            // grows, and every candidate is ≥ min of them, so once that
+            // lower bound exceeds EVERY still-improvable dp cell of this
+            // ideal the whole subtree is useless. Cells at (0,0) are
+            // never touched by relax; INF cells are always improvable,
+            // so any INF cell disables the prune. S depends only on
+            // (i, sub), so skipping sub entirely is sound.
+            let eff_cpu = if inf_cpu == 0 { s_cpu } else { f64::INFINITY };
+            let eff_compute = if inf_acc == 0 { s_compute } else { f64::INFINITY };
+            let lb = eff_cpu.min(eff_compute);
+            let worst_improvable = (1..slots).map(|o| cells[o]).fold(0.0, f64::max);
+            if lb >= worst_improvable && worst_improvable.is_finite() {
+                // undo and skip subtree
+                remove_node(
+                    g, v, full, in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem,
+                    &mut s_comm_in, &mut s_comm_out, &mut inf_acc, &mut inf_cpu,
+                );
+                remove_bw(
+                    g, v, full, bw_comm, pred_out_cnt, src_cnt, &mut s_bw_in, &mut s_bw_out,
+                );
+                continue;
+            }
+            let acc_ok = s_mem <= sc.mem_cap && inf_acc == 0;
+            let acc_load = if acc_ok {
+                sc.combine(s_compute, s_comm_in + s_bw_in, s_comm_out + s_bw_out)
+            } else {
+                f64::INFINITY
+            };
+            relax_cells(k, l, slots, sub, done, acc_load, eff_cpu, cells, parents);
+            stack.push((sub32, 0, v32));
+        } else {
+            let added = top.2;
+            stack.pop();
+            if added != u32::MAX {
+                let v = added as usize;
+                remove_node(
+                    g, v, full, in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem,
+                    &mut s_comm_in, &mut s_comm_out, &mut inf_acc, &mut inf_cpu,
+                );
+                remove_bw(
+                    g, v, full, bw_comm, pred_out_cnt, src_cnt, &mut s_bw_in, &mut s_bw_out,
+                );
+            }
+        }
+    }
+    debug_assert!(in_cnt.iter().all(|&c| c == 0));
+
+    // Monotone closure (the S = ∅ transition): a device may be left
+    // empty, so dp[I][k'][ℓ'] ≤ dp[I][k'-1][ℓ'] and ≤ dp[I][k'][ℓ'-1].
+    // Done after the DFS so late improvements propagate.
+    for k_ in 0..=k {
+        for l_ in 0..=l {
+            let cell = k_ * (l + 1) + l_;
+            if k_ > 0 {
+                let prev = (k_ - 1) * (l + 1) + l_;
+                if cells[prev] < cells[cell] {
+                    cells[cell] = cells[prev];
+                    parents[cell] = (i as u32, true);
+                }
+            }
+            if l_ > 0 {
+                let prev = k_ * (l + 1) + (l_ - 1);
+                if cells[prev] < cells[cell] {
+                    cells[cell] = cells[prev];
+                    parents[cell] = (i as u32, false);
+                }
+            }
+        }
+    }
+}
+
+/// Run the DP proper. `bw_comm[v]` is the gradient transfer cost of v's
+/// backward partner: billed as bw-out while any pred of v is outside the
+/// carved subgraph, and as bw-in to the device holding v's preds (the
+/// mirror of the forward boundary). Returns the optimal max-load and a
+/// dense device assignment (`0..k` accs, `k..` CPU index `k+j`).
+pub fn solve_on_lattice_with_opts(
+    g: &OpGraph,
+    sc: &Scenario,
+    lattice: &IdealLattice,
+    bw_comm: &[f64],
+    opts: &DpOptions,
 ) -> Result<(f64, Vec<usize>), DpError> {
     let (k, l) = (sc.k, sc.l);
     let slots = (k + 1) * (l + 1);
@@ -218,139 +459,61 @@ pub fn solve_on_lattice_with(
     let mut dp = vec![f64::INFINITY; ni * slots];
     // parent choice: (sub-ideal id, used accelerator?) per (I, k', l')
     let mut parent: Vec<(u32, bool)> = vec![(u32::MAX, false); ni * slots];
-    dp[idx(lattice.empty_id(), 0, 0)] = 0.0;
     // empty ideal partitions with any device budget at cost 0
-    for k_ in 0..=k {
-        for l_ in 0..=l {
-            dp[idx(lattice.empty_id(), k_, l_)] = 0.0;
-        }
+    for c in dp[..slots].iter_mut() {
+        *c = 0.0;
     }
 
-    // Reusable DFS scratch (no allocation per ideal).
-    let mut visited = vec![u32::MAX; ni];
-    let mut in_cnt: Vec<u32> = vec![0; g.n()]; // edges from u into S
-    let mut pred_out_cnt: Vec<u32> = vec![0; g.n()]; // per S-member: preds outside S
-    let mut src_cnt: Vec<u32> = vec![0; g.n()]; // per outside node: preds in S
-    let n = g.n();
+    let threads = (if opts.threads == 0 { par::num_threads() } else { opts.threads }).max(1);
+    // worker scratches are created lazily — a chain-shaped lattice never
+    // leaves the sequential path and needs exactly one
+    let mut scratches: Vec<DpScratch> = Vec::new();
 
-    for i in 1..ni {
-        let stamp = i as u32;
-        // cur[k_][l_] running best for this ideal
-        let base = idx(i, 0, 0);
-        // DFS state: (ideal id, cursor into subs, node added when entering)
-        let mut stack: Vec<(IdealId, usize, usize)> = vec![(i, 0, usize::MAX)];
-        visited[i] = stamp;
-        // incremental S = ideals[i] \ ideals[current]
-        let mut s_cpu = 0.0_f64;
-        let mut s_compute = 0.0_f64;
-        let mut s_mem = 0.0_f64;
-        let mut s_comm_in = 0.0_f64;
-        let mut s_comm_out = 0.0_f64;
-        let mut s_bw_in = 0.0_f64;
-        let mut s_bw_out = 0.0_f64;
-        let full = &lattice.ideals[i];
-        let mut st = BwState {
-            bw_comm,
-            pred_out_cnt: &mut pred_out_cnt,
-            src_cnt: &mut src_cnt,
-        };
+    for c in 1..lattice.num_layers() {
+        let layer = lattice.layer(c);
+        let (start, end) = (layer.start, layer.end);
+        if start == end {
+            continue;
+        }
+        let layer_len = end - start;
+        // all earlier layers are finished: split the table so workers get
+        // a shared view of them plus exclusive chunks of this layer
+        let (done, rest_dp) = dp.split_at_mut(start * slots);
+        let active_dp = &mut rest_dp[..layer_len * slots];
+        let active_par = &mut parent[start * slots..end * slots];
 
-        macro_rules! relax {
-            ($sub:expr) => {{
-                let sub = $sub;
-                let acc_ok = s_mem <= sc.mem_cap && s_compute.is_finite();
-                let acc_load = if acc_ok {
-                    sc.combine(s_compute, s_comm_in + s_bw_in, s_comm_out + s_bw_out)
-                } else {
-                    f64::INFINITY
-                };
-                for k_ in 0..=k {
-                    for l_ in 0..=l {
-                        let cell = base + k_ * (l + 1) + l_;
-                        if k_ > 0 {
-                            let cand = dp[idx(sub, k_ - 1, l_)].max(acc_load);
-                            if cand < dp[cell] {
-                                dp[cell] = cand;
-                                parent[cell] = (sub as u32, true);
-                            }
-                        }
-                        if l_ > 0 {
-                            let cand = dp[idx(sub, k_, l_ - 1)].max(s_cpu);
-                            if cand < dp[cell] {
-                                dp[cell] = cand;
-                                parent[cell] = (sub as u32, false);
-                            }
-                        }
-                    }
-                }
-            }};
+        // one worker (inline, no spawn) below the parallel threshold
+        let workers =
+            if threads == 1 || layer_len < opts.par_threshold { 1 } else { threads.min(layer_len) };
+        while scratches.len() < workers {
+            scratches.push(DpScratch::new(ni, g.n()));
         }
 
-        while let Some(top) = stack.last_mut() {
-            let (cur, cursor) = (top.0, top.1);
-            if cursor < lattice.subs[cur].len() {
-                top.1 += 1;
-                let (sub, v) = lattice.subs[cur][cursor];
-                if visited[sub] == stamp {
-                    continue;
-                }
-                visited[sub] = stamp;
-                // --- add v to S (incremental cost update) ---
-                add_node(g, v, full, &mut in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem, &mut s_comm_in, &mut s_comm_out);
-                add_bw(g, v, full, &mut st, &mut s_bw_in, &mut s_bw_out);
-                // Prune: both cpu(S) and compute(S) grow monotonically as S
-                // grows, and every candidate is ≥ min of them, so once that
-                // lower bound exceeds EVERY still-improvable dp cell of this
-                // ideal the whole subtree is useless. Cells at (0,0) are
-                // never touched by relax; INF cells are always improvable,
-                // so any INF cell disables the prune.
-                let lb = s_cpu.min(s_compute);
-                let worst_improvable = (0..slots)
-                    .filter(|&o| o != 0)
-                    .map(|o| dp[base + o])
-                    .fold(0.0, f64::max);
-                if lb >= worst_improvable && worst_improvable.is_finite() {
-                    // undo and skip subtree
-                    remove_node(g, v, full, &mut in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem, &mut s_comm_in, &mut s_comm_out);
-                    remove_bw(g, v, full, &mut st, &mut s_bw_in, &mut s_bw_out);
-                    continue;
-                }
-                relax!(sub);
-                stack.push((sub, 0, v));
-            } else {
-                let added = top.2;
-                stack.pop();
-                if added != usize::MAX {
-                    remove_node(g, added, full, &mut in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem, &mut s_comm_in, &mut s_comm_out);
-                    remove_bw(g, added, full, &mut st, &mut s_bw_in, &mut s_bw_out);
-                }
+        let dp_blocks = par::chunk_granular(active_dp, workers, slots);
+        let par_blocks = par::chunk_granular(active_par, workers, slots);
+        let done_ref: &[f64] = done;
+        // per-worker state: (first ideal id of the block, dp chunk, parent
+        // chunk, scratch); the id offset is derived from the actual chunk
+        // sizes, not re-derived sizing math
+        let mut states: Vec<(usize, &mut [f64], &mut [(u32, bool)], &mut DpScratch)> =
+            Vec::with_capacity(workers);
+        let mut row_off = 0usize;
+        let mut scratch_iter = scratches.iter_mut();
+        for (dp_blk, par_blk) in dp_blocks.into_iter().zip(par_blocks) {
+            let lo = start + row_off;
+            row_off += dp_blk.len() / slots;
+            let scratch = scratch_iter.next().expect("blocks never exceed workers");
+            states.push((lo, dp_blk, par_blk, scratch));
+        }
+        par::run_workers(&mut states, |_, (lo, dp_blk, par_blk, scratch)| {
+            for (off, (cells, parents)) in
+                dp_blk.chunks_mut(slots).zip(par_blk.chunks_mut(slots)).enumerate()
+            {
+                process_ideal(
+                    g, sc, lattice, bw_comm, *lo + off, done_ref, cells, parents, scratch,
+                );
             }
-        }
-        debug_assert!(in_cnt.iter().all(|&c| c == 0));
-        let _ = n;
-
-        // Monotone closure (the S = ∅ transition): a device may be left
-        // empty, so dp[I][k'][ℓ'] ≤ dp[I][k'-1][ℓ'] and ≤ dp[I][k'][ℓ'-1].
-        // Done after the DFS so late improvements propagate.
-        for k_ in 0..=k {
-            for l_ in 0..=l {
-                let cell = base + k_ * (l + 1) + l_;
-                if k_ > 0 {
-                    let prev = base + (k_ - 1) * (l + 1) + l_;
-                    if dp[prev] < dp[cell] {
-                        dp[cell] = dp[prev];
-                        parent[cell] = (i as u32, true);
-                    }
-                }
-                if l_ > 0 {
-                    let prev = base + k_ * (l + 1) + (l_ - 1);
-                    if dp[prev] < dp[cell] {
-                        dp[cell] = dp[prev];
-                        parent[cell] = (i as u32, false);
-                    }
-                }
-            }
-        }
+        });
     }
 
     let final_cell = idx(lattice.full_id(), k, l);
@@ -369,7 +532,7 @@ pub fn solve_on_lattice_with(
             break; // dp[∅][k'][l'] = 0 seeds have no parent
         }
         let sub = sub as usize;
-        let s = lattice.ideals[i].difference(&lattice.ideals[sub]);
+        let s = lattice.difference_bitset(i, sub);
         let device = if used_acc {
             let d = next_acc;
             next_acc += 1;
@@ -398,91 +561,103 @@ pub fn solve_on_lattice_with(
     Ok((dp[final_cell], dense))
 }
 
-struct BwState<'a> {
-    bw_comm: &'a [f64],
-    pred_out_cnt: &'a mut [u32],
-    src_cnt: &'a mut [u32],
-}
-
 /// Backward-direction comm bookkeeping when v joins S (§5.3 exact costs):
 /// v's gradient goes OUT while any of v's preds is outside S; the gradient
 /// of an outside node w with a pred in S comes IN (once per w).
 #[inline]
+#[allow(clippy::too_many_arguments)]
 fn add_bw(
     g: &OpGraph,
     v: usize,
-    full: &crate::util::bitset::BitSet,
-    st: &mut BwState<'_>,
+    full: IdealRef<'_>,
+    bw_comm: &[f64],
+    pred_out_cnt: &mut [u32],
+    src_cnt: &mut [u32],
     s_bw_in: &mut f64,
     s_bw_out: &mut f64,
 ) {
     // v enters S: all its preds are currently outside S
     let np = g.preds[v].len() as u32;
-    st.pred_out_cnt[v] = np;
+    pred_out_cnt[v] = np;
     if np > 0 {
-        *s_bw_out += st.bw_comm[v];
+        *s_bw_out += bw_comm[v];
     }
     for &w in &g.succs[v] {
         if full.contains(w) {
             // w ∈ S (succs inside the ideal are in S by maximality): one of
             // w's preds just joined S
-            st.pred_out_cnt[w] -= 1;
-            if st.pred_out_cnt[w] == 0 {
-                *s_bw_out -= st.bw_comm[w];
+            pred_out_cnt[w] -= 1;
+            if pred_out_cnt[w] == 0 {
+                *s_bw_out -= bw_comm[w];
             }
         } else {
             // w outside the ideal: its gradient now flows into S
-            st.src_cnt[w] += 1;
-            if st.src_cnt[w] == 1 {
-                *s_bw_in += st.bw_comm[w];
+            src_cnt[w] += 1;
+            if src_cnt[w] == 1 {
+                *s_bw_in += bw_comm[w];
             }
         }
     }
 }
 
 #[inline]
+#[allow(clippy::too_many_arguments)]
 fn remove_bw(
     g: &OpGraph,
     v: usize,
-    full: &crate::util::bitset::BitSet,
-    st: &mut BwState<'_>,
+    full: IdealRef<'_>,
+    bw_comm: &[f64],
+    pred_out_cnt: &mut [u32],
+    src_cnt: &mut [u32],
     s_bw_in: &mut f64,
     s_bw_out: &mut f64,
 ) {
     for &w in &g.succs[v] {
         if full.contains(w) {
-            if st.pred_out_cnt[w] == 0 {
-                *s_bw_out += st.bw_comm[w];
+            if pred_out_cnt[w] == 0 {
+                *s_bw_out += bw_comm[w];
             }
-            st.pred_out_cnt[w] += 1;
+            pred_out_cnt[w] += 1;
         } else {
-            st.src_cnt[w] -= 1;
-            if st.src_cnt[w] == 0 {
-                *s_bw_in -= st.bw_comm[w];
+            src_cnt[w] -= 1;
+            if src_cnt[w] == 0 {
+                *s_bw_in -= bw_comm[w];
             }
         }
     }
     if !g.preds[v].is_empty() {
-        *s_bw_out -= st.bw_comm[v];
+        *s_bw_out -= bw_comm[v];
     }
-    st.pred_out_cnt[v] = 0;
+    pred_out_cnt[v] = 0;
 }
 
+/// Infinite processing times (unsupported ops) are counted, not summed —
+/// `∞ - ∞ = NaN` on the undo path would poison the running sums.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn add_node(
     g: &OpGraph,
     v: usize,
-    full: &crate::util::bitset::BitSet,
+    full: IdealRef<'_>,
     in_cnt: &mut [u32],
     s_cpu: &mut f64,
     s_compute: &mut f64,
     s_mem: &mut f64,
     s_comm_in: &mut f64,
     s_comm_out: &mut f64,
+    inf_acc: &mut u32,
+    inf_cpu: &mut u32,
 ) {
-    *s_cpu += g.nodes[v].p_cpu;
-    *s_compute += g.nodes[v].p_acc;
+    if g.nodes[v].p_cpu.is_finite() {
+        *s_cpu += g.nodes[v].p_cpu;
+    } else {
+        *inf_cpu += 1;
+    }
+    if g.nodes[v].p_acc.is_finite() {
+        *s_compute += g.nodes[v].p_acc;
+    } else {
+        *inf_acc += 1;
+    }
     *s_mem += g.nodes[v].mem;
     // v's successors outside the enclosing ideal ⇒ out-comm (fixed per I).
     if g.succs[v].iter().any(|&w| !full.contains(w)) {
@@ -506,16 +681,26 @@ fn add_node(
 fn remove_node(
     g: &OpGraph,
     v: usize,
-    full: &crate::util::bitset::BitSet,
+    full: IdealRef<'_>,
     in_cnt: &mut [u32],
     s_cpu: &mut f64,
     s_compute: &mut f64,
     s_mem: &mut f64,
     s_comm_in: &mut f64,
     s_comm_out: &mut f64,
+    inf_acc: &mut u32,
+    inf_cpu: &mut u32,
 ) {
-    *s_cpu -= g.nodes[v].p_cpu;
-    *s_compute -= g.nodes[v].p_acc;
+    if g.nodes[v].p_cpu.is_finite() {
+        *s_cpu -= g.nodes[v].p_cpu;
+    } else {
+        *inf_cpu -= 1;
+    }
+    if g.nodes[v].p_acc.is_finite() {
+        *s_compute -= g.nodes[v].p_acc;
+    } else {
+        *inf_acc -= 1;
+    }
     *s_mem -= g.nodes[v].mem;
     if g.succs[v].iter().any(|&w| !full.contains(w)) {
         *s_comm_out -= g.nodes[v].comm;
@@ -691,5 +876,64 @@ mod tests {
         p.validate(&g, &sc, true).unwrap();
         // perfect balance would be ~15.2; one acc doing both branches ~30
         assert!(p.objective < 20.0, "objective {}", p.objective);
+    }
+
+    #[test]
+    fn infinite_costs_do_not_poison_incremental_sums() {
+        // Diamond 0->{1,2}->3 where node 1 is accelerator-unsupported: the
+        // DFS adds node 1 (∞ acc cost) and backtracks before carving {2};
+        // a naive `∞ - ∞` undo leaves NaN and loses that transition. The
+        // optimum must still match brute force.
+        let mut g = OpGraph::new();
+        for i in 0..4 {
+            g.add_node(Node::new(format!("n{i}")).cpu(4.0).acc(1.0).mem(1.0).comm(0.1));
+        }
+        g.nodes[1].p_acc = f64::INFINITY;
+        g.add_edge(0, 1);
+        g.add_edge(0, 2);
+        g.add_edge(1, 3);
+        g.add_edge(2, 3);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let p = solve(&g, &sc).unwrap();
+        p.validate(&g, &sc, true).unwrap();
+        let bf = brute_force_contiguous(&g, &sc).unwrap();
+        assert!((p.objective - bf).abs() < 1e-9, "dp={} bf={bf}", p.objective);
+        // and the CPU-side mirror: node 1 CPU-unsupported instead
+        let mut g2 = g.clone();
+        g2.nodes[1].p_acc = 1.0;
+        g2.nodes[1].p_cpu = f64::INFINITY;
+        let p2 = solve(&g2, &sc).unwrap();
+        p2.validate(&g2, &sc, true).unwrap();
+        let bf2 = brute_force_contiguous(&g2, &sc).unwrap();
+        assert!((p2.objective - bf2).abs() < 1e-9, "dp={} bf={bf2}", p2.objective);
+    }
+
+    #[test]
+    fn forced_parallel_matches_sequential() {
+        use crate::util::proptest::random_dag;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xDA1);
+        for _ in 0..5 {
+            let g = random_dag(&mut rng, 9, 0.25);
+            let lattice = IdealLattice::enumerate(&g, usize::MAX).unwrap();
+            let sc = Scenario::new(2, 1, f64::INFINITY);
+            let zeros = vec![0.0; g.n()];
+            let seq = solve_on_lattice_with_opts(
+                &g, &sc, &lattice, &zeros,
+                &DpOptions { threads: 1, par_threshold: usize::MAX },
+            );
+            let park = solve_on_lattice_with_opts(
+                &g, &sc, &lattice, &zeros,
+                &DpOptions { threads: 4, par_threshold: 1 },
+            );
+            match (seq, park) {
+                (Ok((a, da)), Ok((b, db))) => {
+                    assert_eq!(a.to_bits(), b.to_bits(), "objective must be bitwise equal");
+                    assert_eq!(da, db, "assignments must be identical");
+                }
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("parallelism changed feasibility: {a:?} vs {b:?}"),
+            }
+        }
     }
 }

@@ -65,19 +65,24 @@ pub fn solve(g: &OpGraph, hier: &Hierarchy, cap: usize) -> Result<HierPlacement,
     let mut seg_cache: std::collections::HashMap<(u32, u32), f64> =
         std::collections::HashMap::new();
 
+    let mut visited = vec![0u32; ni];
+    let mut stack: Vec<usize> = Vec::new();
     for i in 1..ni {
-        // enumerate sub-ideals of i
-        let mut visited = vec![false; ni];
-        let mut stack = vec![i];
-        visited[i] = true;
+        // enumerate sub-ideals of i (stamped visited array — no per-ideal
+        // allocation)
+        let stamp = i as u32;
+        stack.clear();
+        stack.push(i);
+        visited[i] = stamp;
         while let Some(cur) = stack.pop() {
-            for &(sub, _) in &lattice.subs[cur] {
-                if !visited[sub] {
-                    visited[sub] = true;
+            for &(sub, _) in lattice.subs(cur) {
+                let sub = sub as usize;
+                if visited[sub] != stamp {
+                    visited[sub] = stamp;
                     stack.push(sub);
                 }
             }
-            let s = lattice.ideals[i].difference(&lattice.ideals[cur]);
+            let s = lattice.difference_bitset(i, cur);
             if s.is_empty() {
                 continue;
             }
@@ -118,7 +123,7 @@ pub fn solve(g: &OpGraph, hier: &Hierarchy, cap: usize) -> Result<HierPlacement,
             break;
         }
         let sub = sub as usize;
-        let s = lattice.ideals[i].difference(&lattice.ideals[sub]);
+        let s = lattice.difference_bitset(i, sub);
         if !s.is_empty() {
             let cluster = c - 1;
             let (_, inner_assign) = inner_split(gg, hier, &s);

@@ -25,6 +25,7 @@ use crate::coordinator::placement::{Device, Placement, Scenario};
 use crate::graph::{topo, OpGraph};
 use crate::solver::lp::{Lp, Sense};
 use crate::solver::milp::{Milp, SolveStatus};
+use crate::util::arena::BitMatrix;
 use crate::util::bitset::BitSet;
 use std::time::{Duration, Instant};
 
@@ -125,13 +126,17 @@ struct LatSearch<'a> {
     sc: &'a Scenario,
     opts: LatencyIpOptions,
     order: Vec<usize>,
-    reach: Vec<BitSet>,
-    co_reach: Vec<BitSet>,
+    /// Reachability rows in one flat allocation.
+    reach: BitMatrix,
+    co_reach: BitMatrix,
     /// longest min-cost path from v to a sink (suffix critical path)
     tail: Vec<f64>,
     acc_mem: Vec<f64>,
     acc_set: Vec<BitSet>,
     acc_reach: Vec<BitSet>,
+    /// Reused word scratch for the contiguity check / reach rebuild.
+    mid_scratch: Vec<u64>,
+    reach_scratch: Vec<u64>,
     assignment: Vec<usize>,
     assigned: BitSet,
     /// optimistic completion time of each assigned node (comm-free, no
@@ -150,8 +155,9 @@ struct LatSearch<'a> {
 impl<'a> LatSearch<'a> {
     fn new(g: &'a OpGraph, sc: &'a Scenario, opts: LatencyIpOptions, start: Instant) -> Self {
         let order = topo::toposort(g).unwrap();
-        let reach = topo::reachability(g);
-        let co_reach = topo::co_reachability(g);
+        let reach = topo::reachability_matrix(g);
+        let co_reach = topo::co_reachability_matrix(g);
+        let stride = reach.stride();
         let min_cost: Vec<f64> = g.nodes.iter().map(|n| n.p_cpu.min(n.p_acc)).collect();
         let mut tail = vec![0.0; g.n()];
         for &v in order.iter().rev() {
@@ -170,6 +176,8 @@ impl<'a> LatSearch<'a> {
             acc_mem: vec![0.0; sc.k],
             acc_set: (0..sc.k).map(|_| BitSet::new(g.n())).collect(),
             acc_reach: (0..sc.k).map(|_| BitSet::new(g.n())).collect(),
+            mid_scratch: vec![0; stride],
+            reach_scratch: vec![0; stride],
             assignment: vec![usize::MAX; g.n()],
             assigned: BitSet::new(g.n()),
             opt_done: vec![0.0; g.n()],
@@ -267,7 +275,7 @@ impl<'a> LatSearch<'a> {
                 let i = d - 1;
                 self.acc_mem[i] += self.g.nodes[v].mem;
                 self.acc_set[i].insert(v);
-                self.acc_reach[i].union_with(&self.reach[v]);
+                self.acc_reach[i].union_with_words(self.reach.row(v));
             }
             // bound: optimistic completion + suffix critical path
             let lb = self.partial_bound(pos);
@@ -283,12 +291,12 @@ impl<'a> LatSearch<'a> {
                 let i = d - 1;
                 self.acc_mem[i] -= self.g.nodes[v].mem;
                 self.acc_set[i].remove(v);
-                let members: Vec<usize> = self.acc_set[i].iter().collect();
-                let mut r = BitSet::new(self.g.n());
-                for u in members {
-                    r.union_with(&self.reach[u]);
-                }
-                self.acc_reach[i] = r;
+                // rebuild the accelerator's reach union into the reused
+                // scratch row — no allocation per node expansion
+                let mut scratch = std::mem::take(&mut self.reach_scratch);
+                self.reach.union_rows_of(self.acc_set[i].iter(), &mut scratch);
+                self.acc_reach[i].copy_from_words(&scratch);
+                self.reach_scratch = scratch;
             }
             self.assignment[v] = usize::MAX;
             self.assigned.remove(v);
@@ -312,16 +320,21 @@ impl<'a> LatSearch<'a> {
         lb
     }
 
-    fn contiguity_ok(&self, v: usize, i: usize) -> bool {
-        if self.acc_set[i].is_empty() {
-            return true;
-        }
-        let mut mid = self.acc_reach[i].clone();
-        mid.intersect_with(&self.co_reach[v]);
-        mid.intersect_with(&self.assigned);
-        mid.difference_with(&self.acc_set[i]);
-        mid.remove(v);
-        mid.is_empty()
+    /// Alloc-free assigned-prefix contiguity check (shared logic in
+    /// `graph::contiguity::prefix_contiguity_ok`).
+    fn contiguity_ok(&mut self, v: usize, i: usize) -> bool {
+        let mut mid = std::mem::take(&mut self.mid_scratch);
+        let ok = self.acc_set[i].is_empty()
+            || crate::graph::contiguity::prefix_contiguity_ok(
+                self.acc_reach[i].words(),
+                self.co_reach.row(v),
+                self.assigned.words(),
+                self.acc_set[i].words(),
+                v,
+                &mut mid,
+            );
+        self.mid_scratch = mid;
+        ok
     }
 
     fn contiguous_ok_full(&self, dense: &[usize]) -> bool {

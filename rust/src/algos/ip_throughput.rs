@@ -22,6 +22,7 @@ use crate::coordinator::placement::{Device, Placement, Scenario};
 use crate::graph::{topo, OpGraph};
 use crate::solver::lp::{Lp, Sense};
 use crate::solver::milp::{Milp, SolveStatus};
+use crate::util::arena::BitMatrix;
 use crate::util::bitset::BitSet;
 use std::time::{Duration, Instant};
 
@@ -140,14 +141,22 @@ struct Search<'a> {
     sc: &'a Scenario,
     opts: IpOptions,
     order: Vec<usize>,
-    reach: Vec<BitSet>,
-    co_reach: Vec<BitSet>,
+    /// Reachability rows in one flat allocation (`reach.row(u)` =
+    /// descendants of u).
+    reach: BitMatrix,
+    co_reach: BitMatrix,
     /// min(p_acc, p_cpu) suffix sums along `order` for the work bound.
     suffix_min_work: Vec<f64>,
     devices: Vec<DeviceState>,
     assignment: Vec<usize>,
     assigned: BitSet,
     out_paid: Vec<bool>,
+    /// Shared undo stacks with watermarks — no per-node-expansion `Vec`s.
+    undo_in: Vec<usize>,
+    undo_out: Vec<usize>,
+    /// Reused word scratch for the contiguity check / reach rebuild.
+    mid_scratch: Vec<u64>,
+    reach_scratch: Vec<u64>,
     incumbent: Option<(f64, Vec<usize>)>,
     incumbent_at: Duration,
     best_bound: f64,
@@ -161,8 +170,9 @@ struct Search<'a> {
 impl<'a> Search<'a> {
     fn new(g: &'a OpGraph, sc: &'a Scenario, opts: IpOptions) -> Self {
         let order = topo::toposort(g).expect("IP requires a DAG");
-        let reach = topo::reachability(g);
-        let co_reach = topo::co_reachability(g);
+        let reach = topo::reachability_matrix(g);
+        let co_reach = topo::co_reachability_matrix(g);
+        let stride = reach.stride();
         let nd = sc.k + sc.l;
         let mut suffix = vec![0.0; order.len() + 1];
         for (pos, &v) in order.iter().enumerate().rev() {
@@ -192,6 +202,10 @@ impl<'a> Search<'a> {
             assignment: vec![usize::MAX; g.n()],
             assigned: BitSet::new(g.n()),
             out_paid: vec![false; g.n()],
+            undo_in: Vec::with_capacity(64),
+            undo_out: Vec::with_capacity(64),
+            mid_scratch: vec![0; stride],
+            reach_scratch: vec![0; stride],
             incumbent: None,
             incumbent_at: Duration::ZERO,
             best_bound: root_bound,
@@ -332,28 +346,31 @@ impl<'a> Search<'a> {
     /// violating middle vertex x (u ∈ S_d ⇝ x ⇝ v, x ∉ S_d) is already
     /// assigned, so the check is exact: the violation exists iff some
     /// already-assigned non-member lies on a path from S_d to v.
-    fn contiguity_ok(&self, v: usize, d: usize) -> bool {
+    /// Runs against a reused word scratch — no clone per check.
+    fn contiguity_ok(&mut self, v: usize, d: usize) -> bool {
+        let mut mid = std::mem::take(&mut self.mid_scratch);
         let ds = &self.devices[d];
-        if ds.set.is_empty() {
-            return true;
-        }
-        // x ∈ reach(S_d) ∩ ancestors(v), x assigned, x ∉ S_d, x ≠ v
-        let mut mid = ds.reach.clone();
-        mid.intersect_with(&self.co_reach[v]);
-        mid.intersect_with(&self.assigned);
-        mid.difference_with(&ds.set);
-        mid.remove(v);
-        mid.is_empty()
+        let ok = ds.set.is_empty()
+            || crate::graph::contiguity::prefix_contiguity_ok(
+                ds.reach.words(),
+                self.co_reach.row(v),
+                self.assigned.words(),
+                ds.set.words(),
+                v,
+                &mut mid,
+            );
+        self.mid_scratch = mid;
+        ok
     }
 
     fn assign(&mut self, v: usize, d: usize) -> Undo {
         let is_acc = d < self.sc.k;
-        let mut undo = Undo { in_paid_added: Vec::new(), out_paid_added: Vec::new() };
+        let undo = Undo { in_mark: self.undo_in.len(), out_mark: self.undo_out.len() };
         self.assignment[v] = d;
         self.assigned.insert(v);
         let ds = &mut self.devices[d];
         ds.set.insert(v);
-        ds.reach.union_with(&self.reach[v]);
+        ds.reach.union_with_words(self.reach.row(v));
         ds.compute += if is_acc { self.g.nodes[v].p_acc } else { self.g.nodes[v].p_cpu };
         ds.mem += self.g.nodes[v].mem;
         // communication: only accelerator devices pay (Fig. 6 (20) vs (21))
@@ -367,12 +384,12 @@ impl<'a> Search<'a> {
             if is_acc && !self.devices[d].in_paid.contains(u) {
                 self.devices[d].in_paid.insert(u);
                 self.devices[d].comm_in += self.g.nodes[u].comm;
-                undo.in_paid_added.push(u);
+                self.undo_in.push(u);
             }
             if du < self.sc.k && !self.out_paid[u] {
                 self.out_paid[u] = true;
                 self.devices[du].comm_out += self.g.nodes[u].comm;
-                undo.out_paid_added.push(u);
+                self.undo_out.push(u);
             }
         }
         undo
@@ -380,11 +397,13 @@ impl<'a> Search<'a> {
 
     fn unassign(&mut self, v: usize, d: usize, undo: Undo) {
         let is_acc = d < self.sc.k;
-        for u in undo.in_paid_added {
+        while self.undo_in.len() > undo.in_mark {
+            let u = self.undo_in.pop().unwrap();
             self.devices[d].in_paid.remove(u);
             self.devices[d].comm_in -= self.g.nodes[u].comm;
         }
-        for u in undo.out_paid_added {
+        while self.undo_out.len() > undo.out_mark {
+            let u = self.undo_out.pop().unwrap();
             self.out_paid[u] = false;
             let du = self.assignment[u];
             self.devices[du].comm_out -= self.g.nodes[u].comm;
@@ -395,13 +414,12 @@ impl<'a> Search<'a> {
         ds.mem -= self.g.nodes[v].mem;
         self.assignment[v] = usize::MAX;
         self.assigned.remove(v);
-        // rebuild reach for d (a union has no cheap undo)
-        let members: Vec<usize> = self.devices[d].set.iter().collect();
-        let mut reach = BitSet::new(self.g.n());
-        for u in members {
-            reach.union_with(&self.reach[u]);
-        }
-        self.devices[d].reach = reach;
+        // rebuild reach for d (a union has no cheap undo) into the reused
+        // scratch row — no allocation per node expansion
+        let mut scratch = std::mem::take(&mut self.reach_scratch);
+        self.reach.union_rows_of(self.devices[d].set.iter(), &mut scratch);
+        self.devices[d].reach.copy_from_words(&scratch);
+        self.reach_scratch = scratch;
     }
 
     /// Best-single-node-move descent on the full objective (evaluated via
@@ -466,9 +484,12 @@ impl<'a> Search<'a> {
     }
 }
 
+/// Watermarks into the search's shared undo stacks (plain `Copy` — the old
+/// per-expansion `Vec`s were a measurable allocation cost).
+#[derive(Clone, Copy)]
 struct Undo {
-    in_paid_added: Vec<usize>,
-    out_paid_added: Vec<usize>,
+    in_mark: usize,
+    out_mark: usize,
 }
 
 // ---------------------------------------------------------------------------

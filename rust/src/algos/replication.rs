@@ -88,19 +88,24 @@ pub fn solve(g: &OpGraph, sc: &Scenario, cap: usize) -> Result<ReplicatedPlaceme
         }
     }
 
+    let mut visited = vec![0u32; ni];
+    let mut stack: Vec<usize> = Vec::new();
     for i in 1..ni {
-        // enumerate sub-ideals by BFS over immediate subs (visited per i)
-        let mut visited = vec![false; ni];
-        let mut stack = vec![i];
-        visited[i] = true;
+        // enumerate sub-ideals by DFS over immediate subs (stamped visited
+        // array — no per-ideal allocation)
+        let stamp = i as u32;
+        stack.clear();
+        stack.push(i);
+        visited[i] = stamp;
         while let Some(cur) = stack.pop() {
-            for &(sub, _) in &lattice.subs[cur] {
-                if !visited[sub] {
-                    visited[sub] = true;
+            for &(sub, _) in lattice.subs(cur) {
+                let sub = sub as usize;
+                if visited[sub] != stamp {
+                    visited[sub] = stamp;
                     stack.push(sub);
                 }
             }
-            let s = lattice.ideals[i].difference(&lattice.ideals[cur]);
+            let s = lattice.difference_bitset(i, cur);
             if s.is_empty() && cur != i {
                 continue;
             }
@@ -147,7 +152,7 @@ pub fn solve(g: &OpGraph, sc: &Scenario, cap: usize) -> Result<ReplicatedPlaceme
             break;
         }
         let sub = sub as usize;
-        let s = lattice.ideals[i].difference(&lattice.ideals[sub]);
+        let s = lattice.difference_bitset(i, sub);
         if !s.is_empty() {
             let stage = stage_devices.len();
             let devices = if r == 0 {

@@ -33,7 +33,7 @@ pub fn linearize_by_contraction(g: &OpGraph) -> Vec<usize> {
     for v in 0..n {
         by_level.entry(level[v]).or_default().push(v);
     }
-    let reach = topo::reachability(g);
+    let reach = topo::reachability_matrix(g);
     let mut group_of = vec![usize::MAX; n];
     let mut next_group = 0usize;
     let mut open: Vec<usize> = Vec::new(); // nodes in the current region
@@ -41,7 +41,7 @@ pub fn linearize_by_contraction(g: &OpGraph) -> Vec<usize> {
         let is_cut = nodes.len() == 1 && {
             let c = nodes[0];
             // all open nodes must reach c (so the region converges here)
-            open.iter().all(|&u| reach[u].contains(c))
+            open.iter().all(|&u| reach.get(u, c))
         };
         if is_cut && !open.is_empty() {
             // close the region (open nodes form one group), cut starts new

@@ -5,11 +5,13 @@
 //! uninterrupted accelerator call (all inputs in, compute, all outputs out).
 
 use super::{topo, OpGraph};
+use crate::util::arena;
 use crate::util::bitset::BitSet;
 
 /// Direct check of Definition 3.1 via reachability. `O(V·E/64)` per call —
 /// meant for validation and tests; the optimizers never need it on their
-/// hot paths (they construct contiguous sets by Fact 5.2).
+/// hot paths (they construct contiguous sets by Fact 5.2). Reachability
+/// rows live in one flat [`arena::BitMatrix`] allocation.
 pub fn is_contiguous(g: &OpGraph, set: &BitSet) -> bool {
     if set.is_empty() {
         return true;
@@ -17,17 +19,16 @@ pub fn is_contiguous(g: &OpGraph, set: &BitSet) -> bool {
     // reachable_from_s = nodes v ∉ S reachable from S (candidates for the
     // middle of a violating triple). Then check whether any of them reaches
     // back into S.
-    let reach = topo::reachability(g);
+    let reach = topo::reachability_matrix(g);
     // v outside S that some u ∈ S reaches
-    let mut outside_below = BitSet::new(g.n());
+    let mut outside_below = vec![0u64; reach.stride()];
     for u in set.iter() {
-        let mut r = reach[u].clone();
-        r.difference_with(set);
-        outside_below.union_with(&r);
+        arena::or_into(&mut outside_below, reach.row(u));
     }
-    for v in outside_below.iter() {
+    arena::andnot_into(&mut outside_below, set.words());
+    for v in arena::bits(&outside_below) {
         // does v reach any w ∈ S? (v itself is not in S)
-        if reach[v].intersects(set) {
+        if arena::intersects(reach.row(v), set.words()) {
             return false;
         }
     }
@@ -38,10 +39,10 @@ pub fn is_contiguous(g: &OpGraph, set: &BitSet) -> bool {
 /// ideals `(I, I')` with `S = I \ I'`. Returns `None` if `S` is not
 /// contiguous. `I = {v : some node of S reachable from v}`, `I' = I \ S`.
 pub fn to_ideal_pair(g: &OpGraph, set: &BitSet) -> Option<(BitSet, BitSet)> {
-    let reach = topo::reachability(g);
+    let reach = topo::reachability_matrix(g);
     let mut i = BitSet::new(g.n());
     for v in 0..g.n() {
-        if reach[v].intersects(set) {
+        if arena::intersects(reach.row(v), set.words()) {
             i.insert(v);
         }
     }
@@ -64,7 +65,7 @@ pub fn virtual_device_split(g: &OpGraph, set: &BitSet) -> Vec<BitSet> {
         return Vec::new();
     }
     let order = topo::toposort(g).expect("DAG required");
-    let reach = topo::reachability(g);
+    let reach = topo::reachability_matrix(g);
     let members: Vec<usize> = order.iter().copied().filter(|&v| set.contains(v)).collect();
 
     let mut pieces: Vec<BitSet> = Vec::new();
@@ -77,7 +78,8 @@ pub fn virtual_device_split(g: &OpGraph, set: &BitSet) -> Vec<BitSet> {
         trial.insert(v);
         let breaks = current.iter().any(|u| {
             // any intermediate x outside trial with u ⇝ x ⇝ v?
-            reach[u].iter().any(|x| x != u && x != v && !trial.contains(x) && reach[x].contains(v))
+            arena::bits(reach.row(u))
+                .any(|x| x != u && x != v && !trial.contains(x) && reach.get(x, v))
         });
         if breaks {
             pieces.push(current);
@@ -89,6 +91,29 @@ pub fn virtual_device_split(g: &OpGraph, set: &BitSet) -> Vec<BitSet> {
         pieces.push(current);
     }
     pieces
+}
+
+/// Shared inner loop of the branch-and-bound searches
+/// (`algos::ip_throughput`, `algos::ip_latency`): would adding `v` to a
+/// device currently holding `set` keep it contiguous, *given that nodes
+/// are assigned in topological order* (so every violating middle vertex is
+/// already assigned)? True iff no assigned non-member `x` satisfies
+/// `set ⇝ x ⇝ v`. All arguments are word slices of one stride;
+/// `scratch` is caller-provided so the check allocates nothing.
+pub fn prefix_contiguity_ok(
+    set_reach: &[u64],
+    ancestors_of_v: &[u64],
+    assigned: &[u64],
+    set: &[u64],
+    v: usize,
+    scratch: &mut [u64],
+) -> bool {
+    scratch.copy_from_slice(set_reach);
+    arena::and_into(scratch, ancestors_of_v);
+    arena::and_into(scratch, assigned);
+    arena::andnot_into(scratch, set);
+    arena::word_clear(scratch, v);
+    !arena::any(scratch)
 }
 
 /// Is the device-level condensation of a partition acyclic? This is the
@@ -211,6 +236,31 @@ mod tests {
             union.union_with(p);
         }
         assert_eq!(union, s);
+    }
+
+    #[test]
+    fn prefix_check_matches_direct_check_when_all_assigned() {
+        let g = chain(4);
+        let reach = topo::reachability_matrix(&g);
+        let all = BitSet::full(4);
+        let mut scratch = vec![0u64; reach.stride()];
+        // device holds {0}; set_reach = reach(0)
+        let set = BitSet::from_iter(4, [0]);
+        // adding 1 keeps {0,1} contiguous; adding 2 skips over 1
+        for (v, expect) in [(1, true), (2, false), (3, false)] {
+            let got = prefix_contiguity_ok(
+                reach.row(0),
+                topo::co_reachability_matrix(&g).row(v),
+                all.words(),
+                set.words(),
+                v,
+                &mut scratch,
+            );
+            assert_eq!(got, expect, "v={v}");
+            let mut trial = set.clone();
+            trial.insert(v);
+            assert_eq!(is_contiguous(&g, &trial), expect, "direct check v={v}");
+        }
     }
 
     #[test]

@@ -5,134 +5,380 @@
 //! partitioned" prefixes of the throughput DP, and by Fact 5.2 every
 //! contiguous set is a difference `I \ I'` of two nested ideals.
 //!
-//! [`IdealLattice`] enumerates all ideals (BFS over the lattice: extend an
-//! ideal by any *minimal* element of its complement), assigns them dense
-//! ids sorted by cardinality (so a DP can process them bottom-up), and
-//! precomputes, for each ideal, the list of its *immediate* sub-ideals
-//! (remove one maximal element). The DP walks arbitrary nested pairs
-//! `I' ⊆ I` by exploring the lattice downward from `I` through these
-//! immediate predecessors.
+//! ## Memory layout (the `O(𝓘²(V+E))` bottleneck, made cache-friendly)
+//!
+//! With up to millions of ideals (Table 1), per-ideal `BitSet` allocations
+//! and a `HashMap<BitSet, IdealId>` dominated both time and memory. The
+//! lattice now lives in a single flat word arena ([`SetArena`]): every
+//! ideal is a fixed-stride `&[u64]` slice, deduplication goes through an
+//! open-addressing [`InternTable`] on precomputed 64-bit hashes, and the
+//! BFS stages each candidate directly in the arena (push, dedup, keep or
+//! pop) — **zero per-ideal heap allocations** in the enumeration hot loop.
+//!
+//! Enumeration is a FIFO BFS that extends each ideal by the nodes of its
+//! *addable frontier* (complement nodes whose predecessors are all inside),
+//! maintained incrementally: extending `I` by `v` shrinks the frontier by
+//! `v` and grows it by exactly those successors of `v` whose last missing
+//! predecessor was `v` — no rescan of all `n` nodes per ideal. FIFO order
+//! yields ideals sorted by cardinality for free (every ideal is created
+//! from a parent one element smaller), which the DP consumes as
+//! *level-synchronous layers* ([`IdealLattice::layer`]) that can be solved
+//! in parallel.
+//!
+//! For each ideal the list of its *immediate* sub-ideals (remove one
+//! maximal element) is stored in CSR form ([`IdealLattice::subs`]); the DP
+//! walks arbitrary nested pairs `I' ⊆ I` downward through these links.
 
 use super::{NodeId, OpGraph};
+use crate::util::arena::{self, InternTable, SetArena};
 use crate::util::bitset::BitSet;
-use std::collections::HashMap;
 
 /// Dense id of an ideal within a lattice.
 pub type IdealId = usize;
-
-pub struct IdealLattice {
-    /// All ideals, sorted by (cardinality, hash) — `ideals[0]` is ∅ and the
-    /// last entry is the full node set.
-    pub ideals: Vec<BitSet>,
-    /// `subs[i]` = ids of ideals obtained from `ideals[i]` by removing one
-    /// maximal element, together with the removed node.
-    pub subs: Vec<Vec<(IdealId, NodeId)>>,
-    /// Map from ideal bitset to id.
-    index: HashMap<BitSet, IdealId>,
-}
 
 /// Hard cap to protect against graphs with exponentially many ideals
 /// (e.g. wide antichains). Enumeration aborts with `Err(count_so_far)`.
 pub const DEFAULT_IDEAL_CAP: usize = 2_000_000;
 
+/// A borrowed view of one ideal: a word slice in the lattice arena.
+#[derive(Clone, Copy)]
+pub struct IdealRef<'a> {
+    words: &'a [u64],
+    capacity: usize,
+}
+
+impl<'a> IdealRef<'a> {
+    #[inline]
+    pub fn contains(&self, v: usize) -> bool {
+        arena::word_contains(self.words, v)
+    }
+
+    /// Iterate members in increasing order.
+    pub fn iter(&self) -> arena::WordBits<'a> {
+        arena::bits(self.words)
+    }
+
+    /// Cardinality (word-fused popcount; prefer [`IdealLattice::card`],
+    /// which is precomputed, on hot paths).
+    pub fn len(&self) -> usize {
+        arena::popcount(self.words)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        !arena::any(self.words)
+    }
+
+    #[inline]
+    pub fn words(&self) -> &'a [u64] {
+        self.words
+    }
+
+    /// Materialize as an owned [`BitSet`] (cold paths / tests).
+    pub fn to_bitset(&self) -> BitSet {
+        BitSet::from_words(self.capacity, self.words)
+    }
+}
+
+pub struct IdealLattice {
+    /// All ideal rows, in enumeration (= cardinality) order: row 0 is ∅,
+    /// the last row is the full node set.
+    arena: SetArena,
+    /// Cardinality of each ideal (cached — no popcounts on hot paths).
+    cards: Vec<u32>,
+    /// `layer_start[c]..layer_start[c+1]` = ids of the ideals with
+    /// cardinality `c`.
+    layer_start: Vec<usize>,
+    /// CSR offsets into `sub_list` (len = number of ideals + 1).
+    sub_off: Vec<usize>,
+    /// Flattened immediate-sub-ideal links `(sub_id, removed_node)`.
+    sub_list: Vec<(u32, u32)>,
+    /// Row-content → id interning table (kept for [`IdealLattice::id_of`]).
+    table: InternTable,
+    /// Number of graph nodes (= bit capacity of every row).
+    n: usize,
+}
+
+/// Shared BFS core: enumerate all ideals into an arena with incremental
+/// addable frontiers. Returns `(rows, intern table, cardinalities,
+/// links)`; errors with the would-be id when the `cap` is exceeded.
+///
+/// With `record_links`, every staged candidate — fresh or deduplicated —
+/// is recorded as a `(child, parent, added_node)` triple. These are
+/// exactly the immediate sub-ideal links: staging `I ∪ {v}` makes `v`
+/// maximal in the child (a successor of `v` inside `I` would put `v` in
+/// `I` by downward closure), and conversely for any maximal `v` of an
+/// ideal `J`, the BFS stages `(J \ {v}) ∪ {v}` when it processes
+/// `J \ {v}`. So the CSR can be built by bucketing, with no re-hashing.
+fn enumerate_core(
+    g: &OpGraph,
+    cap: usize,
+    record_links: bool,
+) -> Result<(SetArena, InternTable, Vec<u32>, Vec<(u32, u32, u32)>), usize> {
+    let n = g.n();
+    let mut rows = SetArena::with_row_capacity(n, 1024);
+    // addable frontier of each ideal, row-parallel to `rows`; dropped after
+    // the BFS (only `rows` outlives this function)
+    let mut frontiers = SetArena::with_row_capacity(n, 1024);
+    let mut table = InternTable::with_capacity(1024);
+    let mut cards: Vec<u32> = Vec::new();
+    let mut links: Vec<(u32, u32, u32)> = Vec::new();
+
+    rows.push_empty();
+    let (root, fresh) = table.intern_last(&mut rows);
+    debug_assert!(fresh && root == 0);
+    cards.push(0);
+    let f0 = frontiers.push_empty();
+    for v in 0..n {
+        if g.preds[v].is_empty() {
+            frontiers.set_bit(f0, v);
+        }
+    }
+
+    // FIFO scan: every new ideal is one element bigger than its parent, so
+    // processing in creation order visits (and creates) ideals in
+    // non-decreasing cardinality order — no sort pass afterwards.
+    //
+    // A frontier row is dead the moment its ideal is dequeued, so the
+    // frontier arena is run as a queue: ideal `id`'s frontier lives at row
+    // `id - fr_base`, and the dead prefix is compacted away once it
+    // dominates — peak frontier memory is O(queue backlog), not O(𝓘).
+    let mut cur_frontier: Vec<u64> = vec![0; rows.stride()];
+    let mut head = 0usize;
+    let mut fr_base = 0usize;
+    while head < rows.len() {
+        let id = head;
+        head += 1;
+        if head - fr_base > frontiers.len() / 2 && head - fr_base > 1024 {
+            frontiers.discard_front(head - 1 - fr_base);
+            fr_base = head - 1;
+        }
+        cur_frontier.copy_from_slice(frontiers.row(id - fr_base));
+        let card = cards[id];
+        for v in arena::bits(&cur_frontier) {
+            // stage I ∪ {v} at the end of the arena, dedup, keep or discard
+            let staged = rows.push_copy(id);
+            rows.set_bit(staged, v);
+            let (nid, fresh) = table.intern_last(&mut rows);
+            if record_links {
+                links.push((nid, id as u32, v as u32));
+            }
+            if !fresh {
+                continue;
+            }
+            let nid = nid as usize;
+            if nid >= cap {
+                return Err(nid);
+            }
+            cards.push(card + 1);
+            // frontier(I ∪ {v}) = (frontier(I) \ {v}) ∪ {w ∈ succs(v) :
+            // preds(w) ⊆ I ∪ {v}} — adding a node never removes other
+            // addable nodes.
+            let fr = frontiers.push_copy(id - fr_base);
+            debug_assert_eq!(fr + fr_base, nid);
+            frontiers.clear_bit(fr, v);
+            for &w in &g.succs[v] {
+                if g.preds[w].iter().all(|&u| rows.contains(nid, u)) {
+                    frontiers.set_bit(fr, w);
+                }
+            }
+        }
+    }
+    Ok((rows, table, cards, links))
+}
+
 impl IdealLattice {
     /// Enumerate every ideal of `g`. Errors with the number seen so far if
     /// more than `cap` ideals exist — callers fall back to DPL (§5.1.2).
     pub fn enumerate(g: &OpGraph, cap: usize) -> Result<IdealLattice, usize> {
+        let (rows, table, cards, links) = enumerate_core(g, cap, true)?;
         let n = g.n();
-        let mut index: HashMap<BitSet, IdealId> = HashMap::new();
-        let mut ideals: Vec<BitSet> = Vec::new();
+        let ni = rows.len();
 
-        let empty = BitSet::new(n);
-        index.insert(empty.clone(), 0);
-        ideals.push(empty);
-
-        // BFS: grow each ideal by every addable node (all preds inside).
-        let mut frontier: Vec<IdealId> = vec![0];
-        while let Some(&id) = frontier.last() {
-            frontier.pop();
-            let ideal = ideals[id].clone();
-            for v in 0..n {
-                if ideal.contains(v) {
-                    continue;
-                }
-                if g.preds[v].iter().all(|&u| ideal.contains(u)) {
-                    let mut bigger = ideal.clone();
-                    bigger.insert(v);
-                    if !index.contains_key(&bigger) {
-                        let new_id = ideals.len();
-                        if new_id >= cap {
-                            return Err(new_id);
-                        }
-                        index.insert(bigger.clone(), new_id);
-                        ideals.push(bigger);
-                        frontier.push(new_id);
-                    }
-                }
-            }
+        // layer index over the (already sorted) cardinalities
+        let max_card = *cards.last().unwrap_or(&0) as usize;
+        let mut layer_start = vec![0usize; max_card + 2];
+        for &c in &cards {
+            layer_start[c as usize + 1] += 1;
+        }
+        for c in 1..layer_start.len() {
+            layer_start[c] += layer_start[c - 1];
         }
 
-        // Sort by cardinality for bottom-up DP processing.
-        let mut order: Vec<IdealId> = (0..ideals.len()).collect();
-        order.sort_by_key(|&i| (ideals[i].len(), ideals[i].fast_hash()));
-        let ideals: Vec<BitSet> = order.iter().map(|&i| ideals[i].clone()).collect();
-        let mut index = HashMap::with_capacity(ideals.len());
-        for (i, s) in ideals.iter().enumerate() {
-            index.insert(s.clone(), i);
+        // Immediate sub-ideal CSR, bucketed from the links the BFS already
+        // discovered (see enumerate_core) — no re-hashing, no row copies.
+        let mut sub_off = vec![0usize; ni + 1];
+        for &(child, _, _) in &links {
+            sub_off[child as usize + 1] += 1;
+        }
+        for i in 1..sub_off.len() {
+            sub_off[i] += sub_off[i - 1];
+        }
+        let mut cursor = sub_off.clone();
+        let mut sub_list = vec![(0u32, 0u32); links.len()];
+        for &(child, parent, v) in &links {
+            let slot = cursor[child as usize];
+            cursor[child as usize] += 1;
+            sub_list[slot] = (parent, v);
         }
 
-        // Immediate sub-ideals: remove any maximal element (no successor
-        // inside the ideal).
-        let mut subs: Vec<Vec<(IdealId, NodeId)>> = vec![Vec::new(); ideals.len()];
-        for (id, ideal) in ideals.iter().enumerate() {
-            for v in ideal.iter() {
-                if g.succs[v].iter().all(|&w| !ideal.contains(w)) {
-                    let mut smaller = ideal.clone();
-                    smaller.remove(v);
-                    let sub_id = index[&smaller];
-                    subs[id].push((sub_id, v));
-                }
-            }
-        }
+        Ok(IdealLattice { arena: rows, cards, layer_start, sub_off, sub_list, table, n })
+    }
 
-        Ok(IdealLattice { ideals, subs, index })
+    /// Count ideals without building the lattice structure (no sub-ideal
+    /// links, no layer index — just the BFS with dedup). Used to report the
+    /// "Ideals" column of Table 1 cheaply; returns `cap` if aborted.
+    pub fn count(g: &OpGraph, cap: usize) -> usize {
+        match enumerate_core(g, cap, false) {
+            Ok((rows, _, _, _)) => rows.len(),
+            Err(c) => c,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.ideals.len()
+        self.arena.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.ideals.is_empty()
+        self.arena.is_empty()
     }
 
-    /// Id of the empty ideal (always 0 after sorting).
+    /// Id of the empty ideal (always 0).
     pub fn empty_id(&self) -> IdealId {
         0
     }
 
     /// Id of the full node set (always the last ideal).
     pub fn full_id(&self) -> IdealId {
-        self.ideals.len() - 1
+        self.arena.len() - 1
+    }
+
+    /// Borrowed view of ideal `id`.
+    #[inline]
+    pub fn ideal(&self, id: IdealId) -> IdealRef<'_> {
+        IdealRef { words: self.arena.row(id), capacity: self.n }
+    }
+
+    /// Owned copy of ideal `id` (cold paths / interop).
+    pub fn ideal_bitset(&self, id: IdealId) -> BitSet {
+        BitSet::from_words(self.n, self.arena.row(id))
+    }
+
+    /// Cached cardinality of ideal `id`.
+    #[inline]
+    pub fn card(&self, id: IdealId) -> usize {
+        self.cards[id] as usize
+    }
+
+    /// Is node `v` in ideal `id`?
+    #[inline]
+    pub fn contains(&self, id: IdealId, v: usize) -> bool {
+        self.arena.contains(id, v)
+    }
+
+    /// Number of cardinality layers (= max cardinality + 1).
+    pub fn num_layers(&self) -> usize {
+        self.layer_start.len() - 1
+    }
+
+    /// Ids of the ideals with cardinality `c`, as a contiguous range.
+    pub fn layer(&self, c: usize) -> std::ops::Range<IdealId> {
+        self.layer_start[c]..self.layer_start[c + 1]
+    }
+
+    /// Immediate sub-ideals of `id`: `(sub_id, removed_node)` pairs.
+    #[inline]
+    pub fn subs(&self, id: IdealId) -> &[(u32, u32)] {
+        &self.sub_list[self.sub_off[id]..self.sub_off[id + 1]]
+    }
+
+    /// The contiguous set `I_a \ I_b` as an owned bitset (reconstruction
+    /// paths).
+    pub fn difference_bitset(&self, a: IdealId, b: IdealId) -> BitSet {
+        let mut words = self.arena.row(a).to_vec();
+        arena::andnot_into(&mut words, self.arena.row(b));
+        BitSet::from_words(self.n, &words)
     }
 
     pub fn id_of(&self, set: &BitSet) -> Option<IdealId> {
-        self.index.get(set).copied()
-    }
-
-    /// Count ideals without materializing the lattice (used to report the
-    /// "Ideals" column of Table 1 cheaply); returns `cap` if aborted.
-    pub fn count(g: &OpGraph, cap: usize) -> usize {
-        match Self::enumerate(g, cap) {
-            Ok(l) => l.len(),
-            Err(c) => c,
+        if set.capacity() != self.n {
+            return None;
         }
+        self.table.find(set.fast_hash(), set.words(), &self.arena).map(|s| s as usize)
     }
 }
 
 /// Check Definition 5.1 directly (used by tests/property checks).
 pub fn is_ideal(g: &OpGraph, set: &BitSet) -> bool {
     g.edges().all(|(u, v)| !set.contains(v) || set.contains(u))
+}
+
+/// The pre-arena reference lattice: one heap `BitSet` per ideal, HashMap
+/// interning, full rescan of all nodes per BFS step. Retained as the
+/// executable specification the property tests compare the arena lattice
+/// against (identical ideal set, identical sub-ideal links); never used on
+/// hot paths.
+pub struct NaiveLattice {
+    /// Sorted by (cardinality, hash).
+    pub ideals: Vec<BitSet>,
+    /// `subs[i]` = (immediate sub-ideal id, removed node).
+    pub subs: Vec<Vec<(IdealId, NodeId)>>,
+}
+
+/// Reference enumeration (the original algorithm). Same `cap` semantics as
+/// [`IdealLattice::enumerate`].
+pub fn enumerate_naive(g: &OpGraph, cap: usize) -> Result<NaiveLattice, usize> {
+    use std::collections::HashMap;
+    let n = g.n();
+    let mut index: HashMap<BitSet, IdealId> = HashMap::new();
+    let mut ideals: Vec<BitSet> = Vec::new();
+
+    let empty = BitSet::new(n);
+    index.insert(empty.clone(), 0);
+    ideals.push(empty);
+
+    let mut frontier: Vec<IdealId> = vec![0];
+    while let Some(id) = frontier.pop() {
+        let ideal = ideals[id].clone();
+        for v in 0..n {
+            if ideal.contains(v) {
+                continue;
+            }
+            if g.preds[v].iter().all(|&u| ideal.contains(u)) {
+                let mut bigger = ideal.clone();
+                bigger.insert(v);
+                if !index.contains_key(&bigger) {
+                    let new_id = ideals.len();
+                    if new_id >= cap {
+                        return Err(new_id);
+                    }
+                    index.insert(bigger.clone(), new_id);
+                    ideals.push(bigger);
+                    frontier.push(new_id);
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<IdealId> = (0..ideals.len()).collect();
+    order.sort_by_key(|&i| (ideals[i].len(), ideals[i].fast_hash()));
+    let ideals: Vec<BitSet> = order.iter().map(|&i| ideals[i].clone()).collect();
+    let mut index = HashMap::with_capacity(ideals.len());
+    for (i, s) in ideals.iter().enumerate() {
+        index.insert(s.clone(), i);
+    }
+
+    let mut subs: Vec<Vec<(IdealId, NodeId)>> = vec![Vec::new(); ideals.len()];
+    for (id, ideal) in ideals.iter().enumerate() {
+        for v in ideal.iter() {
+            if g.succs[v].iter().all(|&w| !ideal.contains(w)) {
+                let mut smaller = ideal.clone();
+                smaller.remove(v);
+                subs[id].push((index[&smaller], v));
+            }
+        }
+    }
+
+    Ok(NaiveLattice { ideals, subs })
 }
 
 #[cfg(test)]
@@ -147,8 +393,8 @@ mod tests {
         let lat = IdealLattice::enumerate(&g, usize::MAX).unwrap();
         assert_eq!(lat.len(), 8);
         // every ideal is a prefix
-        for ideal in &lat.ideals {
-            let v: Vec<usize> = ideal.iter().collect();
+        for id in 0..lat.len() {
+            let v: Vec<usize> = lat.ideal(id).iter().collect();
             assert_eq!(v, (0..v.len()).collect::<Vec<_>>());
         }
     }
@@ -168,35 +414,66 @@ mod tests {
         // Ideals of the diamond: {}, {0}, {0,1}, {0,2}, {0,1,2}, {0,1,2,3} = 6.
         let lat = IdealLattice::enumerate(&diamond(), usize::MAX).unwrap();
         assert_eq!(lat.len(), 6);
-        for ideal in &lat.ideals {
-            assert!(is_ideal(&diamond(), ideal));
+        for id in 0..lat.len() {
+            assert!(is_ideal(&diamond(), &lat.ideal_bitset(id)));
         }
     }
 
     #[test]
     fn sorted_by_cardinality_and_bounds() {
         let lat = IdealLattice::enumerate(&diamond(), usize::MAX).unwrap();
-        for w in lat.ideals.windows(2) {
-            assert!(w[0].len() <= w[1].len());
+        for id in 1..lat.len() {
+            assert!(lat.card(id - 1) <= lat.card(id));
+            assert_eq!(lat.card(id), lat.ideal(id).len());
         }
-        assert!(lat.ideals[lat.empty_id()].is_empty());
-        assert_eq!(lat.ideals[lat.full_id()].len(), 4);
+        assert!(lat.ideal(lat.empty_id()).is_empty());
+        assert_eq!(lat.card(lat.full_id()), 4);
+    }
+
+    #[test]
+    fn layers_partition_ids_by_cardinality() {
+        let lat = IdealLattice::enumerate(&diamond(), usize::MAX).unwrap();
+        assert_eq!(lat.num_layers(), 5); // cardinalities 0..=4
+        let mut seen = 0;
+        for c in 0..lat.num_layers() {
+            for id in lat.layer(c) {
+                assert_eq!(lat.card(id), c);
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, lat.len());
+        assert_eq!(lat.layer(0), 0..1);
     }
 
     #[test]
     fn immediate_subs_are_ideals_one_smaller() {
         let g = diamond();
         let lat = IdealLattice::enumerate(&g, usize::MAX).unwrap();
-        for (id, subs) in lat.subs.iter().enumerate() {
-            for &(sub, removed) in subs {
-                assert_eq!(lat.ideals[sub].len() + 1, lat.ideals[id].len());
-                assert!(lat.ideals[id].contains(removed));
-                assert!(!lat.ideals[sub].contains(removed));
-                assert!(is_ideal(&g, &lat.ideals[sub]));
+        for id in 0..lat.len() {
+            for &(sub, removed) in lat.subs(id) {
+                let (sub, removed) = (sub as usize, removed as usize);
+                assert_eq!(lat.card(sub) + 1, lat.card(id));
+                assert!(lat.contains(id, removed));
+                assert!(!lat.contains(sub, removed));
+                assert!(is_ideal(&g, &lat.ideal_bitset(sub)));
             }
         }
         // full ideal of diamond has exactly one maximal element (node 3)
-        assert_eq!(lat.subs[lat.full_id()].len(), 1);
+        assert_eq!(lat.subs(lat.full_id()).len(), 1);
+    }
+
+    #[test]
+    fn id_of_and_difference() {
+        let g = diamond();
+        let lat = IdealLattice::enumerate(&g, usize::MAX).unwrap();
+        for id in 0..lat.len() {
+            assert_eq!(lat.id_of(&lat.ideal_bitset(id)), Some(id));
+        }
+        assert_eq!(lat.id_of(&BitSet::from_iter(4, [1])), None); // not an ideal
+        let full = lat.full_id();
+        let empty = lat.empty_id();
+        assert_eq!(lat.difference_bitset(full, empty), BitSet::full(4));
+        assert!(lat.difference_bitset(empty, full).is_empty());
     }
 
     #[test]
@@ -207,5 +484,59 @@ mod tests {
         }
         assert!(IdealLattice::enumerate(&g, 1000).is_err());
         assert_eq!(IdealLattice::count(&g, 1000), 1000);
+    }
+
+    #[test]
+    fn count_matches_enumerate() {
+        for g in [diamond(), chain(9)] {
+            let lat = IdealLattice::enumerate(&g, usize::MAX).unwrap();
+            assert_eq!(IdealLattice::count(&g, usize::MAX), lat.len());
+        }
+    }
+
+    #[test]
+    fn arena_lattice_matches_naive_reference() {
+        use crate::util::proptest::random_dag;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xA7E4A);
+        for case in 0..25 {
+            let g = random_dag(&mut rng, 9, 0.3);
+            let fast = IdealLattice::enumerate(&g, usize::MAX).unwrap();
+            let naive = enumerate_naive(&g, usize::MAX).unwrap();
+            assert_eq!(fast.len(), naive.ideals.len(), "case {case}");
+            // identical ideal sets (order-insensitive)
+            let mut a: Vec<Vec<usize>> =
+                (0..fast.len()).map(|i| fast.ideal(i).iter().collect()).collect();
+            let mut b: Vec<Vec<usize>> =
+                naive.ideals.iter().map(|s| s.iter().collect()).collect();
+            a.sort();
+            b.sort();
+            assert_eq!(a, b, "case {case}: ideal sets differ");
+            // identical sub-ideal links, as (ideal set, removed node) pairs
+            let mut la: Vec<(Vec<usize>, usize)> = Vec::new();
+            for i in 0..fast.len() {
+                for &(_, v) in fast.subs(i) {
+                    la.push((fast.ideal(i).iter().collect(), v as usize));
+                }
+            }
+            let mut lb: Vec<(Vec<usize>, usize)> = Vec::new();
+            for (i, s) in naive.ideals.iter().enumerate() {
+                for &(_, v) in &naive.subs[i] {
+                    lb.push((s.iter().collect(), v));
+                }
+            }
+            la.sort();
+            lb.sort();
+            assert_eq!(la, lb, "case {case}: sub-ideal links differ");
+        }
+    }
+
+    #[test]
+    fn empty_graph_has_single_ideal() {
+        let g = OpGraph::new();
+        let lat = IdealLattice::enumerate(&g, usize::MAX).unwrap();
+        assert_eq!(lat.len(), 1);
+        assert_eq!(lat.empty_id(), lat.full_id());
+        assert!(lat.subs(0).is_empty());
     }
 }

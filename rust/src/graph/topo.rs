@@ -3,6 +3,7 @@
 //! DPL heuristic (§5.1.2).
 
 use super::{NodeId, OpGraph};
+use crate::util::arena::BitMatrix;
 use crate::util::bitset::BitSet;
 
 /// Kahn's algorithm. Returns `None` if the graph has a cycle (can happen
@@ -31,37 +32,48 @@ pub fn is_dag(g: &OpGraph) -> bool {
     toposort(g).is_some()
 }
 
-/// Full reachability: `reach[u].contains(v)` ⇔ there is a directed path
-/// u ⇝ v (including u = v). Computed in reverse topological order with
-/// bitset unions — `O(V·E/64)`, fine for the ≤ 2k-node graphs we handle.
-pub fn reachability(g: &OpGraph) -> Vec<BitSet> {
+/// Full reachability as one flat [`BitMatrix`] (row u = descendants of u,
+/// including u): a single allocation, cache-linear rows. Computed in
+/// reverse topological order with word unions — `O(V·E/64)`.
+pub fn reachability_matrix(g: &OpGraph) -> BitMatrix {
     let order = toposort(g).expect("reachability requires a DAG");
-    let mut reach: Vec<BitSet> = (0..g.n()).map(|_| BitSet::new(g.n())).collect();
+    let mut m = BitMatrix::new(g.n());
     for &u in order.iter().rev() {
-        reach[u].insert(u);
-        // union of successors' reach sets
-        let mut acc = std::mem::replace(&mut reach[u], BitSet::new(0));
+        m.set(u, u);
         for &v in &g.succs[u] {
-            acc.union_with(&reach[v]);
+            m.union_rows(u, v);
         }
-        reach[u] = acc;
     }
-    reach
+    m
+}
+
+/// Transpose reachability as a [`BitMatrix`]: row v = ancestors of v
+/// (including v).
+pub fn co_reachability_matrix(g: &OpGraph) -> BitMatrix {
+    let order = toposort(g).expect("co_reachability requires a DAG");
+    let mut m = BitMatrix::new(g.n());
+    for &v in order.iter() {
+        m.set(v, v);
+        for &u in &g.preds[v] {
+            m.union_rows(v, u);
+        }
+    }
+    m
+}
+
+/// Full reachability: `reach[u].contains(v)` ⇔ there is a directed path
+/// u ⇝ v (including u = v). Owned-bitset view of
+/// [`reachability_matrix`] for callers that want independent rows; hot
+/// paths use the matrix directly.
+pub fn reachability(g: &OpGraph) -> Vec<BitSet> {
+    let m = reachability_matrix(g);
+    (0..g.n()).map(|u| BitSet::from_words(g.n(), m.row(u))).collect()
 }
 
 /// Transpose reachability: `co_reach[v]` = all ancestors of v (including v).
 pub fn co_reachability(g: &OpGraph) -> Vec<BitSet> {
-    let order = toposort(g).expect("co_reachability requires a DAG");
-    let mut reach: Vec<BitSet> = (0..g.n()).map(|_| BitSet::new(g.n())).collect();
-    for &v in order.iter() {
-        reach[v].insert(v);
-        let mut acc = std::mem::replace(&mut reach[v], BitSet::new(0));
-        for &u in &g.preds[v] {
-            acc.union_with(&reach[u]);
-        }
-        reach[v] = acc;
-    }
-    reach
+    let m = co_reachability_matrix(g);
+    (0..g.n()).map(|v| BitSet::from_words(g.n(), m.row(v))).collect()
 }
 
 /// Width of the DAG = size of the largest antichain = the paper's lower
@@ -76,7 +88,7 @@ pub fn width(g: &OpGraph) -> usize {
     if n == 0 {
         return 0;
     }
-    let reach = reachability(g);
+    let reach = reachability_matrix(g);
     // Bipartite graph: left u — right v when u ⇝ v, u ≠ v. Minimum chain
     // cover = n - max_matching; width = min chain cover by Dilworth.
     let mut match_r: Vec<Option<usize>> = vec![None; n];
@@ -92,11 +104,11 @@ pub fn width(g: &OpGraph) -> usize {
 
 fn try_kuhn(
     u: usize,
-    reach: &[BitSet],
+    reach: &BitMatrix,
     visited: &mut [bool],
     match_r: &mut [Option<usize>],
 ) -> bool {
-    for v in reach[u].iter() {
+    for v in crate::util::arena::bits(reach.row(u)) {
         if v == u || visited[v] {
             continue;
         }
@@ -198,6 +210,27 @@ mod tests {
         let cr = co_reachability(&g);
         assert!(cr[3].contains(0));
         assert!(!cr[1].contains(2));
+    }
+
+    #[test]
+    fn matrix_matches_bitset_reachability() {
+        use crate::util::proptest::random_dag;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x70B0);
+        for _ in 0..10 {
+            let g = random_dag(&mut rng, 12, 0.3);
+            let m = reachability_matrix(&g);
+            let cm = co_reachability_matrix(&g);
+            let r = reachability(&g);
+            let cr = co_reachability(&g);
+            for u in 0..g.n() {
+                for v in 0..g.n() {
+                    assert_eq!(m.get(u, v), r[u].contains(v));
+                    assert_eq!(cm.get(u, v), cr[u].contains(v));
+                    assert_eq!(m.get(u, v), cm.get(v, u));
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,522 @@
+//! Flat word arenas for the set-heavy hot paths.
+//!
+//! The ideal lattice (§5.1.1) stores up to millions of node sets; keeping
+//! each as its own heap `Vec<u64>` (the old `BitSet`-per-ideal layout)
+//! costs one allocation, one pointer chase and one cache miss per set. A
+//! [`SetArena`] instead packs every set into a single `Vec<u64>` at a fixed
+//! word stride, so sets are addressed as slices, iteration is cache-linear,
+//! and creating a set is an `extend_from_within` — zero per-set allocations
+//! once the arena's backing vector has grown to size.
+//!
+//! [`InternTable`] deduplicates arena rows (open addressing on precomputed
+//! 64-bit hashes with slice-equality fallback), replacing the old
+//! `HashMap<BitSet, IdealId>` that re-hashed and cloned whole bitsets.
+//!
+//! [`BitMatrix`] is the same idea for n×n relations (reachability rows in
+//! `graph::topo` / `graph::contiguity` and the branch-and-bound searches).
+
+/// Number of 64-bit words needed for `bits` bits.
+#[inline]
+pub fn words_for(bits: usize) -> usize {
+    bits.div_ceil(64)
+}
+
+/// FNV-style hash of a word slice. `BitSet::fast_hash` delegates here, so
+/// arena rows and `BitSet`s always hash compatibly.
+#[inline]
+pub fn hash_words(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in words {
+        h = (h ^ w).wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Number of set bits in a word slice.
+#[inline]
+pub fn popcount(words: &[u64]) -> usize {
+    words.iter().map(|w| w.count_ones() as usize).sum()
+}
+
+/// Is bit `i` set?
+#[inline]
+pub fn word_contains(words: &[u64], i: usize) -> bool {
+    words[i / 64] >> (i % 64) & 1 == 1
+}
+
+/// Set bit `i`.
+#[inline]
+pub fn word_set(words: &mut [u64], i: usize) {
+    words[i / 64] |= 1u64 << (i % 64);
+}
+
+/// Clear bit `i`.
+#[inline]
+pub fn word_clear(words: &mut [u64], i: usize) {
+    words[i / 64] &= !(1u64 << (i % 64));
+}
+
+/// `dst &= src`.
+#[inline]
+pub fn and_into(dst: &mut [u64], src: &[u64]) {
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a &= b;
+    }
+}
+
+/// `dst |= src`.
+#[inline]
+pub fn or_into(dst: &mut [u64], src: &[u64]) {
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a |= b;
+    }
+}
+
+/// `dst &= !src`.
+#[inline]
+pub fn andnot_into(dst: &mut [u64], src: &[u64]) {
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a &= !b;
+    }
+}
+
+/// Any bit set?
+#[inline]
+pub fn any(words: &[u64]) -> bool {
+    words.iter().any(|&w| w != 0)
+}
+
+/// `a ∩ b ≠ ∅`.
+#[inline]
+pub fn intersects(a: &[u64], b: &[u64]) -> bool {
+    a.iter().zip(b).any(|(x, y)| x & y != 0)
+}
+
+/// Iterate the set bits of a word slice in increasing order.
+pub fn bits(words: &[u64]) -> WordBits<'_> {
+    WordBits { words, word_idx: 0, current: words.first().copied().unwrap_or(0) }
+}
+
+pub struct WordBits<'a> {
+    words: &'a [u64],
+    word_idx: usize,
+    current: u64,
+}
+
+impl Iterator for WordBits<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.current != 0 {
+                let bit = self.current.trailing_zeros() as usize;
+                self.current &= self.current - 1;
+                return Some(self.word_idx * 64 + bit);
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.word_idx];
+        }
+    }
+}
+
+/// A growable collection of equal-capacity bitsets stored back-to-back in
+/// one `Vec<u64>`. Rows are addressed by dense index; the last row can be
+/// popped, which makes "stage a candidate, dedup, keep or discard" loops
+/// allocation-free.
+#[derive(Clone, Debug)]
+pub struct SetArena {
+    words: Vec<u64>,
+    stride: usize,
+    capacity: usize,
+    rows: usize,
+}
+
+impl SetArena {
+    /// Arena of sets over `0..capacity`.
+    pub fn new(capacity: usize) -> Self {
+        SetArena { words: Vec::new(), stride: words_for(capacity), capacity, rows: 0 }
+    }
+
+    /// Pre-reserve space for `rows` rows.
+    pub fn with_row_capacity(capacity: usize, rows: usize) -> Self {
+        let mut a = Self::new(capacity);
+        a.words.reserve(rows * a.stride);
+        a
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Addressable bits per row.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Words per row.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Append an all-zero row; returns its index.
+    pub fn push_empty(&mut self) -> usize {
+        self.words.resize(self.words.len() + self.stride, 0);
+        self.rows += 1;
+        self.rows - 1
+    }
+
+    /// Append a copy of row `src`; returns the new row's index.
+    pub fn push_copy(&mut self, src: usize) -> usize {
+        debug_assert!(src < self.rows);
+        let a = src * self.stride;
+        self.words.extend_from_within(a..a + self.stride);
+        self.rows += 1;
+        self.rows - 1
+    }
+
+    /// Drop the last row (the staged-candidate discard path).
+    pub fn pop_last(&mut self) {
+        debug_assert!(self.rows > 0);
+        self.words.truncate(self.words.len() - self.stride);
+        self.rows -= 1;
+    }
+
+    /// Drop the first `k` rows, shifting the rest down (queue-style reuse:
+    /// callers rebase their row indices by `k`). Amortized O(live rows).
+    pub fn discard_front(&mut self, k: usize) {
+        debug_assert!(k <= self.rows);
+        let off = k * self.stride;
+        self.words.copy_within(off.., 0);
+        self.words.truncate(self.words.len() - off);
+        self.rows -= k;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u64] {
+        &self.words[i * self.stride..(i + 1) * self.stride]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [u64] {
+        &mut self.words[i * self.stride..(i + 1) * self.stride]
+    }
+
+    #[inline]
+    pub fn set_bit(&mut self, row: usize, bit: usize) {
+        debug_assert!(bit < self.capacity);
+        word_set(self.row_mut(row), bit);
+    }
+
+    #[inline]
+    pub fn clear_bit(&mut self, row: usize, bit: usize) {
+        debug_assert!(bit < self.capacity);
+        word_clear(self.row_mut(row), bit);
+    }
+
+    #[inline]
+    pub fn contains(&self, row: usize, bit: usize) -> bool {
+        debug_assert!(bit < self.capacity);
+        word_contains(self.row(row), bit)
+    }
+}
+
+const EMPTY_SLOT: u32 = u32::MAX;
+
+/// Open-addressing hash table interning [`SetArena`] rows: maps row content
+/// to the row index of its first occurrence. Keys are precomputed 64-bit
+/// hashes ([`hash_words`]) with slice equality on collision — no re-hashing
+/// of whole sets through SipHash, no owned keys.
+#[derive(Clone, Debug, Default)]
+pub struct InternTable {
+    slots: Vec<u32>,
+    hashes: Vec<u64>,
+    mask: usize,
+    items: usize,
+}
+
+impl InternTable {
+    pub fn with_capacity(cap: usize) -> Self {
+        let size = (cap.max(8) * 2).next_power_of_two();
+        InternTable {
+            slots: vec![EMPTY_SLOT; size],
+            hashes: vec![0; size],
+            mask: size - 1,
+            items: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items == 0
+    }
+
+    fn grow(&mut self) {
+        let new_size = (self.slots.len() * 2).max(16);
+        let old_slots = std::mem::replace(&mut self.slots, vec![EMPTY_SLOT; new_size]);
+        let old_hashes = std::mem::replace(&mut self.hashes, vec![0; new_size]);
+        self.mask = new_size - 1;
+        for (slot, h) in old_slots.into_iter().zip(old_hashes) {
+            if slot != EMPTY_SLOT {
+                let mut i = (h as usize) & self.mask;
+                while self.slots[i] != EMPTY_SLOT {
+                    i = (i + 1) & self.mask;
+                }
+                self.slots[i] = slot;
+                self.hashes[i] = h;
+            }
+        }
+    }
+
+    /// Look up a set (given as words) without inserting.
+    pub fn find(&self, hash: u64, words: &[u64], arena: &SetArena) -> Option<u32> {
+        if self.slots.is_empty() {
+            return None;
+        }
+        let mut i = (hash as usize) & self.mask;
+        loop {
+            let s = self.slots[i];
+            if s == EMPTY_SLOT {
+                return None;
+            }
+            if self.hashes[i] == hash && arena.row(s as usize) == words {
+                return Some(s);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Intern the arena's LAST row: if an equal row already exists, pop the
+    /// staged row and return `(existing_id, false)`; otherwise keep it and
+    /// return `(staged_id, true)`. This is the zero-allocation dedup step of
+    /// the lattice BFS.
+    pub fn intern_last(&mut self, arena: &mut SetArena) -> (u32, bool) {
+        if (self.items + 1) * 4 > self.slots.len() * 3 {
+            self.grow();
+        }
+        let staged = (arena.len() - 1) as u32;
+        let hash = hash_words(arena.row(staged as usize));
+        let mut i = (hash as usize) & self.mask;
+        loop {
+            let s = self.slots[i];
+            if s == EMPTY_SLOT {
+                self.slots[i] = staged;
+                self.hashes[i] = hash;
+                self.items += 1;
+                return (staged, true);
+            }
+            if self.hashes[i] == hash
+                && arena.row(s as usize) == arena.row(staged as usize)
+            {
+                arena.pop_last();
+                return (s, false);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+}
+
+/// Dense n×n bit matrix in a single allocation — reachability rows and
+/// similar per-node relations, replacing `Vec<BitSet>`.
+#[derive(Clone, Debug)]
+pub struct BitMatrix {
+    words: Vec<u64>,
+    stride: usize,
+    n: usize,
+}
+
+impl BitMatrix {
+    pub fn new(n: usize) -> Self {
+        let stride = words_for(n);
+        BitMatrix { words: vec![0; stride * n], stride, n }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u64] {
+        &self.words[i * self.stride..(i + 1) * self.stride]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [u64] {
+        &mut self.words[i * self.stride..(i + 1) * self.stride]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize) {
+        debug_assert!(i < self.n && j < self.n);
+        word_set(self.row_mut(i), j);
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        debug_assert!(i < self.n && j < self.n);
+        word_contains(self.row(i), j)
+    }
+
+    /// OR the rows of `members` into `out` (cleared first) — the
+    /// "rebuild a device's reach union" loop of the B&B searches.
+    pub fn union_rows_of(&self, members: impl Iterator<Item = usize>, out: &mut [u64]) {
+        out.fill(0);
+        for u in members {
+            or_into(out, self.row(u));
+        }
+    }
+
+    /// `row(dst) |= row(src)` without allocating.
+    pub fn union_rows(&mut self, dst: usize, src: usize) {
+        if dst == src {
+            return;
+        }
+        let s = self.stride;
+        let (d_slice, s_slice) = if dst < src {
+            let (a, b) = self.words.split_at_mut(src * s);
+            (&mut a[dst * s..dst * s + s], &b[..s])
+        } else {
+            let (a, b) = self.words.split_at_mut(dst * s);
+            (&mut b[..s], &a[src * s..src * s + s])
+        };
+        for (x, y) in d_slice.iter_mut().zip(s_slice) {
+            *x |= *y;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_push_copy_pop() {
+        let mut a = SetArena::new(130);
+        let r0 = a.push_empty();
+        a.set_bit(r0, 0);
+        a.set_bit(r0, 129);
+        let r1 = a.push_copy(r0);
+        a.set_bit(r1, 64);
+        assert!(a.contains(r1, 0) && a.contains(r1, 64) && a.contains(r1, 129));
+        assert!(!a.contains(r0, 64));
+        assert_eq!(popcount(a.row(r1)), 3);
+        assert_eq!(bits(a.row(r1)).collect::<Vec<_>>(), vec![0, 64, 129]);
+        a.pop_last();
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn discard_front_shifts_rows() {
+        let mut a = SetArena::new(70);
+        for i in 0..5 {
+            let r = a.push_empty();
+            a.set_bit(r, i);
+            a.set_bit(r, 64 + (i % 6));
+        }
+        a.discard_front(2);
+        assert_eq!(a.len(), 3);
+        // former rows 2..5 are now rows 0..3
+        for (new, old) in (0..3).zip(2..5) {
+            assert!(a.contains(new, old), "row {new} should hold bit {old}");
+            assert_eq!(popcount(a.row(new)), 2);
+        }
+        a.discard_front(0); // no-op
+        assert_eq!(a.len(), 3);
+        a.discard_front(3);
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn intern_dedups() {
+        let mut a = SetArena::new(100);
+        let mut t = InternTable::with_capacity(4);
+        let r0 = a.push_empty();
+        a.set_bit(r0, 5);
+        assert_eq!(t.intern_last(&mut a), (0, true));
+        // identical content → deduped, staged row popped
+        let r1 = a.push_empty();
+        a.set_bit(r1, 5);
+        assert_eq!(t.intern_last(&mut a), (0, false));
+        assert_eq!(a.len(), 1);
+        // different content → kept
+        let r2 = a.push_empty();
+        a.set_bit(r2, 6);
+        assert_eq!(t.intern_last(&mut a), (1, true));
+        assert_eq!(a.len(), 2);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn intern_grows_past_load_factor() {
+        let mut a = SetArena::new(512);
+        let mut t = InternTable::with_capacity(4);
+        for i in 0..200 {
+            let r = a.push_empty();
+            a.set_bit(r, i);
+            let (id, fresh) = t.intern_last(&mut a);
+            assert!(fresh);
+            assert_eq!(id as usize, i);
+        }
+        // all still findable after growth
+        let mut scratch = vec![0u64; a.stride()];
+        for i in 0..200 {
+            scratch.iter_mut().for_each(|w| *w = 0);
+            word_set(&mut scratch, i);
+            let h = hash_words(&scratch);
+            assert_eq!(t.find(h, &scratch, &a), Some(i as u32));
+        }
+    }
+
+    #[test]
+    fn word_ops() {
+        let mut a = vec![0u64; 2];
+        word_set(&mut a, 3);
+        word_set(&mut a, 70);
+        let mut b = vec![0u64; 2];
+        word_set(&mut b, 70);
+        assert!(intersects(&a, &b));
+        andnot_into(&mut a, &b);
+        assert!(!intersects(&a, &b));
+        assert!(word_contains(&a, 3));
+        or_into(&mut a, &b);
+        assert!(word_contains(&a, 70));
+        and_into(&mut a, &b);
+        assert_eq!(bits(&a).collect::<Vec<_>>(), vec![70]);
+        word_clear(&mut a, 70);
+        assert!(!any(&a));
+    }
+
+    #[test]
+    fn bitmatrix_union_rows_both_directions() {
+        let mut m = BitMatrix::new(200);
+        m.set(0, 7);
+        m.set(3, 150);
+        m.union_rows(0, 3);
+        assert!(m.get(0, 7) && m.get(0, 150));
+        assert!(!m.get(3, 7));
+        m.union_rows(3, 0);
+        assert!(m.get(3, 7));
+        m.union_rows(2, 2); // no-op, must not panic
+        assert!(!m.get(2, 7));
+    }
+
+    #[test]
+    fn hash_matches_bitset_fast_hash() {
+        use crate::util::bitset::BitSet;
+        let s = BitSet::from_iter(100, [1, 64, 99]);
+        assert_eq!(hash_words(s.words()), s.fast_hash());
+    }
+}

@@ -4,6 +4,7 @@
 //! hot loop hashes, compares and walks these sets, so the representation is
 //! a flat `Vec<u64>` with no indirection beyond the one allocation.
 
+use crate::util::arena;
 use std::fmt;
 
 /// A set of `usize` elements in `0..capacity`, stored as 64-bit words.
@@ -20,13 +21,40 @@ impl BitSet {
         BitSet { words: vec![0; capacity.div_ceil(64)], capacity }
     }
 
-    /// Set containing every element in `0..capacity`.
+    /// Set containing every element in `0..capacity`: whole words filled at
+    /// once, with the partial tail word masked.
     pub fn full(capacity: usize) -> Self {
-        let mut s = Self::new(capacity);
-        for i in 0..capacity {
-            s.insert(i);
+        let mut words = vec![!0u64; capacity.div_ceil(64)];
+        let tail = capacity % 64;
+        if tail != 0 {
+            if let Some(last) = words.last_mut() {
+                *last = (1u64 << tail) - 1;
+            }
         }
-        s
+        BitSet { words, capacity }
+    }
+
+    /// Build from raw words (low word first; bits ≥ `capacity` must be 0).
+    pub fn from_words(capacity: usize, words: &[u64]) -> Self {
+        debug_assert_eq!(words.len(), capacity.div_ceil(64));
+        BitSet { words: words.to_vec(), capacity }
+    }
+
+    /// The backing words (low word first) — arena/word-slice interop.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Overwrite content from a word slice of the same stride.
+    pub fn copy_from_words(&mut self, words: &[u64]) {
+        debug_assert_eq!(words.len(), self.words.len());
+        self.words.copy_from_slice(words);
+    }
+
+    /// In-place union with a raw word slice of the same stride.
+    pub fn union_with_words(&mut self, words: &[u64]) {
+        arena::or_into(&mut self.words, words);
     }
 
     /// Build from an iterator of elements.
@@ -74,30 +102,25 @@ impl BitSet {
         self.words.iter().zip(&other.words).all(|(a, b)| a & !b == 0)
     }
 
-    /// In-place union.
+    /// In-place union. (The word loops delegate to `util::arena` so any
+    /// future upgrade there — e.g. explicit SIMD — applies everywhere.)
     pub fn union_with(&mut self, other: &BitSet) {
-        for (a, b) in self.words.iter_mut().zip(&other.words) {
-            *a |= b;
-        }
+        arena::or_into(&mut self.words, &other.words);
     }
 
     /// In-place intersection.
     pub fn intersect_with(&mut self, other: &BitSet) {
-        for (a, b) in self.words.iter_mut().zip(&other.words) {
-            *a &= b;
-        }
+        arena::and_into(&mut self.words, &other.words);
     }
 
     /// In-place difference (`self \ other`).
     pub fn difference_with(&mut self, other: &BitSet) {
-        for (a, b) in self.words.iter_mut().zip(&other.words) {
-            *a &= !b;
-        }
+        arena::andnot_into(&mut self.words, &other.words);
     }
 
     /// `self ∩ other ≠ ∅` without allocating.
     pub fn intersects(&self, other: &BitSet) -> bool {
-        self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+        arena::intersects(&self.words, &other.words)
     }
 
     /// New set `self \ other`.
@@ -109,17 +132,16 @@ impl BitSet {
 
     /// Iterate set elements in increasing order.
     pub fn iter(&self) -> BitSetIter<'_> {
-        BitSetIter { set: self, word_idx: 0, current: self.words.first().copied().unwrap_or(0) }
+        BitSetIter(arena::bits(&self.words))
     }
 
-    /// Stable 64-bit hash (FxHash-style) used to key DP tables without
-    /// re-hashing the whole `Vec` through `std`'s SipHash.
+    /// Stable 64-bit hash used to key DP tables without re-hashing the
+    /// whole `Vec` through `std`'s SipHash. Delegates to
+    /// [`crate::util::arena::hash_words`] so arena rows and `BitSet`s hash
+    /// identically (the intern-table lookups in `graph::ideals` rely on
+    /// this).
     pub fn fast_hash(&self) -> u64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for &w in &self.words {
-            h = (h ^ w).wrapping_mul(0x1000_0000_01b3);
-        }
-        h
+        crate::util::arena::hash_words(&self.words)
     }
 }
 
@@ -129,28 +151,14 @@ impl fmt::Debug for BitSet {
     }
 }
 
-pub struct BitSetIter<'a> {
-    set: &'a BitSet,
-    word_idx: usize,
-    current: u64,
-}
+/// Thin wrapper over the shared word-slice iterator in `util::arena`.
+pub struct BitSetIter<'a>(arena::WordBits<'a>);
 
 impl Iterator for BitSetIter<'_> {
     type Item = usize;
 
     fn next(&mut self) -> Option<usize> {
-        loop {
-            if self.current != 0 {
-                let bit = self.current.trailing_zeros() as usize;
-                self.current &= self.current - 1;
-                return Some(self.word_idx * 64 + bit);
-            }
-            self.word_idx += 1;
-            if self.word_idx >= self.set.words.len() {
-                return None;
-            }
-            self.current = self.set.words[self.word_idx];
-        }
+        self.0.next()
     }
 }
 
@@ -198,6 +206,27 @@ mod tests {
         assert_eq!(f.len(), 65);
         assert!(!f.is_empty());
         assert!(BitSet::new(65).is_empty());
+        // tail word masked: no phantom bits beyond capacity
+        for cap in [1, 63, 64, 65, 127, 128, 200] {
+            let f = BitSet::full(cap);
+            assert_eq!(f.len(), cap, "cap {cap}");
+            assert_eq!(f.iter().collect::<Vec<_>>(), (0..cap).collect::<Vec<_>>());
+            assert_eq!(f, BitSet::from_iter(cap, 0..cap));
+        }
+        assert!(BitSet::full(0).is_empty());
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let s = BitSet::from_iter(130, [0, 64, 129]);
+        let t = BitSet::from_words(130, s.words());
+        assert_eq!(s, t);
+        let mut u = BitSet::new(130);
+        u.union_with_words(s.words());
+        assert_eq!(u, s);
+        let mut v = BitSet::full(130);
+        v.copy_from_words(s.words());
+        assert_eq!(v, s);
     }
 
     #[test]

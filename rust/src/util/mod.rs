@@ -2,8 +2,10 @@
 //! offline build: bitsets, a deterministic PRNG, a JSON parser/writer, a
 //! property-testing harness, and a micro-benchmark timer.
 
+pub mod arena;
 pub mod bench;
 pub mod bitset;
+pub mod par;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -1,0 +1,107 @@
+//! Minimal data-parallel helpers on `std::thread::scope` — the offline
+//! stand-in for `rayon` (this crate builds with no external dependencies;
+//! see `Cargo.toml`). The level-synchronous DP in `algos::dp` hands each
+//! worker a disjoint mutable chunk of the table plus its own scratch, so
+//! plain scoped threads are all the structure we need.
+
+/// Number of worker threads to use: `available_parallelism`, or 1 when the
+/// platform won't say.
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(worker_index, &mut state)` once per element of `states`, each on
+/// its own thread. Blocks until all workers finish. With a single state the
+/// call runs inline — no thread spawn.
+pub fn run_workers<S, F>(states: &mut [S], f: F)
+where
+    S: Send,
+    F: Fn(usize, &mut S) + Sync,
+{
+    if states.len() == 1 {
+        f(0, &mut states[0]);
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (t, state) in states.iter_mut().enumerate() {
+            scope.spawn(move || f(t, state));
+        }
+    });
+}
+
+/// Split `slice` into `parts` near-even contiguous chunks whose lengths are
+/// multiples of `granule` (except possibly the last). Returns fewer chunks
+/// when the slice is short. Used to hand each DP worker whole-row blocks.
+pub fn chunk_granular<'a, T>(
+    mut slice: &'a mut [T],
+    parts: usize,
+    granule: usize,
+) -> Vec<&'a mut [T]> {
+    // a partial tail counts as a row, and per >= 1, so every iteration
+    // consumes at least one element — no spin on short slices
+    let granule = granule.max(1);
+    let rows = slice.len().div_ceil(granule);
+    let per = rows.div_ceil(parts.max(1)).max(1);
+    let mut out = Vec::with_capacity(parts);
+    while !slice.is_empty() {
+        let take = (per * granule).min(slice.len());
+        let (head, rest) = slice.split_at_mut(take);
+        out.push(head);
+        slice = rest;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_cover_all_states() {
+        let mut states: Vec<(usize, u64)> = (0..4).map(|i| (i, 0u64)).collect();
+        run_workers(&mut states, |t, s| {
+            assert_eq!(t, s.0);
+            s.1 = (s.0 as u64 + 1) * 10;
+        });
+        assert_eq!(states.iter().map(|s| s.1).collect::<Vec<_>>(), vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn single_state_runs_inline() {
+        let mut states = [0usize];
+        run_workers(&mut states, |_, s| *s = 7);
+        assert_eq!(states[0], 7);
+    }
+
+    #[test]
+    fn chunking_respects_granule() {
+        let mut data = vec![0u8; 35];
+        let chunks = chunk_granular(&mut data, 4, 5);
+        assert!(chunks.iter().all(|c| c.len() % 5 == 0));
+        assert_eq!(chunks.iter().map(|c| c.len()).sum::<usize>(), 35);
+        // 7 rows over 4 parts → per = 2 rows = 10 elems
+        assert_eq!(chunks[0].len(), 10);
+    }
+
+    #[test]
+    fn chunking_short_and_degenerate_inputs_terminate() {
+        // slice shorter than one granule: a single chunk with everything
+        let mut short = vec![0u8; 3];
+        let chunks = chunk_granular(&mut short, 4, 5);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].len(), 3);
+        // zero granule behaves as granule 1
+        let mut tiny = vec![0u8; 2];
+        let chunks = chunk_granular(&mut tiny, 2, 0);
+        assert_eq!(chunks.iter().map(|c| c.len()).sum::<usize>(), 2);
+        // empty slice: no chunks
+        let mut empty: Vec<u8> = Vec::new();
+        assert!(chunk_granular(&mut empty, 3, 4).is_empty());
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

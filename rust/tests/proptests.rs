@@ -18,9 +18,10 @@ fn prop_fact_5_2_ideal_differences_are_exactly_contiguous_sets() {
         for _ in 0..40 {
             let a = rng.gen_range(lat.len());
             let b = rng.gen_range(lat.len());
-            let (small, big) = (&lat.ideals[a.min(b)], &lat.ideals[a.max(b)]);
-            if small.is_subset(big) {
-                let s = big.difference(small);
+            let small = lat.ideal_bitset(a.min(b));
+            let big = lat.ideal_bitset(a.max(b));
+            if small.is_subset(&big) {
+                let s = big.difference(&small);
                 if !contiguity::is_contiguous(g, &s) {
                     return Err(format!("non-contiguous ideal difference {s:?}"));
                 }
@@ -39,8 +40,9 @@ fn prop_every_ideal_is_downward_closed() {
     check_dag("ideal-closure", 25, 9, |g| {
         let lat = ideals::IdealLattice::enumerate(g, 100_000)
             .map_err(|_| "lattice blowup".to_string())?;
-        for ideal in &lat.ideals {
-            if !ideals::is_ideal(g, ideal) {
+        for id in 0..lat.len() {
+            let ideal = lat.ideal_bitset(id);
+            if !ideals::is_ideal(g, &ideal) {
                 return Err(format!("not downward closed: {ideal:?}"));
             }
         }
@@ -160,6 +162,130 @@ fn prop_latency_at_least_critical_path() {
         let lat = objective::latency(&g, &sc, &p);
         assert!(lat >= lb - 1e-9, "latency {lat} below critical path {lb}");
     }
+}
+
+/// Reference DP over the naive lattice: O(𝓘²) pairwise subset checks,
+/// subgraph costs recomputed from scratch via `acc_load`/`cpu_load`. Slow
+/// but obviously correct — the arena DP must reproduce it exactly.
+fn naive_dp_objective(
+    g: &dnn_partition::graph::OpGraph,
+    sc: &Scenario,
+    naive: &ideals::NaiveLattice,
+) -> Option<f64> {
+    let ni = naive.ideals.len();
+    let (k, l) = (sc.k, sc.l);
+    let slots = (k + 1) * (l + 1);
+    let idx = |i: usize, k_: usize, l_: usize| i * slots + k_ * (l + 1) + l_;
+    let mut dp = vec![f64::INFINITY; ni * slots];
+    for c in dp[..slots].iter_mut() {
+        *c = 0.0;
+    }
+    for i in 1..ni {
+        // proper sub-ideals are strictly smaller, hence earlier in the
+        // cardinality-sorted order
+        for j in 0..i {
+            if !naive.ideals[j].is_subset(&naive.ideals[i]) {
+                continue;
+            }
+            let s = naive.ideals[i].difference(&naive.ideals[j]);
+            if s.is_empty() {
+                continue;
+            }
+            let acc = g.acc_load(&s, sc.mem_cap);
+            let cpu = g.cpu_load(&s);
+            for k_ in 0..=k {
+                for l_ in 0..=l {
+                    let cell = idx(i, k_, l_);
+                    if k_ > 0 {
+                        let cand = dp[idx(j, k_ - 1, l_)].max(acc);
+                        if cand < dp[cell] {
+                            dp[cell] = cand;
+                        }
+                    }
+                    if l_ > 0 {
+                        let cand = dp[idx(j, k_, l_ - 1)].max(cpu);
+                        if cand < dp[cell] {
+                            dp[cell] = cand;
+                        }
+                    }
+                }
+            }
+        }
+        // a device may stay empty
+        for k_ in 0..=k {
+            for l_ in 0..=l {
+                let cell = idx(i, k_, l_);
+                if k_ > 0 && dp[idx(i, k_ - 1, l_)] < dp[cell] {
+                    dp[cell] = dp[idx(i, k_ - 1, l_)];
+                }
+                if l_ > 0 && dp[idx(i, k_, l_ - 1)] < dp[cell] {
+                    dp[cell] = dp[idx(i, k_, l_ - 1)];
+                }
+            }
+        }
+    }
+    let best = dp[idx(ni - 1, k, l)];
+    best.is_finite().then_some(best)
+}
+
+#[test]
+fn prop_arena_dp_matches_naive_reference_dp() {
+    check_dag("arena-dp-vs-naive", 20, 8, |g| {
+        let sc = Scenario::new(2, 1, g.nodes.iter().map(|n| n.mem).sum::<f64>() / 2.0);
+        let lat = ideals::IdealLattice::enumerate(g, 100_000)
+            .map_err(|_| "lattice blowup".to_string())?;
+        let naive = ideals::enumerate_naive(g, 100_000)
+            .map_err(|_| "naive blowup".to_string())?;
+        if lat.len() != naive.ideals.len() {
+            return Err(format!(
+                "ideal counts differ: arena {} vs naive {}",
+                lat.len(),
+                naive.ideals.len()
+            ));
+        }
+        let fast = dp::solve_on_lattice(g, &sc, &lat).ok().map(|(obj, _)| obj);
+        let slow = naive_dp_objective(g, &sc, &naive);
+        match (fast, slow) {
+            (Some(a), Some(b)) if (a - b).abs() < 1e-9 => Ok(()),
+            (None, None) => Ok(()),
+            (a, b) => Err(format!("arena DP {a:?} vs naive DP {b:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_dp_is_deterministic() {
+    // The level-synchronous DP must return bitwise-identical tables for
+    // any thread count: same objective, same reconstructed assignment.
+    check_dag("dp-determinism", 12, 10, |g| {
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let lat = ideals::IdealLattice::enumerate(g, 100_000)
+            .map_err(|_| "lattice blowup".to_string())?;
+        let zeros = vec![0.0; g.n()];
+        let mut results = Vec::new();
+        for opts in [
+            dp::DpOptions { threads: 1, par_threshold: usize::MAX },
+            dp::DpOptions { threads: 2, par_threshold: 1 },
+            dp::DpOptions { threads: 8, par_threshold: 1 },
+        ] {
+            results.push(dp::solve_on_lattice_with_opts(g, &sc, &lat, &zeros, &opts).ok());
+        }
+        for r in &results[1..] {
+            match (&results[0], r) {
+                (Some((a, da)), Some((b, db))) => {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("objectives differ: {a} vs {b}"));
+                    }
+                    if da != db {
+                        return Err("assignments differ across thread counts".into());
+                    }
+                }
+                (None, None) => {}
+                _ => return Err("feasibility differs across thread counts".into()),
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]
