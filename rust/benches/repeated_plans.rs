@@ -1,0 +1,85 @@
+//! PR-2 cache bench: repeated planning through the fingerprint-cached
+//! [`PlannerService`] vs cold per-call analysis — the serving-time
+//! re-planning loop (Moirai-style scenario churn over one model).
+//!
+//! Two measurements per workload:
+//!
+//! * `cold` — every iteration builds a fresh service, so each plan pays
+//!   preprocessing + lattice enumeration + the DP solve;
+//! * `hit`  — one persistent service; each iteration re-plans the same
+//!   `(graph, scenario)` and only pays fingerprinting + cached-solution
+//!   expansion.
+//!
+//! The acceptance bar for ISSUE 2 is ≥ 5× on the hit path. A third row
+//! sweeps degraded scenarios (device loss, halved memory) against the
+//! persistent service to show mixed hit/miss behavior.
+
+use dnn_partition::coordinator::context::SolveOpts;
+use dnn_partition::coordinator::placement::Scenario;
+use dnn_partition::coordinator::planner::Algorithm;
+use dnn_partition::coordinator::service::PlannerService;
+use dnn_partition::util::bench::bench;
+use dnn_partition::workloads::table1_workloads;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("RP_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500),
+    );
+    let opts = SolveOpts::default();
+    let algs = [Algorithm::Dp, Algorithm::Dpl];
+
+    for want in ["BERT-24", "ResNet50", "GNMT"] {
+        let Some(w) = table1_workloads()
+            .into_iter()
+            .find(|w| w.name == want && !w.training
+                && w.granularity == dnn_partition::workloads::Granularity::Layer)
+        else {
+            continue;
+        };
+        let name = w.name.clone();
+
+        let cold = bench(&format!("plan/cold/{name}"), budget, 3, || {
+            let mut svc = PlannerService::new(1);
+            algs.iter()
+                .map(|&a| svc.plan(&w.graph, &w.scenario, a, &opts).unwrap().placement.objective)
+                .sum::<f64>()
+        });
+
+        let mut svc = PlannerService::default();
+        for &a in &algs {
+            svc.plan(&w.graph, &w.scenario, a, &opts).unwrap();
+        }
+        let hit = bench(&format!("plan/hit/{name}"), budget, 3, || {
+            algs.iter()
+                .map(|&a| svc.plan(&w.graph, &w.scenario, a, &opts).unwrap().placement.objective)
+                .sum::<f64>()
+        });
+        let speedup = cold.median.as_secs_f64() / hit.median.as_secs_f64().max(1e-12);
+        println!("plan/speedup/{name}: {speedup:.1}x (cold {:?} -> hit {:?})", cold.median, hit.median);
+
+        // scenario churn: device loss + halved memory, persistent service
+        let scenarios: Vec<Scenario> = vec![
+            w.scenario.clone(),
+            Scenario { k: w.scenario.k.saturating_sub(1).max(1), ..w.scenario.clone() },
+            Scenario { mem_cap: w.scenario.mem_cap / 2.0, ..w.scenario.clone() },
+        ];
+        let mut churn_svc = PlannerService::default();
+        bench(&format!("plan/scenario-churn/{name}"), budget, 3, || {
+            scenarios
+                .iter()
+                .map(|sc| {
+                    churn_svc
+                        .plan(&w.graph, sc, Algorithm::Dp, &opts)
+                        .map(|r| r.placement.objective)
+                        .unwrap_or(f64::NAN)
+                })
+                .sum::<f64>()
+        });
+        println!(
+            "plan/cache-stats/{name}: {} hits / {} misses",
+            churn_svc.hits(),
+            churn_svc.misses()
+        );
+    }
+}

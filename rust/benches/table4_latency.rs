@@ -63,7 +63,7 @@ fn main() {
 
         let dag = |v: f64, viol: f64| {
             if viol > 3.0 {
-                format!("OOM")
+                "OOM".to_string()
             } else if viol > 1.0 {
                 format!("{v:.1}†")
             } else {

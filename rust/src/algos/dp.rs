@@ -36,34 +36,16 @@
 //! small lattices fall back to the sequential path to avoid spawn
 //! overhead; tune with [`DpOptions`].
 
-use super::objective;
+use super::{objective, PlaceError};
 use crate::coordinator::placement::{Device, Placement, Scenario};
 use crate::graph::ideals::{IdealId, IdealLattice, IdealRef, DEFAULT_IDEAL_CAP};
 use crate::graph::{contract, subdivide, NodeKind, OpGraph};
 use crate::util::par;
 
-/// Error cases for the DP front end.
-#[derive(Debug)]
-pub enum DpError {
-    /// Too many ideals — fall back to [`super::dpl`].
-    TooManyIdeals(usize),
-    /// No feasible split (memory/unsupported ops).
-    Infeasible,
-    /// Graph (after contraction) is not a DAG.
-    NotADag,
-}
-
-impl std::fmt::Display for DpError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            DpError::TooManyIdeals(n) => write!(f, "ideal lattice exceeds cap ({n}+ ideals)"),
-            DpError::Infeasible => write!(f, "no feasible contiguous split"),
-            DpError::NotADag => write!(f, "graph is not a DAG after preprocessing"),
-        }
-    }
-}
-
-impl std::error::Error for DpError {}
+/// Deprecated alias: the DP family's error type is now the crate-wide
+/// [`PlaceError`] (variants are accessible through the alias, so existing
+/// `DpError::Infeasible`-style matches keep compiling).
+pub type DpError = PlaceError;
 
 /// Execution knobs for the level-synchronous DP.
 #[derive(Clone, Debug)]
@@ -84,6 +66,11 @@ impl Default for DpOptions {
 
 /// Solve throughput maximization on `g` (inference *or* training graph)
 /// with full App.-B preprocessing. Returns an optimal contiguous placement.
+///
+/// Deprecated thin wrapper: recomputes the preprocessing and lattice per
+/// call. Prefer [`crate::coordinator::planner::DpSolver`] over a shared
+/// [`crate::coordinator::context::ProblemCtx`], which caches both (and the
+/// solution itself).
 pub fn solve(g: &OpGraph, sc: &Scenario) -> Result<Placement, DpError> {
     solve_with_cap(g, sc, DEFAULT_IDEAL_CAP)
 }
@@ -716,6 +703,199 @@ fn remove_node(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared incremental carve walk (used by replication.rs / hierarchy.rs)
+// ---------------------------------------------------------------------------
+
+/// Incrementally-maintained costs of the carved set `S = I \ I'` during a
+/// DFS descent of the ideal lattice — the same `O(deg v)`-per-step
+/// bookkeeping [`process_ideal`] uses, packaged for the Appendix-C DPs
+/// (replication, hierarchy), which previously recomputed every segment's
+/// costs from scratch per `(I, I')` pair. Gradient comm is expected to be
+/// folded into node `comm` by those callers (their proxy graphs), so no
+/// backward-direction tracking is carried here.
+#[derive(Debug)]
+pub(crate) struct Carve {
+    /// `Σ p_cpu` over members with finite CPU cost.
+    pub cpu: f64,
+    /// `Σ p_acc` over members with finite accelerator cost.
+    pub compute: f64,
+    /// `Σ mem` over members.
+    pub mem: f64,
+    /// External-producer in-communication of `S` (each producer once).
+    pub comm_in: f64,
+    /// Out-communication of `S` (members with a successor outside `S`).
+    pub comm_out: f64,
+    /// Members with `p_cpu = ∞` (counted, not summed — see the NaN note in
+    /// the module docs).
+    pub inf_cpu: u32,
+    /// Members with `p_acc = ∞`.
+    pub inf_acc: u32,
+    /// Members of `S` in DFS-addition order (the current descent path).
+    pub members: Vec<usize>,
+}
+
+impl Carve {
+    /// `cpu(S)` with unsupported-op propagation.
+    pub fn cpu_load(&self) -> f64 {
+        if self.inf_cpu == 0 {
+            self.cpu
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// The §5.1.1 sequential accelerator load `acc(S)` = in-comm + compute
+    /// + out-comm, `∞` when over `mem_cap` or accelerator-unsupported
+    /// (matches [`OpGraph::acc_load`] on the same set).
+    pub fn acc_load(&self, mem_cap: f64) -> f64 {
+        if self.inf_acc != 0 || self.mem > mem_cap {
+            f64::INFINITY
+        } else {
+            self.compute + self.comm_in + self.comm_out
+        }
+    }
+}
+
+/// Reusable DFS state for [`CarveWalker::walk`]; allocate once per solve.
+pub(crate) struct CarveWalker {
+    visited: Vec<u32>,
+    stamp: u32,
+    in_cnt: Vec<u32>,
+    stack: Vec<(u32, u32, u32)>,
+    carve: Carve,
+}
+
+impl CarveWalker {
+    pub fn new(num_ideals: usize, n: usize) -> Self {
+        CarveWalker {
+            visited: vec![0; num_ideals],
+            stamp: 0,
+            in_cnt: vec![0; n],
+            stack: Vec::with_capacity(64),
+            carve: Carve {
+                cpu: 0.0,
+                compute: 0.0,
+                mem: 0.0,
+                comm_in: 0.0,
+                comm_out: 0.0,
+                inf_cpu: 0,
+                inf_acc: 0,
+                members: Vec::with_capacity(64),
+            },
+        }
+    }
+
+    /// DFS down the lattice from ideal `i`, visiting `i` itself first
+    /// (`S = ∅`) and then every proper sub-ideal `I' ⊂ I` exactly once,
+    /// with [`Carve`] holding the incremental costs of `S = I \ I'` at each
+    /// visit. `f(sub_id, &carve)` returns `false` to prune the entire
+    /// lattice subtree below that sub-ideal (sound whenever the caller's
+    /// bound grows monotonically with `S`, e.g. compute or memory sums).
+    pub fn walk<F>(&mut self, g: &OpGraph, lattice: &IdealLattice, i: IdealId, mut f: F)
+    where
+        F: FnMut(IdealId, &Carve) -> bool,
+    {
+        let CarveWalker { visited, stamp, in_cnt, stack, carve } = self;
+        // Fresh sums every walk: interleaved f64 add/undo is not exactly
+        // invertible (fl(fl(a+b)-b) ≠ a in general), so the residue of one
+        // walk must not become the next walk's S = ∅ baseline — over the
+        // `for i in 1..ni` loops of the Appendix-C DPs that drift would
+        // compound into every segment cost. (`in_cnt` is exact integer
+        // bookkeeping and provably returns to zero; see the debug_assert.)
+        carve.cpu = 0.0;
+        carve.compute = 0.0;
+        carve.mem = 0.0;
+        carve.comm_in = 0.0;
+        carve.comm_out = 0.0;
+        carve.inf_cpu = 0;
+        carve.inf_acc = 0;
+        carve.members.clear();
+        *stamp = stamp.wrapping_add(1);
+        if *stamp == 0 {
+            visited.iter_mut().for_each(|v| *v = 0);
+            *stamp = 1;
+        }
+        let stamp = *stamp;
+        visited[i] = stamp;
+        if !f(i, carve) {
+            return;
+        }
+        stack.clear();
+        stack.push((i as u32, 0, u32::MAX));
+        let full = lattice.ideal(i);
+
+        while let Some(top) = stack.last_mut() {
+            let (cur, cursor) = (top.0 as usize, top.1 as usize);
+            let subs = lattice.subs(cur);
+            if cursor < subs.len() {
+                top.1 += 1;
+                let (sub32, v32) = subs[cursor];
+                let (sub, v) = (sub32 as usize, v32 as usize);
+                if visited[sub] == stamp {
+                    continue;
+                }
+                visited[sub] = stamp;
+                add_node(
+                    g,
+                    v,
+                    full,
+                    in_cnt,
+                    &mut carve.cpu,
+                    &mut carve.compute,
+                    &mut carve.mem,
+                    &mut carve.comm_in,
+                    &mut carve.comm_out,
+                    &mut carve.inf_acc,
+                    &mut carve.inf_cpu,
+                );
+                carve.members.push(v);
+                if f(sub, carve) {
+                    stack.push((sub32, 0, v32));
+                } else {
+                    // prune: undo v and skip the whole subtree below sub
+                    remove_node(
+                        g,
+                        v,
+                        full,
+                        in_cnt,
+                        &mut carve.cpu,
+                        &mut carve.compute,
+                        &mut carve.mem,
+                        &mut carve.comm_in,
+                        &mut carve.comm_out,
+                        &mut carve.inf_acc,
+                        &mut carve.inf_cpu,
+                    );
+                    carve.members.pop();
+                }
+            } else {
+                let added = top.2;
+                stack.pop();
+                if added != u32::MAX {
+                    let v = added as usize;
+                    remove_node(
+                        g,
+                        v,
+                        full,
+                        in_cnt,
+                        &mut carve.cpu,
+                        &mut carve.compute,
+                        &mut carve.mem,
+                        &mut carve.comm_in,
+                        &mut carve.comm_out,
+                        &mut carve.inf_acc,
+                        &mut carve.inf_cpu,
+                    );
+                    carve.members.pop();
+                }
+            }
+        }
+        debug_assert!(carve.members.is_empty());
+        debug_assert!(in_cnt.iter().all(|&c| c == 0));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -906,6 +1086,38 @@ mod tests {
         p2.validate(&g2, &sc, true).unwrap();
         let bf2 = brute_force_contiguous(&g2, &sc).unwrap();
         assert!((p2.objective - bf2).abs() < 1e-9, "dp={} bf={bf2}", p2.objective);
+    }
+
+    #[test]
+    fn carve_walker_costs_match_direct_recompute() {
+        use crate::util::proptest::random_dag;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xCA77);
+        for _ in 0..10 {
+            let g = random_dag(&mut rng, 8, 0.3);
+            let lattice = IdealLattice::enumerate(&g, usize::MAX).unwrap();
+            let mut walker = CarveWalker::new(lattice.len(), g.n());
+            for i in 0..lattice.len() {
+                walker.walk(&g, &lattice, i, |sub, c| {
+                    let s = lattice.difference_bitset(i, sub);
+                    assert_eq!(c.members.len(), s.len(), "member count for ({i},{sub})");
+                    let cpu = g.cpu_load(&s);
+                    let acc = g.acc_load(&s, f64::INFINITY);
+                    assert!(
+                        (c.cpu_load() - cpu).abs() < 1e-9,
+                        "cpu({i},{sub}): walker {} vs direct {cpu}",
+                        c.cpu_load()
+                    );
+                    assert!(
+                        (c.acc_load(f64::INFINITY) - acc).abs() < 1e-9,
+                        "acc({i},{sub}): walker {} vs direct {acc}",
+                        c.acc_load(f64::INFINITY)
+                    );
+                    assert!((c.mem - g.mem_of(&s)).abs() < 1e-9);
+                    true
+                });
+            }
+        }
     }
 
     #[test]

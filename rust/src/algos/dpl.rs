@@ -17,14 +17,17 @@ use crate::graph::topo;
 use crate::graph::OpGraph;
 
 /// Solve throughput maximization with the linearization heuristic.
+///
+/// Deprecated thin wrapper: recomputes the preprocessing per call. Prefer
+/// [`crate::coordinator::planner::DplSolver`] over a shared
+/// [`crate::coordinator::context::ProblemCtx`], which caches it.
 pub fn solve(g: &OpGraph, sc: &Scenario) -> Result<Placement, DpError> {
     let prepared = Prepared::build(g)?;
     let order = topo::dfs_linearization(&prepared.dp_graph);
-    let lin = topo::add_linearization_edges(&prepared.dp_graph, &order);
-    // Lattice over the linearized graph (|V|+1 prefixes); costs over the
-    // ORIGINAL dp_graph edges.
-    let lattice = IdealLattice::enumerate(&lin, prepared.dp_graph.n() + 2)
-        .map_err(|_| DpError::TooManyIdeals(prepared.dp_graph.n() + 2))?;
+    // Prefix lattice along the linearization (|V|+1 ideals — what
+    // enumerating the edge-augmented graph would yield, built directly);
+    // costs stay on the ORIGINAL dp_graph edges.
+    let lattice = IdealLattice::from_prefixes(prepared.dp_graph.n(), &order);
     debug_assert_eq!(lattice.len(), prepared.dp_graph.n() + 1);
     let (obj, dense) =
         dp::solve_on_lattice_with(&prepared.dp_graph, sc, &lattice, &prepared.bw_comm)?;

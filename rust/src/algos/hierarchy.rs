@@ -12,11 +12,11 @@
 //! with boundary communication billed at the inter-cluster rate. This costs
 //! an extra `O(𝓘)` factor — the segment table — exactly as stated in C.3.
 
-use super::dp::{self, DpError, Prepared};
+use super::dp::{self, CarveWalker, DpError, Prepared};
+use crate::coordinator::context::ProblemCtx;
 use crate::coordinator::placement::{Device, Placement, Scenario};
 use crate::graph::ideals::IdealLattice;
 use crate::graph::OpGraph;
-use crate::util::bitset::BitSet;
 
 /// Hierarchical deployment description.
 #[derive(Clone, Debug)]
@@ -40,6 +40,10 @@ pub struct HierPlacement {
 
 /// Solve the two-level throughput problem. The graph must be an inference
 /// graph or preprocessable by [`Prepared::build`].
+///
+/// Deprecated thin wrapper: recomputes the preprocessing and lattice per
+/// call. Prefer [`solve_ctx`] over a shared
+/// [`crate::coordinator::context::ProblemCtx`].
 pub fn solve(g: &OpGraph, hier: &Hierarchy, cap: usize) -> Result<HierPlacement, DpError> {
     let prepared = Prepared::build(g)?;
     // fold gradient comm into node comm (proxy; see replication.rs)
@@ -47,10 +51,25 @@ pub fn solve(g: &OpGraph, hier: &Hierarchy, cap: usize) -> Result<HierPlacement,
     for (v, node) in proxy.nodes.iter_mut().enumerate() {
         node.comm += prepared.bw_comm[v];
     }
-    let gg = &proxy;
-    let lattice = IdealLattice::enumerate(gg, cap).map_err(DpError::TooManyIdeals)?;
+    let lattice = IdealLattice::enumerate(&proxy, cap).map_err(DpError::TooManyIdeals)?;
+    solve_on_lattice(&proxy, hier, &lattice, &prepared)
+}
+
+/// [`solve`] against a shared analysis context (proxy graph, lattice and
+/// preprocessing all come from the cache).
+pub fn solve_ctx(ctx: &ProblemCtx, hier: &Hierarchy) -> Result<HierPlacement, DpError> {
+    solve_on_lattice(ctx.proxy()?, hier, ctx.lattice()?, ctx.prepared()?)
+}
+
+fn solve_on_lattice(
+    gg: &OpGraph,
+    hier: &Hierarchy,
+    lattice: &IdealLattice,
+    prepared: &Prepared,
+) -> Result<HierPlacement, DpError> {
     let ni = lattice.len();
     let nc = hier.num_clusters;
+    let apc = hier.accs_per_cluster.max(1);
 
     // inner[segment(I', I)] solved lazily via the flat DP on the induced
     // subgraph with inter-cluster comm billed on the boundary.
@@ -62,48 +81,54 @@ pub fn solve(g: &OpGraph, hier: &Hierarchy, cap: usize) -> Result<HierPlacement,
         outer[idx(0, c)] = 0.0;
     }
 
-    let mut seg_cache: std::collections::HashMap<(u32, u32), f64> =
-        std::collections::HashMap::new();
-
-    let mut visited = vec![0u32; ni];
-    let mut stack: Vec<usize> = Vec::new();
+    // Incremental DFS over nested sub-ideals (the dp.rs walk): the
+    // segment's memory, compute and boundary-comm sums are maintained in
+    // O(deg v) per lattice step instead of being recomputed per (I', I)
+    // pair, and the expensive inner DP only runs for segments that could
+    // still improve a cell — `compute(S)/apc` and `mem(S)` both grow
+    // monotonically along the descent, so subtrees whose bound already
+    // exceeds every improvable cell (or that can no longer fit the
+    // cluster's memory) are pruned wholesale.
+    let mut walker = CarveWalker::new(ni, gg.n());
     for i in 1..ni {
-        // enumerate sub-ideals of i (stamped visited array — no per-ideal
-        // allocation)
-        let stamp = i as u32;
-        stack.clear();
-        stack.push(i);
-        visited[i] = stamp;
-        while let Some(cur) = stack.pop() {
-            for &(sub, _) in lattice.subs(cur) {
-                let sub = sub as usize;
-                if visited[sub] != stamp {
-                    visited[sub] = stamp;
-                    stack.push(sub);
-                }
+        let (head, tail) = outer.split_at_mut(i * (nc + 1));
+        let cells = &mut tail[..nc + 1];
+        let parents = &mut parent[i * (nc + 1)..(i + 1) * (nc + 1)];
+        walker.walk(gg, lattice, i, |cur, carve| {
+            if cur == i {
+                return true; // S = ∅ handled by the unused-cluster pass
             }
-            let s = lattice.difference_bitset(i, cur);
-            if s.is_empty() {
-                continue;
+            let eff_compute = if carve.inf_acc == 0 { carve.compute } else { f64::INFINITY };
+            let lb = if carve.mem > apc as f64 * hier.mem_cap {
+                // the segment can never fit the cluster again (mem grows)
+                f64::INFINITY
+            } else {
+                eff_compute / apc as f64
+            };
+            let worst = cells[1..].iter().copied().fold(0.0, f64::max);
+            if lb >= worst && worst.is_finite() {
+                return false; // prune the subtree below this sub-ideal
             }
-            let seg_load = *seg_cache.entry((cur as u32, i as u32)).or_insert_with(|| {
-                segment_load(gg, hier, &s)
-            });
+            // inter-cluster boundary at the slow rate (incremental sums),
+            // inner split via the flat DP on the members; each (cur, i)
+            // pair is visited exactly once per walk (stamped visited
+            // array), so there is nothing to memoize across pairs
+            let boundary = (carve.comm_in + carve.comm_out) * hier.inter_factor;
+            let seg_load = inner_split(gg, hier, &carve.members).0 + boundary;
             for c in 1..=nc {
-                let cand = outer[idx(cur, c - 1)].max(seg_load);
-                let cell = idx(i, c);
-                if cand < outer[cell] {
-                    outer[cell] = cand;
-                    parent[cell] = cur as u32;
+                let cand = head[idx(cur, c - 1)].max(seg_load);
+                if cand < cells[c] {
+                    cells[c] = cand;
+                    parents[c] = cur as u32;
                 }
             }
-        }
+            true
+        });
         // allow unused clusters
         for c in 1..=nc {
-            let cell = idx(i, c);
-            if outer[idx(i, c - 1)] < outer[cell] {
-                outer[cell] = outer[idx(i, c - 1)];
-                parent[cell] = i as u32;
+            if cells[c - 1] < cells[c] {
+                cells[c] = cells[c - 1];
+                parents[c] = i as u32;
             }
         }
     }
@@ -126,8 +151,9 @@ pub fn solve(g: &OpGraph, hier: &Hierarchy, cap: usize) -> Result<HierPlacement,
         let s = lattice.difference_bitset(i, sub);
         if !s.is_empty() {
             let cluster = c - 1;
-            let (_, inner_assign) = inner_split(gg, hier, &s);
-            for (local, v) in s.iter().enumerate() {
+            let members: Vec<usize> = s.iter().collect();
+            let (_, inner_assign) = inner_split(gg, hier, &members);
+            for (local, &v) in members.iter().enumerate() {
                 cluster_of_prepared[v] = cluster;
                 let slot = inner_assign[local].min(hier.accs_per_cluster - 1);
                 assignment_prepared[v] =
@@ -149,23 +175,19 @@ pub fn solve(g: &OpGraph, hier: &Hierarchy, cap: usize) -> Result<HierPlacement,
     })
 }
 
-/// Load of a segment assigned to one cluster: split it over the cluster's
-/// accelerators with the flat DP (intra-cluster comm at base rate), then
-/// add the inter-cluster boundary transfers at the slow rate.
-fn segment_load(g: &OpGraph, hier: &Hierarchy, seg: &BitSet) -> f64 {
-    let (load, _) = inner_split(g, hier, seg);
-    load
-}
-
-fn inner_split(g: &OpGraph, hier: &Hierarchy, seg: &BitSet) -> (f64, Vec<usize>) {
-    // induced subgraph on seg (local ids in iteration order)
-    let members: Vec<usize> = seg.iter().collect();
+/// Split a segment over one cluster's accelerators with the flat DP
+/// (intra-cluster comm at the base rate). Returns the inner max-load and a
+/// per-member slot assignment (parallel to `members`); the caller bills
+/// the inter-cluster boundary transfers separately (it maintains them
+/// incrementally along the lattice walk).
+fn inner_split(g: &OpGraph, hier: &Hierarchy, members: &[usize]) -> (f64, Vec<usize>) {
+    // induced subgraph on the members (local ids in the given order)
     let mut local_id = std::collections::HashMap::new();
     for (li, &v) in members.iter().enumerate() {
         local_id.insert(v, li);
     }
     let mut sub = OpGraph::new();
-    for &v in &members {
+    for &v in members {
         sub.add_node(g.nodes[v].clone());
     }
     for (u, v) in g.edges() {
@@ -179,23 +201,7 @@ fn inner_split(g: &OpGraph, hier: &Hierarchy, seg: &BitSet) -> (f64, Vec<usize>)
         mem_cap: hier.mem_cap,
         ..Default::default()
     };
-    let inner = dp::solve(&sub, &sc);
-    // inter-cluster boundary comm (billed to this cluster's bottleneck
-    // conservatively: added to the inner max-load)
-    let mut boundary = 0.0;
-    let mut paid_in = BitSet::new(g.n());
-    for &v in &members {
-        for &u in &g.preds[v] {
-            if !seg.contains(u) && !paid_in.contains(u) {
-                paid_in.insert(u);
-                boundary += g.nodes[u].comm * hier.inter_factor;
-            }
-        }
-        if g.succs[v].iter().any(|&w| !seg.contains(w)) {
-            boundary += g.nodes[v].comm * hier.inter_factor;
-        }
-    }
-    match inner {
+    match dp::solve(&sub, &sc) {
         Ok(p) => {
             let assign: Vec<usize> = p
                 .assignment
@@ -205,7 +211,7 @@ fn inner_split(g: &OpGraph, hier: &Hierarchy, seg: &BitSet) -> (f64, Vec<usize>)
                     Device::Cpu(_) => 0,
                 })
                 .collect();
-            (p.objective + boundary, assign)
+            (p.objective, assign)
         }
         Err(_) => (f64::INFINITY, vec![0; members.len()]),
     }

@@ -20,9 +20,10 @@
 //!   bound, warm starts from caller-supplied baselines, and a single-node-
 //!   move polish on the exact latency objective.
 
-use super::objective;
+use super::{objective, PlaceError};
+use crate::coordinator::context::ProblemCtx;
 use crate::coordinator::placement::{Device, Placement, Scenario};
-use crate::graph::{topo, OpGraph};
+use crate::graph::OpGraph;
 use crate::solver::lp::{Lp, Sense};
 use crate::solver::milp::{Milp, SolveStatus};
 use crate::util::arena::BitMatrix;
@@ -67,16 +68,33 @@ pub struct LatencyIpResult {
 
 /// Solve latency minimization. Device model: `Cpu(0)` is the pooled CPU
 /// (index 0 of Fig. 3), `Acc(0..k)` the accelerators.
+///
+/// Deprecated thin wrapper: builds a one-shot [`ProblemCtx`] and forwards
+/// to [`solve_ctx`]. (This engine historically returned `Result<_,
+/// String>`; it now speaks the crate-wide [`PlaceError`] like every other
+/// solver.)
 pub fn solve(
     g: &OpGraph,
     sc: &Scenario,
     opts: &LatencyIpOptions,
-) -> Result<LatencyIpResult, String> {
-    if !topo::is_dag(g) {
-        return Err("latency IP requires a DAG".into());
-    }
+) -> Result<LatencyIpResult, PlaceError> {
+    let ctx = ProblemCtx::new(g.clone(), sc.clone());
+    solve_ctx(&ctx, opts)
+}
+
+/// [`solve`] against a shared analysis context: the search borrows the
+/// original graph's topological order and reachability rows from `ctx`.
+pub fn solve_ctx(
+    ctx: &ProblemCtx,
+    opts: &LatencyIpOptions,
+) -> Result<LatencyIpResult, PlaceError> {
+    let g = ctx.graph();
+    let sc = ctx.scenario();
+    let order = ctx.orig_order()?; // also the DAG guard
+    let reach = ctx.orig_reach()?;
+    let co_reach = ctx.orig_co_reach()?;
     let start = Instant::now();
-    let mut search = LatSearch::new(g, sc, opts.clone(), start);
+    let mut search = LatSearch::new(g, sc, opts.clone(), start, order, reach, co_reach);
 
     // Warm starts: caller-provided placements (greedy, max-load DP, …).
     for p in &opts.warm_starts {
@@ -94,7 +112,7 @@ pub fn solve(
     }
     search.run();
 
-    let (obj, dense) = search.incumbent.clone().ok_or("no feasible placement found")?;
+    let (obj, dense) = search.incumbent.clone().ok_or(PlaceError::NoIncumbent)?;
     let assignment: Vec<Device> = dense
         .iter()
         .map(|&d| if d == 0 { Device::Cpu(0) } else { Device::Acc(d - 1) })
@@ -125,10 +143,11 @@ struct LatSearch<'a> {
     g: &'a OpGraph,
     sc: &'a Scenario,
     opts: LatencyIpOptions,
-    order: Vec<usize>,
-    /// Reachability rows in one flat allocation.
-    reach: BitMatrix,
-    co_reach: BitMatrix,
+    order: &'a [usize],
+    /// Reachability rows in one flat allocation — borrowed from the
+    /// shared context.
+    reach: &'a BitMatrix,
+    co_reach: &'a BitMatrix,
     /// longest min-cost path from v to a sink (suffix critical path)
     tail: Vec<f64>,
     acc_mem: Vec<f64>,
@@ -153,10 +172,15 @@ struct LatSearch<'a> {
 }
 
 impl<'a> LatSearch<'a> {
-    fn new(g: &'a OpGraph, sc: &'a Scenario, opts: LatencyIpOptions, start: Instant) -> Self {
-        let order = topo::toposort(g).unwrap();
-        let reach = topo::reachability_matrix(g);
-        let co_reach = topo::co_reachability_matrix(g);
+    fn new(
+        g: &'a OpGraph,
+        sc: &'a Scenario,
+        opts: LatencyIpOptions,
+        start: Instant,
+        order: &'a [usize],
+        reach: &'a BitMatrix,
+        co_reach: &'a BitMatrix,
+    ) -> Self {
         let stride = reach.stride();
         let min_cost: Vec<f64> = g.nodes.iter().map(|n| n.p_cpu.min(n.p_acc)).collect();
         let mut tail = vec![0.0; g.n()];
@@ -343,7 +367,7 @@ impl<'a> LatSearch<'a> {
                 self.g.n(),
                 dense.iter().enumerate().filter(|&(_, &d)| d == i + 1).map(|(v, _)| v),
             );
-            if !crate::graph::contiguity::is_contiguous(self.g, &set) {
+            if !crate::graph::contiguity::is_contiguous_in(self.reach, &set) {
                 return false;
             }
         }

@@ -16,10 +16,11 @@
 //!   paper's workload sizes and natively supports the non-contiguous
 //!   setting of §5.2 by dropping the contiguity check.
 
-use super::dp::{self, Prepared};
-use super::objective;
+use super::dp::DpError;
+use super::{objective, PlaceError};
+use crate::coordinator::context::ProblemCtx;
 use crate::coordinator::placement::{Device, Placement, Scenario};
-use crate::graph::{topo, OpGraph};
+use crate::graph::OpGraph;
 use crate::solver::lp::{Lp, Sense};
 use crate::solver::milp::{Milp, SolveStatus};
 use crate::util::arena::BitMatrix;
@@ -65,33 +66,47 @@ pub struct IpResult {
 }
 
 /// Solve the Fig.-6 IP with the specialized branch-and-bound.
-pub fn solve(g: &OpGraph, sc: &Scenario, opts: &IpOptions) -> Result<IpResult, dp::DpError> {
-    let prepared = Prepared::build(g)?;
-    // search cost model: fold the gradient comm into node comm (the
-    // PipeDream-style proxy); the final incumbent is re-scored on the
-    // original graph by `Prepared::expand`
-    let mut proxy = prepared.dp_graph.clone();
-    for (v, node) in proxy.nodes.iter_mut().enumerate() {
-        node.comm += prepared.bw_comm[v];
-    }
-    let gg = &proxy;
+///
+/// Deprecated thin wrapper: builds a one-shot [`ProblemCtx`] (warm-start
+/// lattice capped at 20k ideals, as before) and forwards to [`solve_ctx`].
+/// Prefer [`solve_ctx`] over a shared context — the preprocessing,
+/// reachability matrices and DP warm start are then computed once per
+/// `(graph, scenario)` instead of per call.
+pub fn solve(g: &OpGraph, sc: &Scenario, opts: &IpOptions) -> Result<IpResult, DpError> {
+    let ctx = ProblemCtx::with_cap(g.clone(), sc.clone(), 20_000);
+    solve_ctx(&ctx, opts)
+}
 
-    // Warm start from the DP (or DPL when the lattice is too big): any
-    // optimal contiguous split is also feasible for the non-contiguous IP.
-    // The lattice cap keeps the warm start cheap relative to the IP budget.
-    let warm = dp::solve_with_cap(g, sc, 20_000)
-        .or_else(|_| super::dpl::solve(g, sc))
-        .ok()
-        .map(|p| (p.objective, prepared_assignment(&prepared, &p, sc)));
+/// [`solve`] against a shared analysis context: the search reads the
+/// preprocessed proxy graph, topological order, reachability rows and the
+/// DP/DPL warm start from `ctx` (each computed at most once per context).
+pub fn solve_ctx(ctx: &ProblemCtx, opts: &IpOptions) -> Result<IpResult, PlaceError> {
+    let g = ctx.graph();
+    let sc = ctx.scenario();
+    let prepared = ctx.prepared()?;
+    // search cost model: dp_graph with the gradient comm folded into node
+    // comm (the PipeDream-style proxy); the final incumbent is re-scored
+    // on the original graph by `Prepared::expand`
+    let gg = ctx.proxy()?;
+    let order = ctx.dp_order()?;
+    let reach = ctx.dp_reach()?;
+    let co_reach = ctx.dp_co_reach()?;
 
-    let mut search = Search::new(gg, sc, opts.clone());
+    // Warm start (any optimal contiguous split is feasible for both IP
+    // variants): the context's memoized cheap warm start — the cached DP
+    // solution when affordable, a 20k-capped DP / DPL otherwise (see
+    // `ProblemCtx::warm_solution`). Computed once per context, so IP-only
+    // replanning hits the cache too.
+    let warm = ctx.warm_solution().ok().cloned();
+
+    let mut search = Search::new(gg, sc, opts.clone(), order, reach, co_reach);
     if let Some((obj, dense)) = warm {
         search.incumbent = Some((obj, dense));
         search.incumbent_at = Duration::ZERO;
     }
     search.run();
 
-    let (obj, dense) = search.incumbent.clone().ok_or(dp::DpError::Infeasible)?;
+    let (obj, dense) = search.incumbent.clone().ok_or(PlaceError::Infeasible)?;
     let mut placement = prepared.expand(g, sc, obj, &dense);
     placement.algorithm = if opts.contiguous {
         "IP (contiguous)".into()
@@ -108,16 +123,6 @@ pub fn solve(g: &OpGraph, sc: &Scenario, opts: &IpOptions) -> Result<IpResult, d
         incumbent_at: search.incumbent_at,
         placement,
     })
-}
-
-/// Translate a placement on the original graph into a dense assignment on
-/// the prepared graph.
-fn prepared_assignment(prep: &Prepared, p: &Placement, sc: &Scenario) -> Vec<usize> {
-    let mut dense = vec![0usize; prep.dp_graph.n()];
-    for (v, &c) in prep.map.iter().enumerate() {
-        dense[c] = p.assignment[v].index(sc.k);
-    }
-    dense
 }
 
 // ---------------------------------------------------------------------------
@@ -140,11 +145,11 @@ struct Search<'a> {
     g: &'a OpGraph,
     sc: &'a Scenario,
     opts: IpOptions,
-    order: Vec<usize>,
+    order: &'a [usize],
     /// Reachability rows in one flat allocation (`reach.row(u)` =
-    /// descendants of u).
-    reach: BitMatrix,
-    co_reach: BitMatrix,
+    /// descendants of u) — borrowed from the shared context.
+    reach: &'a BitMatrix,
+    co_reach: &'a BitMatrix,
     /// min(p_acc, p_cpu) suffix sums along `order` for the work bound.
     suffix_min_work: Vec<f64>,
     devices: Vec<DeviceState>,
@@ -168,10 +173,14 @@ struct Search<'a> {
 }
 
 impl<'a> Search<'a> {
-    fn new(g: &'a OpGraph, sc: &'a Scenario, opts: IpOptions) -> Self {
-        let order = topo::toposort(g).expect("IP requires a DAG");
-        let reach = topo::reachability_matrix(g);
-        let co_reach = topo::co_reachability_matrix(g);
+    fn new(
+        g: &'a OpGraph,
+        sc: &'a Scenario,
+        opts: IpOptions,
+        order: &'a [usize],
+        reach: &'a BitMatrix,
+        co_reach: &'a BitMatrix,
+    ) -> Self {
         let stride = reach.stride();
         let nd = sc.k + sc.l;
         let mut suffix = vec![0.0; order.len() + 1];
@@ -475,7 +484,7 @@ impl<'a> Search<'a> {
         if self.opts.contiguous {
             for d in 0..self.devices.len() {
                 let set = p.set_of(Device::from_index(d, self.sc.k), self.g.n());
-                if !crate::graph::contiguity::is_contiguous(self.g, &set) {
+                if !crate::graph::contiguity::is_contiguous_in(self.reach, &set) {
                     return f64::INFINITY;
                 }
             }
@@ -634,6 +643,7 @@ pub fn build_model(g: &OpGraph, sc: &Scenario, contiguous: bool) -> ThroughputMo
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algos::dp;
     use crate::solver::milp::MilpOptions;
     use crate::util::proptest::random_dag;
     use crate::util::rng::Rng;

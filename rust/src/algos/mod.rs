@@ -19,3 +19,46 @@ pub mod ip_latency;
 pub mod ip_throughput;
 pub mod objective;
 pub mod replication;
+
+/// The one error vocabulary shared by every optimizer and baseline.
+///
+/// Historically the DP family returned its own `DpError` while the latency
+/// IP returned bare `String`s, forcing the planner façade into per-arm
+/// `map_err` plumbing; all solvers now speak `PlaceError` (the old
+/// `dp::DpError` name survives as a type alias for source compatibility).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlaceError {
+    /// The ideal lattice exceeds the enumeration cap — fall back to
+    /// [`dpl`] (the count is the number of ideals seen before aborting).
+    TooManyIdeals(usize),
+    /// No feasible placement exists (memory caps / unsupported ops).
+    Infeasible,
+    /// The graph is not a DAG (possibly only after preprocessing).
+    NotADag,
+    /// The search produced no incumbent within its budget (it may or may
+    /// not be feasible — unlike [`PlaceError::Infeasible`], nothing was
+    /// proven).
+    NoIncumbent,
+    /// The expert baseline was requested for a workload with no expert
+    /// placement rule (operator-granularity graphs, §6).
+    MissingExpertRule,
+    /// Anything else (kept for forward compatibility of the `Solver` trait).
+    Unsupported(String),
+}
+
+impl std::fmt::Display for PlaceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlaceError::TooManyIdeals(n) => {
+                write!(f, "ideal lattice exceeds cap ({n}+ ideals)")
+            }
+            PlaceError::Infeasible => write!(f, "no feasible placement"),
+            PlaceError::NotADag => write!(f, "graph is not a DAG after preprocessing"),
+            PlaceError::NoIncumbent => write!(f, "no feasible placement found within budget"),
+            PlaceError::MissingExpertRule => write!(f, "no expert rule for this workload"),
+            PlaceError::Unsupported(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for PlaceError {}

@@ -13,14 +13,17 @@
 //! scenario bandwidth). This costs an extra `O(k)` factor over the plain
 //! DP, exactly as the paper states.
 //!
-//! The implementation runs on the ideal lattice like [`super::dp`] but
-//! recomputes subgraph costs per pair (no incremental trick), so it is
-//! intended for layer-granularity graphs — the setting PipeDream replicates
-//! in practice.
+//! The implementation runs on the ideal lattice like [`super::dp`] and —
+//! since PR 2 — reuses the DP's incremental DFS walk
+//! ([`super::dp::CarveWalker`]): subgraph costs are maintained in `O(deg
+//! v)` per lattice step with undo on backtrack instead of being recomputed
+//! from scratch per `(I, I')` pair, with a monotone
+//! `min(cpu(S), compute(S)/k)` bound pruning useless lattice subtrees.
 
-use super::dp::{DpError, Prepared};
+use super::dp::{CarveWalker, DpError, Prepared};
+use crate::coordinator::context::ProblemCtx;
 use crate::coordinator::placement::{CommModel, Device, Placement, Scenario};
-use crate::graph::ideals::{IdealLattice, IdealId};
+use crate::graph::ideals::{IdealId, IdealLattice};
 use crate::graph::OpGraph;
 use crate::util::bitset::BitSet;
 
@@ -50,11 +53,16 @@ impl ReplicatedPlacement {
 
 /// Effective per-sample load of a subgraph replicated over `r` accelerators.
 pub fn replicated_load(g: &OpGraph, sc: &Scenario, set: &BitSet, r: usize) -> f64 {
-    let base = g.acc_load(set, sc.mem_cap);
+    replicated_load_parts(g.acc_load(set, sc.mem_cap), g.mem_of(set), sc, r)
+}
+
+/// Effective per-sample load from precomputed set sums (the incremental
+/// form of [`replicated_load`]): `base` = sequential `acc(S)`, `weights` =
+/// `Σ m_v` over `S`.
+fn replicated_load_parts(base: f64, weights: f64, sc: &Scenario, r: usize) -> f64 {
     if !base.is_finite() || r == 0 {
         return f64::INFINITY;
     }
-    let weights: f64 = g.mem_of(set);
     let sync = (r as f64 - 1.0) * weights / (r as f64 * sc.bandwidth);
     let work = base / r as f64;
     match sc.comm_model {
@@ -64,6 +72,10 @@ pub fn replicated_load(g: &OpGraph, sc: &Scenario, set: &BitSet, r: usize) -> f6
 }
 
 /// Run the replication DP (contiguous stages, each on 1..k replicas).
+///
+/// Deprecated thin wrapper: recomputes the preprocessing and lattice per
+/// call. Prefer [`solve_ctx`] over a shared
+/// [`crate::coordinator::context::ProblemCtx`].
 pub fn solve(g: &OpGraph, sc: &Scenario, cap: usize) -> Result<ReplicatedPlacement, DpError> {
     let prepared = Prepared::build(g)?;
     // fold the gradient comm into node comm (PipeDream-style proxy; the
@@ -72,8 +84,22 @@ pub fn solve(g: &OpGraph, sc: &Scenario, cap: usize) -> Result<ReplicatedPlaceme
     for (v, node) in proxy.nodes.iter_mut().enumerate() {
         node.comm += prepared.bw_comm[v];
     }
-    let gg = &proxy;
-    let lattice = IdealLattice::enumerate(gg, cap).map_err(DpError::TooManyIdeals)?;
+    let lattice = IdealLattice::enumerate(&proxy, cap).map_err(DpError::TooManyIdeals)?;
+    solve_on_lattice(&proxy, sc, &lattice, &prepared)
+}
+
+/// [`solve`] against a shared analysis context (proxy graph, lattice and
+/// preprocessing all come from the cache).
+pub fn solve_ctx(ctx: &ProblemCtx) -> Result<ReplicatedPlacement, DpError> {
+    solve_on_lattice(ctx.proxy()?, ctx.scenario(), ctx.lattice()?, ctx.prepared()?)
+}
+
+fn solve_on_lattice(
+    gg: &OpGraph,
+    sc: &Scenario,
+    lattice: &IdealLattice,
+    prepared: &Prepared,
+) -> Result<ReplicatedPlacement, DpError> {
     let (k, l) = (sc.k, sc.l);
     let slots = (k + 1) * (l + 1);
     let ni = lattice.len();
@@ -88,51 +114,57 @@ pub fn solve(g: &OpGraph, sc: &Scenario, cap: usize) -> Result<ReplicatedPlaceme
         }
     }
 
-    let mut visited = vec![0u32; ni];
-    let mut stack: Vec<usize> = Vec::new();
+    // Incremental DFS over nested sub-ideals (the dp.rs walk): subgraph
+    // sums are maintained in O(deg v) per lattice step; `min(cpu(S),
+    // compute(S)/k)` lower-bounds every candidate from any superset of S,
+    // both terms grow monotonically, so a subtree whose bound can no
+    // longer improve any still-improvable cell of ideal `i` is pruned.
+    let mut walker = CarveWalker::new(ni, gg.n());
     for i in 1..ni {
-        // enumerate sub-ideals by DFS over immediate subs (stamped visited
-        // array — no per-ideal allocation)
-        let stamp = i as u32;
-        stack.clear();
-        stack.push(i);
-        visited[i] = stamp;
-        while let Some(cur) = stack.pop() {
-            for &(sub, _) in lattice.subs(cur) {
-                let sub = sub as usize;
-                if visited[sub] != stamp {
-                    visited[sub] = stamp;
-                    stack.push(sub);
+        let (head, tail) = dp.split_at_mut(i * slots);
+        let cells = &mut tail[..slots];
+        let parents = &mut parent[i * slots..(i + 1) * slots];
+        walker.walk(gg, lattice, i, |cur, carve| {
+            if cur == i {
+                // S = ∅: the dp[∅][k'][l'] = 0 seeds already cover unused
+                // devices, so the empty carve relaxes nothing
+                return true;
+            }
+            let cpu_load = carve.cpu_load();
+            let acc_base = carve.acc_load(sc.mem_cap);
+            {
+                let eff_compute =
+                    if carve.inf_acc == 0 { carve.compute } else { f64::INFINITY };
+                let lb = cpu_load.min(eff_compute / k.max(1) as f64);
+                let worst = cells[1..].iter().copied().fold(0.0, f64::max);
+                if lb >= worst && worst.is_finite() {
+                    return false; // prune the subtree below this sub-ideal
                 }
             }
-            let s = lattice.difference_bitset(i, cur);
-            if s.is_empty() && cur != i {
-                continue;
-            }
-            let cpu_load = gg.cpu_load(&s);
             for k_ in 0..=k {
                 for l_ in 0..=l {
-                    let cell = idx(i, k_, l_);
+                    let cell = k_ * (l + 1) + l_;
                     // CPU branch
                     if l_ > 0 {
-                        let cand = dp[idx(cur, k_, l_ - 1)].max(cpu_load);
-                        if cand < dp[cell] {
-                            dp[cell] = cand;
-                            parent[cell] = (cur as u32, 0);
+                        let cand = head[idx(cur, k_, l_ - 1)].max(cpu_load);
+                        if cand < cells[cell] {
+                            cells[cell] = cand;
+                            parents[cell] = (cur as u32, 0);
                         }
                     }
                     // accelerator branch with r replicas
                     for r in 1..=k_ {
-                        let load = replicated_load(gg, sc, &s, r);
-                        let cand = dp[idx(cur, k_ - r, l_)].max(load);
-                        if cand < dp[cell] {
-                            dp[cell] = cand;
-                            parent[cell] = (cur as u32, r as u8);
+                        let load = replicated_load_parts(acc_base, carve.mem, sc, r);
+                        let cand = head[idx(cur, k_ - r, l_)].max(load);
+                        if cand < cells[cell] {
+                            cells[cell] = cand;
+                            parents[cell] = (cur as u32, r as u8);
                         }
                     }
                 }
             }
-        }
+            true
+        });
     }
 
     let final_cell = idx(lattice.full_id(), k, l);

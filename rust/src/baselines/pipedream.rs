@@ -33,7 +33,29 @@ pub fn linearize_by_contraction(g: &OpGraph) -> Vec<usize> {
     for v in 0..n {
         by_level.entry(level[v]).or_default().push(v);
     }
-    let reach = topo::reachability_matrix(g);
+    // Only reachability TO the cut candidates (the sole node of a level)
+    // is ever queried, so build an n × |candidates| table instead of the
+    // full n × n matrix: one reverse-topological pass of word ORs.
+    let cands: Vec<usize> =
+        by_level.values().filter(|ns| ns.len() == 1).map(|ns| ns[0]).collect();
+    let mut cand_idx = vec![usize::MAX; n];
+    for (ci, &c) in cands.iter().enumerate() {
+        cand_idx[c] = ci;
+    }
+    let stride = crate::util::arena::words_for(cands.len().max(1));
+    let mut rc = vec![0u64; n * stride];
+    for &u in order.iter().rev() {
+        for &v in &g.succs[u] {
+            for w in 0..stride {
+                let x = rc[v * stride + w];
+                rc[u * stride + w] |= x;
+            }
+        }
+        if cand_idx[u] != usize::MAX {
+            rc[u * stride + cand_idx[u] / 64] |= 1u64 << (cand_idx[u] % 64);
+        }
+    }
+    let reaches = |u: usize, ci: usize| rc[u * stride + ci / 64] >> (ci % 64) & 1 == 1;
     let mut group_of = vec![usize::MAX; n];
     let mut next_group = 0usize;
     let mut open: Vec<usize> = Vec::new(); // nodes in the current region
@@ -41,7 +63,7 @@ pub fn linearize_by_contraction(g: &OpGraph) -> Vec<usize> {
         let is_cut = nodes.len() == 1 && {
             let c = nodes[0];
             // all open nodes must reach c (so the region converges here)
-            open.iter().all(|&u| reach.get(u, c))
+            open.iter().all(|&u| reaches(u, cand_idx[c]))
         };
         if is_cut && !open.is_empty() {
             // close the region (open nodes form one group), cut starts new

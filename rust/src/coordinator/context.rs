@@ -1,0 +1,495 @@
+//! Shared per-`(graph, scenario)` analysis cache and the [`Solver`] trait.
+//!
+//! Every algorithm in this crate consumes the same structural artifacts —
+//! the App.-B preprocessed DP graph, its topological order, the
+//! reachability/co-reachability [`BitMatrix`] rows, and the ideal lattice —
+//! yet before this module each `solve()` recomputed them from scratch. A
+//! [`ProblemCtx`] owns one `(graph, scenario)` pair and lazily computes and
+//! memoizes each artifact on first use (thread-safe via [`OnceLock`]), so
+//! planning all of [`crate::coordinator::planner::Algorithm::ALL_THROUGHPUT`]
+//! builds each artifact exactly once, and re-planning against a cached
+//! context (see [`crate::coordinator::service::PlannerService`]) pays only
+//! the solver cost — for the deterministic DP/DPL solvers, not even that
+//! (their solutions are cached too).
+//!
+//! Errors are memoized alongside values: a lattice that blows the ideal cap
+//! is not re-enumerated on the next call.
+//!
+//! [`Solver`] is the uniform planning interface: every algorithm and
+//! baseline is a `Solver` over `(&ProblemCtx, &SolveOpts)`, which turns the
+//! old 10-arm planner match into a registry of boxed solvers.
+
+use crate::algos::dp::{self, Prepared};
+use crate::algos::hierarchy::Hierarchy;
+use crate::algos::PlaceError;
+use crate::baselines::expert::ExpertStyle;
+use crate::coordinator::placement::{CommModel, Placement, Scenario, TrainSchedule};
+use crate::graph::ideals::{IdealLattice, DEFAULT_IDEAL_CAP};
+use crate::graph::{topo, NodeId, OpGraph};
+use crate::util::arena::BitMatrix;
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// Planner outcome: a placement + run metadata for the tables.
+pub struct PlanResult {
+    pub placement: Placement,
+    pub runtime: Duration,
+    /// solver-found-incumbent time (IP engines)
+    pub incumbent_at: Option<Duration>,
+    pub gap: Option<f64>,
+    pub note: String,
+}
+
+impl PlanResult {
+    /// Result of a solver with no proof state (everything but the IPs).
+    pub fn basic(placement: Placement, runtime: Duration) -> PlanResult {
+        PlanResult { placement, runtime, incumbent_at: None, gap: None, note: String::new() }
+    }
+}
+
+/// Per-call knobs shared by every [`Solver`]. Defaults reproduce the
+/// planner façade's historical behavior bit-for-bit (same baseline seeds,
+/// same IP budget shape).
+#[derive(Clone, Debug)]
+pub struct SolveOpts {
+    /// Time budget for the IP branch-and-bound engines.
+    pub ip_budget: Duration,
+    /// Stop the IPs once the proven gap is below this (paper uses 1%).
+    pub gap_target: f64,
+    /// Expert rule for the expert baseline (from the workload; layer
+    /// graphs only).
+    pub expert: Option<ExpertStyle>,
+    /// Cluster topology for the hierarchy solver; `None` = an even
+    /// two-cluster split of the scenario's accelerators.
+    pub hierarchy: Option<Hierarchy>,
+    /// Local-search restarts.
+    pub ls_restarts: usize,
+    /// Local-search seed.
+    pub ls_seed: u64,
+    /// Scotch-like partitioner seed.
+    pub scotch_seed: u64,
+}
+
+impl Default for SolveOpts {
+    fn default() -> Self {
+        SolveOpts {
+            ip_budget: Duration::from_secs(20),
+            gap_target: 0.01,
+            expert: None,
+            hierarchy: None,
+            ls_restarts: 10,
+            ls_seed: 0xC0FFEE,
+            scotch_seed: 0x5C07C4,
+        }
+    }
+}
+
+/// The uniform planning interface implemented by all seven algorithms and
+/// all five baselines. Implementations read shared artifacts from the
+/// context instead of recomputing them.
+pub trait Solver: Send + Sync {
+    /// Canonical registry/CLI name ("dp", "ip-contiguous", …).
+    fn name(&self) -> &'static str;
+
+    fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError>;
+}
+
+type Cached<T> = OnceLock<Result<T, PlaceError>>;
+
+/// Lazily computed, memoized analysis artifacts of one `(graph, scenario)`
+/// pair. Cheap to create (two clones); every artifact is built on first
+/// use and shared by reference afterwards. `Send + Sync`: contexts can be
+/// shared across planning threads.
+pub struct ProblemCtx {
+    graph: OpGraph,
+    scenario: Scenario,
+    ideal_cap: usize,
+    fingerprint: u64,
+    /// App.-B preprocessing (subdivide, fw/bw merge, colocation contraction).
+    prepared: Cached<Prepared>,
+    /// `dp_graph` with the gradient comm folded into node `comm` — the
+    /// PipeDream-style proxy cost model the IPs and Appendix-C DPs search.
+    proxy: Cached<OpGraph>,
+    /// Ideal lattice of `dp_graph`, capped at `ideal_cap`.
+    lattice: Cached<IdealLattice>,
+    /// The DPL prefix lattice (`|V|+1` ideals along a DFS linearization of
+    /// `dp_graph`) — built directly from the order, no enumeration.
+    lin_lattice: Cached<IdealLattice>,
+    /// Topological order of `dp_graph`.
+    dp_order: Cached<Vec<NodeId>>,
+    /// Reachability rows of `dp_graph` (valid for `proxy` too — same edges).
+    dp_reach: Cached<BitMatrix>,
+    dp_co_reach: Cached<BitMatrix>,
+    /// Original-graph artifacts (the latency IP searches the raw graph).
+    orig_order: Cached<Vec<NodeId>>,
+    orig_reach: Cached<BitMatrix>,
+    orig_co_reach: Cached<BitMatrix>,
+    /// Cached deterministic solutions on `dp_graph` (objective, dense
+    /// assignment): reused as the solvers' outputs and as IP warm starts.
+    dp_solution: Cached<(f64, Vec<usize>)>,
+    dpl_solution: Cached<(f64, Vec<usize>)>,
+    /// Cheap throughput warm start for the IPs (see
+    /// [`ProblemCtx::warm_solution`]).
+    warm_solution: Cached<(f64, Vec<usize>)>,
+}
+
+impl ProblemCtx {
+    /// Context with the default ideal cap ([`DEFAULT_IDEAL_CAP`]).
+    pub fn new(graph: OpGraph, scenario: Scenario) -> ProblemCtx {
+        Self::with_cap(graph, scenario, DEFAULT_IDEAL_CAP)
+    }
+
+    /// Context with an explicit lattice enumeration cap.
+    pub fn with_cap(graph: OpGraph, scenario: Scenario, ideal_cap: usize) -> ProblemCtx {
+        let fingerprint = fingerprint(&graph, &scenario);
+        ProblemCtx {
+            graph,
+            scenario,
+            ideal_cap,
+            fingerprint,
+            prepared: OnceLock::new(),
+            proxy: OnceLock::new(),
+            lattice: OnceLock::new(),
+            lin_lattice: OnceLock::new(),
+            dp_order: OnceLock::new(),
+            dp_reach: OnceLock::new(),
+            dp_co_reach: OnceLock::new(),
+            orig_order: OnceLock::new(),
+            orig_reach: OnceLock::new(),
+            orig_co_reach: OnceLock::new(),
+            dp_solution: OnceLock::new(),
+            dpl_solution: OnceLock::new(),
+            warm_solution: OnceLock::new(),
+        }
+    }
+
+    pub fn graph(&self) -> &OpGraph {
+        &self.graph
+    }
+
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    pub fn ideal_cap(&self) -> usize {
+        self.ideal_cap
+    }
+
+    /// Content hash of `(graph, scenario)` — the cache key under which
+    /// [`crate::coordinator::service::PlannerService`] stores this context.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    fn cached<'a, T>(
+        cell: &'a Cached<T>,
+        init: impl FnOnce() -> Result<T, PlaceError>,
+    ) -> Result<&'a T, PlaceError> {
+        cell.get_or_init(init).as_ref().map_err(Clone::clone)
+    }
+
+    /// App.-B preprocessed problem (see [`Prepared`]).
+    pub fn prepared(&self) -> Result<&Prepared, PlaceError> {
+        Self::cached(&self.prepared, || Prepared::build(&self.graph))
+    }
+
+    /// `dp_graph` with gradient comm folded into node comm (zero fold for
+    /// inference graphs) — the search cost model of the IPs and the
+    /// Appendix-C DPs.
+    pub fn proxy(&self) -> Result<&OpGraph, PlaceError> {
+        Self::cached(&self.proxy, || {
+            let prepared = self.prepared()?;
+            let mut proxy = prepared.dp_graph.clone();
+            for (v, node) in proxy.nodes.iter_mut().enumerate() {
+                node.comm += prepared.bw_comm[v];
+            }
+            Ok(proxy)
+        })
+    }
+
+    /// The lattice only if an earlier call already built (or failed to
+    /// build) it — never triggers enumeration itself. Used by the IP warm
+    /// start to piggyback on a DP plan without paying full-cap enumeration
+    /// on its own.
+    pub fn lattice_if_built(&self) -> Option<Result<&IdealLattice, PlaceError>> {
+        self.lattice.get().map(|r| r.as_ref().map_err(Clone::clone))
+    }
+
+    /// The ideal lattice of `dp_graph`, enumerated once per context.
+    pub fn lattice(&self) -> Result<&IdealLattice, PlaceError> {
+        Self::cached(&self.lattice, || {
+            let prepared = self.prepared()?;
+            IdealLattice::enumerate(&prepared.dp_graph, self.ideal_cap)
+                .map_err(PlaceError::TooManyIdeals)
+        })
+    }
+
+    /// The DPL prefix lattice over a DFS linearization of `dp_graph`.
+    pub fn lin_lattice(&self) -> Result<&IdealLattice, PlaceError> {
+        Self::cached(&self.lin_lattice, || {
+            let prepared = self.prepared()?;
+            let order = topo::dfs_linearization(&prepared.dp_graph);
+            Ok(IdealLattice::from_prefixes(prepared.dp_graph.n(), &order))
+        })
+    }
+
+    /// Topological order of `dp_graph`.
+    pub fn dp_order(&self) -> Result<&[NodeId], PlaceError> {
+        Self::cached(&self.dp_order, || {
+            let prepared = self.prepared()?;
+            topo::toposort(&prepared.dp_graph).ok_or(PlaceError::NotADag)
+        })
+        .map(Vec::as_slice)
+    }
+
+    /// Reachability rows of `dp_graph` (descendants per row).
+    pub fn dp_reach(&self) -> Result<&BitMatrix, PlaceError> {
+        Self::cached(&self.dp_reach, || {
+            self.dp_order()?; // DAG guard
+            Ok(topo::reachability_matrix(&self.prepared()?.dp_graph))
+        })
+    }
+
+    /// Co-reachability rows of `dp_graph` (ancestors per row).
+    pub fn dp_co_reach(&self) -> Result<&BitMatrix, PlaceError> {
+        Self::cached(&self.dp_co_reach, || {
+            self.dp_order()?;
+            Ok(topo::co_reachability_matrix(&self.prepared()?.dp_graph))
+        })
+    }
+
+    /// Topological order of the *original* graph.
+    pub fn orig_order(&self) -> Result<&[NodeId], PlaceError> {
+        Self::cached(&self.orig_order, || {
+            topo::toposort(&self.graph).ok_or(PlaceError::NotADag)
+        })
+        .map(Vec::as_slice)
+    }
+
+    /// Reachability rows of the original graph.
+    pub fn orig_reach(&self) -> Result<&BitMatrix, PlaceError> {
+        Self::cached(&self.orig_reach, || {
+            self.orig_order()?;
+            Ok(topo::reachability_matrix(&self.graph))
+        })
+    }
+
+    /// Co-reachability rows of the original graph.
+    pub fn orig_co_reach(&self) -> Result<&BitMatrix, PlaceError> {
+        Self::cached(&self.orig_co_reach, || {
+            self.orig_order()?;
+            Ok(topo::co_reachability_matrix(&self.graph))
+        })
+    }
+
+    /// The exact throughput DP's `(objective, dense assignment)` on
+    /// `dp_graph` — deterministic for a given context (bitwise, any thread
+    /// count), so it is computed once and shared (DP solver output, IP
+    /// warm start, serving re-plans).
+    pub fn dp_solution(&self) -> Result<&(f64, Vec<usize>), PlaceError> {
+        Self::cached(&self.dp_solution, || {
+            let prepared = self.prepared()?;
+            let lattice = self.lattice()?;
+            dp::solve_on_lattice_with(
+                &prepared.dp_graph,
+                &self.scenario,
+                lattice,
+                &prepared.bw_comm,
+            )
+        })
+    }
+
+    /// A cheap throughput warm start for the IP engines: the cached DP
+    /// solution when that is affordable (the context's lattice is already
+    /// built, or its cap is at most the historical 20k warm-start bound),
+    /// otherwise a LOCAL 20k-capped DP with DPL fallback — never the
+    /// context's full-cap enumeration just to warm up a time-budgeted
+    /// search. Memoized, so IP-only replanning pays it once per context.
+    pub fn warm_solution(&self) -> Result<&(f64, Vec<usize>), PlaceError> {
+        const WARM_IDEAL_CAP: usize = 20_000;
+        Self::cached(&self.warm_solution, || {
+            if self.ideal_cap <= WARM_IDEAL_CAP || self.lattice.get().is_some() {
+                return self
+                    .dp_solution()
+                    .or_else(|_| self.dpl_solution())
+                    .map(Clone::clone);
+            }
+            let prepared = self.prepared()?;
+            if let Ok(lat) = IdealLattice::enumerate(&prepared.dp_graph, WARM_IDEAL_CAP) {
+                if let Ok(sol) = dp::solve_on_lattice_with(
+                    &prepared.dp_graph,
+                    &self.scenario,
+                    &lat,
+                    &prepared.bw_comm,
+                ) {
+                    return Ok(sol);
+                }
+            }
+            self.dpl_solution().map(Clone::clone)
+        })
+    }
+
+    /// The DPL heuristic's `(objective, dense assignment)` on `dp_graph`.
+    pub fn dpl_solution(&self) -> Result<&(f64, Vec<usize>), PlaceError> {
+        Self::cached(&self.dpl_solution, || {
+            let prepared = self.prepared()?;
+            let lattice = self.lin_lattice()?;
+            dp::solve_on_lattice_with(
+                &prepared.dp_graph,
+                &self.scenario,
+                lattice,
+                &prepared.bw_comm,
+            )
+        })
+    }
+}
+
+/// 64-bit FNV-1a content fingerprint of a `(graph, scenario)` pair: node
+/// names, all four cost fields, colocation classes, kinds, fw partners,
+/// edges, per-edge costs, and every scenario field. Two pairs with equal
+/// fingerprints are treated as the same planning problem by
+/// [`crate::coordinator::service::PlannerService`].
+pub fn fingerprint(g: &OpGraph, sc: &Scenario) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(g.n() as u64);
+    for node in &g.nodes {
+        h.bytes(node.name.as_bytes());
+        h.f64(node.p_cpu);
+        h.f64(node.p_acc);
+        h.f64(node.mem);
+        h.f64(node.comm);
+        h.u64(node.color_class.map_or(0, |c| c as u64 + 1));
+        h.u64(match node.kind {
+            crate::graph::NodeKind::Forward => 0,
+            crate::graph::NodeKind::Backward => 1,
+        });
+        h.u64(node.fw_partner.map_or(0, |p| p as u64 + 1));
+    }
+    for (u, v) in g.edges() {
+        h.u64(u as u64);
+        h.u64(v as u64);
+    }
+    for (&(u, v), &c) in &g.edge_costs {
+        h.u64(u as u64);
+        h.u64(v as u64);
+        h.f64(c);
+    }
+    h.u64(sc.k as u64);
+    h.u64(sc.l as u64);
+    h.f64(sc.mem_cap);
+    h.u64(match sc.comm_model {
+        CommModel::Sequential => 0,
+        CommModel::Overlap => 1,
+        CommModel::FullDuplex => 2,
+    });
+    h.u64(match sc.train_schedule {
+        TrainSchedule::PipeDream => 0,
+        TrainSchedule::GPipe => 1,
+    });
+    h.f64(sc.bandwidth);
+    h.0
+}
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.0 = (self.0 ^ x).wrapping_mul(0x1000_0000_01b3);
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.u64(x as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Node;
+    use crate::util::counters;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(9.0).acc(1.0).mem(1.0).comm(0.2));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn artifacts_are_built_once_and_shared() {
+        let ctx = ProblemCtx::new(chain(6), Scenario::new(2, 1, f64::INFINITY));
+        let e0 = counters::enumerate_calls();
+        let r0 = counters::reachability_calls();
+        let lat1 = ctx.lattice().unwrap() as *const IdealLattice;
+        let lat2 = ctx.lattice().unwrap() as *const IdealLattice;
+        assert_eq!(lat1, lat2, "lattice must be memoized, not rebuilt");
+        assert_eq!(counters::enumerate_calls() - e0, 1);
+        ctx.dp_reach().unwrap();
+        ctx.dp_reach().unwrap();
+        assert_eq!(counters::reachability_calls() - r0, 1);
+        // lin lattice comes from prefixes — no further enumerate calls
+        ctx.lin_lattice().unwrap();
+        assert_eq!(counters::enumerate_calls() - e0, 1);
+    }
+
+    #[test]
+    fn errors_are_memoized() {
+        // a 10-node antichain has 1024 ideals; cap 10 must fail, once
+        let mut g = OpGraph::new();
+        for i in 0..10 {
+            g.add_node(Node::new(format!("a{i}")));
+        }
+        let ctx = ProblemCtx::with_cap(g, Scenario::new(2, 1, f64::INFINITY), 10);
+        let e0 = counters::enumerate_calls();
+        assert!(matches!(ctx.lattice(), Err(PlaceError::TooManyIdeals(_))));
+        assert!(matches!(ctx.lattice(), Err(PlaceError::TooManyIdeals(_))));
+        assert_eq!(counters::enumerate_calls() - e0, 1, "failed enumerate must be cached");
+    }
+
+    #[test]
+    fn dp_solution_matches_free_function() {
+        let g = chain(6);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let ctx = ProblemCtx::new(g.clone(), sc.clone());
+        let (obj, _) = ctx.dp_solution().unwrap();
+        let free = dp::solve(&g, &sc).unwrap();
+        assert!((obj - free.objective).abs() < 1e-9, "ctx {obj} vs free {}", free.objective);
+    }
+
+    #[test]
+    fn fingerprint_sensitivity() {
+        let g = chain(5);
+        let sc = Scenario::new(2, 1, 16.0);
+        let base = fingerprint(&g, &sc);
+        assert_eq!(base, fingerprint(&g.clone(), &sc.clone()), "deterministic");
+        // scenario changes
+        assert_ne!(base, fingerprint(&g, &Scenario::new(3, 1, 16.0)));
+        assert_ne!(base, fingerprint(&g, &Scenario::new(2, 1, 8.0)));
+        // cost change
+        let mut g2 = g.clone();
+        g2.nodes[3].p_acc += 0.5;
+        assert_ne!(base, fingerprint(&g2, &sc));
+        // edge change
+        let mut g3 = g.clone();
+        g3.add_edge(0, 4);
+        assert_ne!(base, fingerprint(&g3, &sc));
+        // name change (expert rules key on names)
+        let mut g4 = g.clone();
+        g4.nodes[0].name = "other".into();
+        assert_ne!(base, fingerprint(&g4, &sc));
+    }
+}

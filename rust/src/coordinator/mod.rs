@@ -1,8 +1,15 @@
 //! The coordinator: glues workloads → optimizers → placements → deployment.
 //!
 //! [`placement`] defines the shared [`placement::Scenario`] /
-//! [`placement::Placement`] vocabulary; [`planner`] is the one-call façade
-//! (`plan(workload, algorithm)`) used by the CLI, examples and benches.
+//! [`placement::Placement`] vocabulary; [`context`] holds the shared
+//! per-`(graph, scenario)` analysis cache ([`context::ProblemCtx`]) and the
+//! [`context::Solver`] trait every algorithm implements; [`planner`] is the
+//! registry + one-call façade (`plan(workload, algorithm)`) used by the
+//! CLI, examples and benches; [`service`] is the fingerprint-keyed LRU
+//! ([`service::PlannerService`]) that makes serving-time re-planning run at
+//! cache-hit cost.
 
+pub mod context;
 pub mod placement;
 pub mod planner;
+pub mod service;

@@ -1,12 +1,25 @@
-//! One-call planning façade over every algorithm and baseline, returning
-//! uniformly shaped results for tables and the CLI.
+//! One-call planning façade over every algorithm and baseline.
+//!
+//! [`Algorithm`] is the CLI surface; each variant resolves to a boxed
+//! [`Solver`] (the registry), so planning is uniformly
+//! `alg.solver().solve(&ctx, &opts)` — the old hand-written 10-arm match
+//! with per-arm error plumbing is gone. [`plan`] remains as the historical
+//! one-shot entry point (it builds a throwaway [`ProblemCtx`]); callers
+//! that re-plan should go through
+//! [`crate::coordinator::service::PlannerService`] to reuse the analysis.
 
-use crate::algos::{dp, dpl, ip_latency, ip_throughput, objective};
+use crate::algos::hierarchy::Hierarchy;
+use crate::algos::{hierarchy, ip_latency, ip_throughput, objective, replication, PlaceError};
 use crate::baselines::{expert, greedy, local_search, pipedream, scotch_like};
+use crate::coordinator::context::{ProblemCtx, SolveOpts, Solver};
 use crate::coordinator::placement::{Placement, Scenario};
 use crate::graph::OpGraph;
 use crate::workloads::Workload;
 use std::time::{Duration, Instant};
+
+// `PlanResult` moved to `context` with the `Solver` trait; re-exported here
+// so `planner::PlanResult` keeps resolving for existing callers.
+pub use crate::coordinator::context::PlanResult;
 
 /// Algorithm selector (CLI surface).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,24 +34,26 @@ pub enum Algorithm {
     Scotch,
     Greedy,
     IpLatency,
+    Replication,
+    Hierarchy,
 }
 
 impl Algorithm {
-    pub fn parse(s: &str) -> Option<Algorithm> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "dp" => Algorithm::Dp,
-            "dpl" => Algorithm::Dpl,
-            "ip" | "ip-contiguous" => Algorithm::IpContiguous,
-            "ip-noncontiguous" | "ipnc" => Algorithm::IpNonContiguous,
-            "expert" => Algorithm::Expert,
-            "local-search" | "ls" => Algorithm::LocalSearch,
-            "pipedream" => Algorithm::PipeDream,
-            "scotch" => Algorithm::Scotch,
-            "greedy" => Algorithm::Greedy,
-            "ip-latency" => Algorithm::IpLatency,
-            _ => return None,
-        })
-    }
+    /// Every registered algorithm and baseline.
+    pub const ALL: [Algorithm; 12] = [
+        Algorithm::Dp,
+        Algorithm::Dpl,
+        Algorithm::IpContiguous,
+        Algorithm::IpNonContiguous,
+        Algorithm::Expert,
+        Algorithm::LocalSearch,
+        Algorithm::PipeDream,
+        Algorithm::Scotch,
+        Algorithm::Greedy,
+        Algorithm::IpLatency,
+        Algorithm::Replication,
+        Algorithm::Hierarchy,
+    ];
 
     pub const ALL_THROUGHPUT: [Algorithm; 8] = [
         Algorithm::Dp,
@@ -50,65 +65,74 @@ impl Algorithm {
         Algorithm::PipeDream,
         Algorithm::Scotch,
     ];
+
+    /// Canonical registry name (round-trips through [`Algorithm::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Dp => "dp",
+            Algorithm::Dpl => "dpl",
+            Algorithm::IpContiguous => "ip-contiguous",
+            Algorithm::IpNonContiguous => "ip-noncontiguous",
+            Algorithm::Expert => "expert",
+            Algorithm::LocalSearch => "local-search",
+            Algorithm::PipeDream => "pipedream",
+            Algorithm::Scotch => "scotch",
+            Algorithm::Greedy => "greedy",
+            Algorithm::IpLatency => "ip-latency",
+            Algorithm::Replication => "replication",
+            Algorithm::Hierarchy => "hierarchy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        let s = s.to_ascii_lowercase();
+        // aliases first, then canonical names
+        Some(match s.as_str() {
+            "ip" => Algorithm::IpContiguous,
+            "ipnc" => Algorithm::IpNonContiguous,
+            "ls" => Algorithm::LocalSearch,
+            "rep" => Algorithm::Replication,
+            "hier" => Algorithm::Hierarchy,
+            _ => return Algorithm::ALL.into_iter().find(|a| a.name() == s),
+        })
+    }
+
+    /// The registry: resolve this selector to its [`Solver`].
+    pub fn solver(self) -> Box<dyn Solver> {
+        match self {
+            Algorithm::Dp => Box::new(DpSolver),
+            Algorithm::Dpl => Box::new(DplSolver),
+            Algorithm::IpContiguous => Box::new(IpThroughputSolver { contiguous: true }),
+            Algorithm::IpNonContiguous => Box::new(IpThroughputSolver { contiguous: false }),
+            Algorithm::Expert => Box::new(ExpertSolver),
+            Algorithm::LocalSearch => Box::new(LocalSearchSolver),
+            Algorithm::PipeDream => Box::new(PipeDreamSolver),
+            Algorithm::Scotch => Box::new(ScotchSolver),
+            Algorithm::Greedy => Box::new(GreedySolver),
+            Algorithm::IpLatency => Box::new(IpLatencySolver),
+            Algorithm::Replication => Box::new(ReplicationSolver),
+            Algorithm::Hierarchy => Box::new(HierarchySolver),
+        }
+    }
 }
 
-/// Planner outcome: a placement + run metadata for the tables.
-pub struct PlanResult {
-    pub placement: Placement,
-    pub runtime: Duration,
-    /// solver-found-incumbent time (IP engines)
-    pub incumbent_at: Option<Duration>,
-    pub gap: Option<f64>,
-    pub note: String,
+/// All registered solvers, in [`Algorithm::ALL`] order (name → solver).
+pub fn registry() -> Vec<Box<dyn Solver>> {
+    Algorithm::ALL.iter().map(|a| a.solver()).collect()
 }
 
-/// Plan a throughput (pipelined) split. IP time budget via `ip_budget`.
+/// Plan a split of `w` with `alg`. IP time budget via `ip_budget`. One-shot:
+/// builds a fresh [`ProblemCtx`]; use a
+/// [`crate::coordinator::service::PlannerService`] to amortize analysis
+/// across plans.
 pub fn plan(
     w: &Workload,
     alg: Algorithm,
     ip_budget: Duration,
-) -> Result<PlanResult, String> {
-    let g = &w.graph;
-    let sc = &w.scenario;
-    let start = Instant::now();
-    let (placement, incumbent_at, gap, note) = match alg {
-        Algorithm::Dp => {
-            let p = dp::solve(g, sc).map_err(|e| e.to_string())?;
-            (p, None, None, String::new())
-        }
-        Algorithm::Dpl => {
-            let p = dpl::solve(g, sc).map_err(|e| e.to_string())?;
-            (p, None, None, String::new())
-        }
-        Algorithm::IpContiguous | Algorithm::IpNonContiguous => {
-            let opts = ip_throughput::IpOptions {
-                contiguous: alg == Algorithm::IpContiguous,
-                time_limit: ip_budget,
-                ..Default::default()
-            };
-            let r = ip_throughput::solve(g, sc, &opts).map_err(|e| e.to_string())?;
-            (r.placement, Some(r.incumbent_at), Some(r.gap), format!("{:?}", r.status))
-        }
-        Algorithm::Expert => {
-            let style = w.expert.ok_or("no expert rule for this workload")?;
-            (expert::solve(g, sc, style), None, None, String::new())
-        }
-        Algorithm::LocalSearch => (local_search::solve(g, sc, 10, 0xC0FFEE), None, None, String::new()),
-        Algorithm::PipeDream => (pipedream::solve(g, sc), None, None, String::new()),
-        Algorithm::Scotch => (scotch_like::solve(g, sc, 0x5C07C4), None, None, String::new()),
-        Algorithm::Greedy => (greedy::solve(g, sc), None, None, String::new()),
-        Algorithm::IpLatency => {
-            let warm = vec![greedy::solve(g, sc)];
-            let opts = ip_latency::LatencyIpOptions {
-                time_limit: ip_budget,
-                warm_starts: warm,
-                ..Default::default()
-            };
-            let r = ip_latency::solve(g, sc, &opts)?;
-            (r.placement, Some(r.incumbent_at), Some(r.gap), format!("{:?}", r.status))
-        }
-    };
-    Ok(PlanResult { placement, runtime: start.elapsed(), incumbent_at, gap, note })
+) -> Result<PlanResult, PlaceError> {
+    let opts = SolveOpts { ip_budget, expert: w.expert, ..SolveOpts::default() };
+    let ctx = ProblemCtx::new(w.graph.clone(), w.scenario.clone());
+    alg.solver().solve(&ctx, &opts)
 }
 
 /// Latency of any placement under the §4 schedule (for Table-4 baselines).
@@ -116,23 +140,266 @@ pub fn latency_of(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
     objective::latency(g, sc, p)
 }
 
+// ---------------------------------------------------------------------------
+// Solver implementations (the registry entries)
+// ---------------------------------------------------------------------------
+
+/// Exact throughput DP (§5.1.1). Its deterministic solution is cached in
+/// the context, so repeated plans cost one table expansion.
+pub struct DpSolver;
+
+impl Solver for DpSolver {
+    fn name(&self) -> &'static str {
+        "dp"
+    }
+
+    fn solve(&self, ctx: &ProblemCtx, _opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+        let start = Instant::now();
+        let (obj, dense) = ctx.dp_solution()?.clone();
+        let placement = ctx.prepared()?.expand(ctx.graph(), ctx.scenario(), obj, &dense);
+        Ok(PlanResult::basic(placement, start.elapsed()))
+    }
+}
+
+/// Linearization heuristic (§5.1.2).
+pub struct DplSolver;
+
+impl Solver for DplSolver {
+    fn name(&self) -> &'static str {
+        "dpl"
+    }
+
+    fn solve(&self, ctx: &ProblemCtx, _opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+        let start = Instant::now();
+        let (obj, dense) = ctx.dpl_solution()?.clone();
+        let mut placement = ctx.prepared()?.expand(ctx.graph(), ctx.scenario(), obj, &dense);
+        placement.algorithm = "DPL".into();
+        Ok(PlanResult::basic(placement, start.elapsed()))
+    }
+}
+
+/// Fig.-6 throughput IP (contiguous or §5.2 non-contiguous).
+pub struct IpThroughputSolver {
+    pub contiguous: bool,
+}
+
+impl Solver for IpThroughputSolver {
+    fn name(&self) -> &'static str {
+        if self.contiguous {
+            "ip-contiguous"
+        } else {
+            "ip-noncontiguous"
+        }
+    }
+
+    fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+        let ip_opts = ip_throughput::IpOptions {
+            contiguous: self.contiguous,
+            time_limit: opts.ip_budget,
+            gap_target: opts.gap_target,
+            ..Default::default()
+        };
+        let r = ip_throughput::solve_ctx(ctx, &ip_opts)?;
+        Ok(PlanResult {
+            placement: r.placement,
+            runtime: r.elapsed,
+            incumbent_at: Some(r.incumbent_at),
+            gap: Some(r.gap),
+            note: format!("{:?}", r.status),
+        })
+    }
+}
+
+/// Figs.-3/4 latency IP (§4), warm-started from the greedy baseline.
+pub struct IpLatencySolver;
+
+impl Solver for IpLatencySolver {
+    fn name(&self) -> &'static str {
+        "ip-latency"
+    }
+
+    fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+        let warm = vec![greedy::solve(ctx.graph(), ctx.scenario())];
+        let lat_opts = ip_latency::LatencyIpOptions {
+            time_limit: opts.ip_budget,
+            gap_target: opts.gap_target,
+            warm_starts: warm,
+            ..Default::default()
+        };
+        let r = ip_latency::solve_ctx(ctx, &lat_opts)?;
+        Ok(PlanResult {
+            placement: r.placement,
+            runtime: r.elapsed,
+            incumbent_at: Some(r.incumbent_at),
+            gap: Some(r.gap),
+            note: format!("{:?}", r.status),
+        })
+    }
+}
+
+/// App.-C.2 hybrid model/data-parallel DP.
+pub struct ReplicationSolver;
+
+impl Solver for ReplicationSolver {
+    fn name(&self) -> &'static str {
+        "replication"
+    }
+
+    fn solve(&self, ctx: &ProblemCtx, _opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+        let start = Instant::now();
+        let rep = replication::solve_ctx(ctx)?;
+        let replicated = rep.stage_devices.iter().filter(|d| d.len() > 1).count();
+        let note = format!("{} stages, {replicated} replicated", rep.stage_devices.len());
+        let mut result = PlanResult::basic(rep.primary_placement(), start.elapsed());
+        result.note = note;
+        Ok(result)
+    }
+}
+
+/// App.-C.3 two-level accelerator hierarchies. Topology from
+/// [`SolveOpts::hierarchy`], defaulting to an even two-cluster split of
+/// the scenario's accelerators (odd `k` leaves the last accelerator idle).
+pub struct HierarchySolver;
+
+impl HierarchySolver {
+    fn default_hierarchy(sc: &Scenario) -> Hierarchy {
+        let num_clusters = if sc.k >= 2 { 2 } else { 1 };
+        Hierarchy {
+            num_clusters,
+            accs_per_cluster: (sc.k / num_clusters).max(1),
+            inter_factor: 4.0,
+            mem_cap: sc.mem_cap,
+        }
+    }
+}
+
+impl Solver for HierarchySolver {
+    fn name(&self) -> &'static str {
+        "hierarchy"
+    }
+
+    fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+        let start = Instant::now();
+        let hier = opts
+            .hierarchy
+            .clone()
+            .unwrap_or_else(|| Self::default_hierarchy(ctx.scenario()));
+        let h = hierarchy::solve_ctx(ctx, &hier)?;
+        let note = format!(
+            "{}x{} clusters, inter-factor {}",
+            hier.num_clusters, hier.accs_per_cluster, hier.inter_factor
+        );
+        let mut result = PlanResult::basic(h.placement, start.elapsed());
+        result.note = note;
+        Ok(result)
+    }
+}
+
+/// Human-expert placement rules (§6, layer graphs only).
+pub struct ExpertSolver;
+
+impl Solver for ExpertSolver {
+    fn name(&self) -> &'static str {
+        "expert"
+    }
+
+    fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+        let style = opts.expert.ok_or(PlaceError::MissingExpertRule)?;
+        let start = Instant::now();
+        let p = expert::solve(ctx.graph(), ctx.scenario(), style);
+        Ok(PlanResult::basic(p, start.elapsed()))
+    }
+}
+
+/// Random-restart local search baseline [MKA07].
+pub struct LocalSearchSolver;
+
+impl Solver for LocalSearchSolver {
+    fn name(&self) -> &'static str {
+        "local-search"
+    }
+
+    fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+        let start = Instant::now();
+        let p = local_search::solve(ctx.graph(), ctx.scenario(), opts.ls_restarts, opts.ls_seed);
+        Ok(PlanResult::basic(p, start.elapsed()))
+    }
+}
+
+/// PipeDream's linear-chain DP baseline [NHP+19].
+pub struct PipeDreamSolver;
+
+impl Solver for PipeDreamSolver {
+    fn name(&self) -> &'static str {
+        "pipedream"
+    }
+
+    fn solve(&self, ctx: &ProblemCtx, _opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+        let start = Instant::now();
+        let p = pipedream::solve(ctx.graph(), ctx.scenario());
+        Ok(PlanResult::basic(p, start.elapsed()))
+    }
+}
+
+/// Scotch-style multilevel partitioner baseline.
+pub struct ScotchSolver;
+
+impl Solver for ScotchSolver {
+    fn name(&self) -> &'static str {
+        "scotch"
+    }
+
+    fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+        let start = Instant::now();
+        let p = scotch_like::solve(ctx.graph(), ctx.scenario(), opts.scotch_seed);
+        Ok(PlanResult::basic(p, start.elapsed()))
+    }
+}
+
+/// Greedy topological bin-filling baseline (§7).
+pub struct GreedySolver;
+
+impl Solver for GreedySolver {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn solve(&self, ctx: &ProblemCtx, _opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+        let start = Instant::now();
+        let p = greedy::solve(ctx.graph(), ctx.scenario());
+        Ok(PlanResult::basic(p, start.elapsed()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::expert::ExpertStyle;
+    use crate::coordinator::service::PlannerService;
+    use crate::graph::Node;
+    use crate::util::counters;
     use crate::workloads::table1_workloads;
 
     #[test]
-    fn algorithm_parse_roundtrip() {
+    fn algorithm_parse_roundtrip_covers_every_variant() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.name()), Some(a), "roundtrip of {a:?}");
+            assert_eq!(a.solver().name(), a.name(), "registry name of {a:?}");
+        }
+        // aliases and case-insensitivity
         for (s, a) in [
-            ("dp", Algorithm::Dp),
             ("DPL", Algorithm::Dpl),
             ("ip", Algorithm::IpContiguous),
             ("ipnc", Algorithm::IpNonContiguous),
-            ("scotch", Algorithm::Scotch),
+            ("ls", Algorithm::LocalSearch),
+            ("rep", Algorithm::Replication),
+            ("hier", Algorithm::Hierarchy),
+            ("IP-LATENCY", Algorithm::IpLatency),
         ] {
             assert_eq!(Algorithm::parse(s), Some(a));
         }
         assert_eq!(Algorithm::parse("nope"), None);
+        assert_eq!(registry().len(), Algorithm::ALL.len());
     }
 
     #[test]
@@ -156,5 +423,64 @@ mod tests {
                 dp.placement.objective
             );
         }
+    }
+
+    /// A small two-branch graph that exercises every throughput algorithm
+    /// fast (the IPs close it in milliseconds).
+    fn two_branch_graph() -> crate::graph::OpGraph {
+        let mut g = crate::graph::OpGraph::new();
+        let s = g.add_node(Node::new("src_0").cpu(1.0).acc(0.2).mem(0.5).comm(0.05));
+        let (mut la, mut lb) = (s, s);
+        for i in 0..5 {
+            let a = g.add_node(Node::new(format!("a_{i}")).cpu(8.0).acc(1.0).mem(1.0).comm(0.1));
+            g.add_edge(la, a);
+            la = a;
+            let b = g.add_node(Node::new(format!("b_{i}")).cpu(8.0).acc(1.0).mem(1.0).comm(0.1));
+            g.add_edge(lb, b);
+            lb = b;
+        }
+        let t = g.add_node(Node::new("sink_0").cpu(1.0).acc(0.2).mem(0.5).comm(0.05));
+        g.add_edge(la, t);
+        g.add_edge(lb, t);
+        g
+    }
+
+    #[test]
+    fn shared_analysis_built_at_most_once_across_all_throughput_algorithms() {
+        // The ISSUE-2 acceptance criterion: planning ALL of the throughput
+        // algorithms through a PlannerService invokes
+        // IdealLattice::enumerate and topo::{reachability,
+        // co_reachability}_matrix at most once each per (graph, scenario);
+        // a second pass over the cached context builds nothing at all.
+        let g = two_branch_graph();
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let opts = SolveOpts {
+            ip_budget: Duration::from_secs(5),
+            expert: Some(ExpertStyle::EqualStripes),
+            ..SolveOpts::default()
+        };
+        let mut svc = PlannerService::new(4);
+
+        let e0 = counters::enumerate_calls();
+        let r0 = counters::reachability_calls();
+        let c0 = counters::co_reachability_calls();
+        for alg in Algorithm::ALL_THROUGHPUT {
+            svc.plan(&g, &sc, alg, &opts).unwrap_or_else(|e| panic!("{alg:?}: {e}"));
+        }
+        let e1 = counters::enumerate_calls();
+        let r1 = counters::reachability_calls();
+        let c1 = counters::co_reachability_calls();
+        assert!(e1 - e0 <= 1, "IdealLattice::enumerate ran {} times", e1 - e0);
+        assert!(r1 - r0 <= 1, "reachability_matrix ran {} times", r1 - r0);
+        assert!(c1 - c0 <= 1, "co_reachability_matrix ran {} times", c1 - c0);
+
+        // second pass: pure cache hits, zero new analysis
+        for alg in Algorithm::ALL_THROUGHPUT {
+            svc.plan(&g, &sc, alg, &opts).unwrap();
+        }
+        assert_eq!(counters::enumerate_calls(), e1, "cache hit re-enumerated the lattice");
+        assert_eq!(counters::reachability_calls(), r1, "cache hit rebuilt reachability");
+        assert_eq!(counters::co_reachability_calls(), c1, "cache hit rebuilt co-reachability");
+        assert!(svc.hits() >= Algorithm::ALL_THROUGHPUT.len());
     }
 }

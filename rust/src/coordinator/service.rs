@@ -1,0 +1,195 @@
+//! Fingerprint-cached planning service — the serving-time re-planning
+//! loop's front door.
+//!
+//! The ROADMAP's serving north-star plans *many scenarios over one model*
+//! (device loss, tighter memory caps, different `k`, comm-model what-ifs):
+//! the expensive part of each plan is the shared analysis
+//! ([`ProblemCtx`]), not the solver. [`PlannerService`] keys contexts by
+//! the [`fingerprint`] of `(graph, scenario)` and keeps a bounded LRU, so
+//! repeated plans of a known problem run at cache-hit cost and a scenario
+//! change only pays for the artifacts it actually invalidates (a new
+//! scenario over the same graph is a new context — invalidation is
+//! whole-context by construction, which is what makes the cache trivially
+//! correct: every artifact depends on the full key).
+
+use crate::algos::PlaceError;
+use crate::coordinator::context::{fingerprint, PlanResult, ProblemCtx, SolveOpts, Solver};
+use crate::coordinator::placement::Scenario;
+use crate::coordinator::planner::Algorithm;
+use crate::graph::OpGraph;
+use crate::workloads::Workload;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Bounded LRU of [`ProblemCtx`]s keyed by content fingerprint.
+pub struct PlannerService {
+    capacity: usize,
+    /// Lattice enumeration cap for the contexts this service creates.
+    ideal_cap: usize,
+    /// Most-recently-used last.
+    entries: VecDeque<(u64, Arc<ProblemCtx>)>,
+    hits: usize,
+    misses: usize,
+}
+
+impl PlannerService {
+    /// Service caching up to `capacity` contexts (≥ 1), with the default
+    /// lattice cap ([`crate::graph::ideals::DEFAULT_IDEAL_CAP`]).
+    pub fn new(capacity: usize) -> PlannerService {
+        Self::with_ideal_cap(capacity, crate::graph::ideals::DEFAULT_IDEAL_CAP)
+    }
+
+    /// [`PlannerService::new`] with an explicit lattice cap for the
+    /// contexts it creates. The cap bounds what the exact DP (and hence
+    /// the IP warm starts that share its cached solution) will pay before
+    /// falling back to DPL — lower it when serving IP-only plans over
+    /// graphs whose lattices are huge.
+    pub fn with_ideal_cap(capacity: usize, ideal_cap: usize) -> PlannerService {
+        PlannerService {
+            capacity: capacity.max(1),
+            ideal_cap,
+            entries: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// The context for `(graph, scenario)`: cached if its fingerprint is
+    /// known, freshly created (and cached) otherwise.
+    pub fn context(&mut self, g: &OpGraph, sc: &Scenario) -> Arc<ProblemCtx> {
+        let fp = fingerprint(g, sc);
+        if let Some(pos) = self.entries.iter().position(|(key, _)| *key == fp) {
+            self.hits += 1;
+            let entry = self.entries.remove(pos).expect("position just found");
+            self.entries.push_back(entry.clone());
+            return entry.1;
+        }
+        self.misses += 1;
+        let ctx = Arc::new(ProblemCtx::with_cap(g.clone(), sc.clone(), self.ideal_cap));
+        self.entries.push_back((fp, Arc::clone(&ctx)));
+        while self.entries.len() > self.capacity {
+            self.entries.pop_front();
+        }
+        ctx
+    }
+
+    /// Plan `(graph, scenario)` with `alg`, reusing every cached artifact.
+    pub fn plan(
+        &mut self,
+        g: &OpGraph,
+        sc: &Scenario,
+        alg: Algorithm,
+        opts: &SolveOpts,
+    ) -> Result<PlanResult, PlaceError> {
+        let ctx = self.context(g, sc);
+        alg.solver().solve(&ctx, opts)
+    }
+
+    /// [`PlannerService::plan`] for a [`Workload`], filling the expert rule
+    /// from the workload when the caller didn't set one.
+    pub fn plan_workload(
+        &mut self,
+        w: &Workload,
+        alg: Algorithm,
+        opts: &SolveOpts,
+    ) -> Result<PlanResult, PlaceError> {
+        let mut opts = opts.clone();
+        if opts.expert.is_none() {
+            opts.expert = w.expert;
+        }
+        self.plan(&w.graph, &w.scenario, alg, &opts)
+    }
+
+    /// Cache hits so far.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Cache misses so far (= contexts created).
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Cached contexts currently held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop every cached context (e.g. after an external cost-model update
+    /// that a caller knows invalidates everything).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+impl Default for PlannerService {
+    /// Eight cached contexts — enough for a model × a handful of live
+    /// scenarios.
+    fn default() -> PlannerService {
+        PlannerService::new(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Node;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(9.0).acc(1.0).mem(1.0).comm(0.2));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn same_problem_hits_cache() {
+        let g = chain(6);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let mut svc = PlannerService::new(4);
+        let a = svc.context(&g, &sc);
+        let b = svc.context(&g, &sc);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(svc.hits(), 1);
+        assert_eq!(svc.misses(), 1);
+    }
+
+    #[test]
+    fn scenario_change_is_a_new_context_and_lru_evicts() {
+        let g = chain(6);
+        let mut svc = PlannerService::new(2);
+        let a = svc.context(&g, &Scenario::new(2, 1, f64::INFINITY));
+        let _b = svc.context(&g, &Scenario::new(1, 1, f64::INFINITY));
+        let _c = svc.context(&g, &Scenario::new(3, 1, f64::INFINITY));
+        assert_eq!(svc.len(), 2, "capacity bound");
+        // `a`'s problem was evicted: planning it again is a miss
+        let a2 = svc.context(&g, &Scenario::new(2, 1, f64::INFINITY));
+        assert!(!Arc::ptr_eq(&a, &a2));
+        assert_eq!(svc.misses(), 4);
+    }
+
+    #[test]
+    fn plan_through_service_matches_free_planner() {
+        let g = chain(8);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let mut svc = PlannerService::default();
+        let opts = SolveOpts::default();
+        let cold = svc.plan(&g, &sc, Algorithm::Dp, &opts).unwrap();
+        let hit = svc.plan(&g, &sc, Algorithm::Dp, &opts).unwrap();
+        assert_eq!(
+            cold.placement.objective.to_bits(),
+            hit.placement.objective.to_bits(),
+            "cache hit must be bitwise identical"
+        );
+        assert_eq!(cold.placement.assignment, hit.placement.assignment);
+        assert!(svc.hits() >= 1);
+    }
+}

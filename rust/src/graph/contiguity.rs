@@ -16,11 +16,20 @@ pub fn is_contiguous(g: &OpGraph, set: &BitSet) -> bool {
     if set.is_empty() {
         return true;
     }
+    is_contiguous_in(&topo::reachability_matrix(g), set)
+}
+
+/// [`is_contiguous`] against a caller-supplied reachability matrix — the
+/// hot-path form used by the branch-and-bound polish loops, which evaluate
+/// thousands of candidate sets against one precomputed matrix (rebuilding
+/// the `O(V·E/64)` matrix per candidate dominated the polish cost).
+pub fn is_contiguous_in(reach: &crate::util::arena::BitMatrix, set: &BitSet) -> bool {
+    if set.is_empty() {
+        return true;
+    }
     // reachable_from_s = nodes v ∉ S reachable from S (candidates for the
     // middle of a violating triple). Then check whether any of them reaches
     // back into S.
-    let reach = topo::reachability_matrix(g);
-    // v outside S that some u ∈ S reaches
     let mut outside_below = vec![0u64; reach.stride()];
     for u in set.iter() {
         arena::or_into(&mut outside_below, reach.row(u));

@@ -36,6 +36,7 @@ pub fn is_dag(g: &OpGraph) -> bool {
 /// including u): a single allocation, cache-linear rows. Computed in
 /// reverse topological order with word unions — `O(V·E/64)`.
 pub fn reachability_matrix(g: &OpGraph) -> BitMatrix {
+    crate::util::counters::bump_reachability();
     let order = toposort(g).expect("reachability requires a DAG");
     let mut m = BitMatrix::new(g.n());
     for &u in order.iter().rev() {
@@ -50,6 +51,7 @@ pub fn reachability_matrix(g: &OpGraph) -> BitMatrix {
 /// Transpose reachability as a [`BitMatrix`]: row v = ancestors of v
 /// (including v).
 pub fn co_reachability_matrix(g: &OpGraph) -> BitMatrix {
+    crate::util::counters::bump_co_reachability();
     let order = toposort(g).expect("co_reachability requires a DAG");
     let mut m = BitMatrix::new(g.n());
     for &v in order.iter() {

@@ -37,7 +37,11 @@
 //!   paper's JSON interchange format.
 //! * [`pipeline`] — discrete-event simulator of the Figs. 2/5/7 schedules.
 //! * [`runtime`] + [`coordinator`] — PJRT stage executor and the pipelined
-//!   serving loop.
+//!   serving loop; [`coordinator::context`] is the shared per-problem
+//!   analysis cache every solver plugs into (the [`coordinator::context::Solver`]
+//!   trait), [`coordinator::service`] the fingerprint-keyed planning
+//!   service that re-plans scenario changes at cache-hit cost (see
+//!   DESIGN.md §4).
 
 pub mod algos;
 pub mod baselines;

@@ -12,6 +12,10 @@
 //! Workload names: `bert3op`, `bert6op`, `bert12op`, `resnet50op`,
 //! `bert24`, `resnet50`, `inceptionv3`, `gnmt` — suffix `-train` for the
 //! training variant (e.g. `bert24-train`).
+//!
+//! Algorithms: `dp`, `dpl`, `ip`/`ip-contiguous`, `ipnc`/`ip-noncontiguous`,
+//! `ip-latency`, `replication`, `hierarchy`, `expert`, `ls`/`local-search`,
+//! `pipedream`, `scotch`, `greedy`.
 
 use dnn_partition::coordinator::planner::{self, Algorithm};
 use dnn_partition::pipeline::sim::{self, Schedule};

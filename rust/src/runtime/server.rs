@@ -228,6 +228,85 @@ pub fn stage_factories(
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// Serving-time re-planning
+// ---------------------------------------------------------------------------
+
+use crate::algos::PlaceError;
+use crate::coordinator::context::SolveOpts;
+use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::coordinator::planner::Algorithm;
+use crate::coordinator::service::PlannerService;
+use crate::graph::{topo, OpGraph};
+
+/// Re-planning front end for a live pipeline server: owns a
+/// [`PlannerService`] so scenario changes (device loss, a new memory cap,
+/// a different `k`) re-plan at cache-hit cost, and turns placements into
+/// the per-device stage node lists [`serve`] pipelines over.
+pub struct ServingPlanner {
+    service: PlannerService,
+    alg: Algorithm,
+    opts: SolveOpts,
+}
+
+/// A planned pipeline: the placement plus its stages in pipeline order.
+pub struct PlannedStages {
+    pub placement: Placement,
+    /// `(device, nodes)` per non-empty device, nodes in topological order,
+    /// stages ordered by their first topological position.
+    pub stages: Vec<(Device, Vec<usize>)>,
+}
+
+impl ServingPlanner {
+    pub fn new(alg: Algorithm, opts: SolveOpts) -> ServingPlanner {
+        ServingPlanner { service: PlannerService::default(), alg, opts }
+    }
+
+    /// Plan (or re-plan) `g` under `sc` with the planner's default
+    /// algorithm. Repeating a known `(graph, scenario)` reuses the cached
+    /// analysis context — and for the deterministic DP/DPL solvers the
+    /// cached solution itself.
+    pub fn plan(&mut self, g: &OpGraph, sc: &Scenario) -> Result<PlannedStages, PlaceError> {
+        self.plan_with(g, sc, self.alg)
+    }
+
+    /// [`ServingPlanner::plan`] with an explicit algorithm, against the
+    /// SAME cached context — e.g. a DPL fallback after the exact DP blew
+    /// its lattice cap pays no second analysis pass.
+    pub fn plan_with(
+        &mut self,
+        g: &OpGraph,
+        sc: &Scenario,
+        alg: Algorithm,
+    ) -> Result<PlannedStages, PlaceError> {
+        let r = self.service.plan(g, sc, alg, &self.opts)?;
+        let stages = stages_of(g, &r.placement);
+        Ok(PlannedStages { placement: r.placement, stages })
+    }
+
+    /// `(hits, misses)` of the underlying context cache.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (self.service.hits(), self.service.misses())
+    }
+}
+
+/// Group a placement into pipeline stages: one stage per non-empty device,
+/// ordered by the first topological position of its nodes.
+pub fn stages_of(g: &OpGraph, p: &Placement) -> Vec<(Device, Vec<usize>)> {
+    let order = topo::toposort(g).unwrap_or_else(|| (0..g.n()).collect());
+    let mut pos = vec![0usize; g.n()];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v] = i;
+    }
+    let mut by_device: std::collections::BTreeMap<Device, Vec<usize>> = Default::default();
+    for &v in &order {
+        by_device.entry(p.assignment[v]).or_default().push(v);
+    }
+    let mut stages: Vec<(Device, Vec<usize>)> = by_device.into_iter().collect();
+    stages.sort_by_key(|(_, nodes)| pos[nodes[0]]);
+    stages
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +379,46 @@ mod tests {
         let m = serve(reqs(8, 1), all, &ServerConfig { input_elems: 1, ..Default::default() });
         assert_eq!(m.completed, 8);
         assert!(*ok.lock().unwrap());
+    }
+
+    fn chain_graph(n: usize) -> OpGraph {
+        use crate::graph::Node;
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(9.0).acc(1.0).mem(1.0).comm(0.1));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn serving_planner_replans_scenarios_at_cache_hit_cost() {
+        let g = chain_graph(8);
+        let mut planner = ServingPlanner::new(Algorithm::Dp, SolveOpts::default());
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let a = planner.plan(&g, &sc).unwrap();
+        assert!(!a.stages.is_empty());
+        // stages cover all nodes exactly once, in topological order
+        let mut seen = vec![false; g.n()];
+        for (_, nodes) in &a.stages {
+            for &v in nodes {
+                assert!(!seen[v], "node {v} in two stages");
+                seen[v] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // same scenario again: a cache hit with an identical plan
+        let b = planner.plan(&g, &sc).unwrap();
+        assert_eq!(a.placement.assignment, b.placement.assignment);
+        let (hits, misses) = planner.cache_stats();
+        assert_eq!((hits, misses), (1, 1));
+        // device loss: k = 1 still plans, against a second cached context
+        let degraded = Scenario::new(1, 1, f64::INFINITY);
+        let c = planner.plan(&g, &degraded).unwrap();
+        c.placement.validate(&g, &degraded, true).unwrap();
+        assert_eq!(planner.cache_stats(), (1, 2));
     }
 
     #[test]

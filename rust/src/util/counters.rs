@@ -1,0 +1,67 @@
+//! Thread-local instrumentation counters for the expensive shared analysis
+//! passes (ideal-lattice enumeration, reachability matrices).
+//!
+//! The [`crate::coordinator::context::ProblemCtx`] cache exists so that
+//! planning every algorithm of a scenario computes each of these artifacts
+//! at most once; these counters let tests assert that property directly on
+//! the real entry points instead of trusting the cache plumbing. They are
+//! thread-local (not global atomics) so concurrently running tests cannot
+//! pollute each other's deltas; the counted functions all run on the
+//! calling thread (the DP's layer workers never re-enter them).
+
+use std::cell::Cell;
+
+thread_local! {
+    static ENUMERATE_CALLS: Cell<u64> = const { Cell::new(0) };
+    static REACHABILITY_CALLS: Cell<u64> = const { Cell::new(0) };
+    static CO_REACHABILITY_CALLS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Record one `IdealLattice::enumerate` invocation (called by `graph::ideals`).
+pub fn bump_enumerate() {
+    ENUMERATE_CALLS.with(|c| c.set(c.get() + 1));
+}
+
+/// Record one `topo::reachability_matrix` invocation.
+pub fn bump_reachability() {
+    REACHABILITY_CALLS.with(|c| c.set(c.get() + 1));
+}
+
+/// Record one `topo::co_reachability_matrix` invocation.
+pub fn bump_co_reachability() {
+    CO_REACHABILITY_CALLS.with(|c| c.set(c.get() + 1));
+}
+
+/// Lattice enumerations performed by this thread so far.
+pub fn enumerate_calls() -> u64 {
+    ENUMERATE_CALLS.with(Cell::get)
+}
+
+/// Reachability-matrix builds performed by this thread so far.
+pub fn reachability_calls() -> u64 {
+    REACHABILITY_CALLS.with(Cell::get)
+}
+
+/// Co-reachability-matrix builds performed by this thread so far.
+pub fn co_reachability_calls() -> u64 {
+    CO_REACHABILITY_CALLS.with(Cell::get)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_increment_monotonically() {
+        let a = enumerate_calls();
+        bump_enumerate();
+        bump_enumerate();
+        assert_eq!(enumerate_calls(), a + 2);
+        let r = reachability_calls();
+        bump_reachability();
+        assert_eq!(reachability_calls(), r + 1);
+        let c = co_reachability_calls();
+        bump_co_reachability();
+        assert_eq!(co_reachability_calls(), c + 1);
+    }
+}

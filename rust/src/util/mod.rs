@@ -5,7 +5,8 @@
 pub mod arena;
 pub mod bench;
 pub mod bitset;
-pub mod par;
+pub mod counters;
 pub mod json;
+pub mod par;
 pub mod proptest;
 pub mod rng;

@@ -1,0 +1,103 @@
+//! PR-2 cache-layer guarantees: planning through a cold [`ProblemCtx`]
+//! and planning against a [`PlannerService`] cache hit must be
+//! *bitwise* identical, for every registered solver — the analysis cache
+//! may never change a result, only its cost.
+
+use dnn_partition::baselines::expert::ExpertStyle;
+use dnn_partition::coordinator::context::{ProblemCtx, SolveOpts, Solver};
+use dnn_partition::coordinator::placement::Scenario;
+use dnn_partition::coordinator::planner::{self, Algorithm};
+use dnn_partition::coordinator::service::PlannerService;
+use dnn_partition::util::proptest::random_dag;
+use dnn_partition::util::rng::Rng;
+use std::time::Duration;
+
+fn exact_opts() -> SolveOpts {
+    SolveOpts {
+        ip_budget: Duration::from_secs(10),
+        // gap 0 ⇒ the IPs run to proven optimality on these small graphs,
+        // which makes their output deterministic (no budget-dependent cut)
+        gap_target: 0.0,
+        expert: Some(ExpertStyle::EqualStripes),
+        ..SolveOpts::default()
+    }
+}
+
+#[test]
+fn every_solver_bitwise_identical_cold_ctx_vs_cache_hit() {
+    let mut rng = Rng::new(0x5EED);
+    let opts = exact_opts();
+    for case in 0..4 {
+        let g = random_dag(&mut rng, 8, 0.3);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        for alg in Algorithm::ALL {
+            // cold: a fresh context, nothing shared
+            let cold_ctx = ProblemCtx::new(g.clone(), sc.clone());
+            let cold = alg
+                .solver()
+                .solve(&cold_ctx, &opts)
+                .unwrap_or_else(|e| panic!("case {case} {alg:?} cold: {e}"));
+            // service path: first plan warms the cache, second one hits it
+            let mut svc = PlannerService::new(2);
+            svc.plan(&g, &sc, alg, &opts)
+                .unwrap_or_else(|e| panic!("case {case} {alg:?} warm-up: {e}"));
+            let hit = svc
+                .plan(&g, &sc, alg, &opts)
+                .unwrap_or_else(|e| panic!("case {case} {alg:?} hit: {e}"));
+            assert!(svc.hits() >= 1, "case {case} {alg:?}: second plan missed the cache");
+            assert_eq!(
+                cold.placement.assignment, hit.placement.assignment,
+                "case {case} {alg:?}: assignments diverged between cold ctx and cache hit"
+            );
+            assert_eq!(
+                cold.placement.objective.to_bits(),
+                hit.placement.objective.to_bits(),
+                "case {case} {alg:?}: objective not bitwise identical ({} vs {})",
+                cold.placement.objective,
+                hit.placement.objective
+            );
+        }
+    }
+}
+
+#[test]
+fn ctx_solvers_match_deprecated_free_functions() {
+    // The thin compatibility wrappers and the ctx-based registry solvers
+    // must agree on the deterministic engines.
+    use dnn_partition::algos::{dp, dpl};
+    let mut rng = Rng::new(0xFACE);
+    for _ in 0..6 {
+        let g = random_dag(&mut rng, 9, 0.3);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let ctx = ProblemCtx::new(g.clone(), sc.clone());
+        let opts = SolveOpts::default();
+
+        let via_ctx = Algorithm::Dp.solver().solve(&ctx, &opts).unwrap();
+        let via_free = dp::solve(&g, &sc).unwrap();
+        assert_eq!(via_ctx.placement.assignment, via_free.assignment);
+        assert_eq!(via_ctx.placement.objective.to_bits(), via_free.objective.to_bits());
+
+        let via_ctx = Algorithm::Dpl.solver().solve(&ctx, &opts).unwrap();
+        let via_free = dpl::solve(&g, &sc).unwrap();
+        assert_eq!(via_ctx.placement.assignment, via_free.assignment);
+        assert_eq!(via_ctx.placement.objective.to_bits(), via_free.objective.to_bits());
+    }
+}
+
+#[test]
+fn service_plan_matches_one_shot_planner_on_real_workload() {
+    use dnn_partition::workloads::table1_workloads;
+    let w = table1_workloads().into_iter().find(|w| w.name == "BERT-24" && !w.training).unwrap();
+    let one_shot = planner::plan(&w, Algorithm::Dp, Duration::from_secs(2)).unwrap();
+    let mut svc = PlannerService::default();
+    let opts = SolveOpts::default();
+    let via_service = svc.plan_workload(&w, Algorithm::Dp, &opts).unwrap();
+    assert_eq!(one_shot.placement.assignment, via_service.placement.assignment);
+    assert_eq!(
+        one_shot.placement.objective.to_bits(),
+        via_service.placement.objective.to_bits()
+    );
+    // and the hit is identical again
+    let hit = svc.plan_workload(&w, Algorithm::Dp, &opts).unwrap();
+    assert_eq!(via_service.placement.assignment, hit.placement.assignment);
+}
