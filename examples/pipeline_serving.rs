@@ -20,7 +20,7 @@
 //! ```
 
 use dnn_partition::coordinator::context::SolveOpts;
-use dnn_partition::coordinator::placement::Scenario;
+use dnn_partition::coordinator::placement::{DeviceClass, Fleet, PlanRequest, Scenario};
 use dnn_partition::coordinator::planner::Algorithm;
 use dnn_partition::graph::OpGraph;
 use dnn_partition::runtime::server::{self, Request, ServerConfig, ServingPlanner};
@@ -100,6 +100,35 @@ fn replanning_demo() {
         ),
         Err(e) => println!("memory pressure:  infeasible under M/2 ({e})"),
     }
+
+    // heterogeneous fleet: 2 double-speed large-memory accelerators + 4
+    // baseline ones + the CPU pool, then device loss as a class decrement
+    let mut req = PlanRequest::new(Fleet::new(vec![
+        DeviceClass::acc("fast", 2, w.scenario.mem_cap * 2.0).speed(2.0),
+        DeviceClass::acc("slow", 4, w.scenario.mem_cap),
+        DeviceClass::cpu("cpu", 1),
+    ]));
+    let t = Instant::now();
+    let hetero = planner.plan_request(&w.graph, &req).expect("heterogeneous plan");
+    hetero
+        .placement
+        .validate_req(&w.graph, &req)
+        .expect("per-class memory must hold");
+    println!(
+        "hetero fleet:     {} over 2xfast@2 + 4xslow (TPS {:.3}, {} stages) in {:?}",
+        hetero.placement.algorithm,
+        hetero.placement.objective,
+        hetero.stages.len(),
+        t.elapsed()
+    );
+    assert!(req.fleet.decrement("fast"));
+    let t = Instant::now();
+    let lost_fast = planner.plan_request(&w.graph, &req).expect("fleet device-loss replan");
+    println!(
+        "fast-class loss:  re-planned for 1xfast + 4xslow (TPS {:.3}) in {:?}",
+        lost_fast.placement.objective,
+        t.elapsed()
+    );
 
     let (hits, misses) = planner.cache_stats();
     println!("planner cache:    {hits} hits / {misses} misses");

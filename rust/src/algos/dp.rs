@@ -23,6 +23,20 @@
 //! `min(cpu(S), compute_acc(S))` prunes lattice subtrees that cannot
 //! improve any `dp[I][·][·]` entry.
 //!
+//! ### Heterogeneous fleets
+//!
+//! The table generalizes from `(k', ℓ')` to one *remaining-count digit per
+//! device class* of the request's [`crate::coordinator::placement::Fleet`]
+//! (devices within a class are interchangeable, so counts stay sufficient
+//! state): cell `(n_0, …, n_C)` is a mixed-radix index with class 0 most
+//! significant, and the transition carves `S` onto any class with a
+//! remaining device, paying that class's `speed`-scaled compute and its
+//! own `mem_cap`. A one-accelerator-class + one-CPU-class fleet (what
+//! [`crate::coordinator::placement::Scenario::to_request`] produces) lays
+//! out exactly the historical `(k+1)·(ℓ+1)` cells in the same iteration
+//! order — the legacy path is bitwise-identical (see the uniform-fleet
+//! equivalence tests).
+//!
 //! ### Level-synchronous parallel execution
 //!
 //! `dp[I][·][·]` depends only on ideals of strictly smaller cardinality, so
@@ -37,7 +51,7 @@
 //! overhead; tune with [`DpOptions`].
 
 use super::{objective, PlaceError};
-use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::coordinator::placement::{Device, DeviceKind, Placement, PlanRequest, Scenario};
 use crate::graph::ideals::{IdealId, IdealLattice, IdealRef, DEFAULT_IDEAL_CAP};
 use crate::graph::{contract, subdivide, NodeKind, OpGraph};
 use crate::util::par;
@@ -77,12 +91,28 @@ pub fn solve(g: &OpGraph, sc: &Scenario) -> Result<Placement, DpError> {
 
 /// [`solve`] with an explicit ideal-count cap.
 pub fn solve_with_cap(g: &OpGraph, sc: &Scenario, cap: usize) -> Result<Placement, DpError> {
+    solve_req_with_cap(g, &sc.to_request(), cap)
+}
+
+/// [`solve`] over a heterogeneous [`PlanRequest`] fleet. One-shot like
+/// [`solve`]; prefer a shared [`crate::coordinator::context::ProblemCtx`]
+/// built via `from_request` for re-planning.
+pub fn solve_req(g: &OpGraph, req: &PlanRequest) -> Result<Placement, DpError> {
+    solve_req_with_cap(g, req, DEFAULT_IDEAL_CAP)
+}
+
+/// [`solve_req`] with an explicit ideal-count cap.
+pub fn solve_req_with_cap(
+    g: &OpGraph,
+    req: &PlanRequest,
+    cap: usize,
+) -> Result<Placement, DpError> {
     let prepared = Prepared::build(g)?;
     let lattice = IdealLattice::enumerate(&prepared.dp_graph, cap)
         .map_err(DpError::TooManyIdeals)?;
     let (obj, dense) =
-        solve_on_lattice_with(&prepared.dp_graph, sc, &lattice, &prepared.bw_comm)?;
-    Ok(prepared.expand(g, sc, obj, &dense))
+        solve_on_lattice_req(&prepared.dp_graph, req, &lattice, &prepared.bw_comm)?;
+    Ok(prepared.expand_req(g, req, obj, &dense))
 }
 
 /// Preprocessed problem: the (possibly training-merged) DAG the DP runs on,
@@ -191,15 +221,24 @@ impl Prepared {
 
     /// Expand a dense assignment on `dp_graph` back to the original nodes.
     pub fn expand(&self, g: &OpGraph, sc: &Scenario, obj: f64, dense: &[usize]) -> Placement {
-        let assignment: Vec<Device> = self
-            .map
-            .iter()
-            .map(|&c| Device::from_index(dense[c], sc.k))
-            .collect();
+        self.expand_req(g, &sc.to_request(), obj, dense)
+    }
+
+    /// [`Prepared::expand`] against a [`PlanRequest`].
+    pub fn expand_req(
+        &self,
+        g: &OpGraph,
+        req: &PlanRequest,
+        obj: f64,
+        dense: &[usize],
+    ) -> Placement {
+        let k = req.fleet.k();
+        let assignment: Vec<Device> =
+            self.map.iter().map(|&c| Device::from_index(dense[c], k)).collect();
         let mut p = Placement::new(assignment, obj, "DP (contiguous)");
         // Score on the *original* graph's cost model for reporting parity
         // with the other algorithms.
-        let measured = objective::max_load(g, sc, &p);
+        let measured = objective::max_load_req(g, req, &p);
         if measured.is_finite() {
             p.objective = measured;
         }
@@ -227,6 +266,85 @@ pub fn solve_on_lattice_with(
     solve_on_lattice_with_opts(g, sc, lattice, bw_comm, &DpOptions::default())
 }
 
+/// [`solve_on_lattice_req_opts`] with default options.
+pub fn solve_on_lattice_req(
+    g: &OpGraph,
+    req: &PlanRequest,
+    lattice: &IdealLattice,
+    bw_comm: &[f64],
+) -> Result<(f64, Vec<usize>), DpError> {
+    solve_on_lattice_req_opts(g, req, lattice, bw_comm, &DpOptions::default())
+}
+
+/// Per-class view of a request's fleet in dense-class order (accelerator
+/// classes first, then CPU classes), plus the mixed-radix layout of one
+/// ideal's cell block: `cell(digits) = Σ_c digits[c]·strides[c]`, class 0
+/// most significant. A uniform fleet yields exactly the historical
+/// `(k+1)·(ℓ+1)` layout in the same iteration order.
+struct ClassTable {
+    counts: Vec<usize>,
+    speeds: Vec<f64>,
+    mem_caps: Vec<f64>,
+    is_acc: Vec<bool>,
+    /// First dense device index of each class (accs from 0, CPUs from k).
+    offsets: Vec<usize>,
+    strides: Vec<usize>,
+    slots: usize,
+    k: usize,
+    best_acc_speed: Option<f64>,
+    best_cpu_speed: Option<f64>,
+}
+
+impl ClassTable {
+    fn from_request(req: &PlanRequest) -> ClassTable {
+        let fleet = &req.fleet;
+        let mut counts = Vec::new();
+        let mut speeds = Vec::new();
+        let mut mem_caps = Vec::new();
+        let mut is_acc = Vec::new();
+        let mut offsets = Vec::new();
+        let k = fleet.k();
+        let mut acc_off = 0usize;
+        let mut cpu_off = k;
+        for kind in [DeviceKind::Accelerator, DeviceKind::Cpu] {
+            for class in fleet.classes.iter().filter(|c| c.kind == kind) {
+                counts.push(class.count);
+                speeds.push(class.speed);
+                mem_caps.push(class.mem_cap);
+                is_acc.push(kind == DeviceKind::Accelerator);
+                if kind == DeviceKind::Accelerator {
+                    offsets.push(acc_off);
+                    acc_off += class.count;
+                } else {
+                    offsets.push(cpu_off);
+                    cpu_off += class.count;
+                }
+            }
+        }
+        let mut strides = vec![1usize; counts.len()];
+        for c in (0..counts.len().saturating_sub(1)).rev() {
+            strides[c] = strides[c + 1] * (counts[c + 1] + 1);
+        }
+        let slots = counts.iter().map(|&c| c + 1).product::<usize>().max(1);
+        ClassTable {
+            counts,
+            speeds,
+            mem_caps,
+            is_acc,
+            offsets,
+            strides,
+            slots,
+            k,
+            best_acc_speed: fleet.best_acc_speed(),
+            best_cpu_speed: fleet.best_cpu_speed(),
+        }
+    }
+
+    fn num_classes(&self) -> usize {
+        self.counts.len()
+    }
+}
+
 /// Per-worker reusable DFS state — allocated once per worker for the whole
 /// solve, never per ideal.
 struct DpScratch {
@@ -242,10 +360,14 @@ struct DpScratch {
     /// DFS stack: (ideal id, cursor into its subs, node added on entry —
     /// `u32::MAX` for the root frame).
     stack: Vec<(u32, u32, u32)>,
+    /// Per-class carved-set load of the current sub-ideal.
+    loads: Vec<f64>,
+    /// Mixed-radix odometer over the cell block.
+    digits: Vec<usize>,
 }
 
 impl DpScratch {
-    fn new(ni: usize, n: usize) -> Self {
+    fn new(ni: usize, n: usize, num_classes: usize) -> Self {
         DpScratch {
             visited: vec![0; ni],
             stamp: 0,
@@ -253,66 +375,69 @@ impl DpScratch {
             pred_out_cnt: vec![0; n],
             src_cnt: vec![0; n],
             stack: Vec::with_capacity(64),
+            loads: vec![0.0; num_classes],
+            digits: vec![0; num_classes],
         }
     }
 }
 
-/// Relax every `(k', ℓ')` cell of one ideal from sub-ideal `sub`, whose
-/// carved set has accelerator load `acc_load` and CPU load `cpu_load`.
+/// Relax every cell of one ideal from sub-ideal `sub`, whose carved set
+/// costs `loads[c]` on a device of class `c`. Cells are walked in
+/// increasing mixed-radix order and classes in dense-class order — for a
+/// uniform fleet this is exactly the historical `(k', ℓ')` double loop
+/// with the accelerator candidate tried before the CPU one.
 #[inline]
-#[allow(clippy::too_many_arguments)]
 fn relax_cells(
-    k: usize,
-    l: usize,
-    slots: usize,
+    ct: &ClassTable,
     sub: usize,
     done: &[f64],
-    acc_load: f64,
-    cpu_load: f64,
+    loads: &[f64],
     cells: &mut [f64],
-    parents: &mut [(u32, bool)],
+    parents: &mut [(u32, u8)],
+    digits: &mut [usize],
 ) {
-    for k_ in 0..=k {
-        for l_ in 0..=l {
-            let cell = k_ * (l + 1) + l_;
-            if k_ > 0 {
-                let cand = done[sub * slots + (k_ - 1) * (l + 1) + l_].max(acc_load);
+    digits.iter_mut().for_each(|d| *d = 0);
+    for cell in 0..ct.slots {
+        for (c, &digit) in digits.iter().enumerate() {
+            if digit > 0 {
+                let cand = done[sub * ct.slots + cell - ct.strides[c]].max(loads[c]);
                 if cand < cells[cell] {
                     cells[cell] = cand;
-                    parents[cell] = (sub as u32, true);
+                    parents[cell] = (sub as u32, c as u8);
                 }
             }
-            if l_ > 0 {
-                let cand = done[sub * slots + k_ * (l + 1) + (l_ - 1)].max(cpu_load);
-                if cand < cells[cell] {
-                    cells[cell] = cand;
-                    parents[cell] = (sub as u32, false);
-                }
+        }
+        for c in (0..digits.len()).rev() {
+            digits[c] += 1;
+            if digits[c] <= ct.counts[c] {
+                break;
             }
+            digits[c] = 0;
         }
     }
 }
 
-/// Solve all `(k', ℓ')` cells of ideal `i`: DFS down the lattice with
+/// Solve all device-count cells of ideal `i`: DFS down the lattice with
 /// incremental subgraph costs and undo, reading only `done` (the dp cells
 /// of all smaller-cardinality ideals) and writing only this ideal's
 /// `cells`/`parents`.
 #[allow(clippy::too_many_arguments)]
 fn process_ideal(
     g: &OpGraph,
-    sc: &Scenario,
+    req: &PlanRequest,
+    ct: &ClassTable,
     lattice: &IdealLattice,
     bw_comm: &[f64],
     i: IdealId,
     done: &[f64],
     cells: &mut [f64],
-    parents: &mut [(u32, bool)],
+    parents: &mut [(u32, u8)],
     scratch: &mut DpScratch,
 ) {
-    let (k, l) = (sc.k, sc.l);
-    let slots = (k + 1) * (l + 1);
+    let slots = ct.slots;
     debug_assert_eq!(cells.len(), slots);
-    let DpScratch { visited, stamp, in_cnt, pred_out_cnt, src_cnt, stack } = scratch;
+    let DpScratch { visited, stamp, in_cnt, pred_out_cnt, src_cnt, stack, loads, digits } =
+        scratch;
     *stamp = stamp.wrapping_add(1);
     if *stamp == 0 {
         visited.iter_mut().for_each(|v| *v = 0);
@@ -364,7 +489,18 @@ fn process_ideal(
             // (i, sub), so skipping sub entirely is sound.
             let eff_cpu = if inf_cpu == 0 { s_cpu } else { f64::INFINITY };
             let eff_compute = if inf_acc == 0 { s_compute } else { f64::INFINITY };
-            let lb = eff_cpu.min(eff_compute);
+            // The lower bound divides by the FASTEST class of each kind —
+            // no device can run S cheaper, so the prune stays sound for
+            // heterogeneous fleets (uniform: /1.0, bitwise the old bound).
+            let lb_acc = match ct.best_acc_speed {
+                Some(s) => eff_compute / s,
+                None => f64::INFINITY,
+            };
+            let lb_cpu = match ct.best_cpu_speed {
+                Some(s) => eff_cpu / s,
+                None => f64::INFINITY,
+            };
+            let lb = lb_cpu.min(lb_acc);
             let worst_improvable = (1..slots).map(|o| cells[o]).fold(0.0, f64::max);
             if lb >= worst_improvable && worst_improvable.is_finite() {
                 // undo and skip subtree
@@ -377,13 +513,26 @@ fn process_ideal(
                 );
                 continue;
             }
-            let acc_ok = s_mem <= sc.mem_cap && inf_acc == 0;
-            let acc_load = if acc_ok {
-                sc.combine(s_compute, s_comm_in + s_bw_in, s_comm_out + s_bw_out)
-            } else {
-                f64::INFINITY
-            };
-            relax_cells(k, l, slots, sub, done, acc_load, eff_cpu, cells, parents);
+            // Per-class carved-set load: class speed scales compute (not
+            // comm), class cap bounds memory; CPUs pay compute only.
+            for c in 0..ct.num_classes() {
+                loads[c] = if ct.is_acc[c] {
+                    if inf_acc == 0 && s_mem <= ct.mem_caps[c] {
+                        req.combine(
+                            s_compute / ct.speeds[c],
+                            s_comm_in + s_bw_in,
+                            s_comm_out + s_bw_out,
+                        )
+                    } else {
+                        f64::INFINITY
+                    }
+                } else if inf_cpu == 0 {
+                    s_cpu / ct.speeds[c]
+                } else {
+                    f64::INFINITY
+                };
+            }
+            relax_cells(ct, sub, done, loads, cells, parents, digits);
             stack.push((sub32, 0, v32));
         } else {
             let added = top.2;
@@ -402,35 +551,31 @@ fn process_ideal(
     }
     debug_assert!(in_cnt.iter().all(|&c| c == 0));
 
-    // Monotone closure (the S = ∅ transition): a device may be left
-    // empty, so dp[I][k'][ℓ'] ≤ dp[I][k'-1][ℓ'] and ≤ dp[I][k'][ℓ'-1].
-    // Done after the DFS so late improvements propagate.
-    for k_ in 0..=k {
-        for l_ in 0..=l {
-            let cell = k_ * (l + 1) + l_;
-            if k_ > 0 {
-                let prev = (k_ - 1) * (l + 1) + l_;
+    // Monotone closure (the S = ∅ transition): a device of any class may
+    // be left empty, so every cell is bounded by its one-fewer-device
+    // neighbors. Done after the DFS so late improvements propagate.
+    digits.iter_mut().for_each(|d| *d = 0);
+    for cell in 0..slots {
+        for (c, &digit) in digits.iter().enumerate() {
+            if digit > 0 {
+                let prev = cell - ct.strides[c];
                 if cells[prev] < cells[cell] {
                     cells[cell] = cells[prev];
-                    parents[cell] = (i as u32, true);
+                    parents[cell] = (i as u32, c as u8);
                 }
             }
-            if l_ > 0 {
-                let prev = k_ * (l + 1) + (l_ - 1);
-                if cells[prev] < cells[cell] {
-                    cells[cell] = cells[prev];
-                    parents[cell] = (i as u32, false);
-                }
+        }
+        for c in (0..digits.len()).rev() {
+            digits[c] += 1;
+            if digits[c] <= ct.counts[c] {
+                break;
             }
+            digits[c] = 0;
         }
     }
 }
 
-/// Run the DP proper. `bw_comm[v]` is the gradient transfer cost of v's
-/// backward partner: billed as bw-out while any pred of v is outside the
-/// carved subgraph, and as bw-in to the device holding v's preds (the
-/// mirror of the forward boundary). Returns the optimal max-load and a
-/// dense device assignment (`0..k` accs, `k..` CPU index `k+j`).
+/// Legacy scalar form of [`solve_on_lattice_req_opts`] (uniform fleet).
 pub fn solve_on_lattice_with_opts(
     g: &OpGraph,
     sc: &Scenario,
@@ -438,14 +583,29 @@ pub fn solve_on_lattice_with_opts(
     bw_comm: &[f64],
     opts: &DpOptions,
 ) -> Result<(f64, Vec<usize>), DpError> {
-    let (k, l) = (sc.k, sc.l);
-    let slots = (k + 1) * (l + 1);
+    solve_on_lattice_req_opts(g, &sc.to_request(), lattice, bw_comm, opts)
+}
+
+/// Run the DP proper over the request's fleet. `bw_comm[v]` is the
+/// gradient transfer cost of v's backward partner: billed as bw-out while
+/// any pred of v is outside the carved subgraph, and as bw-in to the
+/// device holding v's preds (the mirror of the forward boundary). Returns
+/// the optimal max-load and a dense device assignment (`0..k` accs in
+/// fleet class order, `k..` CPU index `k+j`).
+pub fn solve_on_lattice_req_opts(
+    g: &OpGraph,
+    req: &PlanRequest,
+    lattice: &IdealLattice,
+    bw_comm: &[f64],
+    opts: &DpOptions,
+) -> Result<(f64, Vec<usize>), DpError> {
+    let ct = ClassTable::from_request(req);
+    let slots = ct.slots;
     let ni = lattice.len();
-    let idx = |i: IdealId, k_: usize, l_: usize| i * slots + k_ * (l + 1) + l_;
 
     let mut dp = vec![f64::INFINITY; ni * slots];
-    // parent choice: (sub-ideal id, used accelerator?) per (I, k', l')
-    let mut parent: Vec<(u32, bool)> = vec![(u32::MAX, false); ni * slots];
+    // parent choice: (sub-ideal id, device class carved onto) per cell
+    let mut parent: Vec<(u32, u8)> = vec![(u32::MAX, 0); ni * slots];
     // empty ideal partitions with any device budget at cost 0
     for c in dp[..slots].iter_mut() {
         *c = 0.0;
@@ -473,7 +633,7 @@ pub fn solve_on_lattice_with_opts(
         let workers =
             if threads == 1 || layer_len < opts.par_threshold { 1 } else { threads.min(layer_len) };
         while scratches.len() < workers {
-            scratches.push(DpScratch::new(ni, g.n()));
+            scratches.push(DpScratch::new(ni, g.n(), ct.num_classes()));
         }
 
         let dp_blocks = par::chunk_granular(active_dp, workers, slots);
@@ -482,7 +642,7 @@ pub fn solve_on_lattice_with_opts(
         // per-worker state: (first ideal id of the block, dp chunk, parent
         // chunk, scratch); the id offset is derived from the actual chunk
         // sizes, not re-derived sizing math
-        let mut states: Vec<(usize, &mut [f64], &mut [(u32, bool)], &mut DpScratch)> =
+        let mut states: Vec<(usize, &mut [f64], &mut [(u32, u8)], &mut DpScratch)> =
             Vec::with_capacity(workers);
         let mut row_off = 0usize;
         let mut scratch_iter = scratches.iter_mut();
@@ -492,45 +652,45 @@ pub fn solve_on_lattice_with_opts(
             let scratch = scratch_iter.next().expect("blocks never exceed workers");
             states.push((lo, dp_blk, par_blk, scratch));
         }
+        let ct_ref = &ct;
         par::run_workers(&mut states, |_, (lo, dp_blk, par_blk, scratch)| {
             for (off, (cells, parents)) in
                 dp_blk.chunks_mut(slots).zip(par_blk.chunks_mut(slots)).enumerate()
             {
                 process_ideal(
-                    g, sc, lattice, bw_comm, *lo + off, done_ref, cells, parents, scratch,
+                    g, req, ct_ref, lattice, bw_comm, *lo + off, done_ref, cells, parents,
+                    scratch,
                 );
             }
         });
     }
 
-    let final_cell = idx(lattice.full_id(), k, l);
+    // the full-budget cell has every digit at its class count: index
+    // Σ counts[c]·strides[c] = slots − 1
+    let final_cell = lattice.full_id() * slots + (slots - 1);
     if !dp[final_cell].is_finite() {
         return Err(DpError::Infeasible);
     }
 
-    // Reconstruct: walk parents from (full, k, l), carving device subgraphs.
+    // Reconstruct: walk parents from the full-budget cell, carving device
+    // subgraphs; devices within a class are numbered in carve order from
+    // the class's dense offset.
     let mut dense = vec![usize::MAX; g.n()];
-    let (mut i, mut k_, mut l_) = (lattice.full_id(), k, l);
-    let mut next_acc = 0usize;
-    let mut next_cpu = 0usize;
+    let mut digits: Vec<usize> = ct.counts.clone();
+    let mut used = vec![0usize; ct.num_classes()];
+    let mut i = lattice.full_id();
     while i != lattice.empty_id() {
-        let (sub, used_acc) = parent[idx(i, k_, l_)];
+        let cell: usize = digits.iter().zip(&ct.strides).map(|(d, s)| d * s).sum();
+        let (sub, class) = parent[i * slots + cell];
         if sub == u32::MAX {
-            break; // dp[∅][k'][l'] = 0 seeds have no parent
+            break; // dp[∅][·] = 0 seeds have no parent
         }
         let sub = sub as usize;
+        let cls = class as usize;
         let s = lattice.difference_bitset(i, sub);
-        let device = if used_acc {
-            let d = next_acc;
-            next_acc += 1;
-            k_ -= 1;
-            d
-        } else {
-            let d = k + next_cpu;
-            next_cpu += 1;
-            l_ -= 1;
-            d
-        };
+        let device = ct.offsets[cls] + used[cls];
+        used[cls] += 1;
+        digits[cls] -= 1;
         for v in s.iter() {
             dense[v] = device;
         }
@@ -542,7 +702,7 @@ pub fn solve_on_lattice_with_opts(
     // Any nodes not covered (shouldn't happen) → CPU 0 fallback.
     for d in dense.iter_mut() {
         if *d == usize::MAX {
-            *d = k;
+            *d = ct.k;
         }
     }
     Ok((dp[final_cell], dense))
@@ -1086,6 +1246,130 @@ mod tests {
         p2.validate(&g2, &sc, true).unwrap();
         let bf2 = brute_force_contiguous(&g2, &sc).unwrap();
         assert!((p2.objective - bf2).abs() < 1e-9, "dp={} bf={bf2}", p2.objective);
+    }
+
+    #[test]
+    fn heterogeneous_speed_balances_by_effective_load() {
+        use crate::coordinator::placement::{DeviceClass, Fleet, PlanRequest};
+        // chain of 4, zero comm: a 3x-fast accelerator should take 3 nodes
+        // (load 1) while the slow one takes 1 (load 1) → objective 1.0;
+        // uniform devices could do no better than 2.0.
+        let mut g = OpGraph::new();
+        for i in 0..4 {
+            g.add_node(Node::new(format!("c{i}")).cpu(100.0).acc(1.0).mem(1.0).comm(0.0));
+        }
+        for i in 1..4 {
+            g.add_edge(i - 1, i);
+        }
+        let req = PlanRequest::new(Fleet::new(vec![
+            DeviceClass::acc("fast", 1, f64::INFINITY).speed(3.0),
+            DeviceClass::acc("slow", 1, f64::INFINITY),
+            DeviceClass::cpu("cpu", 1),
+        ]));
+        let p = solve_req(&g, &req).unwrap();
+        assert!((p.objective - 1.0).abs() < 1e-9, "{}", p.objective);
+        p.validate_req(&g, &req).unwrap();
+        let uniform = solve(&g, &Scenario::new(2, 1, f64::INFINITY)).unwrap();
+        assert!((uniform.objective - 2.0).abs() < 1e-9, "{}", uniform.objective);
+    }
+
+    #[test]
+    fn per_class_memory_caps_respected() {
+        use crate::coordinator::placement::{Device, DeviceClass, Fleet, PlanRequest};
+        // chain of 4, 1 MB each, no CPU escape: big (cap 3) must take 3
+        // nodes, small (cap 1) exactly one.
+        let mut g = OpGraph::new();
+        for i in 0..4 {
+            g.add_node(Node::new(format!("c{i}")).cpu(f64::INFINITY).acc(1.0).mem(1.0).comm(0.0));
+        }
+        for i in 1..4 {
+            g.add_edge(i - 1, i);
+        }
+        let req = PlanRequest::new(Fleet::new(vec![
+            DeviceClass::acc("big", 1, 3.0),
+            DeviceClass::acc("small", 1, 1.0),
+        ]));
+        let p = solve_req(&g, &req).unwrap();
+        p.validate_req(&g, &req).unwrap();
+        // the 3-node side must be on the big device (dense index 0)
+        let on_big = p.set_of(Device::Acc(0), 4).len();
+        let on_small = p.set_of(Device::Acc(1), 4).len();
+        assert_eq!((on_big, on_small), (3, 1));
+        // a cap that cannot hold the model at all is infeasible
+        let tight = PlanRequest::new(Fleet::new(vec![
+            DeviceClass::acc("a", 1, 1.0),
+            DeviceClass::acc("b", 1, 1.0),
+        ]));
+        assert!(matches!(solve_req(&g, &tight), Err(DpError::Infeasible)));
+    }
+
+    #[test]
+    fn heterogeneous_matches_brute_force_on_small_dags() {
+        use crate::coordinator::placement::{DeviceClass, Fleet, PlanRequest};
+        use crate::util::proptest::random_dag;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xF1EE7);
+        let req = PlanRequest::new(Fleet::new(vec![
+            DeviceClass::acc("fast", 1, 4.0).speed(2.0),
+            DeviceClass::acc("slow", 1, 5.0),
+            DeviceClass::cpu("cpu", 1),
+        ]));
+        for case in 0..15 {
+            let g = random_dag(&mut rng, 6, 0.35);
+            let dp = solve_req(&g, &req);
+            let bf = brute_force_req(&g, &req);
+            match (dp, bf) {
+                (Ok(p), Some(best)) => {
+                    assert!(
+                        (p.objective - best).abs() < 1e-6,
+                        "case {case}: dp={} bf={best}",
+                        p.objective
+                    );
+                    p.validate_req(&g, &req).unwrap();
+                }
+                (Err(DpError::Infeasible), None) => {}
+                (dp, bf) => panic!("case {case}: dp={dp:?} bf={bf:?} disagree on feasibility"),
+            }
+        }
+    }
+
+    /// Heterogeneous analogue of [`brute_force_contiguous`]: exhaustive
+    /// over pipeline-orderable partitions, scored by the fleet evaluator.
+    fn brute_force_req(g: &OpGraph, req: &PlanRequest) -> Option<f64> {
+        let k = req.fleet.k();
+        let nd = req.fleet.num_devices();
+        let n = g.n();
+        let mut best: Option<f64> = None;
+        let mut assign = vec![0usize; n];
+        loop {
+            let placement = Placement::new(
+                assign.iter().map(|&d| Device::from_index(d, k)).collect(),
+                0.0,
+                "bf",
+            );
+            let orderable =
+                crate::graph::contiguity::partition_pipeline_orderable(g, &assign, nd);
+            let mut relaxed = req.clone();
+            relaxed.contiguous = false;
+            if orderable && placement.validate_req(g, &relaxed).is_ok() {
+                let obj = objective::max_load_req(g, req, &placement);
+                if obj.is_finite() {
+                    best = Some(best.map_or(obj, |b: f64| b.min(obj)));
+                }
+            }
+            let mut i = 0;
+            loop {
+                if i == n {
+                    return best;
+                }
+                assign[i] += 1;
+                if assign[i] < nd {
+                    break;
+                }
+                assign[i] = 0;
+                i += 1;
+            }
+        }
     }
 
     #[test]

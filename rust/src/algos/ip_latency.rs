@@ -22,7 +22,7 @@
 
 use super::{objective, PlaceError};
 use crate::coordinator::context::ProblemCtx;
-use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::graph::OpGraph;
 use crate::solver::lp::{Lp, Sense};
 use crate::solver::milp::{Milp, SolveStatus};
@@ -82,6 +82,16 @@ pub fn solve(
     solve_ctx(&ctx, opts)
 }
 
+/// [`solve`] over a heterogeneous [`PlanRequest`] fleet (one-shot context).
+pub fn solve_req(
+    g: &OpGraph,
+    req: &PlanRequest,
+    opts: &LatencyIpOptions,
+) -> Result<LatencyIpResult, PlaceError> {
+    let ctx = ProblemCtx::from_request(g.clone(), req.clone());
+    solve_ctx(&ctx, opts)
+}
+
 /// [`solve`] against a shared analysis context: the search borrows the
 /// original graph's topological order and reachability rows from `ctx`.
 pub fn solve_ctx(
@@ -89,17 +99,19 @@ pub fn solve_ctx(
     opts: &LatencyIpOptions,
 ) -> Result<LatencyIpResult, PlaceError> {
     let g = ctx.graph();
-    let sc = ctx.scenario();
+    let req = ctx.request();
     let order = ctx.orig_order()?; // also the DAG guard
     let reach = ctx.orig_reach()?;
     let co_reach = ctx.orig_co_reach()?;
     let start = Instant::now();
-    let mut search = LatSearch::new(g, sc, opts.clone(), start, order, reach, co_reach);
+    let mut search = LatSearch::new(g, req, opts.clone(), start, order, reach, co_reach);
 
     // Warm starts: caller-provided placements (greedy, max-load DP, …).
+    // Evaluated against the context's cached order/reachability — no
+    // per-placement matrix rebuild (ROADMAP item (d) analogue).
     for p in &opts.warm_starts {
-        if p.check_memory(g, sc).is_ok() {
-            let lat = objective::latency(g, sc, p);
+        if p.check_memory_req(g, req).is_ok() {
+            let lat = objective::latency_in(g, req, p, order, reach);
             let dense: Vec<usize> = p.assignment.iter().map(|&d| lat_index(d)).collect();
             if lat.is_finite()
                 && search.incumbent.as_ref().is_none_or(|(best, _)| lat < *best)
@@ -118,7 +130,7 @@ pub fn solve_ctx(
         .map(|&d| if d == 0 { Device::Cpu(0) } else { Device::Acc(d - 1) })
         .collect();
     let mut placement = Placement::new(assignment, obj, "IP (latency)");
-    placement.objective = objective::latency(g, sc, &placement);
+    placement.objective = objective::latency_in(g, req, &placement, order, reach);
     let gap = ((placement.objective - search.best_bound) / placement.objective.max(1e-12)).max(0.0);
     Ok(LatencyIpResult {
         status: search.status,
@@ -141,7 +153,17 @@ fn lat_index(d: Device) -> usize {
 
 struct LatSearch<'a> {
     g: &'a OpGraph,
-    sc: &'a Scenario,
+    req: &'a PlanRequest,
+    /// Total accelerator count.
+    k: usize,
+    /// Per accelerator: its class's memory cap.
+    cap: Vec<f64>,
+    /// Per accelerator: its class's relative speed.
+    acc_speed: Vec<f64>,
+    /// Per accelerator: class index (empty-device symmetry breaking).
+    acc_class: Vec<usize>,
+    /// Speed of the pooled CPU device.
+    cpu_speed: f64,
     opts: LatencyIpOptions,
     order: &'a [usize],
     /// Reachability rows in one flat allocation — borrowed from the
@@ -174,7 +196,7 @@ struct LatSearch<'a> {
 impl<'a> LatSearch<'a> {
     fn new(
         g: &'a OpGraph,
-        sc: &'a Scenario,
+        req: &'a PlanRequest,
         opts: LatencyIpOptions,
         start: Instant,
         order: &'a [usize],
@@ -182,7 +204,33 @@ impl<'a> LatSearch<'a> {
         co_reach: &'a BitMatrix,
     ) -> Self {
         let stride = reach.stride();
-        let min_cost: Vec<f64> = g.nodes.iter().map(|n| n.p_cpu.min(n.p_acc)).collect();
+        let fleet = &req.fleet;
+        let k = fleet.k();
+        // accelerator slice of the one fleet→dense-device mapping
+        let dense = fleet.dense_view();
+        let cap: Vec<f64> = dense[..k].iter().map(|d| d.mem_cap).collect();
+        let acc_speed: Vec<f64> = dense[..k].iter().map(|d| d.speed).collect();
+        let acc_class: Vec<usize> = dense[..k].iter().map(|d| d.class).collect();
+        let cpu_speed = fleet.cpu_speed(0);
+        // critical-path bound on the cheapest device of each kind (sound
+        // for heterogeneous speeds; uniform fleets: /1.0, the old bound)
+        let best_acc = fleet.best_acc_speed();
+        let best_cpu = fleet.best_cpu_speed();
+        let min_cost: Vec<f64> = g
+            .nodes
+            .iter()
+            .map(|n| {
+                let c = match best_cpu {
+                    Some(s) => n.p_cpu / s,
+                    None => n.p_cpu,
+                };
+                let a = match best_acc {
+                    Some(s) => n.p_acc / s,
+                    None => f64::INFINITY,
+                };
+                c.min(a)
+            })
+            .collect();
         let mut tail = vec![0.0; g.n()];
         for &v in order.iter().rev() {
             let best_succ = g.succs[v].iter().map(|&w| tail[w]).fold(0.0, f64::max);
@@ -191,15 +239,20 @@ impl<'a> LatSearch<'a> {
         let root_bound = (0..g.n()).map(|v| tail[v]).fold(0.0, f64::max);
         LatSearch {
             g,
-            sc,
+            req,
+            k,
+            cap,
+            acc_speed,
+            acc_class,
+            cpu_speed,
             deadline: start + opts.time_limit,
             opts,
             reach,
             co_reach,
             tail,
-            acc_mem: vec![0.0; sc.k],
-            acc_set: (0..sc.k).map(|_| BitSet::new(g.n())).collect(),
-            acc_reach: (0..sc.k).map(|_| BitSet::new(g.n())).collect(),
+            acc_mem: vec![0.0; k],
+            acc_set: (0..k).map(|_| BitSet::new(g.n())).collect(),
+            acc_reach: (0..k).map(|_| BitSet::new(g.n())).collect(),
             mid_scratch: vec![0; stride],
             reach_scratch: vec![0; stride],
             assignment: vec![usize::MAX; g.n()],
@@ -264,29 +317,31 @@ impl<'a> LatSearch<'a> {
         let v = self.order[pos];
 
         // candidates: CPU pool (0) + accelerators; symmetry break on empty
-        // accelerators; cheapest optimistic completion first.
+        // accelerators per class; cheapest optimistic completion first.
         let mut cands: Vec<(f64, usize)> = Vec::new();
         let ready = self.g.preds[v].iter().map(|&u| self.opt_done[u]).fold(0.0, f64::max);
         if self.g.nodes[v].p_cpu.is_finite() {
-            cands.push((ready + self.g.nodes[v].p_cpu, 0));
+            cands.push((ready + self.g.nodes[v].p_cpu / self.cpu_speed, 0));
         }
-        let mut seen_empty = false;
-        for i in 0..self.sc.k {
+        let num_classes = self.acc_class.last().map_or(0, |&c| c + 1);
+        let mut seen_empty = vec![false; num_classes];
+        for i in 0..self.k {
             if self.g.nodes[v].p_acc.is_infinite()
-                || self.acc_mem[i] + self.g.nodes[v].mem > self.sc.mem_cap
+                || self.acc_mem[i] + self.g.nodes[v].mem > self.cap[i]
             {
                 continue;
             }
             if self.acc_set[i].is_empty() {
-                if seen_empty {
+                let class = self.acc_class[i];
+                if seen_empty[class] {
                     continue;
                 }
-                seen_empty = true;
+                seen_empty[class] = true;
             }
             if self.opts.contiguous && !self.contiguity_ok(v, i) {
                 continue;
             }
-            cands.push((ready + self.g.nodes[v].p_acc, i + 1));
+            cands.push((ready + self.g.nodes[v].p_acc / self.acc_speed[i], i + 1));
         }
         cands.sort_by(|a, b| a.0.total_cmp(&b.0));
 
@@ -362,7 +417,7 @@ impl<'a> LatSearch<'a> {
     }
 
     fn contiguous_ok_full(&self, dense: &[usize]) -> bool {
-        for i in 0..self.sc.k {
+        for i in 0..self.k {
             let set = BitSet::from_iter(
                 self.g.n(),
                 dense.iter().enumerate().filter(|&(_, &d)| d == i + 1).map(|(v, _)| v),
@@ -374,6 +429,9 @@ impl<'a> LatSearch<'a> {
         true
     }
 
+    /// Exact-latency leaf evaluation against the context's cached order
+    /// and reachability rows — the `O(V·E/64)` matrix is never rebuilt
+    /// per evaluation (the former ROADMAP (a)/(d) ctx-matrix gap).
     fn eval_dense(&self, dense: &[usize]) -> f64 {
         let p = Placement::new(
             dense
@@ -383,10 +441,10 @@ impl<'a> LatSearch<'a> {
             0.0,
             "tmp",
         );
-        if p.check_memory(self.g, self.sc).is_err() {
+        if p.check_memory_req(self.g, self.req).is_err() {
             return f64::INFINITY;
         }
-        objective::latency(self.g, self.sc, &p)
+        objective::latency_in(self.g, self.req, &p, self.order, self.reach)
     }
 
     fn polish(&self, obj: f64, dense: Vec<usize>) -> Option<(f64, Vec<usize>)> {
@@ -401,7 +459,7 @@ impl<'a> LatSearch<'a> {
                     break 'outer;
                 }
                 let orig = cur[v];
-                for d in 0..=self.sc.k {
+                for d in 0..=self.k {
                     if d == orig {
                         continue;
                     }
@@ -434,13 +492,20 @@ impl<'a> LatSearch<'a> {
 // Literal Fig.-3 MILP (executable specification, tiny instances)
 // ---------------------------------------------------------------------------
 
+/// Legacy scalar form of [`build_model_req`].
+pub fn build_model(g: &OpGraph, sc: &Scenario, big_m: f64) -> LatencyModel {
+    build_model_req(g, &sc.to_request(), big_m)
+}
+
 /// Build the Fig.-3 latency MILP (contiguous, one subgraph per
 /// accelerator), with Lemma-4.1 big-M reformulations of (6) and (10) and
 /// the z-variable contiguity linearization. Devices: 0 = CPU pool,
 /// 1..=k accelerators. `big_m` must exceed any achievable latency.
-pub fn build_model(g: &OpGraph, sc: &Scenario, big_m: f64) -> LatencyModel {
+/// Memory rows use each accelerator's class cap; processing coefficients
+/// scale by the device's class speed.
+pub fn build_model_req(g: &OpGraph, req: &PlanRequest, big_m: f64) -> LatencyModel {
     let n = g.n();
-    let k = sc.k;
+    let k = req.fleet.k();
     let nd = k + 1; // index 0 = CPU pool
     // layout: x[v][0..nd] | cin[v][1..=k] | cout[v][1..=k] | z[v][1..=k]
     //   | Latency[v] | Start[i] | Finish[i] | TotalLatency
@@ -476,12 +541,12 @@ pub fn build_model(g: &OpGraph, sc: &Scenario, big_m: f64) -> LatencyModel {
     for v in 0..n {
         lp.add((0..nd).map(|d| (x(v, d), 1.0)).collect(), Sense::Eq, 1.0);
     }
-    // (3) memory
+    // (3) memory (per accelerator class cap)
     for i in 0..k {
         lp.add(
             (0..n).map(|v| (x(v, i + 1), g.nodes[v].mem)).collect(),
             Sense::Le,
-            sc.mem_cap.min(1e15),
+            req.fleet.acc_mem_cap(i).min(1e15),
         );
     }
     // (4)/(5) comm indicators
@@ -513,28 +578,34 @@ pub fn build_model(g: &OpGraph, sc: &Scenario, big_m: f64) -> LatencyModel {
             );
         }
     }
-    // (7) Finish_i = Start_i + Σ CommIn·c + Σ x·p_acc + Σ CommOut·c
+    // (7) Finish_i = Start_i + Σ CommIn·c + Σ x·p_acc/speed + Σ CommOut·c
     for i in 0..k {
+        let speed = req.fleet.acc_speed(i);
         let mut coeffs = vec![(fin0 + i, 1.0), (start0 + i, -1.0)];
         for v in 0..n {
             coeffs.push((cin(v, i), -g.nodes[v].comm));
-            let p = if g.nodes[v].p_acc.is_finite() { g.nodes[v].p_acc } else { 1e12 };
+            let p = if g.nodes[v].p_acc.is_finite() { g.nodes[v].p_acc / speed } else { 1e12 };
             coeffs.push((x(v, i + 1), -p));
             coeffs.push((cout(v, i), -g.nodes[v].comm));
         }
         lp.add(coeffs, Sense::Eq, 0.0);
     }
     // (8)/(9) CPU recurrences
+    let cpu_speed = req.fleet.cpu_speed(0);
     for v in 0..n {
         lp.add(
-            vec![(lat0 + v, 1.0), (x(v, 0), -g.nodes[v].p_cpu.min(1e12))],
+            vec![(lat0 + v, 1.0), (x(v, 0), -(g.nodes[v].p_cpu / cpu_speed).min(1e12))],
             Sense::Ge,
             0.0,
         );
     }
     for (u, v) in g.edges() {
         lp.add(
-            vec![(lat0 + v, 1.0), (x(v, 0), -g.nodes[v].p_cpu.min(1e12)), (lat0 + u, -1.0)],
+            vec![
+                (lat0 + v, 1.0),
+                (x(v, 0), -(g.nodes[v].p_cpu / cpu_speed).min(1e12)),
+                (lat0 + u, -1.0),
+            ],
             Sense::Ge,
             0.0,
         );

@@ -19,7 +19,7 @@
 use super::dp::DpError;
 use super::{objective, PlaceError};
 use crate::coordinator::context::ProblemCtx;
-use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::graph::OpGraph;
 use crate::solver::lp::{Lp, Sense};
 use crate::solver::milp::{Milp, SolveStatus};
@@ -77,12 +77,22 @@ pub fn solve(g: &OpGraph, sc: &Scenario, opts: &IpOptions) -> Result<IpResult, D
     solve_ctx(&ctx, opts)
 }
 
+/// [`solve`] over a heterogeneous [`PlanRequest`] fleet (one-shot context).
+pub fn solve_req(
+    g: &OpGraph,
+    req: &PlanRequest,
+    opts: &IpOptions,
+) -> Result<IpResult, DpError> {
+    let ctx = ProblemCtx::from_request_with_cap(g.clone(), req.clone(), 20_000);
+    solve_ctx(&ctx, opts)
+}
+
 /// [`solve`] against a shared analysis context: the search reads the
 /// preprocessed proxy graph, topological order, reachability rows and the
 /// DP/DPL warm start from `ctx` (each computed at most once per context).
 pub fn solve_ctx(ctx: &ProblemCtx, opts: &IpOptions) -> Result<IpResult, PlaceError> {
     let g = ctx.graph();
-    let sc = ctx.scenario();
+    let req = ctx.request();
     let prepared = ctx.prepared()?;
     // search cost model: dp_graph with the gradient comm folded into node
     // comm (the PipeDream-style proxy); the final incumbent is re-scored
@@ -99,7 +109,7 @@ pub fn solve_ctx(ctx: &ProblemCtx, opts: &IpOptions) -> Result<IpResult, PlaceEr
     // replanning hits the cache too.
     let warm = ctx.warm_solution().ok().cloned();
 
-    let mut search = Search::new(gg, sc, opts.clone(), order, reach, co_reach);
+    let mut search = Search::new(gg, req, opts.clone(), order, reach, co_reach);
     if let Some((obj, dense)) = warm {
         search.incumbent = Some((obj, dense));
         search.incumbent_at = Duration::ZERO;
@@ -107,7 +117,7 @@ pub fn solve_ctx(ctx: &ProblemCtx, opts: &IpOptions) -> Result<IpResult, PlaceEr
     search.run();
 
     let (obj, dense) = search.incumbent.clone().ok_or(PlaceError::Infeasible)?;
-    let mut placement = prepared.expand(g, sc, obj, &dense);
+    let mut placement = prepared.expand_req(g, req, obj, &dense);
     placement.algorithm = if opts.contiguous {
         "IP (contiguous)".into()
     } else {
@@ -143,7 +153,16 @@ struct DeviceState {
 
 struct Search<'a> {
     g: &'a OpGraph,
-    sc: &'a Scenario,
+    req: &'a PlanRequest,
+    /// Total accelerator count (dense devices `0..k` are accelerators).
+    k: usize,
+    /// Per dense device: its class's memory cap (∞ for CPU devices).
+    mem_cap: Vec<f64>,
+    /// Per dense device: its class's relative speed.
+    speed: Vec<f64>,
+    /// Per dense device: class index (for empty-device symmetry breaking —
+    /// only devices of the SAME class are interchangeable).
+    class_of: Vec<usize>,
     opts: IpOptions,
     order: &'a [usize],
     /// Reachability rows in one flat allocation (`reach.row(u)` =
@@ -175,23 +194,47 @@ struct Search<'a> {
 impl<'a> Search<'a> {
     fn new(
         g: &'a OpGraph,
-        sc: &'a Scenario,
+        req: &'a PlanRequest,
         opts: IpOptions,
         order: &'a [usize],
         reach: &'a BitMatrix,
         co_reach: &'a BitMatrix,
     ) -> Self {
         let stride = reach.stride();
-        let nd = sc.k + sc.l;
+        let fleet = &req.fleet;
+        let k = fleet.k();
+        // the one fleet→dense-device mapping (shared with the latency IP
+        // and the evaluators' per-index accessors)
+        let dense = fleet.dense_view();
+        let nd = dense.len();
+        let mem_cap: Vec<f64> = dense.iter().map(|d| d.mem_cap).collect();
+        let speed: Vec<f64> = dense.iter().map(|d| d.speed).collect();
+        let class_of: Vec<usize> = dense.iter().map(|d| d.class).collect();
+        // work lower bound divides by the fastest class of each kind: no
+        // device can run a node cheaper (uniform fleets: /1.0, the old
+        // bound bitwise)
+        let best_acc = fleet.best_acc_speed().unwrap_or(f64::NAN);
+        let best_cpu = fleet.best_cpu_speed().unwrap_or(f64::NAN);
+        let cheapest = |v: usize| -> f64 {
+            let a =
+                if best_acc.is_nan() { f64::INFINITY } else { g.nodes[v].p_acc / best_acc };
+            let c =
+                if best_cpu.is_nan() { f64::INFINITY } else { g.nodes[v].p_cpu / best_cpu };
+            a.min(c)
+        };
         let mut suffix = vec![0.0; order.len() + 1];
         for (pos, &v) in order.iter().enumerate().rev() {
-            suffix[pos] = suffix[pos + 1] + g.nodes[v].p_acc.min(g.nodes[v].p_cpu);
+            suffix[pos] = suffix[pos + 1] + cheapest(v);
         }
         let root_bound = if nd > 0 { suffix[0] / nd as f64 } else { f64::INFINITY };
         let start = Instant::now();
         Search {
             g,
-            sc,
+            req,
+            k,
+            mem_cap,
+            speed,
+            class_of,
             deadline: start + opts.time_limit,
             opts,
             reach,
@@ -228,8 +271,8 @@ impl<'a> Search<'a> {
 
     fn device_load(&self, d: usize) -> f64 {
         let ds = &self.devices[d];
-        if d < self.sc.k {
-            self.sc.combine(ds.compute, ds.comm_in, ds.comm_out)
+        if d < self.k {
+            self.req.combine(ds.compute, ds.comm_in, ds.comm_out)
         } else {
             ds.compute
         }
@@ -292,29 +335,23 @@ impl<'a> Search<'a> {
         let nd = self.devices.len();
 
         // Candidate devices, cheapest resulting load first; symmetry break:
-        // at most one *empty* accelerator and one empty CPU considered.
+        // at most one *empty* device per device class considered (devices
+        // are only interchangeable within their class).
         let mut cands: Vec<(f64, usize)> = Vec::with_capacity(nd);
-        let mut seen_empty_acc = false;
-        let mut seen_empty_cpu = false;
+        let mut seen_empty = vec![false; self.class_of.last().map_or(0, |&c| c + 1)];
         for d in 0..nd {
-            let is_acc = d < self.sc.k;
+            let is_acc = d < self.k;
             let empty = self.devices[d].set.is_empty();
             if empty {
-                if is_acc {
-                    if seen_empty_acc {
-                        continue;
-                    }
-                    seen_empty_acc = true;
-                } else {
-                    if seen_empty_cpu {
-                        continue;
-                    }
-                    seen_empty_cpu = true;
+                let class = self.class_of[d];
+                if seen_empty[class] {
+                    continue;
                 }
+                seen_empty[class] = true;
             }
             if is_acc {
                 if self.g.nodes[v].p_acc.is_infinite()
-                    || self.devices[d].mem + self.g.nodes[v].mem > self.sc.mem_cap
+                    || self.devices[d].mem + self.g.nodes[v].mem > self.mem_cap[d]
                 {
                     continue;
                 }
@@ -325,7 +362,7 @@ impl<'a> Search<'a> {
                 continue;
             }
             let p = if is_acc { self.g.nodes[v].p_acc } else { self.g.nodes[v].p_cpu };
-            cands.push((self.device_load(d) + p, d));
+            cands.push((self.device_load(d) + p / self.speed[d], d));
         }
         cands.sort_by(|a, b| a.0.total_cmp(&b.0));
 
@@ -373,14 +410,16 @@ impl<'a> Search<'a> {
     }
 
     fn assign(&mut self, v: usize, d: usize) -> Undo {
-        let is_acc = d < self.sc.k;
+        let is_acc = d < self.k;
         let undo = Undo { in_mark: self.undo_in.len(), out_mark: self.undo_out.len() };
         self.assignment[v] = d;
         self.assigned.insert(v);
+        let speed = self.speed[d];
         let ds = &mut self.devices[d];
         ds.set.insert(v);
         ds.reach.union_with_words(self.reach.row(v));
-        ds.compute += if is_acc { self.g.nodes[v].p_acc } else { self.g.nodes[v].p_cpu };
+        let p = if is_acc { self.g.nodes[v].p_acc } else { self.g.nodes[v].p_cpu };
+        ds.compute += p / speed;
         ds.mem += self.g.nodes[v].mem;
         // communication: only accelerator devices pay (Fig. 6 (20) vs (21))
         for pi in 0..self.g.preds[v].len() {
@@ -395,7 +434,7 @@ impl<'a> Search<'a> {
                 self.devices[d].comm_in += self.g.nodes[u].comm;
                 self.undo_in.push(u);
             }
-            if du < self.sc.k && !self.out_paid[u] {
+            if du < self.k && !self.out_paid[u] {
                 self.out_paid[u] = true;
                 self.devices[du].comm_out += self.g.nodes[u].comm;
                 self.undo_out.push(u);
@@ -405,7 +444,7 @@ impl<'a> Search<'a> {
     }
 
     fn unassign(&mut self, v: usize, d: usize, undo: Undo) {
-        let is_acc = d < self.sc.k;
+        let is_acc = d < self.k;
         while self.undo_in.len() > undo.in_mark {
             let u = self.undo_in.pop().unwrap();
             self.devices[d].in_paid.remove(u);
@@ -417,9 +456,11 @@ impl<'a> Search<'a> {
             let du = self.assignment[u];
             self.devices[du].comm_out -= self.g.nodes[u].comm;
         }
+        let speed = self.speed[d];
         let ds = &mut self.devices[d];
         ds.set.remove(v);
-        ds.compute -= if is_acc { self.g.nodes[v].p_acc } else { self.g.nodes[v].p_cpu };
+        let p = if is_acc { self.g.nodes[v].p_acc } else { self.g.nodes[v].p_cpu };
+        ds.compute -= p / speed;
         ds.mem -= self.g.nodes[v].mem;
         self.assignment[v] = usize::MAX;
         self.assigned.remove(v);
@@ -477,19 +518,19 @@ impl<'a> Search<'a> {
     /// in contiguous mode).
     fn eval_dense(&self, dense: &[usize]) -> f64 {
         let p = Placement::new(
-            dense.iter().map(|&d| Device::from_index(d, self.sc.k)).collect(),
+            dense.iter().map(|&d| Device::from_index(d, self.k)).collect(),
             0.0,
             "tmp",
         );
         if self.opts.contiguous {
             for d in 0..self.devices.len() {
-                let set = p.set_of(Device::from_index(d, self.sc.k), self.g.n());
+                let set = p.set_of(Device::from_index(d, self.k), self.g.n());
                 if !crate::graph::contiguity::is_contiguous_in(self.reach, &set) {
                     return f64::INFINITY;
                 }
             }
         }
-        objective::max_load(self.g, self.sc, &p)
+        objective::max_load_req(self.g, self.req, &p)
     }
 }
 
@@ -529,14 +570,21 @@ impl ThroughputModel {
     }
 }
 
+/// Legacy scalar form of [`build_model_req`].
+pub fn build_model(g: &OpGraph, sc: &Scenario, contiguous: bool) -> ThroughputModel {
+    build_model_req(g, &sc.to_request(), contiguous)
+}
+
 /// Build the Fig.-6 MILP. Devices `0..k` are accelerators, `k..k+ℓ` CPUs.
 /// With `contiguous`, the Lemma-4.1 `z`-linearization of constraint (16) is
 /// added for every device. The `CommIn/CommOut` variables exist per
-/// (node, accelerator); loads and `MaxLoad` close the model.
-pub fn build_model(g: &OpGraph, sc: &Scenario, contiguous: bool) -> ThroughputModel {
+/// (node, accelerator); loads and `MaxLoad` close the model. Memory
+/// constraint (19) uses each accelerator's class cap; the load rows (20)/
+/// (21) scale processing times by the device's class speed.
+pub fn build_model_req(g: &OpGraph, req: &PlanRequest, contiguous: bool) -> ThroughputModel {
     let n = g.n();
-    let nd = sc.k + sc.l;
-    let k = sc.k;
+    let k = req.fleet.k();
+    let nd = k + req.fleet.l();
     // layout: x[v][i] (n*nd) | cin[v][acc i] (n*k) | cout[v][acc i] (n*k)
     //         | z[v][i] (n*nd, only if contiguous) | load[i] (nd) | maxload
     let x0 = 0;
@@ -578,26 +626,28 @@ pub fn build_model(g: &OpGraph, sc: &Scenario, contiguous: bool) -> ThroughputMo
             lp.add(vec![(cout(u, i), 1.0), (x(u, i), -1.0), (x(v, i), 1.0)], Sense::Ge, 0.0);
         }
     }
-    // (19) memory per accelerator
+    // (19) memory per accelerator (its class's cap)
     for i in 0..k {
         lp.add(
             (0..n).map(|v| (x(v, i), g.nodes[v].mem)).collect(),
             Sense::Le,
-            sc.mem_cap.min(1e15),
+            req.fleet.acc_mem_cap(i).min(1e15),
         );
     }
     // (20) accelerator load; (21) CPU load; MaxLoad ≥ Load_i
     for i in 0..nd {
         let mut coeffs: Vec<(usize, f64)> = vec![(load0 + i, -1.0)];
         if i < k {
+            let speed = req.fleet.acc_speed(i);
             for v in 0..n {
-                coeffs.push((x(v, i), g.nodes[v].p_acc));
+                coeffs.push((x(v, i), g.nodes[v].p_acc / speed));
                 coeffs.push((cin(v, i), g.nodes[v].comm));
                 coeffs.push((cout(v, i), g.nodes[v].comm));
             }
         } else {
+            let speed = req.fleet.cpu_speed(i - k);
             for v in 0..n {
-                coeffs.push((x(v, i), g.nodes[v].p_cpu));
+                coeffs.push((x(v, i), g.nodes[v].p_cpu / speed));
             }
         }
         lp.add(coeffs, Sense::Eq, 0.0);

@@ -10,8 +10,9 @@
 //!   non-contiguous) placements by decomposing each accelerator's set into
 //!   contiguous virtual pieces and serializing them (constraint (14)).
 
-use crate::coordinator::placement::{Device, Placement, Scenario, TrainSchedule};
-use crate::graph::{contiguity, NodeKind, OpGraph};
+use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario, TrainSchedule};
+use crate::graph::{contiguity, topo, NodeKind, OpGraph};
+use crate::util::arena::BitMatrix;
 use crate::util::bitset::BitSet;
 
 /// Load components of one device for one pass direction.
@@ -26,6 +27,10 @@ impl LoadParts {
     pub fn total(&self, sc: &Scenario) -> f64 {
         sc.combine(self.compute, self.comm_in, self.comm_out)
     }
+
+    pub fn total_req(&self, req: &PlanRequest) -> f64 {
+        req.combine(self.compute, self.comm_in, self.comm_out)
+    }
 }
 
 /// Per-device, per-direction loads of a placement.
@@ -38,25 +43,34 @@ pub struct DeviceLoads {
 }
 
 impl DeviceLoads {
+    /// Legacy scalar form of [`DeviceLoads::of_req`].
+    pub fn of(g: &OpGraph, sc: &Scenario, p: &Placement) -> DeviceLoads {
+        Self::of_req(g, &sc.to_request(), p)
+    }
+
     /// Compute loads of every device. Accelerator comm follows §3 (pay
     /// `c_u` for boundary crossings, once per direction per node); CPU
     /// devices pay compute only (RAM access is free in the model).
-    pub fn of(g: &OpGraph, sc: &Scenario, p: &Placement) -> DeviceLoads {
-        let nd = sc.k + sc.l.max(1);
+    /// Compute times divide by the device's class `speed`.
+    pub fn of_req(g: &OpGraph, req: &PlanRequest, p: &Placement) -> DeviceLoads {
+        let (k, l) = (req.fleet.k(), req.fleet.l());
+        let nd = k + l.max(1);
         let mut fw = vec![LoadParts::default(); nd];
         let mut bw = vec![LoadParts::default(); nd];
 
         for v in 0..g.n() {
             let d = p.assignment[v];
-            let idx = d.index(sc.k);
+            let idx = d.index(k);
             let parts = match g.nodes[v].kind {
                 NodeKind::Forward => &mut fw,
                 NodeKind::Backward => &mut bw,
             };
             match d {
-                Device::Cpu(_) => parts[idx].compute += g.nodes[v].p_cpu,
-                Device::Acc(_) => {
-                    parts[idx].compute += g.nodes[v].p_acc;
+                Device::Cpu(j) => {
+                    parts[idx].compute += g.nodes[v].p_cpu / req.fleet.cpu_speed(j)
+                }
+                Device::Acc(i) => {
+                    parts[idx].compute += g.nodes[v].p_acc / req.fleet.acc_speed(i);
                     // out-comm: v's output leaves the device
                     if g.succs[v].iter().any(|&w| p.assignment[w] != d) {
                         parts[idx].comm_out += g.nodes[v].comm;
@@ -67,7 +81,7 @@ impl DeviceLoads {
         // in-comm: for each accelerator, each external producer u feeding it
         // is paid once (per §3 / Fig. 6 CommIn), in the direction of the
         // *consumer* side nodes.
-        for i in 0..sc.k {
+        for i in 0..k {
             let d = Device::Acc(i);
             for dir in [NodeKind::Forward, NodeKind::Backward] {
                 let mut paid = BitSet::new(g.n());
@@ -86,7 +100,7 @@ impl DeviceLoads {
                 }
             }
         }
-        DeviceLoads { fw, bw, k: sc.k }
+        DeviceLoads { fw, bw, k }
     }
 
     /// Combined load of device `idx` under the scenario's comm model and
@@ -94,6 +108,15 @@ impl DeviceLoads {
     pub fn device_total(&self, idx: usize, sc: &Scenario) -> f64 {
         self.fw[idx].total(sc) + self.bw[idx].total(sc)
     }
+
+    pub fn device_total_req(&self, idx: usize, req: &PlanRequest) -> f64 {
+        self.fw[idx].total_req(req) + self.bw[idx].total_req(req)
+    }
+}
+
+/// Legacy scalar form of [`max_load_req`].
+pub fn max_load(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
+    max_load_req(g, &sc.to_request(), p)
 }
 
 /// Throughput objective: Time-Per-Sample of the pipelined schedule.
@@ -102,11 +125,11 @@ impl DeviceLoads {
 /// * Training graphs, PipeDream schedule: `max_i (FW_i + BW_i)` (§5.3).
 /// * Training graphs, GPipe schedule: `max_i FW_i + max_i BW_i` (App. A).
 ///
-/// Returns `INFINITY` for memory-infeasible or accelerator-unsupported
-/// placements.
-pub fn max_load(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
+/// Returns `INFINITY` for memory-infeasible (per-class caps) or
+/// accelerator-unsupported placements.
+pub fn max_load_req(g: &OpGraph, req: &PlanRequest, p: &Placement) -> f64 {
     // memory feasibility
-    if p.check_memory(g, sc).is_err() {
+    if p.check_memory_req(g, req).is_err() {
         return f64::INFINITY;
     }
     for v in 0..g.n() {
@@ -114,53 +137,82 @@ pub fn max_load(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
             return f64::INFINITY;
         }
     }
-    let loads = DeviceLoads::of(g, sc, p);
-    let nd = sc.k + sc.l.max(1);
+    let loads = DeviceLoads::of_req(g, req, p);
+    let nd = req.fleet.k() + req.fleet.l().max(1);
     let is_training = g.nodes.iter().any(|n| n.kind == NodeKind::Backward);
-    if !is_training || sc.train_schedule == TrainSchedule::PipeDream {
-        (0..nd).map(|i| loads.device_total(i, sc)).fold(0.0, f64::max)
+    if !is_training || req.train_schedule == TrainSchedule::PipeDream {
+        (0..nd).map(|i| loads.device_total_req(i, req)).fold(0.0, f64::max)
     } else {
-        let max_fw = (0..nd).map(|i| loads.fw[i].total(sc)).fold(0.0, f64::max);
-        let max_bw = (0..nd).map(|i| loads.bw[i].total(sc)).fold(0.0, f64::max);
+        let max_fw = (0..nd).map(|i| loads.fw[i].total_req(req)).fold(0.0, f64::max);
+        let max_bw = (0..nd).map(|i| loads.bw[i].total_req(req)).fold(0.0, f64::max);
         max_fw + max_bw
     }
+}
+
+/// Legacy scalar form of [`latency_req`].
+pub fn latency(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
+    latency_req(g, &sc.to_request(), p)
 }
 
 /// Latency objective (§4): makespan of the single-sample schedule where
 /// each accelerator piece runs uninterrupted (in-transfer → compute →
 /// out-transfer) once all its external inputs are in RAM, pieces on one
 /// accelerator serialize, and CPU nodes run whenever their inputs are ready
-/// (width ≤ ℓ assumed, as in the paper).
+/// (width ≤ ℓ assumed, as in the paper). Compute times divide by the
+/// device's class `speed`.
 ///
 /// Non-contiguous accelerator sets are decomposed into contiguous virtual
 /// pieces first (§4.1 semantics with `q` = number of pieces).
-pub fn latency(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
-    latency_with_granularity(g, sc, p, false)
+///
+/// Builds the graph's topological order and reachability matrix once per
+/// call; evaluators in a loop (the latency IP's leaves) should use
+/// [`latency_in`] with the shared
+/// [`crate::coordinator::context::ProblemCtx`] artifacts instead.
+pub fn latency_req(g: &OpGraph, req: &PlanRequest, p: &Placement) -> f64 {
+    let order = topo::toposort(g).expect("latency requires a DAG");
+    let reach = topo::reachability_matrix(g);
+    latency_in(g, req, p, &order, &reach)
+}
+
+/// [`latency_req`] against a caller-supplied topological order and
+/// reachability matrix (the `ProblemCtx::orig_order` / `orig_reach`
+/// artifacts) — no per-evaluation matrix rebuild.
+pub fn latency_in(
+    g: &OpGraph,
+    req: &PlanRequest,
+    p: &Placement,
+    order: &[usize],
+    reach: &BitMatrix,
+) -> f64 {
+    latency_with_granularity(g, req, p, false, order, reach)
         .unwrap_or_else(|| {
             // Mutually-dependent pieces (two contiguous sets CAN depend on
             // each other through direct edges) make the macro graph cyclic;
             // fall back to per-node accelerator invocations (Fig. 4 with
             // q = |S|), which is always schedulable.
-            latency_with_granularity(g, sc, p, true)
+            latency_with_granularity(g, req, p, true, order, reach)
                 .expect("singleton pieces must be schedulable")
         })
 }
 
 fn latency_with_granularity(
     g: &OpGraph,
-    sc: &Scenario,
+    req: &PlanRequest,
     p: &Placement,
     singleton_pieces: bool,
+    order: &[usize],
+    reach: &BitMatrix,
 ) -> Option<f64> {
     let n = g.n();
     if n == 0 {
         return Some(0.0);
     }
+    let k = req.fleet.k();
     // Build pieces: every accelerator's node set split into contiguous
     // chunks; CPU nodes are singleton "pieces" with piece id usize::MAX.
     let mut piece_of: Vec<usize> = vec![usize::MAX; n];
     let mut pieces: Vec<(usize, BitSet)> = Vec::new(); // (device, nodes)
-    for i in 0..sc.k {
+    for i in 0..k {
         let set = p.set_of(Device::Acc(i), n);
         if set.is_empty() {
             continue;
@@ -168,7 +220,7 @@ fn latency_with_granularity(
         let chunks = if singleton_pieces {
             set.iter().map(|v| BitSet::from_iter(n, [v])).collect()
         } else {
-            contiguity::virtual_device_split(g, &set)
+            contiguity::virtual_device_split_in(g, order, reach, &set)
         };
         for chunk in chunks {
             let id = pieces.len();
@@ -210,7 +262,7 @@ fn latency_with_granularity(
     }
     let mut queue: Vec<usize> = (0..num_macro).filter(|&m| mindeg[m] == 0).collect();
     let mut done_at: Vec<f64> = vec![0.0; n];
-    let mut acc_free: Vec<f64> = vec![0.0; sc.k]; // device serialization (14)
+    let mut acc_free: Vec<f64> = vec![0.0; k]; // device serialization (14)
     let mut head = 0;
     let mut processed = 0;
     // map macro id back to its cpu node for singletons
@@ -226,13 +278,14 @@ fn latency_with_granularity(
         processed += 1;
         if m < pieces.len() {
             let (dev, ref set) = pieces[m];
+            let speed = req.fleet.acc_speed(dev);
             let mut start: f64 = acc_free[dev];
             let mut comm_in = 0.0;
             let mut paid = BitSet::new(n);
             let mut compute = 0.0;
             let mut comm_out = 0.0;
             for w in set.iter() {
-                compute += g.nodes[w].p_acc;
+                compute += g.nodes[w].p_acc / speed;
                 for &u in &g.preds[w] {
                     if !set.contains(u) {
                         start = start.max(done_at[u]);
@@ -255,7 +308,11 @@ fn latency_with_granularity(
             // CPU node: longest-path recurrence (constraints (8)–(9)).
             let v = cpu_node_of[m];
             let ready = g.preds[v].iter().map(|&u| done_at[u]).fold(0.0, f64::max);
-            done_at[v] = ready + g.nodes[v].p_cpu;
+            let speed = match p.assignment[v] {
+                Device::Cpu(j) => req.fleet.cpu_speed(j),
+                Device::Acc(_) => 1.0, // unreachable: acc nodes are pieces
+            };
+            done_at[v] = ready + g.nodes[v].p_cpu / speed;
         }
         for &nxt in &madj[m] {
             mindeg[nxt] -= 1;
@@ -357,6 +414,28 @@ mod tests {
         sc.train_schedule = TrainSchedule::GPipe;
         let gp = max_load(&g, &sc, &p); // max FW (3) + max BW (3) = 6
         assert!((gp - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heterogeneous_speed_scales_compute_not_comm() {
+        use crate::coordinator::placement::{DeviceClass, Fleet, PlanRequest};
+        let g = chain_g(4); // acc 1.0 each, comm 0.5
+        let req = PlanRequest::new(Fleet::new(vec![
+            DeviceClass::acc("fast", 1, f64::INFINITY).speed(2.0),
+            DeviceClass::acc("slow", 1, f64::INFINITY),
+            DeviceClass::cpu("cpu", 1),
+        ]));
+        let p = Placement::new(
+            vec![Device::Acc(0), Device::Acc(0), Device::Acc(1), Device::Acc(1)],
+            0.0,
+            "t",
+        );
+        // fast acc0: compute 2/2 = 1 + out 0.5 = 1.5; slow acc1: in 0.5 +
+        // compute 2 = 2.5 — comm is NOT scaled by speed
+        assert!((max_load_req(&g, &req, &p) - 2.5).abs() < 1e-9);
+        // latency too: pieces on the fast device compute at half cost
+        let solo = Placement::new(vec![Device::Acc(0); 4], 0.0, "t");
+        assert!((latency_req(&g, &req, &solo) - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -22,7 +22,7 @@
 
 use super::dp::{CarveWalker, DpError, Prepared};
 use crate::coordinator::context::ProblemCtx;
-use crate::coordinator::placement::{CommModel, Device, Placement, Scenario};
+use crate::coordinator::placement::{CommModel, Device, Placement, PlanRequest, Scenario};
 use crate::graph::ideals::{IdealId, IdealLattice};
 use crate::graph::OpGraph;
 use crate::util::bitset::BitSet;
@@ -53,19 +53,31 @@ impl ReplicatedPlacement {
 
 /// Effective per-sample load of a subgraph replicated over `r` accelerators.
 pub fn replicated_load(g: &OpGraph, sc: &Scenario, set: &BitSet, r: usize) -> f64 {
-    replicated_load_parts(g.acc_load(set, sc.mem_cap), g.mem_of(set), sc, r)
+    replicated_load_parts(
+        g.acc_load(set, sc.mem_cap),
+        g.mem_of(set),
+        sc.bandwidth,
+        sc.comm_model,
+        r,
+    )
 }
 
 /// Effective per-sample load from precomputed set sums (the incremental
 /// form of [`replicated_load`]): `base` = sequential `acc(S)`, `weights` =
 /// `Σ m_v` over `S`.
-fn replicated_load_parts(base: f64, weights: f64, sc: &Scenario, r: usize) -> f64 {
+fn replicated_load_parts(
+    base: f64,
+    weights: f64,
+    bandwidth: f64,
+    comm_model: CommModel,
+    r: usize,
+) -> f64 {
     if !base.is_finite() || r == 0 {
         return f64::INFINITY;
     }
-    let sync = (r as f64 - 1.0) * weights / (r as f64 * sc.bandwidth);
+    let sync = (r as f64 - 1.0) * weights / (r as f64 * bandwidth);
     let work = base / r as f64;
-    match sc.comm_model {
+    match comm_model {
         CommModel::Sequential => work + sync,
         _ => work.max(sync),
     }
@@ -85,22 +97,40 @@ pub fn solve(g: &OpGraph, sc: &Scenario, cap: usize) -> Result<ReplicatedPlaceme
         node.comm += prepared.bw_comm[v];
     }
     let lattice = IdealLattice::enumerate(&proxy, cap).map_err(DpError::TooManyIdeals)?;
-    solve_on_lattice(&proxy, sc, &lattice, &prepared)
+    solve_on_lattice(&proxy, &sc.to_request(), &lattice, &prepared)
 }
 
 /// [`solve`] against a shared analysis context (proxy graph, lattice and
 /// preprocessing all come from the cache).
 pub fn solve_ctx(ctx: &ProblemCtx) -> Result<ReplicatedPlacement, DpError> {
-    solve_on_lattice(ctx.proxy()?, ctx.scenario(), ctx.lattice()?, ctx.prepared()?)
+    solve_on_lattice(ctx.proxy()?, ctx.request(), ctx.lattice()?, ctx.prepared()?)
 }
 
+/// The replication DP over a request. Replicas of a stage are drawn from
+/// the fleet interchangeably, so the fleet is viewed conservatively: the
+/// *smallest* accelerator cap bounds every stage (each replica holds the
+/// full stage) and the *slowest* accelerator speed scales compute — a
+/// valid (never optimistic) placement for any replica→device mapping.
+/// Uniform fleets reduce to the exact historical behavior.
 fn solve_on_lattice(
     gg: &OpGraph,
-    sc: &Scenario,
+    req: &PlanRequest,
     lattice: &IdealLattice,
     prepared: &Prepared,
 ) -> Result<ReplicatedPlacement, DpError> {
-    let (k, l) = (sc.k, sc.l);
+    let (k, l) = (req.fleet.k(), req.fleet.l());
+    let mem_cap = req.fleet.min_acc_mem_cap();
+    let acc_speed = req.fleet.min_acc_speed();
+    // conservative: the slowest populated CPU class a stage could land on
+    let min_cpu = req
+        .fleet
+        .classes
+        .iter()
+        .filter(|c| c.kind == crate::coordinator::placement::DeviceKind::Cpu && c.count > 0)
+        .map(|c| c.speed)
+        .fold(f64::INFINITY, f64::min);
+    let cpu_speed = if min_cpu.is_finite() { min_cpu } else { 1.0 };
+    let bandwidth = req.fleet.bandwidth;
     let slots = (k + 1) * (l + 1);
     let ni = lattice.len();
     let idx = |i: IdealId, k_: usize, l_: usize| i * slots + k_ * (l + 1) + l_;
@@ -130,12 +160,16 @@ fn solve_on_lattice(
                 // devices, so the empty carve relaxes nothing
                 return true;
             }
-            let cpu_load = carve.cpu_load();
-            let acc_base = carve.acc_load(sc.mem_cap);
+            let cpu_load = carve.cpu_load() / cpu_speed;
+            let acc_base = if carve.inf_acc != 0 || carve.mem > mem_cap {
+                f64::INFINITY
+            } else {
+                carve.compute / acc_speed + carve.comm_in + carve.comm_out
+            };
             {
                 let eff_compute =
                     if carve.inf_acc == 0 { carve.compute } else { f64::INFINITY };
-                let lb = cpu_load.min(eff_compute / k.max(1) as f64);
+                let lb = cpu_load.min(eff_compute / acc_speed / k.max(1) as f64);
                 let worst = cells[1..].iter().copied().fold(0.0, f64::max);
                 if lb >= worst && worst.is_finite() {
                     return false; // prune the subtree below this sub-ideal
@@ -154,7 +188,13 @@ fn solve_on_lattice(
                     }
                     // accelerator branch with r replicas
                     for r in 1..=k_ {
-                        let load = replicated_load_parts(acc_base, carve.mem, sc, r);
+                        let load = replicated_load_parts(
+                            acc_base,
+                            carve.mem,
+                            bandwidth,
+                            req.comm_model,
+                            r,
+                        );
                         let cand = head[idx(cur, k_ - r, l_)].max(load);
                         if cand < cells[cell] {
                             cells[cell] = cand;

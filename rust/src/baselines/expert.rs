@@ -12,7 +12,7 @@
 //! them), so no feasibility repair is attempted.
 
 use crate::algos::objective;
-use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::graph::{topo, NodeKind, OpGraph};
 
 /// Expert style per workload family.
@@ -27,12 +27,19 @@ pub enum ExpertStyle {
     EqualStripes,
 }
 
+/// Legacy scalar form of [`solve_req`].
+pub fn solve(g: &OpGraph, sc: &Scenario, style: ExpertStyle) -> Placement {
+    solve_req(g, &sc.to_request(), style)
+}
+
 /// Produce the expert placement. `style` chooses the rule; blocks are
 /// derived from node names of the form `<block>_<rest>` (the workload
-/// generators emit these).
-pub fn solve(g: &OpGraph, sc: &Scenario, style: ExpertStyle) -> Placement {
+/// generators emit these). The expert stripes over the fleet's `k`
+/// accelerators by count, class-oblivious — humans don't rebalance for
+/// device speed either, which is exactly the baseline's point.
+pub fn solve_req(g: &OpGraph, req: &PlanRequest, style: ExpertStyle) -> Placement {
     let order = topo::toposort(g).expect("expert split requires a DAG");
-    let nd = sc.k.max(1);
+    let nd = req.fleet.k().max(1);
     // the expert stripes/bands FORWARD work; backward nodes follow their
     // forward partner (humans keep a layer's weights on one device)
     let fw_order: Vec<usize> = order
@@ -79,16 +86,23 @@ pub fn solve(g: &OpGraph, sc: &Scenario, style: ExpertStyle) -> Placement {
     let assignment: Vec<Device> = dense.iter().map(|&d| Device::Acc(d)).collect();
     let mut p = Placement::new(assignment, 0.0, "Expert");
     // score without the memory constraint; callers report violations
-    let relaxed = Scenario { mem_cap: f64::INFINITY, ..sc.clone() };
-    p.objective = objective::max_load(g, &relaxed, &p);
+    let mut relaxed = req.clone();
+    relaxed.fleet = req.fleet.with_unbounded_memory();
+    p.objective = objective::max_load_req(g, &relaxed, &p);
     p
 }
 
 /// Latency variant of the expert scoring.
 pub fn solve_latency(g: &OpGraph, sc: &Scenario, style: ExpertStyle) -> Placement {
-    let mut p = solve(g, sc, style);
-    let relaxed = Scenario { mem_cap: f64::INFINITY, ..sc.clone() };
-    p.objective = objective::latency(g, &relaxed, &p);
+    solve_latency_req(g, &sc.to_request(), style)
+}
+
+/// [`solve_latency`] over a fleet.
+pub fn solve_latency_req(g: &OpGraph, req: &PlanRequest, style: ExpertStyle) -> Placement {
+    let mut p = solve_req(g, req, style);
+    let mut relaxed = req.clone();
+    relaxed.fleet = req.fleet.with_unbounded_memory();
+    p.objective = objective::latency_req(g, &relaxed, &p);
     p
 }
 

@@ -4,10 +4,18 @@
 //! oblivious to processing times and communication costs — the paper's
 //! sanity floor for Table 4.
 
-use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::graph::{contract, topo, OpGraph};
 
+/// Legacy scalar form of [`solve_req`].
 pub fn solve(g: &OpGraph, sc: &Scenario) -> Placement {
+    solve_req(g, &sc.to_request())
+}
+
+/// Greedy bin-fill over the fleet's accelerators in dense order, each
+/// filled to its *own class's* cap; remainder on the CPU pool.
+pub fn solve_req(g: &OpGraph, req: &PlanRequest) -> Placement {
+    let k = req.fleet.k();
     let con = contract::preprocess_colocation(g);
     let order = topo::toposort(&con.graph).expect("greedy requires a DAG after contraction");
 
@@ -16,18 +24,24 @@ pub fn solve(g: &OpGraph, sc: &Scenario) -> Placement {
     let mut used = 0.0_f64;
     for &v in &order {
         let m = con.graph.nodes[v].mem;
-        while acc < sc.k && (used + m > sc.mem_cap || con.graph.nodes[v].p_acc.is_infinite()) {
+        while acc < k
+            && (used + m > req.fleet.acc_mem_cap(acc)
+                || con.graph.nodes[v].p_acc.is_infinite())
+        {
             if con.graph.nodes[v].p_acc.is_infinite() {
                 break;
             }
             acc += 1;
             used = 0.0;
         }
-        if acc < sc.k && used + m <= sc.mem_cap && con.graph.nodes[v].p_acc.is_finite() {
+        if acc < k
+            && used + m <= req.fleet.acc_mem_cap(acc)
+            && con.graph.nodes[v].p_acc.is_finite()
+        {
             dense[v] = acc;
             used += m;
         } else {
-            dense[v] = sc.k; // CPU pool
+            dense[v] = k; // CPU pool
         }
     }
 
@@ -35,7 +49,7 @@ pub fn solve(g: &OpGraph, sc: &Scenario) -> Placement {
         .map
         .iter()
         .map(|&c| {
-            if dense[c] < sc.k {
+            if dense[c] < k {
                 Device::Acc(dense[c])
             } else {
                 Device::Cpu(0)
@@ -43,7 +57,7 @@ pub fn solve(g: &OpGraph, sc: &Scenario) -> Placement {
         })
         .collect();
     let mut p = Placement::new(assignment, 0.0, "Greedy");
-    p.objective = crate::algos::objective::latency(g, sc, &p);
+    p.objective = crate::algos::objective::latency_req(g, req, &p);
     p
 }
 

@@ -6,7 +6,7 @@
 //! is non-local.
 
 use crate::algos::objective;
-use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::graph::OpGraph;
 use crate::util::rng::Rng;
 use std::time::{Duration, Instant};
@@ -18,9 +18,18 @@ use std::time::{Duration, Instant};
 /// role.
 const RESTART_BUDGET: Duration = Duration::from_secs(3);
 
+/// Legacy scalar form of [`solve_req`].
 pub fn solve(g: &OpGraph, sc: &Scenario, restarts: usize, seed: u64) -> Placement {
+    solve_req(g, &sc.to_request(), restarts, seed)
+}
+
+/// Random-restart local search over the fleet's dense devices; moves are
+/// scored by the per-class-aware evaluator, so overfilling a small-memory
+/// class reads as infeasible (∞) exactly like the scalar path did.
+pub fn solve_req(g: &OpGraph, req: &PlanRequest, restarts: usize, seed: u64) -> Placement {
     let mut rng = Rng::new(seed);
-    let nd = sc.k + sc.l.max(1);
+    let (k, l) = (req.fleet.k(), req.fleet.l());
+    let nd = k + l.max(1);
     let mut best: Option<(f64, Vec<usize>)> = None;
 
     for _ in 0..restarts.max(1) {
@@ -33,7 +42,7 @@ pub fn solve(g: &OpGraph, sc: &Scenario, restarts: usize, seed: u64) -> Placemen
                 None => rng.gen_range(nd),
             };
         }
-        let mut cur = eval(g, sc, &dense);
+        let mut cur = eval(g, req, &dense);
         let deadline = Instant::now() + RESTART_BUDGET;
         // best-improvement hill climbing over single-node moves (moving a
         // whole color class together)
@@ -58,7 +67,7 @@ pub fn solve(g: &OpGraph, sc: &Scenario, restarts: usize, seed: u64) -> Placemen
                         continue;
                     }
                     set_class(g, &mut dense, v, d);
-                    let cand = eval(g, sc, &dense);
+                    let cand = eval(g, req, &dense);
                     if cand < cur - 1e-12
                         && improved.as_ref().is_none_or(|&(b, _, _)| cand < b)
                     {
@@ -82,14 +91,13 @@ pub fn solve(g: &OpGraph, sc: &Scenario, restarts: usize, seed: u64) -> Placemen
 
     match best {
         Some((obj, dense)) => {
-            let assignment =
-                dense.iter().map(|&d| Device::from_index(d, sc.k)).collect();
+            let assignment = dense.iter().map(|&d| Device::from_index(d, k)).collect();
             Placement::new(assignment, obj, "Local search")
         }
         None => {
             // no feasible local optimum found: park everything on CPU
             let p = Placement::new(vec![Device::Cpu(0); g.n()], 0.0, "Local search");
-            let obj = objective::max_load(g, sc, &p);
+            let obj = objective::max_load_req(g, req, &p);
             Placement { objective: obj, ..p }
         }
     }
@@ -108,13 +116,13 @@ fn set_class(g: &OpGraph, dense: &mut [usize], v: usize, d: usize) {
     }
 }
 
-fn eval(g: &OpGraph, sc: &Scenario, dense: &[usize]) -> f64 {
+fn eval(g: &OpGraph, req: &PlanRequest, dense: &[usize]) -> f64 {
     let p = Placement::new(
-        dense.iter().map(|&d| Device::from_index(d, sc.k)).collect(),
+        dense.iter().map(|&d| Device::from_index(d, req.fleet.k())).collect(),
         0.0,
         "tmp",
     );
-    objective::max_load(g, sc, &p)
+    objective::max_load_req(g, req, &p)
 }
 
 #[cfg(test)]

@@ -9,7 +9,7 @@
 //! result degrades — exactly the effect Table 1 shows.
 
 use crate::algos::objective;
-use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::graph::{contract, topo, OpGraph};
 
 /// Contract every "branching region" so the remaining graph is a path:
@@ -88,9 +88,16 @@ pub fn linearize_by_contraction(g: &OpGraph) -> Vec<usize> {
     group_of
 }
 
-/// PipeDream baseline: contract to a path, then optimal consecutive
-/// segmentation over the devices by DP.
+/// Legacy scalar form of [`solve_req`].
 pub fn solve(g: &OpGraph, sc: &Scenario) -> Placement {
+    solve_req(g, &sc.to_request())
+}
+
+/// PipeDream baseline: contract to a path, then optimal consecutive
+/// segmentation over the devices by DP. Devices keep their fleet dense
+/// order (accelerator classes first), so each segment is costed against
+/// its device's own class speed and memory cap.
+pub fn solve_req(g: &OpGraph, req: &PlanRequest) -> Placement {
     // PipeDream treats a layer's forward and backward work as ONE unit
     // (its path nodes carry combined fw+bw costs), so colocation classes
     // are merged across BOTH directions here — unlike the DP's App.-B
@@ -132,7 +139,8 @@ pub fn solve(g: &OpGraph, sc: &Scenario) -> Placement {
     let path = contract::contract_groups(&con.graph, &group_of);
     let order = topo::toposort(&path.graph).expect("path contraction broke acyclicity");
     let m = order.len();
-    let nd = sc.k + sc.l.max(1);
+    let k = req.fleet.k();
+    let nd = k + req.fleet.l().max(1);
 
     // dp[i][d] = best max-load splitting the first i path nodes over d
     // devices (consecutive segments). Device type chosen greedily per
@@ -150,10 +158,14 @@ pub fn solve(g: &OpGraph, sc: &Scenario) -> Placement {
                 // segment j..i on device index d-1 (accs are 0..k)
                 let seg: Vec<usize> = order[j..i].to_vec();
                 let set = crate::util::bitset::BitSet::from_iter(path.graph.n(), seg);
-                let load = if d - 1 < sc.k {
-                    path.graph.acc_load(&set, sc.mem_cap)
+                let load = if d - 1 < k {
+                    path.graph.acc_load_scaled(
+                        &set,
+                        req.fleet.acc_mem_cap(d - 1),
+                        req.fleet.acc_speed(d - 1),
+                    )
                 } else {
-                    path.graph.cpu_load(&set)
+                    path.graph.cpu_load_scaled(&set, req.fleet.cpu_speed(d - 1 - k))
                 };
                 let cand = dp[j][d - 1].max(load);
                 if cand < dp[i][d] {
@@ -187,11 +199,11 @@ pub fn solve(g: &OpGraph, sc: &Scenario) -> Placement {
     let assignment: Vec<Device> = (0..g.n())
         .map(|v| {
             let pg = path.map[con.map[v]];
-            Device::from_index(dense_path[pg], sc.k)
+            Device::from_index(dense_path[pg], k)
         })
         .collect();
     let mut placement = Placement::new(assignment, 0.0, "PipeDream");
-    placement.objective = objective::max_load(g, sc, &placement);
+    placement.objective = objective::max_load_req(g, req, &placement);
     placement
 }
 

@@ -10,7 +10,7 @@
 //! refinement at every level, optimizing `α·imbalance + cut`.
 
 use crate::algos::objective;
-use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::graph::OpGraph;
 
 /// Undirected weighted graph used internally by the partitioner.
@@ -228,37 +228,56 @@ fn cut_of(g: &WGraph, part: &[usize]) -> f64 {
     cut
 }
 
-/// Scotch baseline for the throughput tables: partition over all devices
-/// (k accelerators + ℓ CPUs), ignoring memory limits — like the real
-/// Scotch run in the paper.
+/// Legacy scalar form of [`solve_req`].
 pub fn solve(g: &OpGraph, sc: &Scenario, seed: u64) -> Placement {
-    let nd = sc.k + sc.l.max(1);
+    solve_req(g, &sc.to_request(), seed)
+}
+
+/// Scotch baseline for the throughput tables: partition over all fleet
+/// devices (k accelerators + ℓ CPUs), ignoring memory limits — like the
+/// real Scotch run in the paper. Loads are still speed-scaled per class.
+pub fn solve_req(g: &OpGraph, req: &PlanRequest, seed: u64) -> Placement {
+    let k = req.fleet.k();
+    let nd = k + req.fleet.l().max(1);
     let part = partition(g, nd, seed);
-    let assignment: Vec<Device> =
-        part.iter().map(|&p| Device::from_index(p, sc.k)).collect();
+    let assignment: Vec<Device> = part.iter().map(|&p| Device::from_index(p, k)).collect();
     let mut placement = Placement::new(assignment, 0.0, "Scotch");
     // Score WITHOUT the memory check (Scotch violates it; Table 4 flags
     // this with daggers) — compute raw loads.
-    let relaxed = Scenario { mem_cap: f64::INFINITY, ..sc.clone() };
-    placement.objective = objective::max_load(g, &relaxed, &placement);
+    let mut relaxed = req.clone();
+    relaxed.fleet = req.fleet.with_unbounded_memory();
+    placement.objective = objective::max_load_req(g, &relaxed, &placement);
     placement
 }
 
 /// Scotch for the latency tables: partition over accelerators only.
 pub fn solve_latency(g: &OpGraph, sc: &Scenario, seed: u64) -> Placement {
-    let part = partition(g, sc.k.max(1), seed);
+    solve_latency_req(g, &sc.to_request(), seed)
+}
+
+/// [`solve_latency`] over a fleet.
+pub fn solve_latency_req(g: &OpGraph, req: &PlanRequest, seed: u64) -> Placement {
+    let part = partition(g, req.fleet.k().max(1), seed);
     let assignment: Vec<Device> = part.iter().map(|&p| Device::Acc(p)).collect();
     let mut placement = Placement::new(assignment, 0.0, "Scotch");
-    let relaxed = Scenario { mem_cap: f64::INFINITY, ..sc.clone() };
-    placement.objective = objective::latency(g, &relaxed, &placement);
+    let mut relaxed = req.clone();
+    relaxed.fleet = req.fleet.with_unbounded_memory();
+    placement.objective = objective::latency_req(g, &relaxed, &placement);
     placement
 }
 
 /// Memory-violation factor of a placement: max over accelerators of
 /// used/capacity (Table 4's dagger column).
 pub fn memory_violation(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
-    (0..sc.k)
-        .map(|i| g.mem_of(&p.set_of(Device::Acc(i), g.n())) / sc.mem_cap)
+    memory_violation_req(g, &sc.to_request(), p)
+}
+
+/// [`memory_violation`] against per-class caps.
+pub fn memory_violation_req(g: &OpGraph, req: &PlanRequest, p: &Placement) -> f64 {
+    (0..req.fleet.k())
+        .map(|i| {
+            g.mem_of(&p.set_of(Device::Acc(i), g.n())) / req.fleet.acc_mem_cap(i)
+        })
         .fold(0.0, f64::max)
 }
 

@@ -23,7 +23,9 @@ use crate::algos::dp::{self, Prepared};
 use crate::algos::hierarchy::Hierarchy;
 use crate::algos::PlaceError;
 use crate::baselines::expert::ExpertStyle;
-use crate::coordinator::placement::{CommModel, Placement, Scenario, TrainSchedule};
+use crate::coordinator::placement::{
+    CommModel, DeviceKind, Placement, PlanRequest, Scenario, TrainSchedule,
+};
 use crate::graph::ideals::{IdealLattice, DEFAULT_IDEAL_CAP};
 use crate::graph::{topo, NodeId, OpGraph};
 use crate::util::arena::BitMatrix;
@@ -102,7 +104,11 @@ type Cached<T> = OnceLock<Result<T, PlaceError>>;
 /// shared across planning threads.
 pub struct ProblemCtx {
     graph: OpGraph,
-    scenario: Scenario,
+    request: PlanRequest,
+    /// Scalar view of `request` kept for legacy callers of
+    /// [`ProblemCtx::scenario`] (exact for uniform fleets, conservative
+    /// otherwise).
+    legacy_scenario: Scenario,
     ideal_cap: usize,
     fingerprint: u64,
     /// App.-B preprocessing (subdivide, fw/bw merge, colocation contraction).
@@ -141,10 +147,26 @@ impl ProblemCtx {
 
     /// Context with an explicit lattice enumeration cap.
     pub fn with_cap(graph: OpGraph, scenario: Scenario, ideal_cap: usize) -> ProblemCtx {
-        let fingerprint = fingerprint(&graph, &scenario);
+        Self::from_request_with_cap(graph, scenario.to_request(), ideal_cap)
+    }
+
+    /// Context over a heterogeneous [`PlanRequest`] with the default cap.
+    pub fn from_request(graph: OpGraph, request: PlanRequest) -> ProblemCtx {
+        Self::from_request_with_cap(graph, request, DEFAULT_IDEAL_CAP)
+    }
+
+    /// [`ProblemCtx::from_request`] with an explicit lattice cap.
+    pub fn from_request_with_cap(
+        graph: OpGraph,
+        request: PlanRequest,
+        ideal_cap: usize,
+    ) -> ProblemCtx {
+        let fingerprint = fingerprint_req(&graph, &request);
+        let legacy_scenario = request.legacy_scenario();
         ProblemCtx {
             graph,
-            scenario,
+            request,
+            legacy_scenario,
             ideal_cap,
             fingerprint,
             prepared: OnceLock::new(),
@@ -167,8 +189,17 @@ impl ProblemCtx {
         &self.graph
     }
 
+    /// The full planning request (fleet, comm model, schedule, …) this
+    /// context's artifacts and cached solutions are computed against.
+    pub fn request(&self) -> &PlanRequest {
+        &self.request
+    }
+
+    /// Deprecated scalar view of [`ProblemCtx::request`]: exact for
+    /// uniform fleets, conservative (smallest accelerator cap) otherwise.
+    /// Fleet-aware code should read `request()` instead.
     pub fn scenario(&self) -> &Scenario {
-        &self.scenario
+        &self.legacy_scenario
     }
 
     pub fn ideal_cap(&self) -> usize {
@@ -290,9 +321,9 @@ impl ProblemCtx {
         Self::cached(&self.dp_solution, || {
             let prepared = self.prepared()?;
             let lattice = self.lattice()?;
-            dp::solve_on_lattice_with(
+            dp::solve_on_lattice_req(
                 &prepared.dp_graph,
-                &self.scenario,
+                &self.request,
                 lattice,
                 &prepared.bw_comm,
             )
@@ -316,9 +347,9 @@ impl ProblemCtx {
             }
             let prepared = self.prepared()?;
             if let Ok(lat) = IdealLattice::enumerate(&prepared.dp_graph, WARM_IDEAL_CAP) {
-                if let Ok(sol) = dp::solve_on_lattice_with(
+                if let Ok(sol) = dp::solve_on_lattice_req(
                     &prepared.dp_graph,
-                    &self.scenario,
+                    &self.request,
                     &lat,
                     &prepared.bw_comm,
                 ) {
@@ -334,9 +365,9 @@ impl ProblemCtx {
         Self::cached(&self.dpl_solution, || {
             let prepared = self.prepared()?;
             let lattice = self.lin_lattice()?;
-            dp::solve_on_lattice_with(
+            dp::solve_on_lattice_req(
                 &prepared.dp_graph,
-                &self.scenario,
+                &self.request,
                 lattice,
                 &prepared.bw_comm,
             )
@@ -344,12 +375,24 @@ impl ProblemCtx {
     }
 }
 
-/// 64-bit FNV-1a content fingerprint of a `(graph, scenario)` pair: node
-/// names, all four cost fields, colocation classes, kinds, fw partners,
-/// edges, per-edge costs, and every scenario field. Two pairs with equal
-/// fingerprints are treated as the same planning problem by
-/// [`crate::coordinator::service::PlannerService`].
+/// Legacy scalar form of [`fingerprint_req`]: a scenario fingerprints as
+/// its uniform-fleet request, so scenario-path and fleet-path callers of
+/// [`crate::coordinator::service::PlannerService`] share cache entries
+/// for the same problem.
 pub fn fingerprint(g: &OpGraph, sc: &Scenario) -> u64 {
+    fingerprint_req(g, &sc.to_request())
+}
+
+/// 64-bit FNV-1a content fingerprint of a `(graph, request)` pair: node
+/// names, all four cost fields, colocation classes, kinds, fw partners,
+/// edges, per-edge costs, every fleet class (name, count, cap, speed,
+/// kind), bandwidth, comm model and train schedule. Deliberately
+/// EXCLUDED: `objective`, `contiguous` and `algorithm` — they are
+/// per-call solver selectors that invalidate none of the cached analysis
+/// artifacts or deterministic solutions (DESIGN.md §5). Two pairs with
+/// equal fingerprints are treated as the same planning problem by
+/// [`crate::coordinator::service::PlannerService`].
+pub fn fingerprint_req(g: &OpGraph, req: &PlanRequest) -> u64 {
     let mut h = Fnv::new();
     h.u64(g.n() as u64);
     for node in &g.nodes {
@@ -374,19 +417,27 @@ pub fn fingerprint(g: &OpGraph, sc: &Scenario) -> u64 {
         h.u64(v as u64);
         h.f64(c);
     }
-    h.u64(sc.k as u64);
-    h.u64(sc.l as u64);
-    h.f64(sc.mem_cap);
-    h.u64(match sc.comm_model {
+    h.u64(req.fleet.classes.len() as u64);
+    for class in &req.fleet.classes {
+        h.bytes(class.name.as_bytes());
+        h.u64(class.count as u64);
+        h.f64(class.mem_cap);
+        h.f64(class.speed);
+        h.u64(match class.kind {
+            DeviceKind::Accelerator => 0,
+            DeviceKind::Cpu => 1,
+        });
+    }
+    h.u64(match req.comm_model {
         CommModel::Sequential => 0,
         CommModel::Overlap => 1,
         CommModel::FullDuplex => 2,
     });
-    h.u64(match sc.train_schedule {
+    h.u64(match req.train_schedule {
         TrainSchedule::PipeDream => 0,
         TrainSchedule::GPipe => 1,
     });
-    h.f64(sc.bandwidth);
+    h.f64(req.fleet.bandwidth);
     h.0
 }
 
@@ -491,5 +542,41 @@ mod tests {
         let mut g4 = g.clone();
         g4.nodes[0].name = "other".into();
         assert_ne!(base, fingerprint(&g4, &sc));
+    }
+
+    #[test]
+    fn fingerprint_hashes_the_fleet() {
+        use crate::coordinator::placement::{
+            AlgoChoice, DeviceClass, Fleet, Objective, PlanRequest,
+        };
+        let g = chain(5);
+        let base_req = PlanRequest::new(Fleet::new(vec![
+            DeviceClass::acc("a100", 2, 40.0).speed(4.0),
+            DeviceClass::acc("t4", 4, 16.0),
+            DeviceClass::cpu("cpu", 1),
+        ]));
+        let base = fingerprint_req(&g, &base_req);
+        assert_eq!(base, fingerprint_req(&g, &base_req.clone()), "deterministic");
+        // class count change (device loss)
+        let mut lost = base_req.clone();
+        assert!(lost.fleet.decrement("t4"));
+        assert_ne!(base, fingerprint_req(&g, &lost));
+        // per-class cap and speed changes
+        let mut squeezed = base_req.clone();
+        squeezed.fleet.class_named_mut("a100").unwrap().mem_cap = 20.0;
+        assert_ne!(base, fingerprint_req(&g, &squeezed));
+        let mut slowed = base_req.clone();
+        slowed.fleet.class_named_mut("a100").unwrap().speed = 2.0;
+        assert_ne!(base, fingerprint_req(&g, &slowed));
+        // solver selectors do NOT invalidate the analysis cache
+        let relabeled = base_req
+            .clone()
+            .objective(Objective::Latency)
+            .contiguous(false)
+            .algorithm(AlgoChoice::Fixed(crate::coordinator::planner::Algorithm::Dpl));
+        assert_eq!(base, fingerprint_req(&g, &relabeled));
+        // a scenario and its uniform fleet share a fingerprint
+        let sc = Scenario::new(2, 1, 16.0);
+        assert_eq!(fingerprint(&g, &sc), fingerprint_req(&g, &sc.to_request()));
     }
 }

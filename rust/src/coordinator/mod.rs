@@ -1,13 +1,17 @@
 //! The coordinator: glues workloads → optimizers → placements → deployment.
 //!
-//! [`placement`] defines the shared [`placement::Scenario`] /
-//! [`placement::Placement`] vocabulary; [`context`] holds the shared
-//! per-`(graph, scenario)` analysis cache ([`context::ProblemCtx`]) and the
-//! [`context::Solver`] trait every algorithm implements; [`planner`] is the
-//! registry + one-call façade (`plan(workload, algorithm)`) used by the
-//! CLI, examples and benches; [`service`] is the fingerprint-keyed LRU
-//! ([`service::PlannerService`]) that makes serving-time re-planning run at
-//! cache-hit cost.
+//! [`placement`] defines the shared device vocabulary: the typed
+//! heterogeneous [`placement::Fleet`] (device classes with per-class
+//! memory caps and speeds) addressed through the unified
+//! [`placement::PlanRequest`], the [`placement::Placement`] output, and
+//! the deprecated scalar [`placement::Scenario`] adapter; [`context`]
+//! holds the shared per-`(graph, request)` analysis cache
+//! ([`context::ProblemCtx`]) and the [`context::Solver`] trait every
+//! algorithm implements; [`planner`] is the registry + one-call façade
+//! (`plan(workload, algorithm)` / `plan_request`) used by the CLI,
+//! examples and benches; [`service`] is the fingerprint-keyed LRU
+//! ([`service::PlannerService`]) that makes serving-time re-planning —
+//! including live fleet mutations — run at cache-hit cost.
 
 pub mod context;
 pub mod placement;

@@ -33,6 +33,11 @@ impl Device {
             Device::Cpu(idx - k)
         }
     }
+
+    /// The device's class within a fleet (see [`Fleet::class_of`]).
+    pub fn class(self, fleet: &Fleet) -> Option<&DeviceClass> {
+        fleet.class_of(self)
+    }
 }
 
 impl std::fmt::Display for Device {
@@ -57,6 +62,19 @@ pub enum CommModel {
     FullDuplex,
 }
 
+impl CommModel {
+    /// Combine a device's computation and communication loads — the one
+    /// implementation behind [`Scenario::combine`] and
+    /// [`PlanRequest::combine`].
+    pub fn combine(self, compute: f64, comm_in: f64, comm_out: f64) -> f64 {
+        match self {
+            CommModel::Sequential => compute + comm_in + comm_out,
+            CommModel::Overlap => compute.max(comm_in + comm_out),
+            CommModel::FullDuplex => compute.max(comm_in).max(comm_out),
+        }
+    }
+}
+
 /// Pipelined-training schedule flavor (§5.3, Fig. 7). Affects the training
 /// objective: PipeDream (1F1B) uses `max_i (FW_i + BW_i)`; GPipe uses
 /// `max_i FW_i + max_i BW_i`.
@@ -67,7 +85,499 @@ pub enum TrainSchedule {
     GPipe,
 }
 
+/// Device-class kind: pipeline accelerator (pays boundary comm, memory-
+/// capped) or CPU-pool device (compute only, RAM "free" per §3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceKind {
+    Accelerator,
+    Cpu,
+}
+
+impl DeviceKind {
+    /// The kind a class *name* implies when no explicit kind is given —
+    /// the one rule shared by [`Fleet::parse`], the fleet `Display`
+    /// round-trip, and the JSON schema: names starting with `cpu`
+    /// (case-insensitive) are CPU classes, everything else accelerators.
+    pub fn infer(name: &str) -> DeviceKind {
+        if name.to_ascii_lowercase().starts_with("cpu") {
+            DeviceKind::Cpu
+        } else {
+            DeviceKind::Accelerator
+        }
+    }
+}
+
+/// One class of interchangeable devices in a heterogeneous fleet:
+/// `count` devices named `name`, each with `mem_cap` memory and relative
+/// compute `speed` (node processing times divide by `speed`; 1.0 = the
+/// cost model's reference device). Within a class devices are symmetric —
+/// across classes they are not.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceClass {
+    pub name: String,
+    pub count: usize,
+    pub mem_cap: f64,
+    pub speed: f64,
+    pub kind: DeviceKind,
+}
+
+impl DeviceClass {
+    /// Accelerator class with speed 1.0.
+    pub fn acc(name: impl Into<String>, count: usize, mem_cap: f64) -> DeviceClass {
+        DeviceClass { name: name.into(), count, mem_cap, speed: 1.0, kind: DeviceKind::Accelerator }
+    }
+
+    /// CPU class (uncapped memory, speed 1.0).
+    pub fn cpu(name: impl Into<String>, count: usize) -> DeviceClass {
+        DeviceClass {
+            name: name.into(),
+            count,
+            mem_cap: f64::INFINITY,
+            speed: 1.0,
+            kind: DeviceKind::Cpu,
+        }
+    }
+
+    pub fn speed(mut self, s: f64) -> DeviceClass {
+        self.speed = s;
+        self
+    }
+}
+
+/// One dense device's class-derived properties (see [`Fleet::dense_view`]).
+/// CPU devices report an unbounded `mem_cap` (§3: RAM is not modeled).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DenseDevice {
+    pub mem_cap: f64,
+    pub speed: f64,
+    /// Index in dense-class order — equal `class` ⇔ interchangeable.
+    pub class: usize,
+    pub kind: DeviceKind,
+}
+
+/// A typed device fleet: ordered [`DeviceClass`]es plus the interconnect
+/// bandwidth. Dense device indexing follows [`Device::index`]: accelerator
+/// devices come first (`0..k`, walking the accelerator classes in
+/// declaration order), then CPU devices (`k..k+ℓ`). A legacy
+/// [`Scenario`] is exactly a one-accelerator-class, one-CPU-class fleet
+/// ([`Fleet::uniform`] / [`Scenario::to_request`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fleet {
+    pub classes: Vec<DeviceClass>,
+    /// Interconnect bandwidth (App.-C.2 AllReduce term; size/time units).
+    pub bandwidth: f64,
+}
+
+impl Fleet {
+    pub fn new(classes: Vec<DeviceClass>) -> Fleet {
+        Fleet { classes, bandwidth: 1.0 }
+    }
+
+    pub fn bandwidth(mut self, b: f64) -> Fleet {
+        self.bandwidth = b;
+        self
+    }
+
+    /// The uniform fleet equivalent to `Scenario::new(k, l, mem_cap)`:
+    /// one accelerator class `acc` (speed 1.0) and one CPU class `cpu`.
+    pub fn uniform(k: usize, l: usize, mem_cap: f64) -> Fleet {
+        Fleet::new(vec![DeviceClass::acc("acc", k, mem_cap), DeviceClass::cpu("cpu", l)])
+    }
+
+    fn classes_of(&self, kind: DeviceKind) -> impl Iterator<Item = &DeviceClass> {
+        self.classes.iter().filter(move |c| c.kind == kind)
+    }
+
+    /// Total accelerator count (`k`).
+    pub fn k(&self) -> usize {
+        self.classes_of(DeviceKind::Accelerator).map(|c| c.count).sum()
+    }
+
+    /// Total CPU-device count (`ℓ`).
+    pub fn l(&self) -> usize {
+        self.classes_of(DeviceKind::Cpu).map(|c| c.count).sum()
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.k() + self.l()
+    }
+
+    /// The class holding dense accelerator `i`, or the last accelerator
+    /// class when `i` is out of range (callers validate ranges separately).
+    fn acc_class(&self, i: usize) -> Option<&DeviceClass> {
+        let mut seen = 0usize;
+        let mut last = None;
+        for c in self.classes_of(DeviceKind::Accelerator) {
+            seen += c.count;
+            last = Some(c);
+            if i < seen {
+                return Some(c);
+            }
+        }
+        last
+    }
+
+    fn cpu_class(&self, j: usize) -> Option<&DeviceClass> {
+        let mut seen = 0usize;
+        let mut last = None;
+        for c in self.classes_of(DeviceKind::Cpu) {
+            seen += c.count;
+            last = Some(c);
+            if j < seen {
+                return Some(c);
+            }
+        }
+        last
+    }
+
+    /// The class of a device (`None` only for fleets with no class of the
+    /// device's kind at all).
+    pub fn class_of(&self, d: Device) -> Option<&DeviceClass> {
+        match d {
+            Device::Acc(i) => self.acc_class(i),
+            Device::Cpu(j) => self.cpu_class(j),
+        }
+    }
+
+    /// Per-dense-device expansion of the fleet, in [`Device::index`]
+    /// order: accelerator devices first (walking accelerator classes in
+    /// declaration order), then CPU devices. `class` is the device's
+    /// index in dense-class order (accelerator classes, then CPU classes
+    /// — count-0 classes included), the shared basis for within-class
+    /// symmetry breaking. This is THE one definition of the fleet→device
+    /// mapping the searches build their per-device tables from; it agrees
+    /// with [`Fleet::class_of`] / [`Fleet::acc_mem_cap`] /
+    /// [`Fleet::acc_speed`] by construction (and by test).
+    pub fn dense_view(&self) -> Vec<DenseDevice> {
+        let nd = self.num_devices();
+        let mut out = Vec::with_capacity(nd);
+        let mut class = 0usize;
+        for kind in [DeviceKind::Accelerator, DeviceKind::Cpu] {
+            for c in self.classes_of(kind) {
+                for _ in 0..c.count {
+                    out.push(DenseDevice {
+                        mem_cap: if kind == DeviceKind::Accelerator {
+                            c.mem_cap
+                        } else {
+                            f64::INFINITY
+                        },
+                        speed: c.speed,
+                        class,
+                        kind,
+                    });
+                }
+                class += 1;
+            }
+        }
+        out
+    }
+
+    /// Memory cap of dense accelerator `i`.
+    pub fn acc_mem_cap(&self, i: usize) -> f64 {
+        self.acc_class(i).map_or(f64::INFINITY, |c| c.mem_cap)
+    }
+
+    /// Relative speed of dense accelerator `i`.
+    pub fn acc_speed(&self, i: usize) -> f64 {
+        self.acc_class(i).map_or(1.0, |c| c.speed)
+    }
+
+    /// Relative speed of dense CPU device `j`.
+    pub fn cpu_speed(&self, j: usize) -> f64 {
+        self.cpu_class(j).map_or(1.0, |c| c.speed)
+    }
+
+    /// Fastest accelerator-class speed (`None` when the fleet declares no
+    /// accelerator class) — the sound divisor for compute lower bounds.
+    /// Deliberately includes count-0 classes: a declared class is part of
+    /// the *bound* vocabulary (and the uniform legacy path relies on the
+    /// CPU class existing even at `ℓ = 0`); a faster-than-present speed
+    /// only weakens the bound, never breaks it.
+    pub fn best_acc_speed(&self) -> Option<f64> {
+        self.classes_of(DeviceKind::Accelerator).map(|c| c.speed).reduce(f64::max)
+    }
+
+    pub fn best_cpu_speed(&self) -> Option<f64> {
+        self.classes_of(DeviceKind::Cpu).map(|c| c.speed).reduce(f64::max)
+    }
+
+    /// Smallest *populated* accelerator-class memory cap (conservative
+    /// single-cap view used by the Appendix-C DPs and
+    /// [`PlanRequest::legacy_scenario`]). Classes drained to count 0
+    /// (e.g. by [`Fleet::decrement`] device loss) no longer constrain
+    /// anything and are skipped.
+    pub fn min_acc_mem_cap(&self) -> f64 {
+        self.classes_of(DeviceKind::Accelerator)
+            .filter(|c| c.count > 0)
+            .map(|c| c.mem_cap)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Slowest *populated* accelerator-class speed (conservative; 1.0
+    /// when no accelerator device remains).
+    pub fn min_acc_speed(&self) -> f64 {
+        let m = self
+            .classes_of(DeviceKind::Accelerator)
+            .filter(|c| c.count > 0)
+            .map(|c| c.speed)
+            .fold(f64::INFINITY, f64::min);
+        if m.is_finite() {
+            m
+        } else {
+            1.0
+        }
+    }
+
+    /// Decrement `name`'s device count (serving-time device loss). Returns
+    /// `false` when the class is unknown or already empty.
+    pub fn decrement(&mut self, name: &str) -> bool {
+        match self.classes.iter_mut().find(|c| c.name == name) {
+            Some(c) if c.count > 0 => {
+                c.count -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Mutable access to a class by name (serving-time cap/speed updates).
+    pub fn class_named_mut(&mut self, name: &str) -> Option<&mut DeviceClass> {
+        self.classes.iter_mut().find(|c| c.name == name)
+    }
+
+    /// All caps lifted — the scoring mode of the memory-oblivious
+    /// baselines (Scotch, expert).
+    pub fn with_unbounded_memory(&self) -> Fleet {
+        let mut f = self.clone();
+        for c in &mut f.classes {
+            c.mem_cap = f64::INFINITY;
+        }
+        f
+    }
+
+    /// Parse a CLI fleet spec: comma-separated
+    /// `COUNTxNAME[@SPEED][:MEM][+acc|+cpu]` entries plus an optional
+    /// `bw=BANDWIDTH` entry, e.g. `"2xfast@2.0:16,4xslow:8,1xcpu,bw=2"`.
+    /// Without an explicit `+acc`/`+cpu` suffix the kind is inferred from
+    /// the name (a name starting with `cpu` declares a CPU class);
+    /// `COUNTx` defaults to 1, `@SPEED` to 1.0, `:MEM` to unlimited.
+    pub fn parse(spec: &str) -> Result<Fleet, String> {
+        let mut classes = Vec::new();
+        let mut bandwidth = 1.0;
+        for raw in spec.split(',') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            if let Some(b) = entry.strip_prefix("bw=") {
+                bandwidth =
+                    b.parse::<f64>().map_err(|_| format!("bad bandwidth in '{entry}'"))?;
+                if !(bandwidth.is_finite() && bandwidth > 0.0) {
+                    return Err(format!("bandwidth must be positive in '{entry}'"));
+                }
+                continue;
+            }
+            let (entry_body, explicit_kind) = match entry.rsplit_once('+') {
+                Some((body, "acc")) => (body, Some(DeviceKind::Accelerator)),
+                Some((body, "cpu")) => (body, Some(DeviceKind::Cpu)),
+                Some((_, other)) => {
+                    return Err(format!("unknown device kind '+{other}' in '{entry}'"))
+                }
+                None => (entry, None),
+            };
+            let (count, rest) = match entry_body.split_once('x') {
+                Some((c, rest)) if c.chars().all(|ch| ch.is_ascii_digit()) && !c.is_empty() => {
+                    (c.parse::<usize>().map_err(|e| format!("bad count in '{entry}': {e}"))?, rest)
+                }
+                _ => (1, entry_body),
+            };
+            let (rest, mem_cap) = match rest.rsplit_once(':') {
+                Some((r, m)) => {
+                    (r, m.parse::<f64>().map_err(|_| format!("bad memory cap in '{entry}'"))?)
+                }
+                None => (rest, f64::INFINITY),
+            };
+            let (name, speed) = match rest.split_once('@') {
+                Some((n, s)) => {
+                    (n, s.parse::<f64>().map_err(|_| format!("bad speed in '{entry}'"))?)
+                }
+                None => (rest, 1.0),
+            };
+            if name.is_empty() {
+                return Err(format!("empty class name in '{entry}'"));
+            }
+            if !(speed.is_finite() && speed > 0.0) {
+                return Err(format!("speed must be positive in '{entry}'"));
+            }
+            let kind = explicit_kind.unwrap_or_else(|| DeviceKind::infer(name));
+            classes.push(DeviceClass { name: name.to_string(), count, mem_cap, speed, kind });
+        }
+        if classes.is_empty() {
+            return Err("empty fleet spec".into());
+        }
+        Ok(Fleet::new(classes).bandwidth(bandwidth))
+    }
+}
+
+impl std::fmt::Display for Fleet {
+    /// Emits the [`Fleet::parse`] grammar; `Display → parse` round-trips
+    /// exactly, including classes whose kind the name alone would
+    /// mis-infer (an explicit `+acc`/`+cpu` suffix is appended for those)
+    /// and a non-default bandwidth.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for c in &self.classes {
+            if !first {
+                write!(f, ",")?;
+            }
+            first = false;
+            write!(f, "{}x{}", c.count, c.name)?;
+            if c.speed != 1.0 {
+                write!(f, "@{}", c.speed)?;
+            }
+            if c.mem_cap.is_finite() {
+                write!(f, ":{}", c.mem_cap)?;
+            }
+            if c.kind != DeviceKind::infer(&c.name) {
+                write!(f, "{}", match c.kind {
+                    DeviceKind::Accelerator => "+acc",
+                    DeviceKind::Cpu => "+cpu",
+                })?;
+            }
+        }
+        if self.bandwidth != 1.0 {
+            write!(f, ",bw={}", self.bandwidth)?;
+        }
+        Ok(())
+    }
+}
+
+/// What a [`PlanRequest`] optimizes (§4 vs §5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Objective {
+    #[default]
+    Throughput,
+    Latency,
+}
+
+/// Algorithm selection on a [`PlanRequest`]: a fixed registry entry or
+/// `Auto` (objective- and contiguity-driven: throughput → exact DP with
+/// DPL fallback when the lattice blows its cap, or the §5.2
+/// non-contiguous IP when the request relaxes contiguity; latency → the
+/// latency IP with the request's contiguity toggle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AlgoChoice {
+    #[default]
+    Auto,
+    Fixed(crate::coordinator::planner::Algorithm),
+}
+
+/// The unified planning request: the typed fleet plus every non-graph
+/// input of the problem. This is the one entry point the planner, the
+/// [`crate::coordinator::service::PlannerService`], the CLI `--fleet`
+/// path, the JSON schema and the serving loop all speak; [`Scenario`] is
+/// the deprecated scalar adapter ([`Scenario::to_request`] ⇒ uniform
+/// fleet).
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub fleet: Fleet,
+    pub objective: Objective,
+    pub comm_model: CommModel,
+    pub train_schedule: TrainSchedule,
+    /// Enforce Def.-3.1 contiguity. Honored by validation
+    /// ([`Placement::validate_req`]) and by
+    /// [`crate::coordinator::planner::solve_request`]'s dispatch: `Auto`
+    /// picks the §5.2 non-contiguous IP for throughput (the DP/DPL only
+    /// search contiguous splits) and threads the toggle into the latency
+    /// IP; a `Fixed` throughput IP declares its own regime by name.
+    pub contiguous: bool,
+    pub algorithm: AlgoChoice,
+}
+
+impl PlanRequest {
+    /// Request over `fleet` with the builder defaults: throughput
+    /// objective, sequential comm, PipeDream schedule, contiguous, `Auto`
+    /// algorithm.
+    pub fn new(fleet: Fleet) -> PlanRequest {
+        PlanRequest {
+            fleet,
+            objective: Objective::Throughput,
+            comm_model: CommModel::default(),
+            train_schedule: TrainSchedule::default(),
+            contiguous: true,
+            algorithm: AlgoChoice::Auto,
+        }
+    }
+
+    pub fn objective(mut self, o: Objective) -> PlanRequest {
+        self.objective = o;
+        self
+    }
+
+    pub fn comm_model(mut self, m: CommModel) -> PlanRequest {
+        self.comm_model = m;
+        self
+    }
+
+    pub fn train_schedule(mut self, t: TrainSchedule) -> PlanRequest {
+        self.train_schedule = t;
+        self
+    }
+
+    pub fn contiguous(mut self, c: bool) -> PlanRequest {
+        self.contiguous = c;
+        self
+    }
+
+    pub fn algorithm(mut self, a: AlgoChoice) -> PlanRequest {
+        self.algorithm = a;
+        self
+    }
+
+    /// Total accelerator count (`k`).
+    pub fn k(&self) -> usize {
+        self.fleet.k()
+    }
+
+    /// Total CPU-device count (`ℓ`).
+    pub fn l(&self) -> usize {
+        self.fleet.l()
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.fleet.num_devices()
+    }
+
+    /// Combine compute and communication loads per the request's comm
+    /// model (see [`CommModel::combine`]).
+    pub fn combine(&self, compute: f64, comm_in: f64, comm_out: f64) -> f64 {
+        self.comm_model.combine(compute, comm_in, comm_out)
+    }
+
+    /// The scalar view of this request: `(k, ℓ)` counts, the *smallest*
+    /// accelerator cap, and the shared cost-model fields. Exact for
+    /// uniform fleets (round-trips [`Scenario::to_request`]); a
+    /// conservative approximation otherwise. Only legacy consumers that
+    /// have not been made fleet-aware should read this.
+    pub fn legacy_scenario(&self) -> Scenario {
+        Scenario {
+            k: self.fleet.k(),
+            l: self.fleet.l(),
+            mem_cap: self.fleet.min_acc_mem_cap(),
+            comm_model: self.comm_model,
+            train_schedule: self.train_schedule,
+            bandwidth: self.fleet.bandwidth,
+        }
+    }
+}
+
 /// A deployment scenario: the non-graph half of the paper's input.
+///
+/// Deprecated adapter: `k` interchangeable accelerators sharing one
+/// `mem_cap` and implicit speed 1.0. New code should build a
+/// [`PlanRequest`] over a [`Fleet`]; every scenario converts losslessly
+/// via [`Scenario::to_request`] (a one-class uniform fleet), and all
+/// solvers now run on the fleet path internally.
 #[derive(Clone, Debug)]
 pub struct Scenario {
     /// Number of accelerators (`k`).
@@ -107,12 +617,23 @@ impl Scenario {
     }
 
     /// Combine a device's computation and communication loads per the
-    /// scenario's comm model.
+    /// scenario's comm model (see [`CommModel::combine`]).
     pub fn combine(&self, compute: f64, comm_in: f64, comm_out: f64) -> f64 {
-        match self.comm_model {
-            CommModel::Sequential => compute + comm_in + comm_out,
-            CommModel::Overlap => compute.max(comm_in + comm_out),
-            CommModel::FullDuplex => compute.max(comm_in).max(comm_out),
+        self.comm_model.combine(compute, comm_in, comm_out)
+    }
+
+    /// The [`PlanRequest`] equivalent of this scenario: a one-class
+    /// uniform fleet (speed 1.0, shared cap), same comm model, schedule
+    /// and bandwidth. Every solver is bitwise-identical on the two forms
+    /// (see the uniform-fleet equivalence tests).
+    pub fn to_request(&self) -> PlanRequest {
+        PlanRequest {
+            fleet: Fleet::uniform(self.k, self.l, self.mem_cap).bandwidth(self.bandwidth),
+            objective: Objective::Throughput,
+            comm_model: self.comm_model,
+            train_schedule: self.train_schedule,
+            contiguous: true,
+            algorithm: AlgoChoice::Auto,
         }
     }
 }
@@ -164,13 +685,21 @@ impl Placement {
 
     /// Memory-feasibility check (constraint (3)): accelerator memory only.
     pub fn check_memory(&self, g: &OpGraph, sc: &Scenario) -> Result<(), String> {
-        for i in 0..sc.k {
+        self.check_memory_req(g, &sc.to_request())
+    }
+
+    /// [`Placement::check_memory`] against a fleet: every accelerator is
+    /// checked against its *own class's* cap.
+    pub fn check_memory_req(&self, g: &OpGraph, req: &PlanRequest) -> Result<(), String> {
+        for i in 0..req.fleet.k() {
             let set = self.set_of(Device::Acc(i), g.n());
             let used = g.mem_of(&set);
-            if used > sc.mem_cap * (1.0 + 1e-9) {
+            let cap = req.fleet.acc_mem_cap(i);
+            if used > cap * (1.0 + 1e-9) {
+                let class =
+                    req.fleet.class_of(Device::Acc(i)).map_or("?", |c| c.name.as_str());
                 return Err(format!(
-                    "accelerator {i} over capacity: {used:.3} > {:.3}",
-                    sc.mem_cap
+                    "accelerator {i} ({class}) over capacity: {used:.3} > {cap:.3}"
                 ));
             }
         }
@@ -205,8 +734,14 @@ impl Placement {
     /// never contiguity-constrained (§4 treats the CPU pool specially, and
     /// §5 pipelines may assign CPUs arbitrary sets).
     pub fn check_contiguity(&self, g: &OpGraph, sc: &Scenario) -> Result<(), String> {
+        self.check_contiguity_k(g, sc.k)
+    }
+
+    /// [`Placement::check_contiguity`] over the first `k` accelerators
+    /// (the fleet form: `k = fleet.k()`; contiguity is class-agnostic).
+    pub fn check_contiguity_k(&self, g: &OpGraph, k: usize) -> Result<(), String> {
         let has_bw = g.nodes.iter().any(|n| n.kind == NodeKind::Backward);
-        for i in 0..sc.k {
+        for i in 0..k {
             let set = self.set_of(Device::Acc(i), g.n());
             if !has_bw {
                 if !crate::graph::contiguity::is_contiguous(g, &set) {
@@ -232,22 +767,32 @@ impl Placement {
     /// Validate everything an optimizer output must satisfy; `contiguous`
     /// toggles the Def.-3.1 check (non-contiguous optimizers skip it).
     pub fn validate(&self, g: &OpGraph, sc: &Scenario, contiguous: bool) -> Result<(), String> {
+        let mut req = sc.to_request();
+        req.contiguous = contiguous;
+        self.validate_req(g, &req)
+    }
+
+    /// [`Placement::validate`] against a [`PlanRequest`]: per-class
+    /// memory caps, device ranges from the fleet, and the Def.-3.1 check
+    /// when `req.contiguous` is set.
+    pub fn validate_req(&self, g: &OpGraph, req: &PlanRequest) -> Result<(), String> {
         if self.assignment.len() != g.n() {
             return Err("assignment length mismatch".into());
         }
+        let (k, l) = (req.fleet.k(), req.fleet.l());
         for &d in &self.assignment {
             match d {
-                Device::Acc(i) if i >= sc.k => return Err(format!("device {d} out of range")),
-                Device::Cpu(j) if j >= sc.l.max(1) => {
+                Device::Acc(i) if i >= k => return Err(format!("device {d} out of range")),
+                Device::Cpu(j) if j >= l.max(1) => {
                     return Err(format!("device {d} out of range"))
                 }
                 _ => {}
             }
         }
-        self.check_memory(g, sc)?;
+        self.check_memory_req(g, req)?;
         self.check_colocation(g)?;
-        if contiguous {
-            self.check_contiguity(g, sc)?;
+        if req.contiguous {
+            self.check_contiguity_k(g, k)?;
         }
         Ok(())
     }
@@ -334,6 +879,185 @@ mod tests {
         assert_eq!(sc(CommModel::Overlap).combine(5.0, 2.0, 1.0), 5.0);
         assert_eq!(sc(CommModel::Overlap).combine(2.0, 4.0, 1.0), 5.0);
         assert_eq!(sc(CommModel::FullDuplex).combine(2.0, 4.0, 1.0), 4.0);
+    }
+
+    #[test]
+    fn fleet_dense_indexing_and_class_lookup() {
+        let fleet = Fleet::new(vec![
+            DeviceClass::acc("a100", 2, 40.0).speed(4.0),
+            DeviceClass::acc("t4", 3, 16.0),
+            DeviceClass::cpu("cpu", 1),
+        ]);
+        assert_eq!(fleet.k(), 5);
+        assert_eq!(fleet.l(), 1);
+        assert_eq!(fleet.num_devices(), 6);
+        for i in 0..2 {
+            assert_eq!(fleet.class_of(Device::Acc(i)).unwrap().name, "a100");
+            assert_eq!(fleet.acc_mem_cap(i), 40.0);
+            assert_eq!(fleet.acc_speed(i), 4.0);
+        }
+        for i in 2..5 {
+            assert_eq!(fleet.class_of(Device::Acc(i)).unwrap().name, "t4");
+            assert_eq!(fleet.acc_mem_cap(i), 16.0);
+            assert_eq!(fleet.acc_speed(i), 1.0);
+        }
+        assert_eq!(fleet.class_of(Device::Cpu(0)).unwrap().name, "cpu");
+        assert_eq!(fleet.best_acc_speed(), Some(4.0));
+        assert_eq!(fleet.min_acc_mem_cap(), 16.0);
+        assert_eq!(fleet.min_acc_speed(), 1.0);
+    }
+
+    #[test]
+    fn dense_view_agrees_with_per_index_accessors() {
+        let fleet = Fleet::new(vec![
+            DeviceClass::acc("a100", 2, 40.0).speed(4.0),
+            DeviceClass::cpu("cpu", 2),
+            DeviceClass::acc("t4", 0, 16.0), // count-0 class still owns an index
+            DeviceClass::acc("l4", 3, 24.0).speed(2.0),
+        ]);
+        let dense = fleet.dense_view();
+        assert_eq!(dense.len(), fleet.num_devices());
+        let k = fleet.k();
+        for (i, d) in dense.iter().enumerate() {
+            let dev = Device::from_index(i, k);
+            assert_eq!(d.kind == DeviceKind::Accelerator, dev.is_acc(), "device {i}");
+            match dev {
+                Device::Acc(a) => {
+                    assert_eq!(d.mem_cap, fleet.acc_mem_cap(a), "cap of acc{a}");
+                    assert_eq!(d.speed, fleet.acc_speed(a), "speed of acc{a}");
+                }
+                Device::Cpu(j) => {
+                    assert!(d.mem_cap.is_infinite());
+                    assert_eq!(d.speed, fleet.cpu_speed(j));
+                }
+            }
+            // same dense class ⇔ same DeviceClass by identity
+            for (i2, d2) in dense.iter().enumerate() {
+                let same_class = fleet.class_of(dev).map(|c| c as *const DeviceClass)
+                    == fleet
+                        .class_of(Device::from_index(i2, k))
+                        .map(|c| c as *const DeviceClass);
+                assert_eq!(d.class == d2.class, same_class, "devices {i}/{i2}");
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_parse_grammar() {
+        let fleet = Fleet::parse("2xfast:16,4xslow:8").unwrap();
+        assert_eq!(fleet.classes.len(), 2);
+        assert_eq!(fleet.classes[0].name, "fast");
+        assert_eq!(fleet.classes[0].count, 2);
+        assert_eq!(fleet.classes[0].mem_cap, 16.0);
+        assert_eq!(fleet.classes[1].count, 4);
+        assert_eq!(fleet.k(), 6);
+        assert_eq!(fleet.l(), 0);
+
+        let full = Fleet::parse("2xa100@4.0:40,4xt4:16,1xcpu").unwrap();
+        assert_eq!(full.k(), 6);
+        assert_eq!(full.l(), 1);
+        assert_eq!(full.classes[0].speed, 4.0);
+        assert_eq!(full.classes[2].kind, DeviceKind::Cpu);
+        assert!(full.classes[2].mem_cap.is_infinite());
+
+        // bare name, default count 1
+        let one = Fleet::parse("gpu").unwrap();
+        assert_eq!(one.classes[0].count, 1);
+        assert_eq!(one.classes[0].kind, DeviceKind::Accelerator);
+
+        assert!(Fleet::parse("").is_err());
+        assert!(Fleet::parse("2xfast:oops").is_err());
+        assert!(Fleet::parse("2xfast@-1").is_err());
+    }
+
+    #[test]
+    fn fleet_display_reparses() {
+        let fleet = Fleet::parse("2xa100@4:40,4xt4:16,1xcpu").unwrap();
+        let round = Fleet::parse(&fleet.to_string()).unwrap();
+        assert_eq!(fleet, round);
+        // kind the name alone would mis-infer, plus explicit bandwidth
+        let tricky = Fleet::new(vec![
+            DeviceClass::cpu("pool", 2),                 // cpu named without "cpu"
+            DeviceClass::acc("cpu_sim_accel", 1, 8.0),   // acc named WITH "cpu"
+        ])
+        .bandwidth(2.5);
+        let round = Fleet::parse(&tricky.to_string()).unwrap();
+        assert_eq!(tricky, round, "display was: {tricky}");
+        assert_eq!(round.l(), 2);
+        assert_eq!(round.k(), 1);
+        // and the explicit-kind / bw grammar parses directly
+        let explicit = Fleet::parse("2xpool+cpu,1xgpu:8,bw=2.5").unwrap();
+        assert_eq!(explicit.classes[0].kind, DeviceKind::Cpu);
+        assert_eq!(explicit.bandwidth, 2.5);
+        assert!(Fleet::parse("2xpool+tpu").is_err());
+        assert!(Fleet::parse("bw=-1,1xgpu").is_err());
+    }
+
+    #[test]
+    fn scenario_to_request_roundtrips_through_legacy_view() {
+        let sc = Scenario::new(4, 2, 32.0);
+        let req = sc.to_request();
+        assert_eq!(req.k(), 4);
+        assert_eq!(req.l(), 2);
+        let back = req.legacy_scenario();
+        assert_eq!(back.k, sc.k);
+        assert_eq!(back.l, sc.l);
+        assert_eq!(back.mem_cap, sc.mem_cap);
+        assert_eq!(back.comm_model, sc.comm_model);
+        assert_eq!(back.bandwidth, sc.bandwidth);
+    }
+
+    #[test]
+    fn per_class_memory_validation() {
+        let g = g4();
+        // acc0 belongs to a tight class (cap 1.5), acc1 to a roomy one
+        let req = PlanRequest::new(Fleet::new(vec![
+            DeviceClass::acc("tight", 1, 1.5),
+            DeviceClass::acc("roomy", 1, 10.0),
+            DeviceClass::cpu("cpu", 1),
+        ]));
+        let heavy_on_tight = Placement::new(
+            vec![Device::Acc(0), Device::Acc(0), Device::Acc(1), Device::Cpu(0)],
+            0.0,
+            "t",
+        );
+        assert!(heavy_on_tight.check_memory_req(&g, &req).is_err());
+        let heavy_on_roomy = Placement::new(
+            vec![Device::Acc(1), Device::Acc(1), Device::Acc(0), Device::Cpu(0)],
+            0.0,
+            "t",
+        );
+        assert!(heavy_on_roomy.check_memory_req(&g, &req).is_ok());
+        assert!(heavy_on_roomy.validate_req(&g, &req).is_ok());
+    }
+
+    #[test]
+    fn fleet_decrement_models_device_loss() {
+        let mut fleet = Fleet::parse("2xfast:16,1xcpu").unwrap();
+        assert!(fleet.decrement("fast"));
+        assert_eq!(fleet.k(), 1);
+        assert!(fleet.decrement("fast"));
+        assert!(!fleet.decrement("fast"), "empty class cannot lose a device");
+        assert!(!fleet.decrement("nope"));
+        fleet.class_named_mut("cpu").unwrap().count = 3;
+        assert_eq!(fleet.l(), 3);
+    }
+
+    #[test]
+    fn drained_classes_stop_constraining_conservative_views() {
+        let mut fleet = Fleet::new(vec![
+            DeviceClass::acc("big", 1, 40.0).speed(4.0),
+            DeviceClass::acc("small", 1, 8.0),
+        ]);
+        assert_eq!(fleet.min_acc_mem_cap(), 8.0);
+        assert_eq!(fleet.min_acc_speed(), 1.0);
+        // losing the last small device must lift its cap/speed bounds
+        assert!(fleet.decrement("small"));
+        assert_eq!(fleet.min_acc_mem_cap(), 40.0);
+        assert_eq!(fleet.min_acc_speed(), 4.0);
+        // the compute lower-bound divisor keeps declared classes (sound:
+        // a faster absent class only weakens the bound)
+        assert_eq!(fleet.best_acc_speed(), Some(4.0));
     }
 
     #[test]

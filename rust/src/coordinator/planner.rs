@@ -12,10 +12,14 @@ use crate::algos::hierarchy::Hierarchy;
 use crate::algos::{hierarchy, ip_latency, ip_throughput, objective, replication, PlaceError};
 use crate::baselines::{expert, greedy, local_search, pipedream, scotch_like};
 use crate::coordinator::context::{ProblemCtx, SolveOpts, Solver};
-use crate::coordinator::placement::{Placement, Scenario};
+use crate::coordinator::placement::{Objective, Placement, PlanRequest, Scenario};
 use crate::graph::OpGraph;
 use crate::workloads::Workload;
 use std::time::{Duration, Instant};
+
+// The fleet-level algorithm selector lives with the request type; re-export
+// it here so `planner::AlgoChoice` reads naturally next to `Algorithm`.
+pub use crate::coordinator::placement::AlgoChoice;
 
 // `PlanResult` moved to `context` with the `Solver` trait; re-exported here
 // so `planner::PlanResult` keeps resolving for existing callers.
@@ -109,7 +113,7 @@ impl Algorithm {
             Algorithm::PipeDream => Box::new(PipeDreamSolver),
             Algorithm::Scotch => Box::new(ScotchSolver),
             Algorithm::Greedy => Box::new(GreedySolver),
-            Algorithm::IpLatency => Box::new(IpLatencySolver),
+            Algorithm::IpLatency => Box::new(IpLatencySolver { contiguous: true }),
             Algorithm::Replication => Box::new(ReplicationSolver),
             Algorithm::Hierarchy => Box::new(HierarchySolver),
         }
@@ -124,20 +128,79 @@ pub fn registry() -> Vec<Box<dyn Solver>> {
 /// Plan a split of `w` with `alg`. IP time budget via `ip_budget`. One-shot:
 /// builds a fresh [`ProblemCtx`]; use a
 /// [`crate::coordinator::service::PlannerService`] to amortize analysis
-/// across plans.
+/// across plans. Fleet-aware: a workload carrying a heterogeneous
+/// [`crate::coordinator::placement::Fleet`] plans against it; scalar
+/// workloads plan against their scenario's uniform fleet, bit-for-bit as
+/// before.
 pub fn plan(
     w: &Workload,
     alg: Algorithm,
     ip_budget: Duration,
 ) -> Result<PlanResult, PlaceError> {
     let opts = SolveOpts { ip_budget, expert: w.expert, ..SolveOpts::default() };
-    let ctx = ProblemCtx::new(w.graph.clone(), w.scenario.clone());
+    let ctx = ProblemCtx::from_request(w.graph.clone(), w.request());
     alg.solver().solve(&ctx, &opts)
+}
+
+/// One-shot planning of a [`PlanRequest`] (fleet + objective + algorithm
+/// selection, `Auto` included). Builds a throwaway [`ProblemCtx`]; use
+/// [`crate::coordinator::service::PlannerService::plan_request`] to reuse
+/// analysis across re-plans.
+pub fn plan_request(
+    g: &OpGraph,
+    req: &PlanRequest,
+    opts: &SolveOpts,
+) -> Result<PlanResult, PlaceError> {
+    let ctx = ProblemCtx::from_request(g.clone(), req.clone());
+    solve_request(&ctx, req, opts)
+}
+
+/// Dispatch a request's algorithm selection against an existing context.
+/// `Auto` resolves by objective AND the request's contiguity toggle:
+/// latency → the latency IP (contiguous per the request); throughput →
+/// the exact DP with a DPL fallback when the lattice blows its cap (the
+/// paper's own §5.1.2 recommendation), or the §5.2 non-contiguous IP when
+/// `contiguous` is off (the DP/DPL search contiguous splits by
+/// construction). A `Fixed` algorithm declares its own contiguity regime
+/// (`ip-contiguous` vs `ip-noncontiguous`; latency honors the toggle) and
+/// is run as named. The context must share the request's
+/// fingerprint-relevant fields (fleet/comm/schedule) — solver selectors
+/// may differ.
+pub fn solve_request(
+    ctx: &ProblemCtx,
+    req: &PlanRequest,
+    opts: &SolveOpts,
+) -> Result<PlanResult, PlaceError> {
+    match req.algorithm {
+        AlgoChoice::Fixed(Algorithm::IpLatency) => {
+            IpLatencySolver { contiguous: req.contiguous }.solve(ctx, opts)
+        }
+        AlgoChoice::Fixed(alg) => alg.solver().solve(ctx, opts),
+        AlgoChoice::Auto => match req.objective {
+            Objective::Latency => {
+                IpLatencySolver { contiguous: req.contiguous }.solve(ctx, opts)
+            }
+            Objective::Throughput if !req.contiguous => {
+                Algorithm::IpNonContiguous.solver().solve(ctx, opts)
+            }
+            Objective::Throughput => match Algorithm::Dp.solver().solve(ctx, opts) {
+                Err(PlaceError::TooManyIdeals(_)) => {
+                    Algorithm::Dpl.solver().solve(ctx, opts)
+                }
+                r => r,
+            },
+        },
+    }
 }
 
 /// Latency of any placement under the §4 schedule (for Table-4 baselines).
 pub fn latency_of(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
     objective::latency(g, sc, p)
+}
+
+/// [`latency_of`] against a fleet request.
+pub fn latency_of_req(g: &OpGraph, req: &PlanRequest, p: &Placement) -> f64 {
+    objective::latency_req(g, req, p)
 }
 
 // ---------------------------------------------------------------------------
@@ -156,7 +219,7 @@ impl Solver for DpSolver {
     fn solve(&self, ctx: &ProblemCtx, _opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
         let start = Instant::now();
         let (obj, dense) = ctx.dp_solution()?.clone();
-        let placement = ctx.prepared()?.expand(ctx.graph(), ctx.scenario(), obj, &dense);
+        let placement = ctx.prepared()?.expand_req(ctx.graph(), ctx.request(), obj, &dense);
         Ok(PlanResult::basic(placement, start.elapsed()))
     }
 }
@@ -172,7 +235,8 @@ impl Solver for DplSolver {
     fn solve(&self, ctx: &ProblemCtx, _opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
         let start = Instant::now();
         let (obj, dense) = ctx.dpl_solution()?.clone();
-        let mut placement = ctx.prepared()?.expand(ctx.graph(), ctx.scenario(), obj, &dense);
+        let mut placement =
+            ctx.prepared()?.expand_req(ctx.graph(), ctx.request(), obj, &dense);
         placement.algorithm = "DPL".into();
         Ok(PlanResult::basic(placement, start.elapsed()))
     }
@@ -211,7 +275,12 @@ impl Solver for IpThroughputSolver {
 }
 
 /// Figs.-3/4 latency IP (§4), warm-started from the greedy baseline.
-pub struct IpLatencySolver;
+/// `contiguous` toggles the one-subgraph-per-accelerator constraint
+/// (Fig. 3) vs the Fig.-4 serialized-pieces relaxation; the registry
+/// entry is contiguous, [`solve_request`] threads the request's toggle.
+pub struct IpLatencySolver {
+    pub contiguous: bool,
+}
 
 impl Solver for IpLatencySolver {
     fn name(&self) -> &'static str {
@@ -219,11 +288,12 @@ impl Solver for IpLatencySolver {
     }
 
     fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
-        let warm = vec![greedy::solve(ctx.graph(), ctx.scenario())];
+        let warm = vec![greedy::solve_req(ctx.graph(), ctx.request())];
         let lat_opts = ip_latency::LatencyIpOptions {
             time_limit: opts.ip_budget,
             gap_target: opts.gap_target,
             warm_starts: warm,
+            contiguous: self.contiguous,
             ..Default::default()
         };
         let r = ip_latency::solve_ctx(ctx, &lat_opts)?;
@@ -262,13 +332,16 @@ impl Solver for ReplicationSolver {
 pub struct HierarchySolver;
 
 impl HierarchySolver {
-    fn default_hierarchy(sc: &Scenario) -> Hierarchy {
-        let num_clusters = if sc.k >= 2 { 2 } else { 1 };
+    fn default_hierarchy(req: &PlanRequest) -> Hierarchy {
+        let k = req.fleet.k();
+        let num_clusters = if k >= 2 { 2 } else { 1 };
         Hierarchy {
             num_clusters,
-            accs_per_cluster: (sc.k / num_clusters).max(1),
+            accs_per_cluster: (k / num_clusters).max(1),
             inter_factor: 4.0,
-            mem_cap: sc.mem_cap,
+            // clusters are modeled uniformly: the smallest class cap is
+            // the only bound every slot can honor
+            mem_cap: req.fleet.min_acc_mem_cap(),
         }
     }
 }
@@ -283,7 +356,7 @@ impl Solver for HierarchySolver {
         let hier = opts
             .hierarchy
             .clone()
-            .unwrap_or_else(|| Self::default_hierarchy(ctx.scenario()));
+            .unwrap_or_else(|| Self::default_hierarchy(ctx.request()));
         let h = hierarchy::solve_ctx(ctx, &hier)?;
         let note = format!(
             "{}x{} clusters, inter-factor {}",
@@ -306,7 +379,7 @@ impl Solver for ExpertSolver {
     fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
         let style = opts.expert.ok_or(PlaceError::MissingExpertRule)?;
         let start = Instant::now();
-        let p = expert::solve(ctx.graph(), ctx.scenario(), style);
+        let p = expert::solve_req(ctx.graph(), ctx.request(), style);
         Ok(PlanResult::basic(p, start.elapsed()))
     }
 }
@@ -321,7 +394,8 @@ impl Solver for LocalSearchSolver {
 
     fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
         let start = Instant::now();
-        let p = local_search::solve(ctx.graph(), ctx.scenario(), opts.ls_restarts, opts.ls_seed);
+        let p =
+            local_search::solve_req(ctx.graph(), ctx.request(), opts.ls_restarts, opts.ls_seed);
         Ok(PlanResult::basic(p, start.elapsed()))
     }
 }
@@ -336,7 +410,7 @@ impl Solver for PipeDreamSolver {
 
     fn solve(&self, ctx: &ProblemCtx, _opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
         let start = Instant::now();
-        let p = pipedream::solve(ctx.graph(), ctx.scenario());
+        let p = pipedream::solve_req(ctx.graph(), ctx.request());
         Ok(PlanResult::basic(p, start.elapsed()))
     }
 }
@@ -351,7 +425,7 @@ impl Solver for ScotchSolver {
 
     fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
         let start = Instant::now();
-        let p = scotch_like::solve(ctx.graph(), ctx.scenario(), opts.scotch_seed);
+        let p = scotch_like::solve_req(ctx.graph(), ctx.request(), opts.scotch_seed);
         Ok(PlanResult::basic(p, start.elapsed()))
     }
 }
@@ -366,7 +440,7 @@ impl Solver for GreedySolver {
 
     fn solve(&self, ctx: &ProblemCtx, _opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
         let start = Instant::now();
-        let p = greedy::solve(ctx.graph(), ctx.scenario());
+        let p = greedy::solve_req(ctx.graph(), ctx.request());
         Ok(PlanResult::basic(p, start.elapsed()))
     }
 }

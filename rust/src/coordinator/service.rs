@@ -13,9 +13,11 @@
 //! correct: every artifact depends on the full key).
 
 use crate::algos::PlaceError;
-use crate::coordinator::context::{fingerprint, PlanResult, ProblemCtx, SolveOpts, Solver};
-use crate::coordinator::placement::Scenario;
-use crate::coordinator::planner::Algorithm;
+use crate::coordinator::context::{
+    fingerprint_req, PlanResult, ProblemCtx, SolveOpts, Solver,
+};
+use crate::coordinator::placement::{PlanRequest, Scenario};
+use crate::coordinator::planner::{self, Algorithm};
 use crate::graph::OpGraph;
 use crate::workloads::Workload;
 use std::collections::VecDeque;
@@ -55,9 +57,17 @@ impl PlannerService {
     }
 
     /// The context for `(graph, scenario)`: cached if its fingerprint is
-    /// known, freshly created (and cached) otherwise.
+    /// known, freshly created (and cached) otherwise. A scenario shares
+    /// its cache entry with the equivalent uniform-fleet request.
     pub fn context(&mut self, g: &OpGraph, sc: &Scenario) -> Arc<ProblemCtx> {
-        let fp = fingerprint(g, sc);
+        self.context_request(g, &sc.to_request())
+    }
+
+    /// The context for `(graph, request)` — the fleet-level entry point.
+    /// Keyed by [`fingerprint_req`], so requests differing only in solver
+    /// selectors (objective / contiguity / algorithm) share one context.
+    pub fn context_request(&mut self, g: &OpGraph, req: &PlanRequest) -> Arc<ProblemCtx> {
+        let fp = fingerprint_req(g, req);
         if let Some(pos) = self.entries.iter().position(|(key, _)| *key == fp) {
             self.hits += 1;
             let entry = self.entries.remove(pos).expect("position just found");
@@ -65,7 +75,8 @@ impl PlannerService {
             return entry.1;
         }
         self.misses += 1;
-        let ctx = Arc::new(ProblemCtx::with_cap(g.clone(), sc.clone(), self.ideal_cap));
+        let ctx =
+            Arc::new(ProblemCtx::from_request_with_cap(g.clone(), req.clone(), self.ideal_cap));
         self.entries.push_back((fp, Arc::clone(&ctx)));
         while self.entries.len() > self.capacity {
             self.entries.pop_front();
@@ -83,6 +94,21 @@ impl PlannerService {
     ) -> Result<PlanResult, PlaceError> {
         let ctx = self.context(g, sc);
         alg.solver().solve(&ctx, opts)
+    }
+
+    /// Plan a [`PlanRequest`] (fleet + objective + algorithm selection,
+    /// `Auto` included), reusing every cached artifact. Serving-time
+    /// fleet mutations — device loss via
+    /// [`crate::coordinator::placement::Fleet::decrement`], cap changes —
+    /// re-plan here at cache-hit cost for known fleets.
+    pub fn plan_request(
+        &mut self,
+        g: &OpGraph,
+        req: &PlanRequest,
+        opts: &SolveOpts,
+    ) -> Result<PlanResult, PlaceError> {
+        let ctx = self.context_request(g, req);
+        planner::solve_request(&ctx, req, opts)
     }
 
     /// [`PlannerService::plan`] for a [`Workload`], filling the expert rule

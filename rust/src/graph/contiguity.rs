@@ -75,6 +75,23 @@ pub fn virtual_device_split(g: &OpGraph, set: &BitSet) -> Vec<BitSet> {
     }
     let order = topo::toposort(g).expect("DAG required");
     let reach = topo::reachability_matrix(g);
+    virtual_device_split_in(g, &order, &reach, set)
+}
+
+/// [`virtual_device_split`] against a caller-supplied topological order
+/// and reachability matrix — the hot-path form: the latency evaluator runs
+/// once per IP leaf, and rebuilding the `O(V·E/64)` matrix per evaluation
+/// dominated its cost (ROADMAP item (d) analogue; the throughput-side fix
+/// is [`is_contiguous_in`]).
+pub fn virtual_device_split_in(
+    g: &OpGraph,
+    order: &[usize],
+    reach: &crate::util::arena::BitMatrix,
+    set: &BitSet,
+) -> Vec<BitSet> {
+    if set.is_empty() {
+        return Vec::new();
+    }
     let members: Vec<usize> = order.iter().copied().filter(|&v| set.contains(v)).collect();
 
     let mut pieces: Vec<BitSet> = Vec::new();
@@ -270,6 +287,15 @@ mod tests {
             trial.insert(v);
             assert_eq!(is_contiguous(&g, &trial), expect, "direct check v={v}");
         }
+    }
+
+    #[test]
+    fn virtual_device_split_in_matches_owned_form() {
+        let g = chain(6);
+        let order = topo::toposort(&g).unwrap();
+        let reach = topo::reachability_matrix(&g);
+        let s = BitSet::from_iter(6, [0, 1, 3, 5]);
+        assert_eq!(virtual_device_split(&g, &s), virtual_device_split_in(&g, &order, &reach, &s));
     }
 
     #[test]

@@ -164,7 +164,8 @@ impl OpGraph {
 
     /// Sum of CPU processing times of a node set (`cpu(S)` in §5.1.1).
     pub fn cpu_load(&self, set: &BitSet) -> f64 {
-        set.iter().map(|v| self.nodes[v].p_cpu).sum()
+        // speed 1.0 divides exactly: bitwise the plain sum
+        self.cpu_load_scaled(set, 1.0)
     }
 
     /// Accelerator load `acc(S)` of §5.1.1: in-communication + processing +
@@ -175,19 +176,30 @@ impl OpGraph {
     ///   once, even with several edges into S);
     /// * out-comm: `Σ c_v` over v ∈ S with an edge leaving S.
     pub fn acc_load(&self, set: &BitSet, mem_cap: f64) -> f64 {
+        // speed 1.0 divides exactly: bitwise the unscaled form
+        self.acc_load_scaled(set, mem_cap, 1.0)
+    }
+
+    /// [`OpGraph::cpu_load`] on a device of relative `speed` (processing
+    /// times divide by the speed).
+    pub fn cpu_load_scaled(&self, set: &BitSet, speed: f64) -> f64 {
+        set.iter().map(|v| self.nodes[v].p_cpu / speed).sum()
+    }
+
+    /// [`OpGraph::acc_load`] on an accelerator of relative `speed`:
+    /// compute divides by the speed, boundary communication does not.
+    pub fn acc_load_scaled(&self, set: &BitSet, mem_cap: f64, speed: f64) -> f64 {
         if self.mem_of(set) > mem_cap {
             return f64::INFINITY;
         }
         let mut load = 0.0;
-        // Track in-comm contributors to avoid double counting u with
-        // multiple edges into S.
         let mut in_paid = BitSet::new(self.n());
         for v in set.iter() {
             let p = self.nodes[v].p_acc;
             if p.is_infinite() {
                 return f64::INFINITY;
             }
-            load += p;
+            load += p / speed;
             for &u in &self.preds[v] {
                 if !set.contains(u) && !in_paid.contains(u) {
                     in_paid.insert(u);

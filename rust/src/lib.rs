@@ -5,8 +5,12 @@
 //! Mahajan, Nina Paravecino — NeurIPS 2020).
 //!
 //! Given a DNN computation DAG with per-node CPU/accelerator processing
-//! times, memory footprints and transfer costs, plus a deployment scenario
-//! (`k` accelerators with memory cap `M`, `ℓ` CPUs), the crate computes
+//! times, memory footprints and transfer costs, plus a deployment
+//! description — a heterogeneous device [`coordinator::placement::Fleet`]
+//! of typed classes (per-class memory caps and speeds) addressed through
+//! the unified [`coordinator::placement::PlanRequest`] API, or the
+//! deprecated uniform scalar [`coordinator::placement::Scenario`]
+//! (`k` accelerators with one cap `M`, `ℓ` CPUs) — the crate computes
 //! **provably optimal device placements** for four regimes:
 //!
 //! * single-stream inference → latency minimization (IP, Figs. 3–4),
@@ -55,7 +59,9 @@ pub mod workloads;
 
 /// Common imports for downstream users.
 pub mod prelude {
-    pub use crate::coordinator::placement::{Placement, Scenario};
+    pub use crate::coordinator::placement::{
+        DeviceClass, Fleet, Placement, PlanRequest, Scenario,
+    };
     pub use crate::graph::{Node, NodeId, NodeKind, OpGraph};
     pub use crate::util::bitset::BitSet;
 }

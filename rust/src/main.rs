@@ -16,7 +16,29 @@
 //! Algorithms: `dp`, `dpl`, `ip`/`ip-contiguous`, `ipnc`/`ip-noncontiguous`,
 //! `ip-latency`, `replication`, `hierarchy`, `expert`, `ls`/`local-search`,
 //! `pipedream`, `scotch`, `greedy`.
+//!
+//! ## Heterogeneous fleets (`--fleet`)
+//!
+//! `partition`, `simulate`, `latency` and `partition-file` accept
+//! `--fleet "SPEC"` to replace the workload's uniform `(k, ℓ, M)` scenario
+//! with a typed device fleet. SPEC is comma-separated
+//! `COUNTxNAME[@SPEED][:MEM]` entries; a name starting with `cpu` declares
+//! a CPU class. Example:
+//!
+//! ```text
+//! dnn-partition partition bert24 dp --fleet "2xfast@2:32768,4xslow:16384,1xcpu"
+//! ```
+//!
+//! plans BERT-24 over 2 double-speed 32 GB accelerators, 4 baseline 16 GB
+//! accelerators and one CPU — per-class memory caps and speeds are honored
+//! by every planning algorithm (JSON files can declare the same under a
+//! `fleet` key; see `workloads::json`). An optional `bw=X` entry sets the
+//! interconnect bandwidth, `+acc`/`+cpu` suffixes force a class kind. The
+//! `simulate` command plans fleet-aware but replays the schedule on the
+//! scalar uniform view (the discrete-event simulator is not yet
+//! fleet-aware; it prints a note when a fleet is active).
 
+use dnn_partition::coordinator::placement::Fleet;
 use dnn_partition::coordinator::planner::{self, Algorithm};
 use dnn_partition::pipeline::sim::{self, Schedule};
 use dnn_partition::util::json::Json;
@@ -51,7 +73,37 @@ fn main() {
     std::process::exit(code);
 }
 
-fn run(args: &[String]) -> i32 {
+/// Strip `--fleet SPEC` / `--fleet=SPEC` out of the argument list,
+/// returning the remaining positional args and the parsed fleet (if any).
+fn extract_fleet(args: &[String]) -> Result<(Vec<String>, Option<Fleet>), String> {
+    let mut rest = Vec::with_capacity(args.len());
+    let mut fleet = None;
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(spec) = a.strip_prefix("--fleet=") {
+            fleet = Some(Fleet::parse(spec)?);
+        } else if a == "--fleet" {
+            let spec = args.get(i + 1).ok_or("--fleet requires a spec argument")?;
+            fleet = Some(Fleet::parse(spec)?);
+            i += 1;
+        } else {
+            rest.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok((rest, fleet))
+}
+
+fn run(raw_args: &[String]) -> i32 {
+    let (args, fleet) = match extract_fleet(raw_args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("bad --fleet: {e}");
+            return 2;
+        }
+    };
+    let args = &args[..];
     match args.first().map(String::as_str) {
         Some("list") => {
             println!("{:<14} {:>6} {:>7} {:>3}  granularity  task", "workload", "nodes", "edges", "k");
@@ -70,13 +122,19 @@ fn run(args: &[String]) -> i32 {
                     if w.training { "training" } else { "inference" },
                 );
             }
+            println!(
+                "\nk above is the paper's uniform deployment; override with\n\
+                 --fleet \"COUNTxNAME[@SPEED][:MEM],…\" on partition/simulate/\n\
+                 latency/partition-file, e.g. --fleet \"2xfast@2:32768,4xslow:16384,1xcpu\""
+            );
             0
         }
         Some("partition") if args.len() >= 3 => {
-            let Some(w) = find_workload(&args[1]) else {
+            let Some(mut w) = find_workload(&args[1]) else {
                 eprintln!("unknown workload {}", args[1]);
                 return 2;
             };
+            w.fleet = fleet.clone().or(w.fleet);
             let Some(alg) = Algorithm::parse(&args[2]) else {
                 eprintln!("unknown algorithm {}", args[2]);
                 return 2;
@@ -109,16 +167,21 @@ fn run(args: &[String]) -> i32 {
                 return 2;
             };
             w.scenario = workloads::latency_scenario(&w.graph);
+            w.fleet = fleet.clone().or(w.fleet);
             let budget =
                 Duration::from_secs(args.get(2).and_then(|s| s.parse().ok()).unwrap_or(20));
             match planner::plan(&w, Algorithm::IpLatency, budget) {
                 Ok(r) => {
+                    let deployed = match &w.fleet {
+                        Some(f) => format!("fleet {f}"),
+                        None => {
+                            format!("k={}, M={:.0}", w.scenario.k, w.scenario.mem_cap)
+                        }
+                    };
                     println!(
-                        "{}: latency {:.2} (k={}, M={:.0})  runtime {:?}{}",
+                        "{}: latency {:.2} ({deployed})  runtime {:?}{}",
                         w.name,
                         r.placement.objective,
-                        w.scenario.k,
-                        w.scenario.mem_cap,
                         r.runtime,
                         r.gap.map(|g| format!("  gap {:.1}%", g * 100.0)).unwrap_or_default()
                     );
@@ -131,10 +194,11 @@ fn run(args: &[String]) -> i32 {
             }
         }
         Some("simulate") if args.len() >= 3 => {
-            let Some(w) = find_workload(&args[1]) else {
+            let Some(mut w) = find_workload(&args[1]) else {
                 eprintln!("unknown workload {}", args[1]);
                 return 2;
             };
+            w.fleet = fleet.clone().or(w.fleet);
             let Some(alg) = Algorithm::parse(&args[2]) else {
                 eprintln!("unknown algorithm {}", args[2]);
                 return 2;
@@ -148,7 +212,16 @@ fn run(args: &[String]) -> i32 {
                 }
             };
             let schedule = if w.training { Schedule::PipeDream1F1B } else { Schedule::Pipelined };
-            let res = sim::simulate(&w.graph, &w.scenario, &r.placement, schedule, n);
+            // the simulator still speaks the scalar scenario; a fleet run
+            // simulates against its conservative uniform view
+            let sim_sc = w.request().legacy_scenario();
+            if w.fleet.is_some() {
+                println!(
+                    "note: plan is fleet-aware, but the simulator replays it on the \
+                     uniform view (per-class speeds not simulated)"
+                );
+            }
+            let res = sim::simulate(&w.graph, &sim_sc, &r.placement, schedule, n);
             println!(
                 "{} {:?}: predicted TPS {:.2}, simulated steady-state {:.2} over {n} samples",
                 w.name, alg, r.placement.objective, res.steady_tps
@@ -181,7 +254,7 @@ fn run(args: &[String]) -> i32 {
                     return 1;
                 }
             };
-            let (graph, scenario, name) = match wjson::from_json(&json) {
+            let mut w = match wjson::from_json_workload(&json) {
                 Ok(x) => x,
                 Err(e) => {
                     eprintln!("bad workload: {e}");
@@ -192,15 +265,8 @@ fn run(args: &[String]) -> i32 {
                 eprintln!("unknown algorithm {}", args[2]);
                 return 2;
             };
-            let w = Workload {
-                name,
-                graph,
-                scenario,
-                granularity: workloads::Granularity::Operator,
-                training: false,
-                expert: None,
-                layer_of: None,
-            };
+            // CLI --fleet wins over the file's own fleet section
+            w.fleet = fleet.clone().or(w.fleet);
             match planner::plan(&w, alg, Duration::from_secs(20)) {
                 Ok(r) => {
                     println!("{} {:?}: TPS {:.2} in {:?}", w.name, alg, r.placement.objective, r.runtime);
@@ -239,11 +305,19 @@ fn cli_key(w: &Workload) -> String {
 fn print_split(w: &Workload, p: &dnn_partition::prelude::Placement) {
     use dnn_partition::coordinator::placement::Device;
     let n = w.graph.n();
-    for i in 0..w.scenario.k {
+    let req = w.request();
+    for i in 0..req.fleet.k() {
         let set = p.set_of(Device::Acc(i), n);
-        println!("  acc{i}: {} nodes, {:.1} MB", set.len(), w.graph.mem_of(&set));
+        let class = req.fleet.class_of(Device::Acc(i));
+        let (name, cap) = class.map_or(("acc", f64::INFINITY), |c| (c.name.as_str(), c.mem_cap));
+        let cap_str = if cap.is_finite() { format!("/{cap:.0}") } else { String::new() };
+        println!(
+            "  acc{i} ({name}): {} nodes, {:.1}{cap_str} MB",
+            set.len(),
+            w.graph.mem_of(&set)
+        );
     }
-    for j in 0..w.scenario.l.max(1) {
+    for j in 0..req.fleet.l().max(1) {
         let set = p.set_of(Device::Cpu(j), n);
         if !set.is_empty() {
             println!("  cpu{j}: {} nodes", set.len());

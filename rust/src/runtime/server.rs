@@ -234,7 +234,7 @@ pub fn stage_factories(
 
 use crate::algos::PlaceError;
 use crate::coordinator::context::SolveOpts;
-use crate::coordinator::placement::{Device, Placement, Scenario};
+use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::coordinator::planner::Algorithm;
 use crate::coordinator::service::PlannerService;
 use crate::graph::{topo, OpGraph};
@@ -280,6 +280,22 @@ impl ServingPlanner {
         alg: Algorithm,
     ) -> Result<PlannedStages, PlaceError> {
         let r = self.service.plan(g, sc, alg, &self.opts)?;
+        let stages = stages_of(g, &r.placement);
+        Ok(PlannedStages { placement: r.placement, stages })
+    }
+
+    /// Plan a [`PlanRequest`] — the fleet-level serving path. Live fleet
+    /// mutations are expressed on the request itself (device loss =
+    /// [`crate::coordinator::placement::Fleet::decrement`] on a class,
+    /// memory pressure = a class-cap edit) instead of hand-rebuilding
+    /// scenarios; re-plans of known fleets run at cache-hit cost, and the
+    /// request's algorithm selection (`Auto` included) applies.
+    pub fn plan_request(
+        &mut self,
+        g: &OpGraph,
+        req: &PlanRequest,
+    ) -> Result<PlannedStages, PlaceError> {
+        let r = self.service.plan_request(g, req, &self.opts)?;
         let stages = stages_of(g, &r.placement);
         Ok(PlannedStages { placement: r.placement, stages })
     }
@@ -419,6 +435,32 @@ mod tests {
         let c = planner.plan(&g, &degraded).unwrap();
         c.placement.validate(&g, &degraded, true).unwrap();
         assert_eq!(planner.cache_stats(), (1, 2));
+    }
+
+    #[test]
+    fn serving_planner_replans_fleet_mutations() {
+        use crate::coordinator::placement::{AlgoChoice, DeviceClass, Fleet, PlanRequest};
+        let g = chain_graph(8);
+        let mut planner = ServingPlanner::new(Algorithm::Dp, SolveOpts::default());
+        let mut req = PlanRequest::new(Fleet::new(vec![
+            DeviceClass::acc("fast", 1, f64::INFINITY).speed(2.0),
+            DeviceClass::acc("slow", 2, f64::INFINITY),
+            DeviceClass::cpu("cpu", 1),
+        ]))
+        .algorithm(AlgoChoice::Fixed(Algorithm::Dp));
+        let full = planner.plan_request(&g, &req).unwrap();
+        full.placement.validate_req(&g, &req).unwrap();
+        // same fleet again: cache hit, identical plan
+        let again = planner.plan_request(&g, &req).unwrap();
+        assert_eq!(full.placement.assignment, again.placement.assignment);
+        assert_eq!(planner.cache_stats(), (1, 1));
+        // device loss IS a class decrement — no scenario rebuilt by hand
+        assert!(req.fleet.decrement("slow"));
+        let degraded = planner.plan_request(&g, &req).unwrap();
+        degraded.placement.validate_req(&g, &req).unwrap();
+        assert_eq!(planner.cache_stats(), (1, 2), "mutated fleet is a new context");
+        // losing a device can't improve the bottleneck
+        assert!(degraded.placement.objective >= full.placement.objective - 1e-9);
     }
 
     #[test]

@@ -15,9 +15,25 @@
 //! }
 //! ```
 //! `colorClass` and per-edge `cost` are optional, exactly as in App. B.
+//!
+//! An optional `fleet` section describes a heterogeneous device fleet
+//! (superseding the scalar `numAccelerators`/`maxMemoryPerDevice` shape,
+//! which is still emitted for backward compatibility):
+//! ```json
+//! "fleet": {
+//!   "bandwidth": 1.0,
+//!   "classes": [
+//!     {"name": "a100", "count": 2, "memCap": 40960.0, "speed": 4.0,
+//!      "kind": "accelerator"},
+//!     {"name": "cpu", "count": 1, "kind": "cpu"}
+//!   ]
+//! }
+//! ```
+//! `memCap` defaults to unlimited, `speed` to 1.0, `kind` to
+//! `"accelerator"` unless the name starts with `cpu`.
 
 use super::Workload;
-use crate::coordinator::placement::Scenario;
+use crate::coordinator::placement::{DeviceClass, DeviceKind, Fleet, Scenario};
 use crate::graph::{Node, NodeKind, OpGraph};
 use crate::util::json::Json;
 
@@ -58,14 +74,78 @@ pub fn to_json(w: &Workload) -> Json {
             Json::obj(fields)
         })
         .collect();
-    Json::obj(vec![
+    let mut fields = vec![
         ("name", Json::str(w.name.clone())),
         ("maxMemoryPerDevice", Json::num(w.scenario.mem_cap)),
         ("numAccelerators", Json::num(w.scenario.k as f64)),
         ("numCpus", Json::num(w.scenario.l as f64)),
-        ("nodes", Json::Arr(nodes)),
-        ("edges", Json::Arr(edges)),
+    ];
+    if let Some(fleet) = &w.fleet {
+        fields.push(("fleet", fleet_to_json(fleet)));
+    }
+    fields.push(("nodes", Json::Arr(nodes)));
+    fields.push(("edges", Json::Arr(edges)));
+    Json::obj(fields)
+}
+
+/// Serialize a [`Fleet`] into the `fleet` section.
+pub fn fleet_to_json(fleet: &Fleet) -> Json {
+    let classes: Vec<Json> = fleet
+        .classes
+        .iter()
+        .map(|c| {
+            let mut fields = vec![
+                ("name", Json::str(c.name.clone())),
+                ("count", Json::num(c.count as f64)),
+            ];
+            if c.mem_cap.is_finite() {
+                fields.push(("memCap", Json::num(c.mem_cap)));
+            }
+            fields.push(("speed", Json::num(c.speed)));
+            fields.push((
+                "kind",
+                Json::str(match c.kind {
+                    DeviceKind::Accelerator => "accelerator",
+                    DeviceKind::Cpu => "cpu",
+                }),
+            ));
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("bandwidth", Json::num(fleet.bandwidth)),
+        ("classes", Json::Arr(classes)),
     ])
+}
+
+/// Parse a `fleet` section.
+pub fn fleet_from_json(j: &Json) -> Result<Fleet, String> {
+    let classes_json = j.get("classes").as_arr().ok_or("fleet missing 'classes' array")?;
+    let mut classes = Vec::new();
+    for cj in classes_json {
+        let name = cj.get("name").as_str().ok_or("fleet class missing 'name'")?.to_string();
+        let count = cj.get("count").as_usize().ok_or("fleet class missing 'count'")?;
+        let mem_cap = cj.get("memCap").as_f64().unwrap_or(f64::INFINITY);
+        let speed = cj.get("speed").as_f64().unwrap_or(1.0);
+        if !(speed.is_finite() && speed > 0.0) {
+            return Err(format!("fleet class '{name}' has non-positive speed"));
+        }
+        let kind = match cj.get("kind").as_str() {
+            Some("cpu") => DeviceKind::Cpu,
+            Some("accelerator") | Some("acc") => DeviceKind::Accelerator,
+            Some(other) => return Err(format!("unknown device kind '{other}'")),
+            None => DeviceKind::infer(&name),
+        };
+        classes.push(DeviceClass { name, count, mem_cap, speed, kind });
+    }
+    if classes.is_empty() {
+        return Err("fleet declares no device classes".into());
+    }
+    let bandwidth = j.get("bandwidth").as_f64().unwrap_or(1.0);
+    if !(bandwidth.is_finite() && bandwidth > 0.0) {
+        return Err("fleet bandwidth must be positive".into());
+    }
+    Ok(Fleet { classes, bandwidth })
 }
 
 fn json_latency(v: f64) -> Json {
@@ -128,6 +208,26 @@ pub fn from_json(j: &Json) -> Result<(OpGraph, Scenario, String), String> {
     Ok((g, scenario, name))
 }
 
+/// Parse a workload file into a full [`Workload`], including the optional
+/// `fleet` section (absent → `fleet: None`, the scalar scenario applies).
+pub fn from_json_workload(j: &Json) -> Result<Workload, String> {
+    let (graph, scenario, name) = from_json(j)?;
+    let fleet = match j.get("fleet") {
+        Json::Null => None,
+        section => Some(fleet_from_json(section)?),
+    };
+    Ok(Workload {
+        name,
+        graph,
+        scenario,
+        fleet,
+        granularity: super::Granularity::Operator,
+        training: false,
+        expert: None,
+        layer_of: None,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +271,7 @@ mod tests {
             name: "t".into(),
             graph: g,
             scenario: Scenario::new(1, 1, 10.0),
+            fleet: None,
             granularity: Granularity::Operator,
             training: false,
             expert: None,
@@ -190,6 +291,7 @@ mod tests {
             name: "t".into(),
             graph: g,
             scenario: Scenario::new(1, 1, 10.0),
+            fleet: None,
             granularity: Granularity::Operator,
             training: false,
             expert: None,
@@ -197,6 +299,70 @@ mod tests {
         };
         let (g2, _, _) = from_json(&to_json(&w)).unwrap();
         assert!(g2.nodes[0].p_acc.is_infinite());
+    }
+
+    #[test]
+    fn fleet_section_roundtrips() {
+        let mut g = OpGraph::new();
+        g.add_node(Node::new("a").mem(2.0));
+        g.add_node(Node::new("b").mem(2.0));
+        g.add_edge(0, 1);
+        let fleet = Fleet::new(vec![
+            DeviceClass::acc("a100", 2, 40.0).speed(4.0),
+            DeviceClass::acc("t4", 4, 16.0),
+            DeviceClass::cpu("cpu", 1),
+        ])
+        .bandwidth(2.5);
+        let w = Workload {
+            name: "hetero".into(),
+            graph: g,
+            scenario: Scenario::new(6, 1, 40.0),
+            fleet: Some(fleet.clone()),
+            granularity: Granularity::Operator,
+            training: false,
+            expert: None,
+            layer_of: None,
+        };
+        // in-memory roundtrip
+        let j = to_json(&w);
+        let back = from_json_workload(&j).unwrap();
+        assert_eq!(back.fleet.as_ref(), Some(&fleet));
+        // through the textual form too (serialize → parse → compare)
+        let reparsed = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
+        let back2 = from_json_workload(&reparsed).unwrap();
+        assert_eq!(back2.fleet.as_ref(), Some(&fleet));
+        assert_eq!(back2.scenario.k, w.scenario.k);
+    }
+
+    #[test]
+    fn fleetless_files_parse_with_no_fleet() {
+        let w = &table1_workloads()[0];
+        let back = from_json_workload(&to_json(w)).unwrap();
+        assert!(back.fleet.is_none());
+        assert_eq!(back.graph.n(), w.graph.n());
+    }
+
+    #[test]
+    fn fleet_kind_inference_and_errors() {
+        let j = crate::util::json::Json::parse(
+            r#"{"bandwidth": 1.0, "classes": [
+                {"name": "cpu_pool", "count": 2},
+                {"name": "gpu", "count": 1, "memCap": 8.0}
+            ]}"#,
+        )
+        .unwrap();
+        let fleet = fleet_from_json(&j).unwrap();
+        assert_eq!(fleet.classes[0].kind, DeviceKind::Cpu);
+        assert_eq!(fleet.classes[1].kind, DeviceKind::Accelerator);
+        assert_eq!(fleet.l(), 2);
+        assert_eq!(fleet.k(), 1);
+        let bad = crate::util::json::Json::parse(r#"{"classes": []}"#).unwrap();
+        assert!(fleet_from_json(&bad).is_err());
+        let bad_kind = crate::util::json::Json::parse(
+            r#"{"classes": [{"name": "x", "count": 1, "kind": "tpu-pod"}]}"#,
+        )
+        .unwrap();
+        assert!(fleet_from_json(&bad_kind).is_err());
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub mod json;
 pub mod resnet;
 
 use crate::baselines::expert::ExpertStyle;
-use crate::coordinator::placement::Scenario;
+use crate::coordinator::placement::{Fleet, PlanRequest, Scenario};
 use crate::graph::{Node, NodeId, OpGraph};
 use costs::OpCost;
 
@@ -26,11 +26,17 @@ pub enum Granularity {
     Layer,
 }
 
-/// A named workload: graph + its Table-1 deployment scenario.
+/// A named workload: graph + its Table-1 deployment scenario, optionally
+/// overridden by a heterogeneous device fleet (CLI `--fleet` / the JSON
+/// `fleet` section).
 pub struct Workload {
     pub name: String,
     pub graph: OpGraph,
     pub scenario: Scenario,
+    /// When set, planning runs against this fleet instead of the
+    /// scenario's uniform `(k, ℓ, M)` shape (the scenario's comm model,
+    /// schedule and objective semantics still apply).
+    pub fleet: Option<Fleet>,
     pub granularity: Granularity,
     pub training: bool,
     /// Expert rule applicable to this workload (layer graphs only).
@@ -44,6 +50,20 @@ impl Workload {
     /// each, 1 CPU device.
     pub fn paper_scenario(k: usize) -> Scenario {
         Scenario::new(k, 1, 16.0 * 1024.0)
+    }
+
+    /// The [`PlanRequest`] this workload plans under: its fleet when one
+    /// is set, otherwise the scenario's uniform fleet. The scenario keeps
+    /// contributing the comm model and train schedule; the fleet replaces
+    /// the device AND interconnect description wholesale — including
+    /// `bandwidth` (set it via the JSON `fleet.bandwidth` field or the
+    /// CLI `bw=X` entry; it defaults to 1.0 like `Scenario`'s).
+    pub fn request(&self) -> PlanRequest {
+        let mut req = self.scenario.to_request();
+        if let Some(fleet) = &self.fleet {
+            req.fleet = fleet.clone();
+        }
+        req
     }
 }
 
@@ -128,6 +148,7 @@ pub fn table1_workloads() -> Vec<Workload> {
                 name: format!("BERT-{layers}"),
                 graph: g,
                 scenario: Workload::paper_scenario(k),
+                fleet: None,
                 granularity: Granularity::Operator,
                 training,
                 expert: None,
@@ -140,6 +161,7 @@ pub fn table1_workloads() -> Vec<Workload> {
             name: "ResNet50".into(),
             graph: g,
             scenario: Workload::paper_scenario(6),
+            fleet: None,
             granularity: Granularity::Operator,
             training,
             expert: None,
@@ -152,6 +174,7 @@ pub fn table1_workloads() -> Vec<Workload> {
             name: "BERT-24".into(),
             graph: bert::bert24_layer_graph(training),
             scenario: Workload::paper_scenario(6),
+            fleet: None,
             granularity: Granularity::Layer,
             training,
             expert: Some(ExpertStyle::BlockBands),
@@ -161,6 +184,7 @@ pub fn table1_workloads() -> Vec<Workload> {
             name: "ResNet50".into(),
             graph: resnet::resnet50_layer_graph(training),
             scenario: Workload::paper_scenario(6),
+            fleet: None,
             granularity: Granularity::Layer,
             training,
             expert: Some(ExpertStyle::EqualStripes),
@@ -170,6 +194,7 @@ pub fn table1_workloads() -> Vec<Workload> {
             name: "InceptionV3".into(),
             graph: inception::inception_v3_layer_graph(training),
             scenario: Workload::paper_scenario(6),
+            fleet: None,
             granularity: Granularity::Layer,
             training,
             expert: Some(ExpertStyle::EqualStripes),
@@ -179,6 +204,7 @@ pub fn table1_workloads() -> Vec<Workload> {
             name: "GNMT".into(),
             graph: gnmt::gnmt_layer_graph(training),
             scenario: Workload::paper_scenario(6),
+            fleet: None,
             granularity: Granularity::Layer,
             training,
             expert: Some(ExpertStyle::BlockBands),

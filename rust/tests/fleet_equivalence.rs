@@ -1,0 +1,182 @@
+//! ISSUE-3 acceptance tests for the heterogeneous-fleet `PlanRequest` API.
+//!
+//! 1. **Uniform-fleet equivalence**: every registry solver is *bitwise*
+//!    identical planning under `Scenario::new(k, ℓ, M)` vs the equivalent
+//!    hand-built one-accelerator-class `Fleet` — the legacy path has zero
+//!    behavior change.
+//! 2. **Heterogeneous end-to-end**: a two-accelerator-class fleet with
+//!    different speeds AND different memory caps runs through `dp`, `ip`
+//!    and `pipedream`, producing placements that validate per-class
+//!    memory.
+
+use dnn_partition::baselines::expert::ExpertStyle;
+use dnn_partition::coordinator::context::{ProblemCtx, SolveOpts, Solver};
+use dnn_partition::coordinator::placement::{
+    AlgoChoice, Device, DeviceClass, Fleet, Objective, PlanRequest, Scenario,
+};
+use dnn_partition::coordinator::planner::{self, Algorithm};
+use dnn_partition::coordinator::service::PlannerService;
+use dnn_partition::graph::{Node, OpGraph};
+use dnn_partition::util::proptest::random_dag;
+use dnn_partition::util::rng::Rng;
+use std::time::Duration;
+
+fn exact_opts() -> SolveOpts {
+    SolveOpts {
+        ip_budget: Duration::from_secs(10),
+        // gap 0 ⇒ the IPs run to proven optimality on these small graphs,
+        // making their output deterministic
+        gap_target: 0.0,
+        expert: Some(ExpertStyle::EqualStripes),
+        ..SolveOpts::default()
+    }
+}
+
+/// The equivalent one-accelerator-class fleet request of a scenario,
+/// built by hand (NOT via `Scenario::to_request`) so the test actually
+/// exercises the fleet constructor path.
+fn uniform_request(k: usize, l: usize, mem_cap: f64) -> PlanRequest {
+    PlanRequest::new(Fleet::new(vec![
+        DeviceClass::acc("acc", k, mem_cap),
+        DeviceClass::cpu("cpu", l),
+    ]))
+}
+
+#[test]
+fn every_registry_solver_bitwise_identical_scenario_vs_uniform_fleet() {
+    let mut rng = Rng::new(0xF1EE7);
+    let opts = exact_opts();
+    for case in 0..3 {
+        let g = random_dag(&mut rng, 8, 0.3);
+        // infinite cap: keeps every solver (incl. the hierarchy's fixed
+        // 2-cluster default) feasible on random graphs; finite per-class
+        // caps are exercised by the heterogeneous tests below
+        let (k, l, mem_cap) = (2usize, 1usize, f64::INFINITY);
+        let sc = Scenario::new(k, l, mem_cap);
+        let req = uniform_request(k, l, mem_cap);
+        for alg in Algorithm::ALL {
+            let legacy_ctx = ProblemCtx::new(g.clone(), sc.clone());
+            let legacy = alg
+                .solver()
+                .solve(&legacy_ctx, &opts)
+                .unwrap_or_else(|e| panic!("case {case} {alg:?} scenario path: {e}"));
+            let fleet_ctx = ProblemCtx::from_request(g.clone(), req.clone());
+            let fleet = alg
+                .solver()
+                .solve(&fleet_ctx, &opts)
+                .unwrap_or_else(|e| panic!("case {case} {alg:?} fleet path: {e}"));
+            assert_eq!(
+                legacy.placement.assignment, fleet.placement.assignment,
+                "case {case} {alg:?}: assignments diverged between scenario and fleet"
+            );
+            assert_eq!(
+                legacy.placement.objective.to_bits(),
+                fleet.placement.objective.to_bits(),
+                "case {case} {alg:?}: objective not bitwise identical ({} vs {})",
+                legacy.placement.objective,
+                fleet.placement.objective
+            );
+        }
+    }
+}
+
+/// The acceptance fleet: two accelerator classes with different `speed`
+/// and different `mem_cap`, plus a CPU pool.
+fn hetero_request() -> PlanRequest {
+    PlanRequest::new(Fleet::new(vec![
+        DeviceClass::acc("fast", 2, 6.0).speed(2.0),
+        DeviceClass::acc("slow", 2, 3.0),
+        DeviceClass::cpu("cpu", 1),
+    ]))
+}
+
+fn hetero_graph() -> OpGraph {
+    let mut g = OpGraph::new();
+    for i in 0..10 {
+        g.add_node(Node::new(format!("n{i}")).cpu(20.0).acc(1.0).mem(1.0).comm(0.05));
+    }
+    for i in 1..10 {
+        g.add_edge(i - 1, i);
+    }
+    g
+}
+
+#[test]
+fn heterogeneous_fleet_end_to_end_dp_ip_pipedream() {
+    let g = hetero_graph();
+    let req = hetero_request();
+    let opts = exact_opts();
+    let mut svc = PlannerService::new(4);
+    for alg in [Algorithm::Dp, Algorithm::IpContiguous, Algorithm::PipeDream] {
+        let fixed = req.clone().algorithm(AlgoChoice::Fixed(alg));
+        let r = svc
+            .plan_request(&g, &fixed, &opts)
+            .unwrap_or_else(|e| panic!("{alg:?} on heterogeneous fleet: {e}"));
+        // per-class memory must hold: fast devices ≤ 6.0, slow ≤ 3.0
+        r.placement
+            .check_memory_req(&g, &req)
+            .unwrap_or_else(|e| panic!("{alg:?}: {e}"));
+        for i in 0..req.fleet.k() {
+            let used = g.mem_of(&r.placement.set_of(Device::Acc(i), g.n()));
+            let cap = req.fleet.acc_mem_cap(i);
+            assert!(used <= cap + 1e-9, "{alg:?}: acc{i} holds {used} > {cap}");
+        }
+        assert!(r.placement.objective.is_finite(), "{alg:?} objective");
+    }
+    // all three shared one analysis context (same fingerprint)
+    assert_eq!(svc.misses(), 1, "algorithm choice must not split the ctx cache");
+    assert!(svc.hits() >= 2);
+}
+
+#[test]
+fn dp_exploits_fast_class_and_respects_slow_caps() {
+    // 10-node chain, 1 MB each: slow devices (cap 3) cannot take more
+    // than 3 nodes; a speed-2 device doing 4 nodes has effective load 2.
+    let g = hetero_graph();
+    let req = hetero_request().algorithm(AlgoChoice::Fixed(Algorithm::Dp));
+    let r = planner::plan_request(&g, &req, &exact_opts()).unwrap();
+    r.placement.validate_req(&g, &req).unwrap();
+    // uniform slow-only fleet for comparison: strictly worse or equal
+    let slow_only = PlanRequest::new(Fleet::new(vec![
+        DeviceClass::acc("slow", 4, 3.0),
+        DeviceClass::cpu("cpu", 1),
+    ]))
+    .algorithm(AlgoChoice::Fixed(Algorithm::Dp));
+    let slow_r = planner::plan_request(&g, &slow_only, &exact_opts()).unwrap();
+    assert!(
+        r.placement.objective <= slow_r.placement.objective + 1e-9,
+        "fast class must not hurt: {} vs {}",
+        r.placement.objective,
+        slow_r.placement.objective
+    );
+}
+
+#[test]
+fn auto_algorithm_resolves_by_objective() {
+    let g = hetero_graph();
+    let opts = exact_opts();
+    // throughput → exact DP
+    let tp = hetero_request(); // Auto by default
+    let r = planner::plan_request(&g, &tp, &opts).unwrap();
+    assert!(
+        r.placement.algorithm.contains("DP"),
+        "auto/throughput resolved to {}",
+        r.placement.algorithm
+    );
+    // latency → the latency IP
+    let lat = hetero_request().objective(Objective::Latency);
+    let r = planner::plan_request(&g, &lat, &opts).unwrap();
+    assert!(
+        r.placement.algorithm.contains("latency"),
+        "auto/latency resolved to {}",
+        r.placement.algorithm
+    );
+    // lattice blowup → DPL fallback (an antichain has 2^n ideals; cap it)
+    let mut wide = OpGraph::new();
+    for i in 0..24 {
+        wide.add_node(Node::new(format!("w{i}")).cpu(8.0).acc(1.0));
+    }
+    let ctx = ProblemCtx::from_request_with_cap(wide.clone(), tp.clone(), 64);
+    let r = planner::solve_request(&ctx, &tp, &opts).unwrap();
+    assert_eq!(r.placement.algorithm, "DPL", "auto must fall back to DPL on lattice blowup");
+}
