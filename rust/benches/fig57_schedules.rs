@@ -5,8 +5,13 @@
 //! training schedules of Fig. 7.
 
 use dnn_partition::algos::{dp, objective};
-use dnn_partition::coordinator::placement::{Device, Placement, Scenario};
+use dnn_partition::coordinator::context::SolveOpts;
+use dnn_partition::coordinator::placement::{
+    AlgoChoice, Device, DeviceClass, Fleet, Placement, PlanRequest, Scenario,
+};
+use dnn_partition::coordinator::planner::{self, Algorithm};
 use dnn_partition::pipeline::sim::{self, Schedule};
+use dnn_partition::simx::engine::{self as simx_engine, SimConfig};
 use dnn_partition::workloads::bert;
 use dnn_partition::graph::{Node, OpGraph};
 
@@ -79,4 +84,35 @@ fn main() {
         println!("{}", sim::render_timeline(&r, 96));
         println!("steady-state TPS {:.3} vs objective {:.3}\n", r.steady_tps, pred_t);
     }
+
+    // --- heterogeneous fleet: the same pipeline on mixed device classes ---
+    println!(
+        "# Heterogeneous fleet — 1 double-speed + 2 baseline accelerators \
+         (simx engine, bandwidth-delayed links)"
+    );
+    let gh = chain(8);
+    let req = PlanRequest::new(Fleet::new(vec![
+        DeviceClass::acc("fast", 1, f64::INFINITY).speed(2.0),
+        DeviceClass::acc("slow", 2, f64::INFINITY),
+        DeviceClass::cpu("cpu", 1),
+    ]))
+    .algorithm(AlgoChoice::Fixed(Algorithm::Dp));
+    let rp = planner::plan_request(&gh, &req, &SolveOpts::default()).unwrap();
+    let pred_h = objective::max_load_req(&gh, &req, &rp.placement);
+    let rh = simx_engine::simulate_req(
+        &gh,
+        &req,
+        &rp.placement,
+        Schedule::Pipelined,
+        12,
+        &SimConfig::for_request(&req),
+    );
+    println!("{}", rh.render_timeline(96));
+    println!(
+        "steady-state TPS {:.3} vs fleet max-load {:.3}  (ratio {:.3}; {} link transfers)",
+        rh.steady_tps,
+        pred_h,
+        rh.steady_tps / pred_h,
+        rh.transfers.len()
+    );
 }

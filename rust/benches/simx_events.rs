@@ -1,0 +1,103 @@
+//! `simx` engine micro-bench: event throughput (events/sec) and the
+//! overhead of fleet-aware simulation (per-class speeds + bandwidth-
+//! delayed links) over the uniform-scenario replay. Feeds BENCH_3.json.
+
+use dnn_partition::algos::dp;
+use dnn_partition::coordinator::context::SolveOpts;
+use dnn_partition::coordinator::placement::{
+    AlgoChoice, DeviceClass, Fleet, PlanRequest, Scenario,
+};
+use dnn_partition::coordinator::planner::{self, Algorithm};
+use dnn_partition::graph::{Node, OpGraph};
+use dnn_partition::simx::engine::{self, Schedule, SimConfig};
+use dnn_partition::simx::event::EventScript;
+use dnn_partition::util::bench::bench;
+use std::time::Duration;
+
+fn chain(n: usize) -> OpGraph {
+    let mut g = OpGraph::new();
+    for i in 0..n {
+        g.add_node(Node::new(format!("op{i}")).cpu(12.0).acc(1.0).mem(1.0).comm(0.1));
+    }
+    for i in 1..n {
+        g.add_edge(i - 1, i);
+    }
+    g
+}
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let samples = 128;
+    let g = chain(12);
+
+    // --- uniform replay (the legacy adapter's configuration) -------------
+    let sc = Scenario::new(4, 1, f64::INFINITY);
+    let p = dp::solve(&g, &sc).unwrap();
+    let uniform_req = sc.to_request();
+    let uniform_events = engine::simulate_req(
+        &g,
+        &uniform_req,
+        &p,
+        Schedule::Pipelined,
+        samples,
+        &SimConfig::default(),
+    )
+    .events_processed;
+    let uniform = bench(&format!("simx/uniform-chain12-{samples}samples"), budget, 5, || {
+        engine::simulate_req(&g, &uniform_req, &p, Schedule::Pipelined, samples, &SimConfig::default())
+    });
+    println!(
+        "simx/uniform events/sec ≈ {:.0} ({uniform_events} events per run)",
+        uniform_events as f64 / uniform.median.as_secs_f64()
+    );
+
+    // --- fleet replay: per-class speeds + link transfers ------------------
+    let fleet_req = PlanRequest::new(Fleet::new(vec![
+        DeviceClass::acc("fast", 2, f64::INFINITY).speed(2.0),
+        DeviceClass::acc("slow", 2, f64::INFINITY),
+        DeviceClass::cpu("cpu", 1),
+    ]))
+    .algorithm(AlgoChoice::Fixed(Algorithm::Dp));
+    let fp = planner::plan_request(&g, &fleet_req, &SolveOpts::default())
+        .unwrap()
+        .placement;
+    let fleet_cfg = SimConfig::for_request(&fleet_req);
+    let fleet_events = engine::simulate_req(
+        &g,
+        &fleet_req,
+        &fp,
+        Schedule::Pipelined,
+        samples,
+        &fleet_cfg,
+    )
+    .events_processed;
+    let fleet = bench(&format!("simx/fleet-chain12-{samples}samples"), budget, 5, || {
+        engine::simulate_req(&g, &fleet_req, &fp, Schedule::Pipelined, samples, &fleet_cfg)
+    });
+    println!(
+        "simx/fleet events/sec ≈ {:.0} ({fleet_events} events per run)",
+        fleet_events as f64 / fleet.median.as_secs_f64()
+    );
+    println!(
+        "fleet-sim overhead over uniform-sim: {:.2}x (links + per-class resources)",
+        fleet.median.as_secs_f64() / uniform.median.as_secs_f64()
+    );
+
+    // --- scripted scenario: straggler + spike ----------------------------
+    let script = EventScript::parse("slow:acc1*0.5@t=10,spike:+32@t=20").unwrap();
+    let scripted = bench(&format!("simx/scripted-chain12-{samples}samples"), budget, 5, || {
+        engine::simulate_with_events(
+            &g,
+            &fleet_req,
+            &fp,
+            Schedule::Pipelined,
+            samples,
+            &script,
+            &fleet_cfg,
+        )
+    });
+    println!(
+        "scripted overhead over plain fleet-sim: {:.2}x",
+        scripted.median.as_secs_f64() / fleet.median.as_secs_f64()
+    );
+}

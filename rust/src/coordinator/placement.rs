@@ -49,6 +49,29 @@ impl std::fmt::Display for Device {
     }
 }
 
+impl Device {
+    /// Parse the [`Device`] `Display` form (`acc3` / `cpu0`) — the device
+    /// vocabulary of the simulator's event-script grammar
+    /// (`crate::simx::event::EventScript`).
+    pub fn parse(s: &str) -> Result<Device, String> {
+        let (ctor, digits): (fn(usize) -> Device, &str) = if let Some(d) = s.strip_prefix("acc")
+        {
+            (Device::Acc, d)
+        } else if let Some(d) = s.strip_prefix("cpu") {
+            (Device::Cpu, d)
+        } else {
+            return Err(format!("bad device '{s}' (expected accN or cpuN)"));
+        };
+        if digits.is_empty() || !digits.chars().all(|c| c.is_ascii_digit()) {
+            return Err(format!("bad device index in '{s}'"));
+        }
+        digits
+            .parse::<usize>()
+            .map(ctor)
+            .map_err(|e| format!("bad device index in '{s}': {e}"))
+    }
+}
+
 /// How communication overlaps computation when computing a device's load
 /// (Appendix C.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -822,6 +845,17 @@ mod tests {
         }
         assert_eq!(Device::Acc(2).index(3), 2);
         assert_eq!(Device::Cpu(0).index(3), 3);
+    }
+
+    #[test]
+    fn device_parse_roundtrips_display() {
+        for d in [Device::Acc(0), Device::Acc(17), Device::Cpu(0), Device::Cpu(3)] {
+            assert_eq!(Device::parse(&d.to_string()), Ok(d));
+        }
+        assert!(Device::parse("gpu0").is_err());
+        assert!(Device::parse("acc").is_err());
+        assert!(Device::parse("acc-1").is_err());
+        assert!(Device::parse("cpu1x").is_err());
     }
 
     #[test]

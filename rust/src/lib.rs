@@ -39,7 +39,12 @@
 //! * [`baselines`] — greedy / Scotch-like / local search / PipeDream / expert.
 //! * [`workloads`] — BERT, ResNet50, Inception-v3, GNMT generators and the
 //!   paper's JSON interchange format.
-//! * [`pipeline`] — discrete-event simulator of the Figs. 2/5/7 schedules.
+//! * [`simx`] — fleet-aware discrete-event simulation: typed-event engine
+//!   (compute/transfer/fault/straggler/load-spike), live memory-occupancy
+//!   accounting, prediction-vs-simulation validation, and the
+//!   drift-driven re-planning loop (DESIGN.md §6).
+//! * [`pipeline`] — legacy uniform-scenario façade over the `simx` engine
+//!   (Figs. 2/5/7 schedules).
 //! * [`runtime`] + [`coordinator`] — PJRT stage executor and the pipelined
 //!   serving loop; [`coordinator::context`] is the shared per-problem
 //!   analysis cache every solver plugs into (the [`coordinator::context::Solver`]
@@ -53,6 +58,7 @@ pub mod coordinator;
 pub mod graph;
 pub mod pipeline;
 pub mod runtime;
+pub mod simx;
 pub mod solver;
 pub mod util;
 pub mod workloads;

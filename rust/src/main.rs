@@ -4,7 +4,8 @@
 //! dnn-partition list                       # show the built-in workloads
 //! dnn-partition partition <wl> <alg>       # plan a pipelined split
 //! dnn-partition latency <wl>               # §7 latency planning
-//! dnn-partition simulate <wl> <alg> [n]    # pipeline simulation + timeline
+//! dnn-partition simulate <wl|file.json> <alg> [n]   # fleet simulation + timeline
+//!     [--events "SCRIPT"] [--schedule POLICY] [--trace FILE] [--assert-improves]
 //! dnn-partition export <wl> <out.json>     # dump paper-format JSON
 //! dnn-partition partition-file <in.json> <alg>   # plan an external workload
 //! ```
@@ -33,14 +34,35 @@
 //! accelerators and one CPU — per-class memory caps and speeds are honored
 //! by every planning algorithm (JSON files can declare the same under a
 //! `fleet` key; see `workloads::json`). An optional `bw=X` entry sets the
-//! interconnect bandwidth, `+acc`/`+cpu` suffixes force a class kind. The
-//! `simulate` command plans fleet-aware but replays the schedule on the
-//! scalar uniform view (the discrete-event simulator is not yet
-//! fleet-aware; it prints a note when a fleet is active).
+//! interconnect bandwidth, `+acc`/`+cpu` suffixes force a class kind.
+//!
+//! ## Fleet simulation (`simulate`)
+//!
+//! `simulate` replays the plan through the `simx` discrete-event engine —
+//! per-class speeds, per-class memory and bandwidth-delayed cross-device
+//! transfers included — and accepts:
+//!
+//! * `--events "fail:acc0@t=5,slow:acc1*0.5@t=9,spike:+8@t=12"` — a
+//!   scripted fault / straggler / load-spike scenario (the workload
+//!   JSON's `events` string is the default). A `fail:` event also runs
+//!   the re-planning loop: `Fleet::decrement` → re-plan → before/after
+//!   steady-state TPS, demonstrating whether re-planning pays.
+//! * `--schedule single-stream|pipelined|1f1b|gpipe` — override the
+//!   default policy (1F1B for training workloads, pipelined otherwise).
+//! * `--trace out.json` — dump the per-task/per-transfer trace, memory
+//!   peaks and stall diagnosis as JSON.
+//! * `--assert-improves` — exit non-zero unless the re-planned
+//!   time-per-sample strictly beats the degraded no-replan fallback
+//!   (the CI smoke contract).
 
-use dnn_partition::coordinator::placement::Fleet;
+use dnn_partition::coordinator::context::SolveOpts;
+use dnn_partition::coordinator::placement::{AlgoChoice, Device, Fleet};
 use dnn_partition::coordinator::planner::{self, Algorithm};
-use dnn_partition::pipeline::sim::{self, Schedule};
+use dnn_partition::pipeline::sim::Schedule;
+use dnn_partition::runtime::server::ServingPlanner;
+use dnn_partition::simx::engine::{self as simx_engine, SimConfig, SimxResult};
+use dnn_partition::simx::event::{EventScript, ScriptAction};
+use dnn_partition::simx::loop_;
 use dnn_partition::util::json::Json;
 use dnn_partition::workloads::{self, json as wjson, Workload};
 use std::time::Duration;
@@ -73,37 +95,93 @@ fn main() {
     std::process::exit(code);
 }
 
-/// Strip `--fleet SPEC` / `--fleet=SPEC` out of the argument list,
-/// returning the remaining positional args and the parsed fleet (if any).
-fn extract_fleet(args: &[String]) -> Result<(Vec<String>, Option<Fleet>), String> {
+/// Flags shared by the subcommands: `--fleet` everywhere, the simulation
+/// flags on `simulate`.
+#[derive(Default)]
+struct CliFlags {
+    fleet: Option<Fleet>,
+    events: Option<EventScript>,
+    schedule: Option<Schedule>,
+    trace: Option<String>,
+    assert_improves: bool,
+}
+
+/// Strip `--NAME VALUE` / `--NAME=VALUE` flags out of the argument list,
+/// returning the remaining positional args and the parsed flags.
+fn extract_flags(args: &[String]) -> Result<(Vec<String>, CliFlags), String> {
     let mut rest = Vec::with_capacity(args.len());
-    let mut fleet = None;
+    let mut flags = CliFlags::default();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
-        if let Some(spec) = a.strip_prefix("--fleet=") {
-            fleet = Some(Fleet::parse(spec)?);
-        } else if a == "--fleet" {
-            let spec = args.get(i + 1).ok_or("--fleet requires a spec argument")?;
-            fleet = Some(Fleet::parse(spec)?);
-            i += 1;
+        // `--NAME=VALUE` or `--NAME VALUE`
+        let valued = |name: &str, i: &mut usize| -> Result<Option<String>, String> {
+            if let Some(v) = a.strip_prefix(&format!("--{name}=")) {
+                return Ok(Some(v.to_string()));
+            }
+            if a == &format!("--{name}") {
+                let v = args
+                    .get(*i + 1)
+                    .ok_or(format!("--{name} requires an argument"))?;
+                *i += 1;
+                return Ok(Some(v.clone()));
+            }
+            Ok(None)
+        };
+        if let Some(spec) = valued("fleet", &mut i)? {
+            flags.fleet = Some(Fleet::parse(&spec).map_err(|e| format!("bad --fleet: {e}"))?);
+        } else if let Some(spec) = valued("events", &mut i)? {
+            flags.events =
+                Some(EventScript::parse(&spec).map_err(|e| format!("bad --events: {e}"))?);
+        } else if let Some(name) = valued("schedule", &mut i)? {
+            flags.schedule = Some(
+                Schedule::parse(&name)
+                    .ok_or(format!("bad --schedule: unknown policy '{name}'"))?,
+            );
+        } else if let Some(path) = valued("trace", &mut i)? {
+            flags.trace = Some(path);
+        } else if a == "--assert-improves" {
+            flags.assert_improves = true;
+        } else if a.starts_with("--") {
+            // a misspelled flag must not silently become a positional
+            return Err(format!("unknown flag {a}"));
         } else {
             rest.push(a.clone());
         }
         i += 1;
     }
-    Ok((rest, fleet))
+    Ok((rest, flags))
 }
 
 fn run(raw_args: &[String]) -> i32 {
-    let (args, fleet) = match extract_fleet(raw_args) {
+    let (args, flags) = match extract_flags(raw_args) {
         Ok(x) => x,
         Err(e) => {
-            eprintln!("bad --fleet: {e}");
+            eprintln!("{e}");
             return 2;
         }
     };
+    let fleet = flags.fleet.clone();
     let args = &args[..];
+    // flags a subcommand would silently drop are rejected loudly instead
+    let cmd = args.first().map(String::as_str);
+    if cmd != Some("simulate")
+        && (flags.events.is_some()
+            || flags.schedule.is_some()
+            || flags.trace.is_some()
+            || flags.assert_improves)
+    {
+        eprintln!(
+            "--events/--schedule/--trace/--assert-improves are only valid with `simulate`"
+        );
+        return 2;
+    }
+    if flags.fleet.is_some()
+        && !matches!(cmd, Some("partition" | "simulate" | "latency" | "partition-file"))
+    {
+        eprintln!("--fleet is only valid with partition/simulate/latency/partition-file");
+        return 2;
+    }
     match args.first().map(String::as_str) {
         Some("list") => {
             println!("{:<14} {:>6} {:>7} {:>3}  granularity  task", "workload", "nodes", "edges", "k");
@@ -194,9 +272,21 @@ fn run(raw_args: &[String]) -> i32 {
             }
         }
         Some("simulate") if args.len() >= 3 => {
-            let Some(mut w) = find_workload(&args[1]) else {
-                eprintln!("unknown workload {}", args[1]);
-                return 2;
+            // built-in name, or a workload JSON file (whose optional
+            // `fleet`/`events` sections then apply)
+            let mut w = match find_workload(&args[1]) {
+                Some(w) => w,
+                None => match load_workload_file(&args[1]) {
+                    Ok(Some(w)) => w,
+                    Ok(None) => {
+                        eprintln!("unknown workload {}", args[1]);
+                        return 2;
+                    }
+                    Err(e) => {
+                        eprintln!("bad workload file {}: {e}", args[1]);
+                        return 2;
+                    }
+                },
             };
             w.fleet = fleet.clone().or(w.fleet);
             let Some(alg) = Algorithm::parse(&args[2]) else {
@@ -211,22 +301,112 @@ fn run(raw_args: &[String]) -> i32 {
                     return 1;
                 }
             };
-            let schedule = if w.training { Schedule::PipeDream1F1B } else { Schedule::Pipelined };
-            // the simulator still speaks the scalar scenario; a fleet run
-            // simulates against its conservative uniform view
-            let sim_sc = w.request().legacy_scenario();
-            if w.fleet.is_some() {
-                println!(
-                    "note: plan is fleet-aware, but the simulator replays it on the \
-                     uniform view (per-class speeds not simulated)"
-                );
+            // the simx engine replays the plan on the fleet itself:
+            // per-class speeds and caps, bandwidth-delayed link transfers
+            let req = w.request();
+            let schedule = flags.schedule.unwrap_or(Schedule::default_for(w.training));
+            let script = flags.events.clone().or(w.events.clone()).unwrap_or_default();
+            for e in &script.events {
+                let dev = match e.action {
+                    ScriptAction::Fail { device } | ScriptAction::Slow { device, .. } => device,
+                    ScriptAction::Spike { .. } => continue,
+                };
+                let in_range = match dev {
+                    Device::Acc(i) => i < req.fleet.k(),
+                    Device::Cpu(j) => j < req.fleet.l().max(1),
+                };
+                if !in_range {
+                    eprintln!("bad --events: {dev} is outside the deployment");
+                    return 2;
+                }
             }
-            let res = sim::simulate(&w.graph, &sim_sc, &r.placement, schedule, n);
-            println!(
-                "{} {:?}: predicted TPS {:.2}, simulated steady-state {:.2} over {n} samples",
-                w.name, alg, r.placement.objective, res.steady_tps
+            // fleet runs model the interconnect as a link resource; the
+            // plain scalar path keeps the §3-exact regime the printed
+            // prediction is computed under (instant hand-offs)
+            let cfg = if w.fleet.is_some() {
+                SimConfig::for_request(&req)
+            } else {
+                SimConfig::default()
+            };
+            let res = simx_engine::simulate_with_events(
+                &w.graph,
+                &req,
+                &r.placement,
+                schedule,
+                n,
+                &script,
+                &cfg,
             );
-            println!("{}", sim::render_timeline(&res, 100));
+            println!(
+                "{} {:?} [{schedule}]: predicted TPS {:.2}, simulated steady-state {:.2} \
+                 over {}/{} samples",
+                w.name, alg, r.placement.objective, res.steady_tps, res.completed, res.injected
+            );
+            if let Some(stall) = res.stall {
+                println!("stalled: {stall}");
+            }
+            println!("{}", res.render_timeline(100));
+            if let Some(path) = &flags.trace {
+                let json = trace_to_json(&w, alg, schedule, &req, &res);
+                if std::fs::write(path, json.to_string_pretty()).is_err() {
+                    eprintln!("cannot write {path}");
+                    return 1;
+                }
+                println!("trace written to {path}");
+            }
+            // the replan demo reacts to accelerator loss only (CPU faults
+            // simulate fine above but have no class to decrement)
+            if script.first_acc_fail().is_some() {
+                // drift-driven re-planning loop: decrement the lost
+                // device's class, re-plan, compare in simulation
+                let opts = SolveOpts { ip_budget: Duration::from_secs(10), expert: w.expert,
+                    ..SolveOpts::default() };
+                let mut serving = ServingPlanner::new(alg, opts);
+                let loop_req = req.clone().algorithm(AlgoChoice::Fixed(alg));
+                // the healthy plan and the disrupted replay were already
+                // computed above — hand them over instead of paying twice
+                match loop_::run_device_loss_demo_with(
+                    &w.graph,
+                    &loop_req,
+                    &script,
+                    schedule,
+                    n,
+                    &mut serving,
+                    &r.placement,
+                    &res,
+                ) {
+                    Ok(demo) => {
+                        println!(
+                            "replan: {} ({}) lost at t={}; disrupted run completed {}/{}; \
+                             time-per-sample healthy {:.2} | degraded (cpu failover) {:.2} | \
+                             re-planned {:.2}  (replan gain {:.2}x)",
+                            demo.failed_device,
+                            demo.failed_class,
+                            demo.fail_time,
+                            demo.disrupted_completed,
+                            demo.disrupted_injected,
+                            demo.healthy_tps,
+                            demo.degraded_tps,
+                            demo.replanned_tps,
+                            demo.improvement()
+                        );
+                        if flags.assert_improves && demo.replanned_tps >= demo.degraded_tps {
+                            eprintln!(
+                                "re-planned TPS {:.3} does not beat degraded {:.3}",
+                                demo.replanned_tps, demo.degraded_tps
+                            );
+                            return 1;
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("replan demo failed: {e}");
+                        return 1;
+                    }
+                }
+            } else if flags.assert_improves {
+                eprintln!("--assert-improves requires an accelerator fail: event in --events");
+                return 2;
+            }
             0
         }
         Some("export") if args.len() >= 3 => {
@@ -288,6 +468,23 @@ fn run(raw_args: &[String]) -> i32 {
     }
 }
 
+/// Load a workload JSON file as a simulate target (its optional `fleet`
+/// and `events` sections apply). `Ok(None)` = not a readable file (fall
+/// back to the unknown-workload message); `Err` = the file exists but is
+/// malformed (a distinct, precise diagnostic).
+fn load_workload_file(path: &str) -> Result<Option<Workload>, String> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        // absent file = the arg was a (bad) workload name, not a path
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.to_string()),
+    };
+    Json::parse(&text)
+        .map_err(|e| e.to_string())
+        .and_then(|j| wjson::from_json_workload(&j))
+        .map(Some)
+}
+
 fn cli_key(w: &Workload) -> String {
     match (w.name.as_str(), w.granularity) {
         ("BERT-3", workloads::Granularity::Operator) => "bert3op".into(),
@@ -302,8 +499,66 @@ fn cli_key(w: &Workload) -> String {
     }
 }
 
+/// Serialize a simulation run (tasks, transfers, memory peaks, stall
+/// diagnosis) for `simulate --trace FILE`.
+fn trace_to_json(
+    w: &Workload,
+    alg: Algorithm,
+    schedule: Schedule,
+    req: &dnn_partition::prelude::PlanRequest,
+    res: &SimxResult,
+) -> Json {
+    let tasks: Vec<Json> = res
+        .trace
+        .iter()
+        .map(|&(s, j, bw, start, finish)| {
+            Json::obj(vec![
+                ("sample", Json::num(s as f64)),
+                ("piece", Json::num(j as f64)),
+                ("device", Json::str(res.pieces[j].real_device.to_string())),
+                ("backward", Json::Bool(bw)),
+                ("start", Json::num(start)),
+                ("finish", Json::num(finish)),
+            ])
+        })
+        .collect();
+    let transfers: Vec<Json> = res
+        .transfers
+        .iter()
+        .map(|&(s, from, to, start, finish)| {
+            Json::obj(vec![
+                ("sample", Json::num(s as f64)),
+                ("fromPiece", Json::num(from as f64)),
+                ("toPiece", Json::num(to as f64)),
+                ("start", Json::num(start)),
+                ("finish", Json::num(finish)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("workload", Json::str(w.name.clone())),
+        ("algorithm", Json::str(alg.name())),
+        ("schedule", Json::str(schedule.name())),
+        ("fleet", Json::str(req.fleet.to_string())),
+        ("steadyTps", Json::num(res.steady_tps)),
+        ("total", Json::num(res.total)),
+        ("completed", Json::num(res.completed as f64)),
+        ("injected", Json::num(res.injected as f64)),
+        ("eventsProcessed", Json::num(res.events_processed as f64)),
+        (
+            "stall",
+            match res.stall {
+                Some(s) => Json::str(s.to_string()),
+                None => Json::Null,
+            },
+        ),
+        ("memPeak", Json::Arr(res.mem_peak.iter().map(|&m| Json::num(m)).collect())),
+        ("tasks", Json::Arr(tasks)),
+        ("transfers", Json::Arr(transfers)),
+    ])
+}
+
 fn print_split(w: &Workload, p: &dnn_partition::prelude::Placement) {
-    use dnn_partition::coordinator::placement::Device;
     let n = w.graph.n();
     let req = w.request();
     for i in 0..req.fleet.k() {

@@ -1,7 +1,14 @@
-//! Discrete-event simulation of the paper's pipeline schedules (Figs. 2,
-//! 5, 7): single-stream execution, pipelined inference, PipeDream 1F1B and
-//! GPipe training, including non-contiguous splits via virtual devices
-//! (§5.2). The simulator validates the cost model: after ramp-up, the
-//! measured steady-state time-per-sample equals the max-load objective.
+//! Legacy façade over the discrete-event simulation of the paper's
+//! pipeline schedules (Figs. 2, 5, 7): single-stream execution, pipelined
+//! inference, PipeDream 1F1B and GPipe training, including non-contiguous
+//! splits via virtual devices (§5.2). The simulator validates the cost
+//! model: after ramp-up, the measured steady-state time-per-sample equals
+//! the max-load objective.
+//!
+//! Since the `simx` subsystem landed, [`sim`] is a thin adapter over
+//! [`crate::simx::engine`] (uniform scalar scenarios only, pinned to the
+//! frozen reference implementation by `tests/simx_equivalence.rs`);
+//! fleet-aware simulation, event scripts and the re-planning loop live in
+//! [`crate::simx`].
 
 pub mod sim;

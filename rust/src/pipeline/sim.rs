@@ -1,4 +1,5 @@
-//! The pipeline simulator proper.
+//! The legacy pipeline-simulator API — now a thin adapter over the
+//! [`crate::simx`] discrete-event engine.
 //!
 //! A placement is compiled into *virtual devices*: each real device's node
 //! set is decomposed into contiguous pieces (§5.2), topologically ordered;
@@ -11,34 +12,27 @@
 //! * [`Schedule::Pipelined`] — inference pipelining (Fig. 5a).
 //! * [`Schedule::PipeDream1F1B`] — backward-priority training (Fig. 7b).
 //! * [`Schedule::GPipe`] — all forwards, then all backwards (Fig. 7a).
+//!
+//! [`simulate`] keeps its historical signature (uniform scalar
+//! [`Scenario`]) and delegates to [`crate::simx::engine::simulate_req`]
+//! with the engine's legacy-exact configuration (instantaneous macro
+//! hand-offs, no activation gating). [`simulate_reference`] preserves the
+//! original PR-0 greedy list-scheduling loop verbatim as the equivalence
+//! oracle: `tests/simx_equivalence.rs` pins the adapter to it within ε.
+//! Fleet-aware runs (per-class speeds, link bandwidth, event scripts)
+//! should call the `simx` engine directly.
 
-use crate::algos::objective::DeviceLoads;
 use crate::coordinator::placement::{Device, Placement, Scenario};
-use crate::graph::{contiguity, NodeKind, OpGraph};
-use crate::util::bitset::BitSet;
+use crate::graph::OpGraph;
+use crate::simx::engine::{self, SimConfig};
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Schedule {
-    SingleStream,
-    Pipelined,
-    PipeDream1F1B,
-    GPipe,
-}
+// The schedule policies and the virtual-device decomposition live with the
+// engine now; re-exported so every legacy import path keeps resolving.
+pub use crate::simx::engine::{Piece, Schedule};
 
-/// One virtual device: a contiguous piece of a real device's set.
-#[derive(Clone, Debug)]
-pub struct Piece {
-    pub real_device: Device,
-    pub nodes: BitSet,
-    /// forward-pass share of the piece's per-sample load
-    pub fw_cost: f64,
-    /// backward-pass share (0 for inference graphs)
-    pub bw_cost: f64,
-    /// pieces that must process a sample before this one (macro deps)
-    pub deps: Vec<usize>,
-}
-
-/// Simulation result.
+/// Simulation result (legacy shape; the engine's richer
+/// [`crate::simx::engine::SimxResult`] adds transfers, memory peaks and
+/// stall reasons).
 #[derive(Clone, Debug)]
 pub struct SimResult {
     /// completion time of each sample (backward included for training)
@@ -53,75 +47,38 @@ pub struct SimResult {
     pub pieces: Vec<Piece>,
 }
 
-/// Decompose a placement into virtual devices with per-piece costs. The
-/// piece costs split the device's load proportionally to compute, so the
-/// total per-device cost equals the objective's device load (footnote 5:
-/// the bottleneck quantity is the real device's total load).
+/// Decompose a placement into virtual devices with per-piece costs (legacy
+/// scalar form of [`crate::simx::engine::build_pieces_req`]).
 pub fn build_pieces(g: &OpGraph, sc: &Scenario, p: &Placement) -> Vec<Piece> {
-    let n = g.n();
-    let loads = DeviceLoads::of(g, sc, p);
-    let mut pieces: Vec<Piece> = Vec::new();
-    let mut piece_of = vec![usize::MAX; n];
-
-    let mut devices: Vec<Device> = (0..sc.k).map(Device::Acc).collect();
-    devices.extend((0..sc.l.max(1)).map(Device::Cpu));
-    for d in devices {
-        let all = p.set_of(d, n);
-        if all.is_empty() {
-            continue;
-        }
-        let idx = d.index(sc.k);
-        for dir in [NodeKind::Forward, NodeKind::Backward] {
-            let set = BitSet::from_iter(n, all.iter().filter(|&v| g.nodes[v].kind == dir));
-            if set.is_empty() {
-                continue;
-            }
-            let dir_load = match dir {
-                NodeKind::Forward => loads.fw[idx].total(sc),
-                NodeKind::Backward => loads.bw[idx].total(sc),
-            };
-            let dir_compute: f64 = set
-                .iter()
-                .map(|v| if d.is_acc() { g.nodes[v].p_acc } else { g.nodes[v].p_cpu })
-                .sum();
-            for chunk in contiguity::virtual_device_split(g, &set) {
-                let chunk_compute: f64 = chunk
-                    .iter()
-                    .map(|v| if d.is_acc() { g.nodes[v].p_acc } else { g.nodes[v].p_cpu })
-                    .sum();
-                // proportional share of the device-direction load
-                let share = if dir_compute > 0.0 {
-                    dir_load * chunk_compute / dir_compute
-                } else {
-                    dir_load / contiguity::virtual_device_split(g, &set).len() as f64
-                };
-                let id = pieces.len();
-                for v in chunk.iter() {
-                    piece_of[v] = id;
-                }
-                pieces.push(Piece {
-                    real_device: d,
-                    nodes: chunk,
-                    fw_cost: if dir == NodeKind::Forward { share } else { 0.0 },
-                    bw_cost: if dir == NodeKind::Backward { share } else { 0.0 },
-                    deps: Vec::new(),
-                });
-            }
-        }
-    }
-    // macro dependencies
-    let mut seen = std::collections::BTreeSet::new();
-    for (u, v) in g.edges() {
-        let (a, b) = (piece_of[u], piece_of[v]);
-        if a != b && a != usize::MAX && b != usize::MAX && seen.insert((a, b)) {
-            pieces[b].deps.push(a);
-        }
-    }
-    pieces
+    engine::build_pieces_req(g, &sc.to_request(), p)
 }
 
-/// Run the simulation for `num_samples` samples.
+/// Run the simulation for `num_samples` samples on the scenario's uniform
+/// fleet — the legacy entry point, now a delegation to the `simx` engine
+/// in its §3-exact configuration.
 pub fn simulate(
+    g: &OpGraph,
+    sc: &Scenario,
+    p: &Placement,
+    schedule: Schedule,
+    num_samples: usize,
+) -> SimResult {
+    let req = sc.to_request();
+    let r = engine::simulate_req(g, &req, p, schedule, num_samples, &SimConfig::default());
+    SimResult {
+        sample_done: r.sample_done,
+        steady_tps: r.steady_tps,
+        total: r.total,
+        trace: r.trace,
+        pieces: r.pieces,
+    }
+}
+
+/// The **frozen PR-0 implementation**: the original greedy
+/// min-feasible-start list scheduler, kept verbatim as the oracle for the
+/// engine-equivalence suite (`tests/simx_equivalence.rs`). Use
+/// [`simulate`] everywhere else.
+pub fn simulate_reference(
     g: &OpGraph,
     sc: &Scenario,
     p: &Placement,
@@ -264,33 +221,9 @@ pub fn simulate(
 
 /// Render an ASCII timeline (Figs. 2/5/7 style): one row per real device,
 /// one column per time quantum; cells hold the sample id being processed
-/// (uppercase = backward).
+/// (uppercase = backward). Shares the engine's renderer.
 pub fn render_timeline(res: &SimResult, width: usize) -> String {
-    let mut devices: Vec<Device> = res.pieces.iter().map(|p| p.real_device).collect();
-    devices.sort();
-    devices.dedup();
-    let total = res.total.max(1e-9);
-    let mut out = String::new();
-    for &d in &devices {
-        let mut row = vec![' '; width];
-        for &(s, j, is_bw, start, finish) in &res.trace {
-            if res.pieces[j].real_device != d {
-                continue;
-            }
-            let a = ((start / total) * width as f64) as usize;
-            let b = (((finish / total) * width as f64) as usize).clamp(a + 1, width);
-            let c = if is_bw {
-                (b'A' + (s % 26) as u8) as char
-            } else {
-                char::from_digit((s % 10) as u32, 10).unwrap()
-            };
-            for cell in row.iter_mut().take(b.min(width)).skip(a.min(width - 1)) {
-                *cell = c;
-            }
-        }
-        out.push_str(&format!("{d:>6} |{}|\n", row.iter().collect::<String>()));
-    }
-    out
+    engine::render_trace_timeline(&res.trace, &res.pieces, res.total, width)
 }
 
 #[cfg(test)]

@@ -9,6 +9,7 @@
 //!   metrics. (The offline build has no tokio; OS threads + mpsc channels
 //!   implement the same dataflow.)
 
+pub mod pjrt_stub;
 pub mod server;
 pub mod stage;
 

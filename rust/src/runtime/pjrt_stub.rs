@@ -1,0 +1,115 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The execution runtime was written against the real `xla_extension`
+//! bindings, but this repository builds **offline and dependency-free**
+//! (see Cargo.toml): no registry, no PJRT shared library. This module
+//! mirrors exactly the slice of the `xla` API that
+//! [`crate::runtime::stage`] consumes, with every entry point that would
+//! touch PJRT
+//! returning a clear "unavailable in the offline build" error. The
+//! artifact-gated callers (`tests/runtime_e2e.rs`, the pipeline_serving
+//! example) skip before ever reaching these paths on a fresh checkout, so
+//! the stub keeps `cargo build`/`cargo test` green while preserving the
+//! real API shape for environments that relink the genuine crate
+//! (swap the `use … as xla;` alias in stage.rs back).
+
+/// Error type mirroring `xla::Error` (stringly, like the binding's).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+fn unavailable() -> Error {
+    Error("PJRT is unavailable in the offline build (xla crate stubbed; see \
+           runtime::pjrt_stub)"
+        .into())
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Host literal (`xla::Literal`).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Device buffer (`xla::PjRtBuffer`): what `execute` returns.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+/// `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_pjrt_path_errors_clearly() {
+        let e = PjRtClient::cpu().err().expect("cpu client must be unavailable");
+        assert!(e.to_string().contains("offline build"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::vec1(&[1.0]).reshape(&[1]).is_err());
+    }
+}

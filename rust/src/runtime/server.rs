@@ -300,6 +300,48 @@ impl ServingPlanner {
         Ok(PlannedStages { placement: r.placement, stages })
     }
 
+    /// The serving loop's device-loss reaction, in one call: resolve the
+    /// lost device's class, `Fleet::decrement` it on a copy of the
+    /// request, and re-plan against the shrunk fleet (cache-hit cost for
+    /// fleets this planner has seen). Returns the mutated request
+    /// alongside the new stages so the caller can keep serving — and keep
+    /// simulating — against the post-loss fleet. The `simx` re-planning
+    /// loop ([`crate::simx::loop_`]) measures whether the swap pays.
+    pub fn plan_after_device_loss(
+        &mut self,
+        g: &OpGraph,
+        req: &PlanRequest,
+        lost: Device,
+    ) -> Result<(PlanRequest, PlannedStages), PlaceError> {
+        // the class accessors deliberately clamp out-of-range indices to
+        // the last class ("callers validate ranges"), so validate here: a
+        // phantom device must not decrement a real class
+        let in_range = match lost {
+            Device::Acc(i) => i < req.fleet.k(),
+            Device::Cpu(j) => j < req.fleet.l(),
+        };
+        if !in_range {
+            return Err(PlaceError::Unsupported(format!(
+                "device {lost} is outside the fleet"
+            )));
+        }
+        let class = req
+            .fleet
+            .class_of(lost)
+            .map(|c| c.name.clone())
+            .ok_or_else(|| {
+                PlaceError::Unsupported(format!("device {lost} has no class in the fleet"))
+            })?;
+        let mut degraded = req.clone();
+        if !degraded.fleet.decrement(&class) {
+            return Err(PlaceError::Unsupported(format!(
+                "class {class} has no device left to lose"
+            )));
+        }
+        let stages = self.plan_request(g, &degraded)?;
+        Ok((degraded, stages))
+    }
+
     /// `(hits, misses)` of the underlying context cache.
     pub fn cache_stats(&self) -> (usize, usize) {
         (self.service.hits(), self.service.misses())
@@ -461,6 +503,31 @@ mod tests {
         assert_eq!(planner.cache_stats(), (1, 2), "mutated fleet is a new context");
         // losing a device can't improve the bottleneck
         assert!(degraded.placement.objective >= full.placement.objective - 1e-9);
+    }
+
+    #[test]
+    fn plan_after_device_loss_decrements_and_replans() {
+        use crate::coordinator::placement::{AlgoChoice, DeviceClass, Fleet, PlanRequest};
+        let g = chain_graph(8);
+        let mut planner = ServingPlanner::new(Algorithm::Dp, SolveOpts::default());
+        let req = PlanRequest::new(Fleet::new(vec![
+            DeviceClass::acc("fast", 1, f64::INFINITY).speed(2.0),
+            DeviceClass::acc("slow", 2, f64::INFINITY),
+            DeviceClass::cpu("cpu", 1),
+        ]))
+        .algorithm(AlgoChoice::Fixed(Algorithm::Dp));
+        let full = planner.plan_request(&g, &req).unwrap();
+        // losing dense acc1 (class "slow") shrinks the fleet by one
+        let (degraded_req, degraded) =
+            planner.plan_after_device_loss(&g, &req, Device::Acc(1)).unwrap();
+        assert_eq!(degraded_req.fleet.k(), req.fleet.k() - 1);
+        degraded.placement.validate_req(&g, &degraded_req).unwrap();
+        assert!(degraded.placement.objective >= full.placement.objective - 1e-9);
+        // draining the class twice more exhausts it
+        let (mut r2, _) =
+            planner.plan_after_device_loss(&g, &degraded_req, Device::Acc(1)).unwrap();
+        assert_eq!(r2.fleet.class_named_mut("slow").unwrap().count, 0);
+        assert!(planner.plan_after_device_loss(&g, &r2, Device::Acc(1)).is_err());
     }
 
     #[test]

@@ -4,7 +4,13 @@
 //! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The offline build has no `xla` crate; [`crate::runtime::pjrt_stub`]
+//! mirrors the consumed API slice and errors on every PJRT touchpoint, so
+//! stage loading fails gracefully (callers skip when artifacts are
+//! absent). Environments with the real bindings swap the alias below.
 
+use crate::runtime::pjrt_stub as xla;
 use std::path::{Path, PathBuf};
 
 #[derive(Debug)]

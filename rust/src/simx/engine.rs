@@ -1,0 +1,1037 @@
+//! The discrete-event engine: a binary-heap queue of typed events driving
+//! fleet device and link resources.
+//!
+//! A placement is compiled into *virtual devices* ([`Piece`]s, §5.2): each
+//! real device's node set is decomposed into contiguous chunks whose costs
+//! split the device's fleet-aware load
+//! ([`crate::algos::objective::DeviceLoads::of_req`] — per-class speeds
+//! scale compute, the request's comm model folds boundary transfer time
+//! into the owning device's busy time, exactly what the max-load
+//! objective predicts). Each
+//! `(sample, piece)` is a task; tasks run under device exclusivity and
+//! dependency order, with the [`Schedule`] policy picking among ready
+//! tasks.
+//!
+//! The engine advances a clock through a binary heap of typed events:
+//!
+//! * `ComputeDone` — a task finished; frees its device, unblocks
+//!   dependents (directly, or through a link transfer), releases
+//!   activation memory when the sample's last task on the device is done.
+//! * `TransferDone` — a cross-device tensor arrived; with
+//!   [`SimConfig::link_bandwidth`] set, macro-dependency hand-offs are
+//!   delayed by `size / bw` and serialize per directed device pair
+//!   (replacing the legacy zero-cost hand-off).
+//! * `DeviceFail` / `DeviceSlow` — scripted fault / straggler injection
+//!   ([`crate::simx::event::EventScript`]).
+//! * `SampleInject` — request arrivals: the base stream at `t = 0` plus
+//!   scripted load spikes.
+//!
+//! Memory is accounted live per device: a `(1 - act_frac)` share of the
+//! placed nodes' memory is static weights, and each *in-flight* sample
+//! (admitted when its first task on the device starts, released when its
+//! last one finishes — for training, that is the backward) holds an
+//! `act_frac` share of activations. With [`SimConfig::enforce_memory`]
+//! set, task admission blocks on the per-class cap, which makes the
+//! GPipe-vs-1F1B memory gap observable and lets the engine *reject* an
+//! infeasible schedule: a blocked-forever run drains the queue with
+//! samples outstanding and reports [`Stall::MemoryDeadlock`].
+
+use crate::algos::objective::DeviceLoads;
+use crate::coordinator::placement::{Device, Placement, PlanRequest};
+use crate::graph::{contiguity, NodeKind, OpGraph};
+use crate::simx::event::{EventScript, ScriptAction};
+use crate::util::bitset::BitSet;
+use std::collections::{BTreeMap, BinaryHeap};
+
+/// Pipeline schedule policy (Figs. 2, 5, 7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// One sample at a time (Figs. 2a/2b).
+    SingleStream,
+    /// Inference pipelining (Fig. 5a).
+    Pipelined,
+    /// Backward-priority training (Fig. 7b).
+    PipeDream1F1B,
+    /// All forwards, then all backwards (Fig. 7a).
+    GPipe,
+}
+
+impl Schedule {
+    pub const ALL: [Schedule; 4] = [
+        Schedule::SingleStream,
+        Schedule::Pipelined,
+        Schedule::PipeDream1F1B,
+        Schedule::GPipe,
+    ];
+
+    /// Canonical CLI name (round-trips through [`Schedule::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::SingleStream => "single-stream",
+            Schedule::Pipelined => "pipelined",
+            Schedule::PipeDream1F1B => "1f1b",
+            Schedule::GPipe => "gpipe",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let s = s.to_ascii_lowercase();
+        Some(match s.as_str() {
+            "ss" => Schedule::SingleStream,
+            "pipedream" => Schedule::PipeDream1F1B,
+            _ => return Schedule::ALL.into_iter().find(|x| x.name() == s),
+        })
+    }
+
+    /// The schedule the CLI replays by default: 1F1B for training graphs,
+    /// pipelined inference otherwise.
+    pub fn default_for(training: bool) -> Schedule {
+        if training {
+            Schedule::PipeDream1F1B
+        } else {
+            Schedule::Pipelined
+        }
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One virtual device: a contiguous piece of a real device's set.
+#[derive(Clone, Debug)]
+pub struct Piece {
+    pub real_device: Device,
+    pub nodes: BitSet,
+    /// forward-pass share of the piece's per-sample load
+    pub fw_cost: f64,
+    /// backward-pass share (0 for inference graphs)
+    pub bw_cost: f64,
+    /// pieces that must process a sample before this one (macro deps)
+    pub deps: Vec<usize>,
+}
+
+/// Engine configuration. The default replays the §3 cost model exactly —
+/// instantaneous macro hand-offs, no activation accounting — which is the
+/// regime the max-load objective predicts (and the legacy
+/// `pipeline::sim` adapter's contract).
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// `None` = instantaneous macro-dependency hand-off (the §3 model:
+    /// boundary transfer time is already inside the device loads).
+    /// `Some(bw)` = cross-device tensors additionally traverse an
+    /// exclusive per-directed-device-pair link at `size / bw` — the
+    /// fleet's interconnect as a contended resource.
+    pub link_bandwidth: Option<f64>,
+    /// Fraction of each node's `mem` that is per-sample activation state
+    /// (the rest is static weights). 0.0 disables activation accounting.
+    pub act_frac: f64,
+    /// Gate task admission on per-class memory caps (weights + live
+    /// activations); a run blocked forever reports
+    /// [`Stall::MemoryDeadlock`].
+    pub enforce_memory: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig { link_bandwidth: None, act_frac: 0.0, enforce_memory: false }
+    }
+}
+
+impl SimConfig {
+    /// The fleet-replay configuration: bandwidth-delayed link transfers at
+    /// the request's interconnect bandwidth, no activation gating.
+    pub fn for_request(req: &PlanRequest) -> SimConfig {
+        SimConfig { link_bandwidth: Some(req.fleet.bandwidth), ..SimConfig::default() }
+    }
+
+    /// Activation-accounting configuration: `act_frac` of node memory is
+    /// per-sample state and admission is gated on the per-class caps.
+    pub fn with_memory_model(act_frac: f64) -> SimConfig {
+        SimConfig { act_frac, enforce_memory: true, ..SimConfig::default() }
+    }
+}
+
+/// Why a run failed to complete every injected sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Stall {
+    /// A failed device still owned work; samples behind it can never
+    /// finish (the signal the re-planning loop reacts to).
+    DeviceLost { device: Device, pending_samples: usize },
+    /// Memory admission blocked every remaining task — the schedule is
+    /// infeasible under the per-class caps (e.g. GPipe holding all
+    /// minibatch activations at once).
+    MemoryDeadlock { device: Device, pending_samples: usize },
+}
+
+impl std::fmt::Display for Stall {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Stall::DeviceLost { device, pending_samples } => {
+                write!(f, "{device} lost with {pending_samples} samples outstanding")
+            }
+            Stall::MemoryDeadlock { device, pending_samples } => write!(
+                f,
+                "memory deadlock on {device} with {pending_samples} samples outstanding"
+            ),
+        }
+    }
+}
+
+/// Simulation result.
+#[derive(Clone, Debug)]
+pub struct SimxResult {
+    /// Completion time per injected sample (`NAN` if it never finished).
+    pub sample_done: Vec<f64>,
+    /// Measured steady-state time-per-sample (slope of the last half of
+    /// the *completed* samples, sorted by finish).
+    pub steady_tps: f64,
+    /// Makespan (last task finish).
+    pub total: f64,
+    /// Per-task `(sample, piece, is_backward, start, finish)`.
+    pub trace: Vec<(usize, usize, bool, f64, f64)>,
+    /// Per-transfer `(sample, from_piece, to_piece, start, finish)` (empty
+    /// without [`SimConfig::link_bandwidth`]).
+    pub transfers: Vec<(usize, usize, usize, f64, f64)>,
+    pub pieces: Vec<Piece>,
+    /// Samples injected (base stream + spikes).
+    pub injected: usize,
+    /// Samples fully completed.
+    pub completed: usize,
+    /// Peak memory occupancy per dense device (weights + activations).
+    pub mem_peak: Vec<f64>,
+    /// Heap events processed (the engine-throughput denominator).
+    pub events_processed: usize,
+    /// `Some` when not every injected sample completed.
+    pub stall: Option<Stall>,
+}
+
+impl SimxResult {
+    /// `Err` when the run stalled (device loss / memory deadlock).
+    pub fn ok(&self) -> Result<(), Stall> {
+        match self.stall {
+            Some(s) => Err(s),
+            None => Ok(()),
+        }
+    }
+
+    /// ASCII timeline (Figs. 2/5/7 style): one row per real device, cells
+    /// hold the sample id being processed (uppercase = backward).
+    pub fn render_timeline(&self, width: usize) -> String {
+        render_trace_timeline(&self.trace, &self.pieces, self.total, width)
+    }
+}
+
+/// The one timeline renderer behind [`SimxResult::render_timeline`] and
+/// the legacy `pipeline::sim::render_timeline`.
+pub fn render_trace_timeline(
+    trace: &[(usize, usize, bool, f64, f64)],
+    pieces: &[Piece],
+    total: f64,
+    width: usize,
+) -> String {
+    if width == 0 {
+        return String::new();
+    }
+    let mut devices: Vec<Device> = pieces.iter().map(|p| p.real_device).collect();
+    devices.sort();
+    devices.dedup();
+    let total = total.max(1e-9);
+    let mut out = String::new();
+    for &d in &devices {
+        let mut row = vec![' '; width];
+        for &(s, j, is_bw, start, finish) in trace {
+            if pieces[j].real_device != d {
+                continue;
+            }
+            // a ≤ width-1 keeps the a+1 ≤ width clamp bound valid even for
+            // zero-cost tasks landing exactly at `total`
+            let a = (((start / total) * width as f64) as usize).min(width - 1);
+            let b = (((finish / total) * width as f64) as usize).clamp(a + 1, width);
+            let c = if is_bw {
+                (b'A' + (s % 26) as u8) as char
+            } else {
+                char::from_digit((s % 10) as u32, 10).unwrap()
+            };
+            for cell in row.iter_mut().take(b).skip(a) {
+                *cell = c;
+            }
+        }
+        out.push_str(&format!("{d:>6} |{}|\n", row.iter().collect::<String>()));
+    }
+    out
+}
+
+/// Decompose a placement into virtual devices with fleet-aware per-piece
+/// costs: the piece costs split the device's `DeviceLoads::of_req` load
+/// (per-class speed-scaled compute, comm per the request's model)
+/// proportionally to compute, so the total per-device cost equals the
+/// objective's device load (footnote 5). On a uniform fleet this is
+/// bitwise the legacy `pipeline::sim::build_pieces` decomposition.
+pub fn build_pieces_req(g: &OpGraph, req: &PlanRequest, p: &Placement) -> Vec<Piece> {
+    let n = g.n();
+    let loads = DeviceLoads::of_req(g, req, p);
+    let (k, l) = (req.fleet.k(), req.fleet.l());
+    let mut pieces: Vec<Piece> = Vec::new();
+    let mut piece_of = vec![usize::MAX; n];
+
+    let mut devices: Vec<Device> = (0..k).map(Device::Acc).collect();
+    devices.extend((0..l.max(1)).map(Device::Cpu));
+    for d in devices {
+        let all = p.set_of(d, n);
+        if all.is_empty() {
+            continue;
+        }
+        let idx = d.index(k);
+        for dir in [NodeKind::Forward, NodeKind::Backward] {
+            let set = BitSet::from_iter(n, all.iter().filter(|&v| g.nodes[v].kind == dir));
+            if set.is_empty() {
+                continue;
+            }
+            let dir_load = match dir {
+                NodeKind::Forward => loads.fw[idx].total_req(req),
+                NodeKind::Backward => loads.bw[idx].total_req(req),
+            };
+            let dir_compute: f64 = set
+                .iter()
+                .map(|v| if d.is_acc() { g.nodes[v].p_acc } else { g.nodes[v].p_cpu })
+                .sum();
+            let chunks = contiguity::virtual_device_split(g, &set);
+            let num_chunks = chunks.len();
+            for chunk in chunks {
+                let chunk_compute: f64 = chunk
+                    .iter()
+                    .map(|v| if d.is_acc() { g.nodes[v].p_acc } else { g.nodes[v].p_cpu })
+                    .sum();
+                // proportional share of the device-direction load
+                let share = if dir_compute > 0.0 {
+                    dir_load * chunk_compute / dir_compute
+                } else {
+                    dir_load / num_chunks as f64
+                };
+                let id = pieces.len();
+                for v in chunk.iter() {
+                    piece_of[v] = id;
+                }
+                pieces.push(Piece {
+                    real_device: d,
+                    nodes: chunk,
+                    fw_cost: if dir == NodeKind::Forward { share } else { 0.0 },
+                    bw_cost: if dir == NodeKind::Backward { share } else { 0.0 },
+                    deps: Vec::new(),
+                });
+            }
+        }
+    }
+    // macro dependencies
+    let mut seen = std::collections::BTreeSet::new();
+    for (u, v) in g.edges() {
+        let (a, b) = (piece_of[u], piece_of[v]);
+        if a != b && a != usize::MAX && b != usize::MAX && seen.insert((a, b)) {
+            pieces[b].deps.push(a);
+        }
+    }
+    pieces
+}
+
+// ---------------------------------------------------------------------------
+// The event queue
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    SampleInject { count: usize },
+    ComputeDone { sample: usize, piece: usize },
+    TransferDone { sample: usize, to_piece: usize },
+    DeviceFail { dev: usize },
+    DeviceSlow { dev: usize, factor: f64 },
+}
+
+/// Heap entry ordered so `BinaryHeap` (a max-heap) pops the *earliest*
+/// time first, FIFO among equal times (by push sequence).
+struct QEvent {
+    t: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for QEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.t.total_cmp(&other.t).is_eq() && self.seq == other.seq
+    }
+}
+
+impl Eq for QEvent {}
+
+impl PartialOrd for QEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: smallest (t, seq) is the heap maximum
+        other.t.total_cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct DevState {
+    alive: bool,
+    busy_until: f64,
+    /// Multiplicative straggler scale (1.0 = nominal; `slow` events
+    /// compound onto it; applies to tasks *starting* after the event).
+    slow_scale: f64,
+    cap: f64,
+    /// Static weight occupancy: `(1 - act_frac) · Σ mem` of placed nodes.
+    weights: f64,
+    /// Activation occupancy per in-flight sample: `act_frac · Σ mem`.
+    act: f64,
+    resident: usize,
+    mem_peak: f64,
+}
+
+struct SampleState {
+    rem_deps: Vec<usize>,
+    done_t: Vec<f64>,
+    tasks_left: usize,
+    /// Injection wave (0 = base stream, 1.. = spikes, in firing order).
+    /// GPipe's barrier is per wave: a wave's backwards wait for the
+    /// forwards of its own and all earlier waves, never for later spikes.
+    wave: usize,
+    /// Unfinished tasks per dense device (activation release bookkeeping).
+    rem_on_dev: Vec<usize>,
+    resident_on: Vec<bool>,
+}
+
+/// Run the engine with no scripted events (see [`simulate_with_events`]).
+pub fn simulate_req(
+    g: &OpGraph,
+    req: &PlanRequest,
+    p: &Placement,
+    schedule: Schedule,
+    num_samples: usize,
+    cfg: &SimConfig,
+) -> SimxResult {
+    simulate_with_events(g, req, p, schedule, num_samples, &EventScript::empty(), cfg)
+}
+
+/// Run `num_samples` base samples (injected at `t = 0`) plus the script's
+/// spikes through the placement's pipeline under `schedule`, perturbed by
+/// the script's faults and stragglers. Script events naming devices
+/// outside the fleet are ignored (callers validate ranges up front).
+pub fn simulate_with_events(
+    g: &OpGraph,
+    req: &PlanRequest,
+    p: &Placement,
+    schedule: Schedule,
+    num_samples: usize,
+    script: &EventScript,
+    cfg: &SimConfig,
+) -> SimxResult {
+    let pieces = build_pieces_req(g, req, p);
+    let np = pieces.len();
+    let k = req.fleet.k();
+    let nd = k + req.fleet.l().max(1);
+    let dense = req.fleet.dense_view();
+
+    // per-device static memory from the placement
+    let mut mem_total = vec![0.0_f64; nd];
+    for v in 0..g.n() {
+        mem_total[p.assignment[v].index(k)] += g.nodes[v].mem;
+    }
+    let mut devs: Vec<DevState> = (0..nd)
+        .map(|d| DevState {
+            alive: true,
+            busy_until: 0.0,
+            slow_scale: 1.0,
+            // the phantom CPU slot of an ℓ = 0 fleet is uncapped
+            cap: dense.get(d).map_or(f64::INFINITY, |x| x.mem_cap),
+            weights: (1.0 - cfg.act_frac) * mem_total[d],
+            act: cfg.act_frac * mem_total[d],
+            resident: 0,
+            mem_peak: (1.0 - cfg.act_frac) * mem_total[d],
+        })
+        .collect();
+
+    let piece_dev: Vec<usize> = pieces.iter().map(|x| x.real_device.index(k)).collect();
+    let mut pieces_on_dev = vec![0usize; nd];
+    for &d in &piece_dev {
+        pieces_on_dev[d] += 1;
+    }
+    // dependents[j] = pieces depending on j; transfer sizes per macro edge
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); np];
+    let mut xfer_size: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for (b, piece) in pieces.iter().enumerate() {
+        for &a in &piece.deps {
+            dependents[a].push(b);
+        }
+    }
+    if cfg.link_bandwidth.is_some() {
+        // node -> piece map (one O(n) pass over the decomposition)
+        let mut piece_of = vec![usize::MAX; g.n()];
+        for (j, piece) in pieces.iter().enumerate() {
+            for v in piece.nodes.iter() {
+                piece_of[v] = j;
+            }
+        }
+        // tensor size per macro edge: each producer u ships once per
+        // *consumer device* (the objective's CommIn dedup — a second
+        // piece on the same device reads the already-arrived tensor), so
+        // u's comm lands on the first macro edge toward that device in
+        // deterministic edge order
+        let mut shipped: std::collections::BTreeSet<(usize, usize)> = Default::default();
+        for (u, v) in g.edges() {
+            let (a, b) = (piece_of[u], piece_of[v]);
+            if a == usize::MAX || b == usize::MAX || a == b || piece_dev[a] == piece_dev[b]
+            {
+                continue;
+            }
+            if shipped.insert((u, piece_dev[b])) {
+                *xfer_size.entry((a, b)).or_insert(0.0) += g.nodes[u].comm;
+            }
+        }
+    }
+
+    // --- event queue -------------------------------------------------------
+    let mut heap: BinaryHeap<QEvent> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<QEvent>, seq: &mut u64, t: f64, ev: Ev| {
+        heap.push(QEvent { t, seq: *seq, ev });
+        *seq += 1;
+    };
+    if num_samples > 0 {
+        push(&mut heap, &mut seq, 0.0, Ev::SampleInject { count: num_samples });
+    }
+    // a device is addressable iff its dense slot exists for its own kind
+    // (an out-of-range accelerator must NOT alias onto a CPU slot)
+    let dense_of = |device: Device| -> Option<usize> {
+        match device {
+            Device::Acc(i) if i < k => Some(i),
+            Device::Cpu(j) if k + j < nd => Some(k + j),
+            _ => None,
+        }
+    };
+    for e in &script.events {
+        let ev = match e.action {
+            ScriptAction::Fail { device } => match dense_of(device) {
+                Some(d) => Ev::DeviceFail { dev: d },
+                None => continue,
+            },
+            ScriptAction::Slow { device, factor } => match dense_of(device) {
+                Some(d) => Ev::DeviceSlow { dev: d, factor },
+                None => continue,
+            },
+            ScriptAction::Spike { count } => Ev::SampleInject { count },
+        };
+        push(&mut heap, &mut seq, e.at, ev);
+    }
+
+    // --- simulation state --------------------------------------------------
+    let mut samples: Vec<SampleState> = Vec::new();
+    let mut sample_done: Vec<f64> = Vec::new();
+    let mut ready: Vec<(usize, usize)> = Vec::new();
+    let mut trace: Vec<(usize, usize, bool, f64, f64)> = Vec::new();
+    let mut transfers: Vec<(usize, usize, usize, f64, f64)> = Vec::new();
+    let mut link_free: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    // unfinished forward tasks per injection wave (GPipe barrier state)
+    let mut fw_left_per_wave: Vec<usize> = Vec::new();
+    let fw_pieces = pieces.iter().filter(|x| x.fw_cost > 0.0).count();
+    let mut completed = 0usize;
+    let mut events_processed = 0usize;
+
+    let inject = |count: usize,
+                  samples: &mut Vec<SampleState>,
+                  sample_done: &mut Vec<f64>,
+                  ready: &mut Vec<(usize, usize)>,
+                  fw_left_per_wave: &mut Vec<usize>| {
+        let wave = fw_left_per_wave.len();
+        fw_left_per_wave.push(count * fw_pieces);
+        for _ in 0..count {
+            let s = samples.len();
+            samples.push(SampleState {
+                rem_deps: pieces.iter().map(|x| x.deps.len()).collect(),
+                done_t: vec![f64::NAN; np],
+                tasks_left: np,
+                wave,
+                rem_on_dev: pieces_on_dev.clone(),
+                resident_on: vec![false; nd],
+            });
+            sample_done.push(f64::NAN);
+            for (j, piece) in pieces.iter().enumerate() {
+                if piece.deps.is_empty() {
+                    ready.push((s, j));
+                }
+            }
+        }
+    };
+
+    while let Some(first) = heap.pop() {
+        let t = first.t;
+        let mut batch = vec![first];
+        while heap.peek().is_some_and(|e| e.t.total_cmp(&t).is_eq()) {
+            batch.push(heap.pop().expect("peeked"));
+        }
+        for qe in batch {
+            events_processed += 1;
+            match qe.ev {
+                Ev::SampleInject { count } => {
+                    inject(
+                        count,
+                        &mut samples,
+                        &mut sample_done,
+                        &mut ready,
+                        &mut fw_left_per_wave,
+                    );
+                }
+                Ev::DeviceFail { dev } => devs[dev].alive = false,
+                Ev::DeviceSlow { dev, factor } => devs[dev].slow_scale *= factor,
+                Ev::TransferDone { sample, to_piece } => {
+                    let st = &mut samples[sample];
+                    st.rem_deps[to_piece] -= 1;
+                    if st.rem_deps[to_piece] == 0 {
+                        ready.push((sample, to_piece));
+                    }
+                }
+                Ev::ComputeDone { sample, piece } => {
+                    let d = piece_dev[piece];
+                    let is_fw = pieces[piece].fw_cost > 0.0;
+                    {
+                        let st = &mut samples[sample];
+                        st.done_t[piece] = t;
+                        st.tasks_left -= 1;
+                        st.rem_on_dev[d] -= 1;
+                        if st.rem_on_dev[d] == 0 && st.resident_on[d] {
+                            st.resident_on[d] = false;
+                            devs[d].resident -= 1;
+                        }
+                        if st.tasks_left == 0 {
+                            sample_done[sample] = t;
+                            completed += 1;
+                        }
+                    }
+                    if is_fw {
+                        fw_left_per_wave[samples[sample].wave] -= 1;
+                    }
+                    for &b in &dependents[piece] {
+                        let same_dev = piece_dev[b] == d;
+                        match cfg.link_bandwidth {
+                            Some(bw) if !same_dev => {
+                                let size =
+                                    xfer_size.get(&(piece, b)).copied().unwrap_or(0.0);
+                                let key = (d, piece_dev[b]);
+                                let free = link_free.get(&key).copied().unwrap_or(0.0);
+                                let start = free.max(t);
+                                let finish = start + size / bw;
+                                link_free.insert(key, finish);
+                                transfers.push((sample, piece, b, start, finish));
+                                push(
+                                    &mut heap,
+                                    &mut seq,
+                                    finish,
+                                    Ev::TransferDone { sample, to_piece: b },
+                                );
+                            }
+                            _ => {
+                                let st = &mut samples[sample];
+                                st.rem_deps[b] -= 1;
+                                if st.rem_deps[b] == 0 {
+                                    ready.push((sample, b));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- dispatcher: start every task admissible at time t ------------
+        loop {
+            let mut best: Option<(i64, usize, usize, usize)> = None; // (prio, s, j, ready idx)
+            for (ri, &(s, j)) in ready.iter().enumerate() {
+                let d = piece_dev[j];
+                let dev = &devs[d];
+                if !dev.alive || dev.busy_until > t {
+                    continue;
+                }
+                if schedule == Schedule::SingleStream && s > 0 && samples[s - 1].tasks_left > 0
+                {
+                    continue;
+                }
+                // GPipe barrier, per injection wave: a backward waits for
+                // every forward of its own and all earlier waves; a later
+                // spike's forwards never retro-block it
+                let is_bw = pieces[j].bw_cost > 0.0;
+                if schedule == Schedule::GPipe
+                    && is_bw
+                    && fw_left_per_wave[..=samples[s].wave].iter().any(|&x| x > 0)
+                {
+                    continue;
+                }
+                if cfg.enforce_memory && !samples[s].resident_on[d] {
+                    let need = dev.weights + (dev.resident + 1) as f64 * dev.act;
+                    if need > dev.cap * (1.0 + 1e-9) {
+                        continue;
+                    }
+                }
+                let prio: i64 = match schedule {
+                    Schedule::PipeDream1F1B => {
+                        (if is_bw { 1_000_000 } else { 0 }) - s as i64
+                    }
+                    _ => -(s as i64) - if is_bw { 0 } else { 1 },
+                };
+                let better = match best {
+                    None => true,
+                    Some((bp, bs, bj, _)) => {
+                        prio > bp || (prio == bp && (s, j) < (bs, bj))
+                    }
+                };
+                if better {
+                    best = Some((prio, s, j, ri));
+                }
+            }
+            let Some((_, s, j, ri)) = best else { break };
+            ready.swap_remove(ri);
+            let d = piece_dev[j];
+            if !samples[s].resident_on[d] {
+                samples[s].resident_on[d] = true;
+                devs[d].resident += 1;
+                let occ = devs[d].weights + devs[d].resident as f64 * devs[d].act;
+                if occ > devs[d].mem_peak {
+                    devs[d].mem_peak = occ;
+                }
+            }
+            let cost = pieces[j].fw_cost + pieces[j].bw_cost;
+            let finish = t + cost / devs[d].slow_scale;
+            devs[d].busy_until = finish;
+            let is_bw = pieces[j].bw_cost > 0.0;
+            trace.push((s, j, is_bw, t, finish));
+            push(&mut heap, &mut seq, finish, Ev::ComputeDone { sample: s, piece: j });
+        }
+    }
+
+    // --- wrap-up -----------------------------------------------------------
+    let injected = samples.len();
+    let total = trace
+        .iter()
+        .map(|&(_, _, _, _, f)| f)
+        .fold(0.0_f64, f64::max);
+    let stall = if completed < injected {
+        let pending_samples = injected - completed;
+        // pending work on a dead device → device loss is the root cause
+        let dead_with_work = (0..nd).find(|&d| {
+            !devs[d].alive
+                && samples.iter().any(|st| {
+                    st.tasks_left > 0
+                        && (0..np).any(|j| piece_dev[j] == d && st.done_t[j].is_nan())
+                })
+        });
+        match dead_with_work {
+            Some(d) => Some(Stall::DeviceLost {
+                device: Device::from_index(d, k),
+                pending_samples,
+            }),
+            None => {
+                // name a device whose memory admission actually blocks a
+                // ready task (barrier-blocked entries are symptoms, not
+                // the cause); fall back to any ready entry's device
+                let mem_blocked = ready.iter().find_map(|&(s, j)| {
+                    let d = piece_dev[j];
+                    let dev = &devs[d];
+                    let over = dev.weights + (dev.resident + 1) as f64 * dev.act
+                        > dev.cap * (1.0 + 1e-9);
+                    (cfg.enforce_memory && !samples[s].resident_on[d] && over).then_some(d)
+                });
+                let blocked = mem_blocked
+                    .or_else(|| ready.first().map(|&(_, j)| piece_dev[j]))
+                    .unwrap_or(0);
+                Some(Stall::MemoryDeadlock {
+                    device: Device::from_index(blocked, k),
+                    pending_samples,
+                })
+            }
+        }
+    } else {
+        None
+    };
+
+    let mut finish_sorted: Vec<f64> =
+        sample_done.iter().copied().filter(|x| x.is_finite()).collect();
+    finish_sorted.sort_by(f64::total_cmp);
+    let m = finish_sorted.len();
+    let steady_tps = if m >= 4 {
+        let a = m / 2;
+        let b = m - 1;
+        (finish_sorted[b] - finish_sorted[a]) / (b - a) as f64
+    } else if m > 0 {
+        total / m as f64
+    } else {
+        f64::INFINITY
+    };
+
+    SimxResult {
+        sample_done,
+        steady_tps,
+        total,
+        trace,
+        transfers,
+        pieces,
+        injected,
+        completed,
+        mem_peak: devs.iter().map(|d| d.mem_peak).collect(),
+        events_processed,
+        stall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::dp;
+    use crate::coordinator::placement::Scenario;
+    use crate::graph::Node;
+    use crate::simx::event::EventScript;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(10.0).acc(1.0).mem(1.0).comm(0.1));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn schedule_parse_roundtrip() {
+        for s in Schedule::ALL {
+            assert_eq!(Schedule::parse(s.name()), Some(s), "roundtrip of {s:?}");
+            assert_eq!(Schedule::parse(&s.to_string()), Some(s));
+        }
+        assert_eq!(Schedule::parse("SS"), Some(Schedule::SingleStream));
+        assert_eq!(Schedule::parse("pipedream"), Some(Schedule::PipeDream1F1B));
+        assert_eq!(Schedule::parse("nope"), None);
+        assert_eq!(Schedule::default_for(true), Schedule::PipeDream1F1B);
+        assert_eq!(Schedule::default_for(false), Schedule::Pipelined);
+    }
+
+    #[test]
+    fn pipelined_steady_state_matches_max_load() {
+        let g = chain(6);
+        let sc = Scenario::new(3, 1, f64::INFINITY);
+        let p = dp::solve(&g, &sc).unwrap();
+        let req = sc.to_request();
+        let res = simulate_req(&g, &req, &p, Schedule::Pipelined, 40, &SimConfig::default());
+        assert!(res.ok().is_ok());
+        assert_eq!(res.completed, 40);
+        let predicted = crate::algos::objective::max_load_req(&g, &req, &p);
+        assert!(
+            (res.steady_tps - predicted).abs() / predicted < 0.05,
+            "steady {} vs predicted {}",
+            res.steady_tps,
+            predicted
+        );
+    }
+
+    #[test]
+    fn straggler_slows_the_pipeline() {
+        let g = chain(6);
+        let sc = Scenario::new(3, 1, f64::INFINITY);
+        let p = dp::solve(&g, &sc).unwrap();
+        let req = sc.to_request();
+        let base = simulate_req(&g, &req, &p, Schedule::Pipelined, 30, &SimConfig::default());
+        let script = EventScript::parse("slow:acc1*0.5@t=0").unwrap();
+        let slowed = simulate_with_events(
+            &g,
+            &req,
+            &p,
+            Schedule::Pipelined,
+            30,
+            &script,
+            &SimConfig::default(),
+        );
+        assert_eq!(slowed.completed, 30);
+        assert!(
+            slowed.steady_tps > base.steady_tps * 1.4,
+            "straggler must slow steady state: {} vs {}",
+            slowed.steady_tps,
+            base.steady_tps
+        );
+    }
+
+    #[test]
+    fn spike_injects_extra_samples() {
+        let g = chain(4);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let p = dp::solve(&g, &sc).unwrap();
+        let req = sc.to_request();
+        let script = EventScript::parse("spike:+4@t=2").unwrap();
+        let res = simulate_with_events(
+            &g,
+            &req,
+            &p,
+            Schedule::Pipelined,
+            6,
+            &script,
+            &SimConfig::default(),
+        );
+        assert_eq!(res.injected, 10);
+        assert_eq!(res.completed, 10);
+        assert!(res.ok().is_ok());
+        // spiked samples cannot start before the spike fires
+        let first_spike_start = res
+            .trace
+            .iter()
+            .filter(|&&(s, _, _, _, _)| s >= 6)
+            .map(|&(_, _, _, start, _)| start)
+            .fold(f64::INFINITY, f64::min);
+        assert!(first_spike_start >= 2.0 - 1e-12, "spike ran at {first_spike_start}");
+    }
+
+    #[test]
+    fn device_loss_stalls_downstream_samples() {
+        let g = chain(6);
+        let sc = Scenario::new(3, 1, f64::INFINITY);
+        let p = dp::solve(&g, &sc).unwrap();
+        let req = sc.to_request();
+        let script = EventScript::parse("fail:acc1@t=3").unwrap();
+        let res = simulate_with_events(
+            &g,
+            &req,
+            &p,
+            Schedule::Pipelined,
+            24,
+            &script,
+            &SimConfig::default(),
+        );
+        assert!(res.completed < res.injected, "device loss must strand samples");
+        match res.stall {
+            Some(Stall::DeviceLost { device, pending_samples }) => {
+                assert_eq!(device, Device::Acc(1));
+                assert_eq!(pending_samples, res.injected - res.completed);
+            }
+            other => panic!("expected DeviceLost, got {other:?}"),
+        }
+        assert!(res.ok().is_err());
+    }
+
+    #[test]
+    fn link_bandwidth_delays_but_preserves_bottleneck_throughput() {
+        let g = chain(6);
+        let sc = Scenario::new(3, 1, f64::INFINITY);
+        let p = dp::solve(&g, &sc).unwrap();
+        let req = sc.to_request();
+        let instant =
+            simulate_req(&g, &req, &p, Schedule::Pipelined, 40, &SimConfig::default());
+        let cfg = SimConfig { link_bandwidth: Some(1.0), ..SimConfig::default() };
+        let linked = simulate_req(&g, &req, &p, Schedule::Pipelined, 40, &cfg);
+        assert_eq!(linked.completed, 40);
+        assert!(!linked.transfers.is_empty(), "cross-device hand-offs must use links");
+        // wire delay adds ramp latency, never removes work
+        assert!(linked.total >= instant.total - 1e-9);
+        // tiny tensors over unit bandwidth: steady state still the bottleneck
+        assert!(
+            (linked.steady_tps - instant.steady_tps).abs() / instant.steady_tps < 0.05,
+            "linked {} vs instant {}",
+            linked.steady_tps,
+            instant.steady_tps
+        );
+        // a starved link must throttle steady state below the compute bound
+        let tight = SimConfig { link_bandwidth: Some(0.01), ..SimConfig::default() };
+        let throttled = simulate_req(&g, &req, &p, Schedule::Pipelined, 40, &tight);
+        assert!(
+            throttled.steady_tps > instant.steady_tps * 1.5,
+            "bw 0.01 should throttle: {} vs {}",
+            throttled.steady_tps,
+            instant.steady_tps
+        );
+    }
+
+    /// Training chain with unit-mem forwards and mem-free backwards (the
+    /// memory tests size caps against the forward activations alone).
+    fn training_chain(n: usize) -> OpGraph {
+        crate::util::proptest::training_chain(
+            n,
+            &Node::new("f").cpu(10.0).acc(1.0).mem(1.0).comm(0.1),
+            &Node::new("b").cpu(10.0).acc(1.0).mem(0.0).comm(0.1),
+        )
+    }
+
+    #[test]
+    fn gpipe_holds_more_activation_memory_than_1f1b() {
+        let g = training_chain(4);
+        // fw/bw colocated 2+2 across two accelerators
+        let assign = vec![
+            Device::Acc(0),
+            Device::Acc(0),
+            Device::Acc(1),
+            Device::Acc(1),
+            Device::Acc(1),
+            Device::Acc(1),
+            Device::Acc(0),
+            Device::Acc(0),
+        ];
+        let p = Placement::new(assign, 0.0, "manual");
+        let sc = Scenario::new(2, 0, f64::INFINITY);
+        let req = sc.to_request();
+        let cfg = SimConfig { act_frac: 0.5, ..SimConfig::default() };
+        let a = simulate_req(&g, &req, &p, Schedule::PipeDream1F1B, 12, &cfg);
+        let b = simulate_req(&g, &req, &p, Schedule::GPipe, 12, &cfg);
+        assert_eq!(a.completed, 12);
+        assert_eq!(b.completed, 12);
+        let peak = |r: &SimxResult| r.mem_peak.iter().copied().fold(0.0_f64, f64::max);
+        assert!(
+            peak(&b) > peak(&a) + 0.5,
+            "GPipe must hold more live activations: {} vs {}",
+            peak(&b),
+            peak(&a)
+        );
+    }
+
+    #[test]
+    fn memory_enforcement_rejects_gpipe_but_admits_1f1b() {
+        let g = training_chain(4);
+        let assign = vec![
+            Device::Acc(0),
+            Device::Acc(0),
+            Device::Acc(1),
+            Device::Acc(1),
+            Device::Acc(1),
+            Device::Acc(1),
+            Device::Acc(0),
+            Device::Acc(0),
+        ];
+        let p = Placement::new(assign, 0.0, "manual");
+        // cap 5: weights 1 + 4 in-flight activations fit, 12 do not
+        let sc = Scenario::new(2, 0, 5.0);
+        let req = sc.to_request();
+        let cfg = SimConfig::with_memory_model(0.5);
+        let a = simulate_req(&g, &req, &p, Schedule::PipeDream1F1B, 12, &cfg);
+        assert_eq!(a.completed, 12, "1F1B must complete under the cap: {:?}", a.stall);
+        for (d, &peak) in a.mem_peak.iter().enumerate() {
+            assert!(peak <= 5.0 * (1.0 + 1e-9), "device {d} peak {peak} over cap");
+        }
+        let b = simulate_req(&g, &req, &p, Schedule::GPipe, 12, &cfg);
+        assert!(
+            matches!(b.stall, Some(Stall::MemoryDeadlock { .. })),
+            "GPipe must be rejected: {:?}",
+            b.stall
+        );
+        assert!(b.completed < b.injected);
+    }
+
+    #[test]
+    fn timeline_renders_all_devices() {
+        let g = chain(4);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let p = dp::solve(&g, &sc).unwrap();
+        let req = sc.to_request();
+        let res = simulate_req(&g, &req, &p, Schedule::Pipelined, 6, &SimConfig::default());
+        let t = res.render_timeline(60);
+        assert!(t.contains("acc0"));
+        assert!(t.lines().count() >= 1);
+    }
+}

@@ -1,0 +1,231 @@
+//! Scripted simulation events and their CLI grammar.
+//!
+//! A fleet simulation can be perturbed mid-stream by a script of typed
+//! events — the scenarios the serving north-star has to survive:
+//!
+//! * `fail:acc0@t=5` — device loss: `acc0` finishes its running task and
+//!   then stops accepting work (graceful drain; samples that still need
+//!   the device stall, which is how the re-planning loop detects the hit).
+//! * `slow:acc1*0.5@t=9` — straggler onset: from `t=9` every task
+//!   *starting* on `acc1` runs at 0.5× its previous speed (factors
+//!   compound multiplicatively across repeated `slow` events).
+//! * `spike:+8@t=12` — load spike: 8 extra samples are injected at
+//!   `t=12` on top of the base request stream.
+//!
+//! The grammar is `KIND:BODY@t=TIME`, comma-separated; `Display` re-emits
+//! it and `parse ∘ Display` is the identity (mirroring
+//! [`crate::coordinator::placement::Fleet::parse`]). Scripts ride on the
+//! CLI (`simulate … --events "…"`) and on the optional `events` string of
+//! the workload JSON schema ([`crate::workloads::json`]).
+
+use crate::coordinator::placement::Device;
+
+/// What a scripted event does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScriptAction {
+    /// Graceful device loss: running task completes, no new starts.
+    Fail { device: Device },
+    /// Straggler onset: the device's speed is multiplied by `factor`
+    /// (`0 < factor`, usually `< 1`) for tasks starting after the event.
+    Slow { device: Device, factor: f64 },
+    /// Load spike: `count` extra samples enter the stream.
+    Spike { count: usize },
+}
+
+/// One scripted event: an action at an absolute simulation time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScriptedEvent {
+    pub at: f64,
+    pub action: ScriptAction,
+}
+
+/// An ordered script of events (kept in declaration order; the engine's
+/// event queue orders them by time).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EventScript {
+    pub events: Vec<ScriptedEvent>,
+}
+
+impl EventScript {
+    /// The empty script (a plain, undisturbed run).
+    pub fn empty() -> EventScript {
+        EventScript::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The earliest `fail:` event, if any.
+    pub fn first_fail(&self) -> Option<(f64, Device)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.action {
+                ScriptAction::Fail { device } => Some((e.at, device)),
+                _ => None,
+            })
+            .min_by(|a, b| a.0.total_cmp(&b.0))
+    }
+
+    /// The earliest `fail:` event naming an *accelerator* — the fault the
+    /// re-planning loop ([`crate::simx::loop_`]) reacts to (CPU faults
+    /// simulate fine but have no failover/decrement story).
+    pub fn first_acc_fail(&self) -> Option<(f64, Device)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.action {
+                ScriptAction::Fail { device: d @ Device::Acc(_) } => Some((e.at, d)),
+                _ => None,
+            })
+            .min_by(|a, b| a.0.total_cmp(&b.0))
+    }
+
+    /// Parse the comma-separated `KIND:BODY@t=TIME` grammar (see the
+    /// module docs). Empty entries are skipped, so a trailing comma is
+    /// harmless; an all-empty spec yields the empty script.
+    pub fn parse(spec: &str) -> Result<EventScript, String> {
+        let mut events = Vec::new();
+        for raw in spec.split(',') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (head, time) = entry
+                .rsplit_once("@t=")
+                .ok_or_else(|| format!("missing '@t=TIME' in '{entry}'"))?;
+            let at = time
+                .parse::<f64>()
+                .map_err(|_| format!("bad time in '{entry}'"))?;
+            if !(at.is_finite() && at >= 0.0) {
+                return Err(format!("time must be finite and >= 0 in '{entry}'"));
+            }
+            let (kind, body) = head
+                .split_once(':')
+                .ok_or_else(|| format!("missing 'KIND:' in '{entry}'"))?;
+            let action = match kind {
+                "fail" => ScriptAction::Fail { device: Device::parse(body)? },
+                "slow" => {
+                    let (dev, factor) = body
+                        .split_once('*')
+                        .ok_or_else(|| format!("slow needs 'DEVICE*FACTOR' in '{entry}'"))?;
+                    let factor = factor
+                        .parse::<f64>()
+                        .map_err(|_| format!("bad slow factor in '{entry}'"))?;
+                    if !(factor.is_finite() && factor > 0.0) {
+                        return Err(format!("slow factor must be positive in '{entry}'"));
+                    }
+                    ScriptAction::Slow { device: Device::parse(dev)?, factor }
+                }
+                "spike" => {
+                    let count = body
+                        .strip_prefix('+')
+                        .ok_or_else(|| format!("spike needs '+COUNT' in '{entry}'"))?;
+                    let count = count
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad spike count in '{entry}'"))?;
+                    if count == 0 {
+                        return Err(format!("spike count must be >= 1 in '{entry}'"));
+                    }
+                    ScriptAction::Spike { count }
+                }
+                other => return Err(format!("unknown event kind '{other}' in '{entry}'")),
+            };
+            events.push(ScriptedEvent { at, action });
+        }
+        Ok(EventScript { events })
+    }
+}
+
+impl std::fmt::Display for EventScript {
+    /// Emits the [`EventScript::parse`] grammar; `Display → parse`
+    /// round-trips exactly.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            match e.action {
+                ScriptAction::Fail { device } => write!(f, "fail:{device}")?,
+                ScriptAction::Slow { device, factor } => write!(f, "slow:{device}*{factor}")?,
+                ScriptAction::Spike { count } => write!(f, "spike:+{count}")?,
+            }
+            write!(f, "@t={}", e.at)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_all_kinds() {
+        let s = EventScript::parse("fail:acc0@t=5,slow:acc1*0.5@t=9,spike:+8@t=12").unwrap();
+        assert_eq!(s.events.len(), 3);
+        assert_eq!(
+            s.events[0],
+            ScriptedEvent { at: 5.0, action: ScriptAction::Fail { device: Device::Acc(0) } }
+        );
+        assert_eq!(
+            s.events[1],
+            ScriptedEvent {
+                at: 9.0,
+                action: ScriptAction::Slow { device: Device::Acc(1), factor: 0.5 },
+            }
+        );
+        assert_eq!(
+            s.events[2],
+            ScriptedEvent { at: 12.0, action: ScriptAction::Spike { count: 8 } }
+        );
+        assert_eq!(s.first_fail(), Some((5.0, Device::Acc(0))));
+    }
+
+    #[test]
+    fn display_reparses() {
+        for spec in [
+            "fail:acc0@t=5,slow:acc1*0.5@t=9,spike:+8@t=12",
+            "slow:cpu0*0.25@t=1.5",
+            "fail:acc3@t=0",
+            "",
+        ] {
+            let s = EventScript::parse(spec).unwrap();
+            let round = EventScript::parse(&s.to_string()).unwrap();
+            assert_eq!(s, round, "display was: {s}");
+        }
+    }
+
+    #[test]
+    fn first_fail_picks_earliest() {
+        let s = EventScript::parse("fail:acc1@t=9,fail:acc0@t=5").unwrap();
+        assert_eq!(s.first_fail(), Some((5.0, Device::Acc(0))));
+        assert_eq!(EventScript::parse("spike:+2@t=1").unwrap().first_fail(), None);
+        assert!(EventScript::empty().is_empty());
+        // the accelerator filter skips earlier CPU faults
+        let mixed = EventScript::parse("fail:cpu0@t=1,fail:acc2@t=7").unwrap();
+        assert_eq!(mixed.first_fail(), Some((1.0, Device::Cpu(0))));
+        assert_eq!(mixed.first_acc_fail(), Some((7.0, Device::Acc(2))));
+        assert_eq!(EventScript::parse("fail:cpu0@t=1").unwrap().first_acc_fail(), None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        for bad in [
+            "fail:acc0",            // no time
+            "fail:gpu0@t=5",        // unknown device
+            "slow:acc0@t=5",        // missing factor
+            "slow:acc0*0@t=5",      // non-positive factor
+            "slow:acc0*x@t=5",      // bad factor
+            "spike:8@t=5",          // missing '+'
+            "spike:+0@t=5",         // zero count
+            "melt:acc0@t=5",        // unknown kind
+            "fail:acc0@t=-1",       // negative time
+            "fail:acc0@t=oops",     // bad time
+        ] {
+            assert!(EventScript::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        // trailing comma and whitespace are fine
+        let ok = EventScript::parse(" fail:acc0@t=2 , ").unwrap();
+        assert_eq!(ok.events.len(), 1);
+    }
+}

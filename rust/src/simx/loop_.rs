@@ -1,0 +1,249 @@
+//! The drift-driven re-planning loop: simulation closing the serving loop.
+//!
+//! `runtime::server::ServingPlanner` can re-plan a mutated fleet at
+//! cache-hit cost, but until this module nothing could *evaluate* whether
+//! the new plan is actually better. [`run_device_loss_demo`] wires the
+//! engine to the planner end to end:
+//!
+//! 1. plan the request and measure its healthy steady-state TPS in
+//!    simulation;
+//! 2. replay the event script against the healthy plan — the scripted
+//!    `fail:` strands every sample still needing the dead device
+//!    ([`Stall::DeviceLost`]), which is the drift signal;
+//! 3. the *no-replan* fallback ([`fallback_after_loss`]): the dead
+//!    device's nodes hot-failover to the CPU pool — valid, degraded;
+//! 4. the re-planned path:
+//!    [`ServingPlanner::plan_after_device_loss`] = `Fleet::decrement` →
+//!    `plan_request` over the mutated fleet (cache-hit cost for known
+//!    fleets) — then both plans are simulated and compared.
+//!
+//! The contract (DESIGN.md §6, asserted by the CI smoke job and
+//! `tests/simx_validate.rs`): post-replan time-per-sample is strictly
+//! better (lower) than the degraded fallback's whenever the fallback
+//! actually degraded the pipeline.
+
+use crate::algos::{objective, PlaceError};
+use crate::coordinator::placement::{Device, Placement, PlanRequest};
+use crate::graph::OpGraph;
+use crate::runtime::server::ServingPlanner;
+use crate::simx::engine::{self, Schedule, SimConfig, Stall};
+use crate::simx::event::{EventScript, ScriptAction, ScriptedEvent};
+
+/// Outcome of one scripted device-loss → re-plan cycle. All `*_tps`
+/// fields are steady-state **time-per-sample** — lower is better.
+#[derive(Clone, Debug)]
+pub struct ReplanDemo {
+    pub failed_device: Device,
+    pub failed_class: String,
+    pub fail_time: f64,
+    /// Steady-state TPS of the original plan on the intact, undisturbed
+    /// fleet (the pre-fault baseline).
+    pub healthy_tps: f64,
+    /// Steady-state TPS of the CPU-failover fallback (no re-planning),
+    /// under the script's residual stragglers/spikes.
+    pub degraded_tps: f64,
+    /// Steady-state TPS of the re-planned placement on the shrunk fleet,
+    /// under the same residual disturbances (device-remapped).
+    pub replanned_tps: f64,
+    /// The fallback placement (dead device's nodes on the CPU pool).
+    pub degraded: Placement,
+    pub replanned: Placement,
+    /// The request after `Fleet::decrement` (what the replan ran on).
+    pub degraded_request: PlanRequest,
+    /// Samples the *healthy plan* completed under the fault script before
+    /// stalling — the drift signal as the engine saw it.
+    pub disrupted_completed: usize,
+    pub disrupted_injected: usize,
+    pub disrupted_stall: Option<Stall>,
+}
+
+impl ReplanDemo {
+    /// `degraded / replanned` time-per-sample ratio (> 1 ⇔ re-planning
+    /// pays).
+    pub fn improvement(&self) -> f64 {
+        self.degraded_tps / self.replanned_tps
+    }
+}
+
+/// The script minus its `fail:` events — the residual disturbances
+/// (stragglers, load spikes) that keep applying after the loss is reacted
+/// to.
+fn residual_script(script: &EventScript) -> EventScript {
+    EventScript {
+        events: script
+            .events
+            .iter()
+            .copied()
+            .filter(|e| !matches!(e.action, ScriptAction::Fail { .. }))
+            .collect(),
+    }
+}
+
+/// Re-address device-scoped events for the post-`decrement` fleet. The
+/// *failed device's own* dense slot disappears (its events die with it —
+/// within a class devices are interchangeable, so the survivors occupy
+/// the class's remaining slots in order) and every accelerator index
+/// above it shifts down by one, including later classes. CPU indices and
+/// spikes are unaffected.
+fn remap_after_loss(script: &EventScript, failed: Device) -> EventScript {
+    let lost_slot = match failed {
+        Device::Acc(i) => i,
+        Device::Cpu(_) => return script.clone(),
+    };
+    let remap = |d: Device| -> Option<Device> {
+        match d {
+            Device::Acc(i) if i == lost_slot => None,
+            Device::Acc(i) if i > lost_slot => Some(Device::Acc(i - 1)),
+            other => Some(other),
+        }
+    };
+    EventScript {
+        events: script
+            .events
+            .iter()
+            .filter_map(|e| {
+                let action = match e.action {
+                    ScriptAction::Fail { device } => {
+                        ScriptAction::Fail { device: remap(device)? }
+                    }
+                    ScriptAction::Slow { device, factor } => {
+                        ScriptAction::Slow { device: remap(device)?, factor }
+                    }
+                    spike @ ScriptAction::Spike { .. } => spike,
+                };
+                Some(ScriptedEvent { at: e.at, action })
+            })
+            .collect(),
+    }
+}
+
+/// The no-replan fallback after losing `failed`: its nodes hot-failover to
+/// the CPU pool (`Cpu(0)`), everything else stays put. Always a valid
+/// placement (the CPU pool is uncapped and supports every op with a
+/// finite `p_cpu`); usually a badly degraded one — that is the point of
+/// comparison.
+pub fn fallback_after_loss(
+    g: &OpGraph,
+    req: &PlanRequest,
+    p: &Placement,
+    failed: Device,
+) -> Placement {
+    let assignment = p
+        .assignment
+        .iter()
+        .map(|&d| if d == failed { Device::Cpu(0) } else { d })
+        .collect();
+    let mut out = Placement::new(assignment, 0.0, format!("{} + CPU failover", p.algorithm));
+    out.objective = objective::max_load_req(g, req, &out);
+    out
+}
+
+/// Run the full loss → drift → re-plan cycle (see the module docs).
+/// `script` must contain a `fail:` event naming an accelerator of the
+/// request's fleet; `samples` base samples are replayed per simulation.
+/// Plans the healthy placement and replays the disruption itself; callers
+/// that already hold both (the CLI `simulate` path) should use
+/// [`run_device_loss_demo_with`] instead of paying them twice.
+pub fn run_device_loss_demo(
+    g: &OpGraph,
+    req: &PlanRequest,
+    script: &EventScript,
+    schedule: Schedule,
+    samples: usize,
+    planner: &mut ServingPlanner,
+) -> Result<ReplanDemo, PlaceError> {
+    let healthy = planner.plan_request(g, req)?;
+    let cfg = SimConfig::for_request(req);
+    let disrupted = engine::simulate_with_events(
+        g,
+        req,
+        &healthy.placement,
+        schedule,
+        samples,
+        script,
+        &cfg,
+    );
+    run_device_loss_demo_with(
+        g,
+        req,
+        script,
+        schedule,
+        samples,
+        planner,
+        &healthy.placement,
+        &disrupted,
+    )
+}
+
+/// [`run_device_loss_demo`] against an already-planned healthy placement
+/// and its already-simulated disrupted run (no re-planning, no repeated
+/// fault replay).
+#[allow(clippy::too_many_arguments)]
+pub fn run_device_loss_demo_with(
+    g: &OpGraph,
+    req: &PlanRequest,
+    script: &EventScript,
+    schedule: Schedule,
+    samples: usize,
+    planner: &mut ServingPlanner,
+    healthy: &Placement,
+    disrupted: &engine::SimxResult,
+) -> Result<ReplanDemo, PlaceError> {
+    // react to the earliest *accelerator* fail — a CPU fault in the same
+    // script simulates fine but has no failover/decrement story
+    let (fail_time, failed_device) = script.first_acc_fail().ok_or_else(|| {
+        PlaceError::Unsupported(
+            "event script has no accelerator fail: event to react to".into(),
+        )
+    })?;
+    // re-plan first: ServingPlanner::plan_after_device_loss is the one
+    // authoritative range/class validation (out-of-fleet devices error
+    // here, before any simulation runs)
+    let (degraded_request, replanned_stages) =
+        planner.plan_after_device_loss(g, req, failed_device)?;
+    let replanned = replanned_stages.placement;
+    let failed_class = req
+        .fleet
+        .class_of(failed_device)
+        .map(|c| c.name.clone())
+        .unwrap_or_default();
+
+    // the comparison replays keep the script's *residual* disturbances
+    // (stragglers, load spikes) — only the reacted-to faults drop out —
+    // so degraded-vs-replanned is measured under the scripted scenario,
+    // not a healthy-fleet idealization
+    let residual = residual_script(script);
+    let residual_remapped = remap_after_loss(&residual, failed_device);
+
+    let cfg = SimConfig::for_request(req);
+    let healthy_sim = engine::simulate_req(g, req, healthy, schedule, samples, &cfg);
+
+    let degraded = fallback_after_loss(g, req, healthy, failed_device);
+    let degraded_sim =
+        engine::simulate_with_events(g, req, &degraded, schedule, samples, &residual, &cfg);
+
+    let replanned_sim = engine::simulate_with_events(
+        g,
+        &degraded_request,
+        &replanned,
+        schedule,
+        samples,
+        &residual_remapped,
+        &cfg,
+    );
+
+    Ok(ReplanDemo {
+        failed_device,
+        failed_class,
+        fail_time,
+        healthy_tps: healthy_sim.steady_tps,
+        degraded_tps: degraded_sim.steady_tps,
+        replanned_tps: replanned_sim.steady_tps,
+        degraded,
+        replanned,
+        degraded_request,
+        disrupted_completed: disrupted.completed,
+        disrupted_injected: disrupted.injected,
+        disrupted_stall: disrupted.stall,
+    })
+}

@@ -1,0 +1,39 @@
+//! `simx` — the fleet-aware discrete-event simulation subsystem.
+//!
+//! The paper's claims are throughput claims: Figs. 5/7 and Table 1 state
+//! what a placement *does when executed* under a pipelined schedule. This
+//! subsystem is the executable half of that statement for heterogeneous
+//! fleets, replacing the scalar-scenario greedy loop the repository grew
+//! up with:
+//!
+//! * [`engine`] — a binary-heap event queue over typed events
+//!   (`ComputeDone`, `TransferDone`, `DeviceFail`, `DeviceSlow`,
+//!   `SampleInject`) driving per-device resources (class-speed-scaled
+//!   compute, live weight/activation memory occupancy against per-class
+//!   caps) and per-link resources (bandwidth-delayed cross-device tensor
+//!   transfers), under the four [`engine::Schedule`] policies.
+//! * [`event`] — scripted fault / straggler / load-spike injection and
+//!   its CLI grammar (`fail:acc0@t=5,slow:acc1*0.5@t=9,spike:+8@t=12`).
+//! * [`validate`] — cross-checks every registry solver's predicted
+//!   objective against simulated steady-state TPS on heterogeneous
+//!   fleets (the simulation analogue of `tests/fleet_equivalence.rs`).
+//! * [`loop_`] — the drift-driven re-planning loop: a scripted fault
+//!   triggers `Fleet::decrement` → `ServingPlanner::plan_request` → plan
+//!   swap, with before/after TPS measured *in simulation*.
+//!
+//! The legacy [`crate::pipeline::sim`] API survives as a thin adapter
+//! over this engine (uniform-fleet results within ε of the frozen
+//! reference implementation, enforced by `tests/simx_equivalence.rs`).
+//! See DESIGN.md §6 for the event/resource model and the tolerance
+//! contract.
+
+pub mod engine;
+pub mod event;
+pub mod loop_;
+pub mod validate;
+
+pub use engine::{
+    build_pieces_req, simulate_req, simulate_with_events, Piece, Schedule, SimConfig,
+    SimxResult, Stall,
+};
+pub use event::{EventScript, ScriptAction, ScriptedEvent};

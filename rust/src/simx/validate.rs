@@ -1,0 +1,146 @@
+//! Prediction-vs-simulation cross-validation — the simulation analogue of
+//! `tests/fleet_equivalence.rs`.
+//!
+//! For each registry solver, the produced placement's **predicted**
+//! throughput objective (`objective::max_load_req` — what the planner
+//! claims the plan will do) is replayed through the [`crate::simx`]
+//! engine on the *same heterogeneous fleet*, and the measured steady-state
+//! time-per-sample must agree within a documented tolerance
+//! ([`DEFAULT_TOLERANCE`], 10%: the ramp-up window plus slope estimation
+//! noise; DESIGN.md §6).
+//!
+//! Two deliberate scope notes:
+//!
+//! * The latency IP and the replication/hierarchy DPs optimize objectives
+//!   that are not a pipelined TPS, so their rows compare the *max-load
+//!   evaluation of their placement* against its simulation — the claim
+//!   being validated is always "this placement pipelines at the predicted
+//!   max-load", uniformly across solvers.
+//! * Memory-oblivious baselines (Scotch, expert) can emit placements that
+//!   are infeasible under per-class caps; their predicted objective is
+//!   `∞` and nothing can be simulated — such rows are reported in
+//!   [`ValidationReport::skipped`] rather than silently dropped.
+
+use crate::algos::{objective, PlaceError};
+use crate::coordinator::context::SolveOpts;
+use crate::coordinator::placement::{AlgoChoice, PlanRequest, TrainSchedule};
+use crate::coordinator::planner::Algorithm;
+use crate::coordinator::service::PlannerService;
+use crate::graph::{NodeKind, OpGraph};
+use crate::simx::engine::{self, Schedule, SimConfig};
+
+/// Documented prediction-vs-simulation agreement bound (relative).
+pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// One solver's prediction-vs-simulation comparison.
+#[derive(Clone, Debug)]
+pub struct ValidationRow {
+    pub algorithm: Algorithm,
+    /// `objective::max_load_req` of the produced placement.
+    pub predicted: f64,
+    /// Simulated steady-state time-per-sample of the same placement.
+    pub simulated: f64,
+    /// `|simulated - predicted| / predicted`.
+    pub rel_err: f64,
+}
+
+/// All rows of one `(graph, fleet)` validation sweep.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    pub rows: Vec<ValidationRow>,
+    /// Solvers with nothing to simulate on this fleet: the placement was
+    /// memory-infeasible (predicted `∞`) or the solver itself errored.
+    pub skipped: Vec<Algorithm>,
+    pub tolerance: f64,
+}
+
+impl ValidationReport {
+    pub fn max_rel_err(&self) -> f64 {
+        self.rows.iter().map(|r| r.rel_err).fold(0.0, f64::max)
+    }
+
+    /// Every simulated row within the tolerance.
+    pub fn all_within(&self) -> bool {
+        self.rows.iter().all(|r| r.rel_err <= self.tolerance)
+    }
+
+    /// The worst row, for error messages.
+    pub fn worst(&self) -> Option<&ValidationRow> {
+        self.rows
+            .iter()
+            .max_by(|a, b| a.rel_err.total_cmp(&b.rel_err))
+    }
+}
+
+/// The schedule the validation replays: the request's training schedule
+/// for training graphs, pipelined inference otherwise.
+pub fn replay_schedule(g: &OpGraph, req: &PlanRequest) -> Schedule {
+    let training = g.nodes.iter().any(|n| n.kind == NodeKind::Backward);
+    if !training {
+        Schedule::Pipelined
+    } else {
+        match req.train_schedule {
+            TrainSchedule::PipeDream => Schedule::PipeDream1F1B,
+            TrainSchedule::GPipe => Schedule::GPipe,
+        }
+    }
+}
+
+/// Cross-check `algorithms` on `(g, req)`: plan each through a shared
+/// [`PlannerService`] context, simulate the placement for `samples`
+/// samples with [`SimConfig::for_request`] (bandwidth-delayed links at the
+/// fleet's `bw`), and report prediction-vs-simulation agreement.
+///
+/// GPipe's phase barrier makes per-sample completions bursty, so its
+/// measured cost is the amortized `total / samples` instead of the
+/// order-statistic slope (both converge to the objective as `samples`
+/// grows).
+pub fn validate_request(
+    g: &OpGraph,
+    req: &PlanRequest,
+    algorithms: &[Algorithm],
+    opts: &SolveOpts,
+    samples: usize,
+    tolerance: f64,
+) -> Result<ValidationReport, PlaceError> {
+    let mut svc = PlannerService::new(2);
+    let schedule = replay_schedule(g, req);
+    let cfg = SimConfig::for_request(req);
+    let mut rows = Vec::new();
+    let mut skipped = Vec::new();
+    for &alg in algorithms {
+        let fixed = req.clone().algorithm(AlgoChoice::Fixed(alg));
+        // a solver that errors on this fleet joins the skipped rows like
+        // the memory-infeasible ones — one bad entry must not abort the
+        // other solvers' validation
+        let Ok(r) = svc.plan_request(g, &fixed, opts) else {
+            skipped.push(alg);
+            continue;
+        };
+        let predicted = objective::max_load_req(g, req, &r.placement);
+        if !predicted.is_finite() {
+            skipped.push(alg);
+            continue;
+        }
+        let sim = engine::simulate_req(g, req, &r.placement, schedule, samples, &cfg);
+        let simulated = if schedule == Schedule::GPipe && sim.completed > 0 {
+            sim.total / sim.completed as f64
+        } else {
+            sim.steady_tps
+        };
+        let rel_err = (simulated - predicted).abs() / predicted;
+        rows.push(ValidationRow { algorithm: alg, predicted, simulated, rel_err });
+    }
+    Ok(ValidationReport { rows, skipped, tolerance })
+}
+
+/// [`validate_request`] over the full 12-entry registry with the default
+/// tolerance.
+pub fn validate_registry(
+    g: &OpGraph,
+    req: &PlanRequest,
+    opts: &SolveOpts,
+    samples: usize,
+) -> Result<ValidationReport, PlaceError> {
+    validate_request(g, req, &Algorithm::ALL, opts, samples, DEFAULT_TOLERANCE)
+}

@@ -3,7 +3,7 @@
 //! seed so failures are reproducible, and *shrinks* DAG cases by deleting
 //! nodes while the property still fails.
 
-use crate::graph::{Node, OpGraph};
+use crate::graph::{Node, NodeKind, OpGraph};
 use crate::util::rng::Rng;
 
 /// Run `prop` on `cases` random inputs produced by `gen`. On failure,
@@ -89,6 +89,38 @@ pub fn random_dag(rng: &mut Rng, n: usize, p: f64) -> OpGraph {
 
 /// Random *training-shaped* DAG: a forward random DAG plus a mirrored
 /// backward part with colocation color classes linking partners.
+/// Deterministic training chain: a forward chain of `n` nodes built from
+/// the `fw` cost template, mirrored colocated backward partners from the
+/// `bw` template (reversed edges), and the loss bridge at the sink — the
+/// deterministic cousin of [`random_training_dag`], shared by the simx
+/// engine/equivalence/validation suites.
+pub fn training_chain(n: usize, fw: &Node, bw: &Node) -> OpGraph {
+    let mut g = OpGraph::new();
+    for i in 0..n {
+        let mut node = fw.clone();
+        node.name = format!("f{i}");
+        g.add_node(node);
+    }
+    for i in 1..n {
+        g.add_edge(i - 1, i);
+    }
+    for i in (0..n).rev() {
+        let mut node = bw.clone();
+        node.name = format!("b{i}");
+        node.kind = NodeKind::Backward;
+        node.fw_partner = Some(i);
+        node.color_class = Some(i as u32);
+        let id = g.add_node(node);
+        g.nodes[i].color_class = Some(i as u32);
+        if i + 1 < n {
+            g.add_edge(id - 1, id); // bw chain reversed: b(i+1) -> b(i)
+        } else {
+            g.add_edge(i, id); // loss bridge: fw sink -> bw source
+        }
+    }
+    g
+}
+
 pub fn random_training_dag(rng: &mut Rng, n_fw: usize, p: f64) -> OpGraph {
     let mut g = random_dag(rng, n_fw, p);
     let n = g.n();

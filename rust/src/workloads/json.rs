@@ -31,10 +31,18 @@
 //! ```
 //! `memCap` defaults to unlimited, `speed` to 1.0, `kind` to
 //! `"accelerator"` unless the name starts with `cpu`.
+//!
+//! An optional `events` string carries a default simulation event script
+//! in the [`crate::simx::event::EventScript`] grammar (the CLI `--events`
+//! flag overrides it):
+//! ```json
+//! "events": "fail:acc0@t=5,slow:acc1*0.5@t=9,spike:+8@t=12"
+//! ```
 
 use super::Workload;
 use crate::coordinator::placement::{DeviceClass, DeviceKind, Fleet, Scenario};
 use crate::graph::{Node, NodeKind, OpGraph};
+use crate::simx::event::EventScript;
 use crate::util::json::Json;
 
 /// Serialize a workload.
@@ -82,6 +90,9 @@ pub fn to_json(w: &Workload) -> Json {
     ];
     if let Some(fleet) = &w.fleet {
         fields.push(("fleet", fleet_to_json(fleet)));
+    }
+    if let Some(events) = &w.events {
+        fields.push(("events", Json::str(events.to_string())));
     }
     fields.push(("nodes", Json::Arr(nodes)));
     fields.push(("edges", Json::Arr(edges)));
@@ -209,20 +220,37 @@ pub fn from_json(j: &Json) -> Result<(OpGraph, Scenario, String), String> {
 }
 
 /// Parse a workload file into a full [`Workload`], including the optional
-/// `fleet` section (absent → `fleet: None`, the scalar scenario applies).
+/// `fleet` section (absent → `fleet: None`, the scalar scenario applies)
+/// and the optional `events` script string.
 pub fn from_json_workload(j: &Json) -> Result<Workload, String> {
     let (graph, scenario, name) = from_json(j)?;
     let fleet = match j.get("fleet") {
         Json::Null => None,
         section => Some(fleet_from_json(section)?),
     };
+    let events = match j.get("events") {
+        Json::Null => None,
+        section => {
+            let spec = section.as_str().ok_or("'events' must be a script string")?;
+            let script = EventScript::parse(spec)?;
+            if script.is_empty() {
+                None
+            } else {
+                Some(script)
+            }
+        }
+    };
+    // training-ness is derivable from the nodes (isBackward), and the
+    // simulate CLI keys its default schedule off it
+    let training = graph.nodes.iter().any(|n| n.kind == NodeKind::Backward);
     Ok(Workload {
         name,
         graph,
         scenario,
         fleet,
+        events,
         granularity: super::Granularity::Operator,
-        training: false,
+        training,
         expert: None,
         layer_of: None,
     })
@@ -272,6 +300,7 @@ mod tests {
             graph: g,
             scenario: Scenario::new(1, 1, 10.0),
             fleet: None,
+            events: None,
             granularity: Granularity::Operator,
             training: false,
             expert: None,
@@ -292,6 +321,7 @@ mod tests {
             graph: g,
             scenario: Scenario::new(1, 1, 10.0),
             fleet: None,
+            events: None,
             granularity: Granularity::Operator,
             training: false,
             expert: None,
@@ -318,6 +348,7 @@ mod tests {
             graph: g,
             scenario: Scenario::new(6, 1, 40.0),
             fleet: Some(fleet.clone()),
+            events: None,
             granularity: Granularity::Operator,
             training: false,
             expert: None,
@@ -332,6 +363,38 @@ mod tests {
         let back2 = from_json_workload(&reparsed).unwrap();
         assert_eq!(back2.fleet.as_ref(), Some(&fleet));
         assert_eq!(back2.scenario.k, w.scenario.k);
+    }
+
+    #[test]
+    fn events_section_roundtrips() {
+        let mut g = OpGraph::new();
+        g.add_node(Node::new("a"));
+        g.add_node(Node::new("b"));
+        g.add_edge(0, 1);
+        let script = EventScript::parse("fail:acc0@t=5,slow:acc1*0.5@t=9,spike:+8@t=12").unwrap();
+        let w = Workload {
+            name: "scripted".into(),
+            graph: g,
+            scenario: Scenario::new(2, 1, f64::INFINITY),
+            fleet: None,
+            events: Some(script.clone()),
+            granularity: Granularity::Operator,
+            training: false,
+            expert: None,
+            layer_of: None,
+        };
+        let j = to_json(&w);
+        let back = from_json_workload(&j).unwrap();
+        assert_eq!(back.events.as_ref(), Some(&script));
+        // textual roundtrip too
+        let reparsed = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(from_json_workload(&reparsed).unwrap().events, Some(script));
+        // malformed script strings are rejected, not ignored
+        let bad = crate::util::json::Json::parse(
+            r#"{"name": "x", "nodes": [], "edges": [], "events": "melt:acc0@t=1"}"#,
+        )
+        .unwrap();
+        assert!(from_json_workload(&bad).is_err());
     }
 
     #[test]

@@ -17,6 +17,7 @@ pub mod resnet;
 use crate::baselines::expert::ExpertStyle;
 use crate::coordinator::placement::{Fleet, PlanRequest, Scenario};
 use crate::graph::{Node, NodeId, OpGraph};
+use crate::simx::event::EventScript;
 use costs::OpCost;
 
 /// Granularity of a workload graph.
@@ -37,6 +38,9 @@ pub struct Workload {
     /// scenario's uniform `(k, ℓ, M)` shape (the scenario's comm model,
     /// schedule and objective semantics still apply).
     pub fleet: Option<Fleet>,
+    /// Default event script for simulation replays (JSON `events` string;
+    /// the CLI `--events` flag overrides it).
+    pub events: Option<EventScript>,
     pub granularity: Granularity,
     pub training: bool,
     /// Expert rule applicable to this workload (layer graphs only).
@@ -149,6 +153,7 @@ pub fn table1_workloads() -> Vec<Workload> {
                 graph: g,
                 scenario: Workload::paper_scenario(k),
                 fleet: None,
+                events: None,
                 granularity: Granularity::Operator,
                 training,
                 expert: None,
@@ -162,6 +167,7 @@ pub fn table1_workloads() -> Vec<Workload> {
             graph: g,
             scenario: Workload::paper_scenario(6),
             fleet: None,
+            events: None,
             granularity: Granularity::Operator,
             training,
             expert: None,
@@ -175,6 +181,7 @@ pub fn table1_workloads() -> Vec<Workload> {
             graph: bert::bert24_layer_graph(training),
             scenario: Workload::paper_scenario(6),
             fleet: None,
+            events: None,
             granularity: Granularity::Layer,
             training,
             expert: Some(ExpertStyle::BlockBands),
@@ -185,6 +192,7 @@ pub fn table1_workloads() -> Vec<Workload> {
             graph: resnet::resnet50_layer_graph(training),
             scenario: Workload::paper_scenario(6),
             fleet: None,
+            events: None,
             granularity: Granularity::Layer,
             training,
             expert: Some(ExpertStyle::EqualStripes),
@@ -195,6 +203,7 @@ pub fn table1_workloads() -> Vec<Workload> {
             graph: inception::inception_v3_layer_graph(training),
             scenario: Workload::paper_scenario(6),
             fleet: None,
+            events: None,
             granularity: Granularity::Layer,
             training,
             expert: Some(ExpertStyle::EqualStripes),
@@ -205,6 +214,7 @@ pub fn table1_workloads() -> Vec<Workload> {
             graph: gnmt::gnmt_layer_graph(training),
             scenario: Workload::paper_scenario(6),
             fleet: None,
+            events: None,
             granularity: Granularity::Layer,
             training,
             expert: Some(ExpertStyle::BlockBands),

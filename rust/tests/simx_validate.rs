@@ -1,0 +1,204 @@
+//! ISSUE-4 acceptance: `simx::validate` — every registry solver's
+//! predicted objective matches simulated steady-state TPS on ≥ 2
+//! heterogeneous fleets within the documented tolerance — and the
+//! scripted device-loss loop demo shows the re-planned placement strictly
+//! beating the degraded no-replan fallback.
+
+use dnn_partition::baselines::expert::ExpertStyle;
+use dnn_partition::coordinator::context::SolveOpts;
+use dnn_partition::coordinator::placement::{
+    AlgoChoice, Device, DeviceClass, Fleet, PlanRequest,
+};
+use dnn_partition::coordinator::planner::Algorithm;
+use dnn_partition::graph::{Node, OpGraph};
+use dnn_partition::runtime::server::ServingPlanner;
+use dnn_partition::simx::engine::{Schedule, Stall};
+use dnn_partition::simx::event::EventScript;
+use dnn_partition::simx::loop_;
+use dnn_partition::simx::validate::{self, DEFAULT_TOLERANCE};
+use std::time::Duration;
+
+fn chain(n: usize) -> OpGraph {
+    let mut g = OpGraph::new();
+    for i in 0..n {
+        g.add_node(Node::new(format!("c{i}")).cpu(20.0).acc(1.0).mem(1.0).comm(0.05));
+    }
+    for i in 1..n {
+        g.add_edge(i - 1, i);
+    }
+    g
+}
+
+fn training_chain(n: usize) -> OpGraph {
+    dnn_partition::util::proptest::training_chain(
+        n,
+        &Node::new("f").cpu(20.0).acc(1.0).mem(1.0).comm(0.05),
+        &Node::new("b").cpu(20.0).acc(1.5).mem(0.5).comm(0.05),
+    )
+}
+
+fn opts() -> SolveOpts {
+    SolveOpts {
+        ip_budget: Duration::from_secs(10),
+        gap_target: 0.0,
+        expert: Some(ExpertStyle::EqualStripes),
+        ..SolveOpts::default()
+    }
+}
+
+/// Two acceptance fleets: heterogeneous in speed (and bandwidth), caps
+/// left unlimited so even the memory-oblivious baselines stay simulable.
+fn hetero_fleets() -> Vec<PlanRequest> {
+    vec![
+        PlanRequest::new(Fleet::new(vec![
+            DeviceClass::acc("fast", 1, f64::INFINITY).speed(2.0),
+            DeviceClass::acc("slow", 2, f64::INFINITY),
+            DeviceClass::cpu("cpu", 1),
+        ])),
+        PlanRequest::new(
+            Fleet::new(vec![
+                DeviceClass::acc("a", 2, f64::INFINITY).speed(3.0),
+                DeviceClass::acc("b", 1, f64::INFINITY).speed(1.5),
+                DeviceClass::cpu("cpu", 1),
+            ])
+            .bandwidth(2.0),
+        ),
+    ]
+}
+
+#[test]
+fn every_registry_solver_validates_on_heterogeneous_fleets() {
+    let g = chain(10);
+    for (fi, req) in hetero_fleets().into_iter().enumerate() {
+        let report =
+            validate::validate_request(&g, &req, &Algorithm::ALL, &opts(), 64, DEFAULT_TOLERANCE)
+                .unwrap_or_else(|e| panic!("fleet {fi}: {e}"));
+        assert!(
+            report.skipped.is_empty(),
+            "fleet {fi}: uncapped fleets must skip nothing, skipped {:?}",
+            report.skipped
+        );
+        assert_eq!(report.rows.len(), Algorithm::ALL.len(), "fleet {fi}");
+        assert!(
+            report.all_within(),
+            "fleet {fi}: worst row {:?} (max rel err {:.3}, tolerance {})",
+            report.worst().map(|r| (r.algorithm, r.predicted, r.simulated)),
+            report.max_rel_err(),
+            report.tolerance
+        );
+        // the throughput solvers' own claimed objective is the predicted
+        // max-load — spot-check the exact DP row
+        let dp_row = report
+            .rows
+            .iter()
+            .find(|r| r.algorithm == Algorithm::Dp)
+            .expect("dp row");
+        assert!(dp_row.predicted.is_finite() && dp_row.simulated.is_finite());
+    }
+}
+
+#[test]
+fn training_fleet_validates_under_1f1b() {
+    let g = training_chain(6);
+    let req = PlanRequest::new(Fleet::new(vec![
+        DeviceClass::acc("fast", 1, f64::INFINITY).speed(2.0),
+        DeviceClass::acc("slow", 2, f64::INFINITY),
+        DeviceClass::cpu("cpu", 1),
+    ]));
+    assert_eq!(validate::replay_schedule(&g, &req), Schedule::PipeDream1F1B);
+    let algs = [Algorithm::Dp, Algorithm::PipeDream, Algorithm::Greedy];
+    let report =
+        validate::validate_request(&g, &req, &algs, &opts(), 48, DEFAULT_TOLERANCE).unwrap();
+    assert_eq!(report.rows.len(), algs.len());
+    assert!(
+        report.all_within(),
+        "worst {:?} rel {:.3}",
+        report.worst().map(|r| r.algorithm),
+        report.max_rel_err()
+    );
+}
+
+#[test]
+fn device_loss_replan_strictly_beats_cpu_failover() {
+    let g = chain(10);
+    let req = PlanRequest::new(Fleet::new(vec![
+        DeviceClass::acc("fast", 2, f64::INFINITY).speed(2.0),
+        DeviceClass::acc("slow", 2, f64::INFINITY),
+        DeviceClass::cpu("cpu", 1),
+    ]))
+    .algorithm(AlgoChoice::Fixed(Algorithm::Dp));
+    let script = EventScript::parse("fail:acc0@t=4").unwrap();
+    let mut planner = ServingPlanner::new(Algorithm::Dp, opts());
+    let demo = loop_::run_device_loss_demo(
+        &g,
+        &req,
+        &script,
+        Schedule::Pipelined,
+        32,
+        &mut planner,
+    )
+    .unwrap();
+    // the engine saw the fault: the healthy plan strands samples
+    assert!(matches!(demo.disrupted_stall, Some(Stall::DeviceLost { .. })));
+    assert!(demo.disrupted_completed < demo.disrupted_injected);
+    assert_eq!(demo.failed_device, Device::Acc(0));
+    assert_eq!(demo.failed_class, "fast");
+    // the acceptance inequality: re-planning strictly beats hot failover
+    assert!(
+        demo.replanned_tps < demo.degraded_tps,
+        "replanned {} must beat degraded {}",
+        demo.replanned_tps,
+        demo.degraded_tps
+    );
+    assert!(demo.improvement() > 1.0);
+    // a shrunk fleet can't beat the intact one
+    assert!(demo.healthy_tps <= demo.replanned_tps + 1e-9);
+    // the replan ran on the decremented fleet
+    assert_eq!(demo.degraded_request.fleet.k(), req.fleet.k() - 1);
+    demo.replanned
+        .validate_req(&g, &demo.degraded_request)
+        .unwrap();
+    // the fallback is valid on the original fleet but pays CPU costs
+    demo.degraded.validate_req(&g, &req).unwrap();
+    assert!(demo.degraded_tps > demo.healthy_tps);
+}
+
+#[test]
+fn replan_demo_requires_an_accelerator_fail_event() {
+    let g = chain(6);
+    let req = PlanRequest::new(Fleet::new(vec![
+        DeviceClass::acc("acc", 2, f64::INFINITY),
+        DeviceClass::cpu("cpu", 1),
+    ]));
+    let mut planner = ServingPlanner::new(Algorithm::Dp, opts());
+    let no_fail = EventScript::parse("slow:acc0*0.5@t=2").unwrap();
+    assert!(loop_::run_device_loss_demo(
+        &g,
+        &req,
+        &no_fail,
+        Schedule::Pipelined,
+        8,
+        &mut planner
+    )
+    .is_err());
+    let cpu_fail = EventScript::parse("fail:cpu0@t=2").unwrap();
+    assert!(loop_::run_device_loss_demo(
+        &g,
+        &req,
+        &cpu_fail,
+        Schedule::Pipelined,
+        8,
+        &mut planner
+    )
+    .is_err());
+    let out_of_range = EventScript::parse("fail:acc7@t=2").unwrap();
+    assert!(loop_::run_device_loss_demo(
+        &g,
+        &req,
+        &out_of_range,
+        Schedule::Pipelined,
+        8,
+        &mut planner
+    )
+    .is_err());
+}

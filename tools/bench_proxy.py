@@ -337,10 +337,101 @@ def main_pr2():
     return results
 
 
+# --- PR-4 proxy: simx discrete-event engine -------------------------------
+#
+# The Rust simx engine is a binary-heap event queue (ComputeDone /
+# TransferDone / scripted events) over per-device resources plus a ready
+# list the dispatcher scans by schedule priority. This proxy transliterates
+# that structure (heapq, dict device states, linear ready scan) for a
+# pipelined chain of `pieces` stages and `samples` samples, in uniform mode
+# (instant hand-offs) and fleet mode (per-class speed lookup + bandwidth-
+# delayed link transfer events — roughly doubling the event count), so the
+# events/sec figure and the fleet-vs-uniform overhead ratio mirror what
+# benches/simx_events.rs measures natively.
+
+import heapq
+
+
+def simx_proxy(pieces=6, samples=256, fleet=False, bw=1.0, xfer=0.1):
+    speeds = [2.0 if fleet and j < pieces // 2 else 1.0 for j in range(pieces)]
+    cost = [1.0 + 0.1 * j for j in range(pieces)]
+    heap = []  # (t, seq, kind, sample, piece)
+    seq = 0
+    done = [[False] * pieces for _ in range(samples)]
+    arrived = [[j == 0 for j in range(pieces)] for _ in range(samples)]
+    busy_until = [0.0] * pieces
+    link_free = {}
+    ready = [(s, 0) for s in range(samples)]
+    events = 0
+    heapq.heappush(heap, (0.0, seq, "inject", 0, 0))
+    seq += 1
+    completed = 0
+    while heap:
+        t, _, kind, s, j = heapq.heappop(heap)
+        events += 1
+        if kind == "compute":
+            done[s][j] = True
+            if j + 1 < pieces:
+                if fleet:
+                    key = (j, j + 1)
+                    start = max(t, link_free.get(key, 0.0))
+                    fin = start + xfer / bw
+                    link_free[key] = fin
+                    heapq.heappush(heap, (fin, seq, "transfer", s, j + 1))
+                    seq += 1
+                else:
+                    arrived[s][j + 1] = True
+                    ready.append((s, j + 1))
+            else:
+                completed += 1
+        elif kind == "transfer":
+            arrived[s][j] = True
+            ready.append((s, j))
+        # dispatch: priority = lower sample first (pipelined), device-exclusive
+        while True:
+            best = None
+            for ri, (rs, rj) in enumerate(ready):
+                if busy_until[rj] > t or not arrived[rs][rj]:
+                    continue
+                if best is None or rs < best[0]:
+                    best = (rs, rj, ri)
+            if best is None:
+                break
+            rs, rj, ri = best
+            ready[ri] = ready[-1]
+            ready.pop()
+            fin = t + cost[rj] / speeds[rj]
+            busy_until[rj] = fin
+            heapq.heappush(heap, (fin, seq, "compute", rs, rj))
+            seq += 1
+    assert completed == samples, (completed, samples)
+    return events
+
+
+def main_pr4():
+    results = {}
+    for name, fleet in [("uniform", False), ("fleet", True)]:
+        t, events = timeit(lambda fleet=fleet: simx_proxy(fleet=fleet))
+        results[name] = {
+            "events": events,
+            "run_s": round(t, 4),
+            "events_per_s": round(events / t, 1),
+        }
+        print("pr4-simx", name, results[name])
+    results["fleet_over_uniform_overhead"] = round(
+        results["fleet"]["run_s"] / results["uniform"]["run_s"], 2
+    )
+    print("pr4-simx overhead", results["fleet_over_uniform_overhead"])
+    return results
+
+
 if __name__ == "__main__":
     import sys
     if "--pr2" in sys.argv:
         main_pr2()
+    elif "--pr4" in sys.argv:
+        main_pr4()
     else:
         main()
         main_pr2()
+        main_pr4()
