@@ -9,6 +9,8 @@ use dnn_partition::coordinator::placement::{
 };
 use dnn_partition::coordinator::planner::{self, Algorithm};
 use dnn_partition::graph::{Node, OpGraph};
+use dnn_partition::runtime::server::ServingPlanner;
+use dnn_partition::simx::controller::{self, ControllerConfig};
 use dnn_partition::simx::engine::{self, Schedule, SimConfig};
 use dnn_partition::simx::event::EventScript;
 use dnn_partition::util::bench::bench;
@@ -99,5 +101,33 @@ fn main() {
     println!(
         "scripted overhead over plain fleet-sim: {:.2}x",
         scripted.median.as_secs_f64() / fleet.median.as_secs_f64()
+    );
+
+    // --- monitored loop: health monitor + hysteresis controller ----------
+    // a fail mid-run forces the full detect → probe → decrement-replan
+    // path, so this measures the controller's worst common case (epoch
+    // replay + re-plan), not just monitor bookkeeping
+    let fail_script = EventScript::parse("fail:acc1@t=12").unwrap();
+    let monitored = bench(
+        &format!("simx/monitored-chain12-{samples}samples"),
+        budget,
+        5,
+        || {
+            let mut serving = ServingPlanner::new(Algorithm::Dp, SolveOpts::default());
+            controller::run_monitored(
+                &g,
+                &fleet_req,
+                &fail_script,
+                Schedule::Pipelined,
+                samples,
+                &mut serving,
+                &ControllerConfig::default(),
+            )
+            .unwrap()
+        },
+    );
+    println!(
+        "monitored fail/replan overhead over plain fleet-sim: {:.2}x",
+        monitored.median.as_secs_f64() / fleet.median.as_secs_f64()
     );
 }

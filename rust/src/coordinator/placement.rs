@@ -363,6 +363,20 @@ impl Fleet {
         }
     }
 
+    /// Re-increment `name`'s device count (serving-time device recovery) —
+    /// the inverse of [`Fleet::decrement`], used by the re-planning
+    /// controller when a declared-dead device answers a re-admission
+    /// probe. Returns `false` when the class is unknown.
+    pub fn increment(&mut self, name: &str) -> bool {
+        match self.classes.iter_mut().find(|c| c.name == name) {
+            Some(c) => {
+                c.count += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Mutable access to a class by name (serving-time cap/speed updates).
     pub fn class_named_mut(&mut self, name: &str) -> Option<&mut DeviceClass> {
         self.classes.iter_mut().find(|c| c.name == name)
@@ -1075,6 +1089,24 @@ mod tests {
         assert!(!fleet.decrement("nope"));
         fleet.class_named_mut("cpu").unwrap().count = 3;
         assert_eq!(fleet.l(), 3);
+    }
+
+    #[test]
+    fn fleet_increment_models_device_recovery() {
+        let mut fleet = Fleet::parse("2xfast:16,1xcpu").unwrap();
+        assert!(fleet.decrement("fast"));
+        assert!(fleet.increment("fast"), "recovery restores the lost slot");
+        assert_eq!(fleet.k(), 2);
+        assert!(!fleet.increment("nope"));
+        // increment ∘ decrement is the identity on the parse/Display form
+        let spec = fleet.to_string();
+        assert!(fleet.decrement("fast") && fleet.increment("fast"));
+        assert_eq!(fleet.to_string(), spec);
+        // a fully drained class can be revived (count 0 → 1)
+        assert!(fleet.decrement("fast") && fleet.decrement("fast"));
+        assert_eq!(fleet.k(), 0);
+        assert!(fleet.increment("fast"));
+        assert_eq!(fleet.k(), 1);
     }
 
     #[test]

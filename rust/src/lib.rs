@@ -40,9 +40,13 @@
 //! * [`workloads`] — BERT, ResNet50, Inception-v3, GNMT generators and the
 //!   paper's JSON interchange format.
 //! * [`simx`] — fleet-aware discrete-event simulation: typed-event engine
-//!   (compute/transfer/fault/straggler/load-spike), live memory-occupancy
-//!   accounting, prediction-vs-simulation validation, and the
-//!   drift-driven re-planning loop (DESIGN.md §6).
+//!   (compute/transfer/fault/straggler/recovery/load-spike), live
+//!   memory-occupancy accounting, prediction-vs-simulation validation,
+//!   the drift-driven re-planning loop (DESIGN.md §6), and the serving
+//!   resilience layer — [`simx::controller`]'s hysteresis
+//!   re-plan/failover/shed ladder driven by [`runtime::health`]'s
+//!   drift-and-probe state machine, fuzzed by [`simx::chaos`] campaigns
+//!   (DESIGN.md §7).
 //! * [`pipeline`] — legacy uniform-scenario façade over the `simx` engine
 //!   (Figs. 2/5/7 schedules).
 //! * [`runtime`] + [`coordinator`] — PJRT stage executor and the pipelined

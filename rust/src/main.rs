@@ -6,6 +6,9 @@
 //! dnn-partition latency <wl>               # §7 latency planning
 //! dnn-partition simulate <wl|file.json> <alg> [n]   # fleet simulation + timeline
 //!     [--events "SCRIPT"] [--schedule POLICY] [--trace FILE] [--assert-improves]
+//!     [--monitor]
+//! dnn-partition chaos <wl|file.json> <alg>  # seeded chaos campaign
+//!     [--runs N] [--seed N] [--samples N] [--fleet "SPEC"]
 //! dnn-partition export <wl> <out.json>     # dump paper-format JSON
 //! dnn-partition partition-file <in.json> <alg>   # plan an external workload
 //! ```
@@ -54,12 +57,29 @@
 //! * `--assert-improves` — exit non-zero unless the re-planned
 //!   time-per-sample strictly beats the degraded no-replan fallback
 //!   (the CI smoke contract).
+//! * `--monitor` — run the script through the closed serving loop
+//!   instead of the open replay: a health monitor watches the trace and
+//!   a hysteresis controller walks the degradation ladder (re-plan in
+//!   place → decrement re-plan → CPU failover → shed). Prints the
+//!   verdict plus a JSON decision trace (`--trace FILE` redirects the
+//!   JSON to a file). Mutually exclusive with `--assert-improves`.
+//!
+//! ## Chaos campaigns (`chaos`)
+//!
+//! `chaos <wl> <alg>` fuzzes seeded fail/slow/recover/spike scripts
+//! through the monitored loop (`--runs`, `--seed`, `--samples` control
+//! the campaign; `--fleet` overrides the deployment) and checks the
+//! resilience invariants of DESIGN.md §7 on every run — liveness with
+//! classified shed causes, the hysteresis swap bound, near-oracle
+//! steady-state throughput. Exits non-zero on any violation.
 
 use dnn_partition::coordinator::context::SolveOpts;
 use dnn_partition::coordinator::placement::{AlgoChoice, Device, Fleet};
 use dnn_partition::coordinator::planner::{self, Algorithm};
 use dnn_partition::pipeline::sim::Schedule;
 use dnn_partition::runtime::server::ServingPlanner;
+use dnn_partition::simx::chaos::{ChaosCampaign, ChaosConfig};
+use dnn_partition::simx::controller::{self, ControllerConfig, MonitorOutcome, Verdict};
 use dnn_partition::simx::engine::{self as simx_engine, SimConfig, SimxResult};
 use dnn_partition::simx::event::{EventScript, ScriptAction};
 use dnn_partition::simx::loop_;
@@ -104,6 +124,10 @@ struct CliFlags {
     schedule: Option<Schedule>,
     trace: Option<String>,
     assert_improves: bool,
+    monitor: bool,
+    runs: Option<usize>,
+    seed: Option<u64>,
+    samples: Option<usize>,
 }
 
 /// Strip `--NAME VALUE` / `--NAME=VALUE` flags out of the argument list,
@@ -140,8 +164,20 @@ fn extract_flags(args: &[String]) -> Result<(Vec<String>, CliFlags), String> {
             );
         } else if let Some(path) = valued("trace", &mut i)? {
             flags.trace = Some(path);
+        } else if let Some(v) = valued("runs", &mut i)? {
+            flags.runs =
+                Some(v.parse().map_err(|_| format!("bad --runs: '{v}' is not a count"))?);
+        } else if let Some(v) = valued("seed", &mut i)? {
+            flags.seed =
+                Some(v.parse().map_err(|_| format!("bad --seed: '{v}' is not a u64"))?);
+        } else if let Some(v) = valued("samples", &mut i)? {
+            flags.samples = Some(
+                v.parse().map_err(|_| format!("bad --samples: '{v}' is not a count"))?,
+            );
         } else if a == "--assert-improves" {
             flags.assert_improves = true;
+        } else if a == "--monitor" {
+            flags.monitor = true;
         } else if a.starts_with("--") {
             // a misspelled flag must not silently become a positional
             return Err(format!("unknown flag {a}"));
@@ -169,17 +205,36 @@ fn run(raw_args: &[String]) -> i32 {
         && (flags.events.is_some()
             || flags.schedule.is_some()
             || flags.trace.is_some()
-            || flags.assert_improves)
+            || flags.assert_improves
+            || flags.monitor)
     {
         eprintln!(
-            "--events/--schedule/--trace/--assert-improves are only valid with `simulate`"
+            "--events/--schedule/--trace/--assert-improves/--monitor are only valid \
+             with `simulate`"
         );
         return 2;
     }
-    if flags.fleet.is_some()
-        && !matches!(cmd, Some("partition" | "simulate" | "latency" | "partition-file"))
+    if flags.monitor && flags.assert_improves {
+        // --assert-improves contracts the open-loop replan demo, which
+        // the closed loop replaces wholesale
+        eprintln!("--monitor and --assert-improves are mutually exclusive");
+        return 2;
+    }
+    if cmd != Some("chaos")
+        && (flags.runs.is_some() || flags.seed.is_some() || flags.samples.is_some())
     {
-        eprintln!("--fleet is only valid with partition/simulate/latency/partition-file");
+        eprintln!("--runs/--seed/--samples are only valid with `chaos`");
+        return 2;
+    }
+    if flags.fleet.is_some()
+        && !matches!(
+            cmd,
+            Some("partition" | "simulate" | "latency" | "partition-file" | "chaos")
+        )
+    {
+        eprintln!(
+            "--fleet is only valid with partition/simulate/latency/partition-file/chaos"
+        );
         return 2;
     }
     match args.first().map(String::as_str) {
@@ -308,7 +363,9 @@ fn run(raw_args: &[String]) -> i32 {
             let script = flags.events.clone().or(w.events.clone()).unwrap_or_default();
             for e in &script.events {
                 let dev = match e.action {
-                    ScriptAction::Fail { device } | ScriptAction::Slow { device, .. } => device,
+                    ScriptAction::Fail { device }
+                    | ScriptAction::Slow { device, .. }
+                    | ScriptAction::Recover { device } => device,
                     ScriptAction::Spike { .. } => continue,
                 };
                 let in_range = match dev {
@@ -319,6 +376,71 @@ fn run(raw_args: &[String]) -> i32 {
                     eprintln!("bad --events: {dev} is outside the deployment");
                     return 2;
                 }
+            }
+            if flags.monitor {
+                // closed loop: health monitor + hysteresis controller
+                // instead of the open replay + one-shot replan demo
+                let opts = SolveOpts {
+                    ip_budget: Duration::from_secs(10),
+                    expert: w.expert,
+                    ..SolveOpts::default()
+                };
+                let mut serving = ServingPlanner::new(alg, opts);
+                let loop_req = req.clone().algorithm(AlgoChoice::Fixed(alg));
+                let out = match controller::run_monitored(
+                    &w.graph,
+                    &loop_req,
+                    &script,
+                    schedule,
+                    n,
+                    &mut serving,
+                    &ControllerConfig::default(),
+                ) {
+                    Ok(out) => out,
+                    Err(e) => {
+                        eprintln!("monitored run failed: {e}");
+                        return 1;
+                    }
+                };
+                let verdict = match &out.verdict {
+                    Verdict::Completed => "completed".to_string(),
+                    Verdict::Shed(cause) => format!("shed ({cause})"),
+                };
+                println!(
+                    "{} {:?} [{schedule}] monitored: {verdict}; {}/{} samples \
+                     completed, {} shed; {} plan swap(s) over {} epoch(s); \
+                     final steady time-per-sample {:.2}",
+                    w.name,
+                    alg,
+                    out.completed,
+                    out.injected,
+                    out.shed,
+                    out.plan_swaps,
+                    out.epochs,
+                    out.final_steady_tps
+                );
+                for d in &out.decisions {
+                    println!(
+                        "  t={:<8.2} {} -> {} [{}] {}",
+                        d.t,
+                        d.trigger,
+                        d.action,
+                        if d.accepted { "accepted" } else { "rejected" },
+                        d.reason
+                    );
+                }
+                let json = monitor_to_json(&w, alg, schedule, &out);
+                match &flags.trace {
+                    Some(path) => {
+                        if std::fs::write(path, json.to_string_pretty()).is_err() {
+                            eprintln!("cannot write {path}");
+                            return 1;
+                        }
+                        println!("decision trace written to {path}");
+                    }
+                    None => println!("{}", json.to_string_pretty()),
+                }
+                return i32::from(out.verdict != Verdict::Completed);
             }
             // fleet runs model the interconnect as a link resource; the
             // plain scalar path keeps the §3-exact regime the printed
@@ -409,6 +531,78 @@ fn run(raw_args: &[String]) -> i32 {
             }
             0
         }
+        Some("chaos") if args.len() >= 3 => {
+            let mut w = match find_workload(&args[1]) {
+                Some(w) => w,
+                None => match load_workload_file(&args[1]) {
+                    Ok(Some(w)) => w,
+                    Ok(None) => {
+                        eprintln!("unknown workload {}", args[1]);
+                        return 2;
+                    }
+                    Err(e) => {
+                        eprintln!("bad workload file {}: {e}", args[1]);
+                        return 2;
+                    }
+                },
+            };
+            w.fleet = fleet.clone().or(w.fleet);
+            let Some(alg) = Algorithm::parse(&args[2]) else {
+                eprintln!("unknown algorithm {}", args[2]);
+                return 2;
+            };
+            let req = w.request().algorithm(AlgoChoice::Fixed(alg));
+            let mut cfg = ChaosConfig::default();
+            if let Some(runs) = flags.runs {
+                cfg.runs = runs;
+            }
+            if let Some(seed) = flags.seed {
+                cfg.seed = seed;
+            }
+            if let Some(samples) = flags.samples {
+                cfg.samples_min = samples;
+                cfg.samples_max = samples;
+            }
+            let opts = SolveOpts {
+                ip_budget: Duration::from_secs(10),
+                expert: w.expert,
+                ..SolveOpts::default()
+            };
+            let mut serving = ServingPlanner::new(alg, opts);
+            let camp = ChaosCampaign::new(&w.graph, &req, cfg);
+            let report = camp.run(&mut serving);
+            println!(
+                "{} {:?} chaos: {} run(s) from seed {:#x} — {} completed, {} shed",
+                w.name,
+                alg,
+                report.runs.len(),
+                camp.cfg.seed,
+                report.completed_runs,
+                report.shed_runs
+            );
+            for (cause, count) in &report.shed_by_cause {
+                println!("  shed by {cause}: {count}");
+            }
+            let swaps: usize = report.runs.iter().map(|r| r.plan_swaps).sum();
+            let checked = report.runs.iter().filter(|r| r.oracle_ratio.is_some()).count();
+            println!(
+                "  {} plan swap(s) total; oracle invariant checked on {} run(s)",
+                swaps, checked
+            );
+            match report.ok() {
+                Ok(()) => {
+                    println!("all invariants held");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("chaos invariants violated: {e}");
+                    for v in &report.violations {
+                        eprintln!("  {v}");
+                    }
+                    1
+                }
+            }
+        }
         Some("export") if args.len() >= 3 => {
             let Some(w) = find_workload(&args[1]) else {
                 eprintln!("unknown workload {}", args[1]);
@@ -460,7 +654,7 @@ fn run(raw_args: &[String]) -> i32 {
         }
         _ => {
             eprintln!(
-                "usage: dnn-partition <list|partition|latency|simulate|export|partition-file> …\n\
+                "usage: dnn-partition <list|partition|latency|simulate|chaos|export|partition-file> …\n\
                  see `cargo doc` or README.md for details"
             );
             2
@@ -497,6 +691,70 @@ fn cli_key(w: &Workload) -> String {
         ("GNMT", _) => "gnmt".into(),
         _ => w.name.to_lowercase(),
     }
+}
+
+/// The `simulate --monitor` JSON decision trace: verdict, counters, and
+/// every controller decision / health transition with timestamps.
+fn monitor_to_json(
+    w: &Workload,
+    alg: Algorithm,
+    schedule: Schedule,
+    out: &MonitorOutcome,
+) -> Json {
+    let decisions: Vec<Json> = out
+        .decisions
+        .iter()
+        .map(|d| {
+            Json::obj(vec![
+                ("t", Json::num(d.t)),
+                ("trigger", Json::str(d.trigger.clone())),
+                ("action", Json::str(d.action.clone())),
+                ("accepted", Json::Bool(d.accepted)),
+                ("reason", Json::str(d.reason.clone())),
+                ("predictedBefore", Json::num(d.predicted_before)),
+                ("predictedAfter", Json::num(d.predicted_after)),
+                ("swapsSoFar", Json::num(d.swaps_so_far as f64)),
+            ])
+        })
+        .collect();
+    let transitions: Vec<Json> = out
+        .transitions
+        .iter()
+        .map(|tr| {
+            Json::obj(vec![
+                ("t", Json::num(tr.t)),
+                ("device", Json::num(tr.dev as f64)),
+                ("from", Json::str(tr.from.to_string())),
+                ("to", Json::str(tr.to.to_string())),
+                ("why", Json::str(tr.why.clone())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("workload", Json::str(w.name.clone())),
+        ("algorithm", Json::str(alg.name())),
+        ("schedule", Json::str(schedule.name())),
+        ("fleet", Json::str(out.final_request.fleet.to_string())),
+        (
+            "verdict",
+            Json::str(match &out.verdict {
+                Verdict::Completed => "completed".to_string(),
+                Verdict::Shed(cause) => format!("shed:{cause}"),
+            }),
+        ),
+        ("injected", Json::num(out.injected as f64)),
+        ("completed", Json::num(out.completed as f64)),
+        ("shed", Json::num(out.shed as f64)),
+        ("makespan", Json::num(out.makespan)),
+        ("finalSteadyTps", Json::num(out.final_steady_tps)),
+        ("planSwaps", Json::num(out.plan_swaps as f64)),
+        ("swapTimes", Json::Arr(out.swap_times.iter().map(|&t| Json::num(t)).collect())),
+        ("epochs", Json::num(out.epochs as f64)),
+        ("timeUnit", Json::num(out.time_unit)),
+        ("cooldown", Json::num(out.cooldown)),
+        ("decisions", Json::Arr(decisions)),
+        ("transitions", Json::Arr(transitions)),
+    ])
 }
 
 /// Serialize a simulation run (tasks, transfers, memory peaks, stall

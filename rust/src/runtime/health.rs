@@ -1,0 +1,711 @@
+//! Device health monitoring: observed-vs-predicted drift detection.
+//!
+//! The cost model predicts what every stage *should* cost
+//! ([`crate::algos::objective::DeviceLoads`] per-device loads, piece costs
+//! in the `simx` engine); the serving loop observes what stages *actually*
+//! cost (task service times in a [`crate::simx::engine::SimxResult`]
+//! trace, per-stage service samples in
+//! [`crate::runtime::server::Metrics`]). The [`HealthMonitor`] consumes
+//! both, maintains a per-device EWMA of the **drift ratio**
+//! `observed / predicted`, and drives a per-device state machine:
+//!
+//! ```text
+//!            drift ≥ suspect_ratio            probe ok, drift high
+//! Healthy ─────────────────────────► Suspect ─────────────────────► Degraded
+//!    ▲     (or silence_timeout with     │                              │
+//!    │      work outstanding)           │ probe timeout × max_probes   │ drift ≤
+//!    │                                  ▼   (exponential backoff)      │ clear_ratio
+//!    │◄────────────────────────────── Dead ◄──────────────────────────┘
+//!         probe answered / task completed (re-admission)
+//! ```
+//!
+//! The asymmetry is deliberate: a **straggler must not be treated as a
+//! loss**. A slow device still completes tasks and still answers probes,
+//! so it settles in `Degraded` (the re-planning controller re-costs it);
+//! only a device that stays silent through the full probe ladder —
+//! `max_probe_attempts` probes, each waiting `probe_timeout · backoffⁱ` —
+//! is declared `Dead` (the controller decrements it from the fleet). A
+//! dead device keeps being re-probed at a capped interval so recovered
+//! capacity is re-admitted ([`crate::coordinator::placement::Fleet::increment`]).
+//!
+//! The monitor is pure state + f64 timestamps: the simulation controller
+//! ([`crate::simx::controller`]) drives it with virtual time and answers
+//! probes from the scripted ground truth; a live server drives it with
+//! wall-clock seconds and real RPCs. Neither the engine nor PJRT is
+//! referenced here.
+
+/// Health states, ordered by severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceHealth {
+    /// Observed service times agree with the cost model.
+    Healthy,
+    /// Drift or silence detected; probes in flight to distinguish a
+    /// straggler from a loss.
+    Suspect,
+    /// Alive but drifted: completes work and answers probes slowly. The
+    /// controller's re-cost rung reacts to this state.
+    Degraded,
+    /// The full probe ladder timed out. The controller's decrement rung
+    /// reacts to this state; re-admission probes continue.
+    Dead,
+}
+
+impl std::fmt::Display for DeviceHealth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            DeviceHealth::Healthy => "healthy",
+            DeviceHealth::Suspect => "suspect",
+            DeviceHealth::Degraded => "degraded",
+            DeviceHealth::Dead => "dead",
+        })
+    }
+}
+
+/// Monitor thresholds. All time fields share the caller's time unit
+/// (virtual simulation time for the controller, seconds for a live
+/// server); [`HealthConfig::scaled`] rescales them in one call.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// EWMA smoothing factor for the drift ratio (weight of the newest
+    /// observation).
+    pub ewma_alpha: f64,
+    /// Drift EWMA at or above this marks a device `Suspect` (and, once a
+    /// probe confirms it is alive, `Degraded`).
+    pub suspect_ratio: f64,
+    /// Drift EWMA at or below this clears `Degraded` back to `Healthy`
+    /// (strictly below [`HealthConfig::suspect_ratio`]: the gap is the
+    /// anti-flap band).
+    pub clear_ratio: f64,
+    /// Observations before drift alone may trigger (single-sample noise
+    /// guard).
+    pub min_obs: u32,
+    /// No completion for this long while work is outstanding marks the
+    /// device `Suspect`.
+    pub silence_timeout: f64,
+    /// Base probe response timeout; attempt `i` waits
+    /// `probe_timeout · probe_backoff^i`.
+    pub probe_timeout: f64,
+    /// Exponential backoff factor between probe attempts.
+    pub probe_backoff: f64,
+    /// Unanswered probes before `Suspect` becomes `Dead`.
+    pub max_probe_attempts: u32,
+    /// Re-admission probe interval for `Dead` devices (capped — no
+    /// unbounded backoff once dead).
+    pub reprobe_dead_every: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig {
+            ewma_alpha: 0.5,
+            suspect_ratio: 1.5,
+            clear_ratio: 1.2,
+            min_obs: 2,
+            silence_timeout: 8.0,
+            probe_timeout: 2.0,
+            probe_backoff: 2.0,
+            max_probe_attempts: 3,
+            reprobe_dead_every: 8.0,
+        }
+    }
+}
+
+impl HealthConfig {
+    /// Multiply every time-dimensioned field by `unit` (ratios and counts
+    /// are dimensionless and stay put). The controller scales by the
+    /// plan's predicted time-per-sample so the defaults mean "a handful
+    /// of pipeline beats" on any workload.
+    pub fn scaled(mut self, unit: f64) -> HealthConfig {
+        self.silence_timeout *= unit;
+        self.probe_timeout *= unit;
+        self.reprobe_dead_every *= unit;
+        self
+    }
+
+    /// Worst-case time from silence onset to a `Dead` declaration: the
+    /// silence window plus the full probe ladder. The controller uses
+    /// this to bound its detection scan.
+    pub fn detection_bound(&self) -> f64 {
+        let mut ladder = 0.0;
+        for i in 0..self.max_probe_attempts {
+            ladder += self.probe_timeout * self.probe_backoff.powi(i as i32);
+        }
+        self.silence_timeout + ladder
+    }
+}
+
+/// One recorded state-machine transition (the decision trace's raw
+/// material).
+#[derive(Clone, Debug)]
+pub struct HealthTransition {
+    pub t: f64,
+    /// Dense device index at the time of the transition.
+    pub dev: usize,
+    pub from: DeviceHealth,
+    pub to: DeviceHealth,
+    /// Human-readable cause, e.g. `"drift 2.10x"` or `"3 probes timed out"`.
+    pub why: String,
+}
+
+impl HealthTransition {
+    /// Transitions the re-planning controller reacts to: a confirmed
+    /// degradation, a declared death, or a recovery (re-admission).
+    pub fn actionable(&self) -> bool {
+        matches!(self.to, DeviceHealth::Dead | DeviceHealth::Degraded)
+            || (matches!(self.from, DeviceHealth::Dead | DeviceHealth::Degraded)
+                && self.to == DeviceHealth::Healthy)
+    }
+}
+
+/// What the monitor waits for on a device.
+#[derive(Clone, Copy, Debug)]
+enum Waiting {
+    /// Next silence check (`Healthy`/`Degraded` with work outstanding).
+    Silence,
+    /// A probe response (attempt index, for the backoff ladder).
+    ProbeResponse { attempt: u32 },
+    /// Next re-admission probe of a `Dead` device.
+    Reprobe,
+}
+
+#[derive(Clone, Debug)]
+struct DevHealth {
+    state: DeviceHealth,
+    /// EWMA of `observed / predicted` service time; 1.0 = on-model.
+    ewma: f64,
+    obs: u32,
+    last_heard: f64,
+    busy: bool,
+    busy_since: f64,
+    deadline: Option<(f64, Waiting)>,
+}
+
+impl DevHealth {
+    fn fresh() -> DevHealth {
+        DevHealth {
+            state: DeviceHealth::Healthy,
+            ewma: 1.0,
+            obs: 0,
+            last_heard: 0.0,
+            busy: false,
+            busy_since: 0.0,
+            deadline: None,
+        }
+    }
+}
+
+/// Probes the monitor wants sent now, plus the transitions the advance
+/// caused.
+#[derive(Debug, Default)]
+pub struct AdvanceResult {
+    /// Dense device indices to probe at the advanced-to time. The caller
+    /// answers an alive device with [`HealthMonitor::probe_ok`];
+    /// non-answers time out via the next [`HealthMonitor::advance`].
+    pub probes: Vec<usize>,
+    pub transitions: Vec<HealthTransition>,
+}
+
+/// Per-device drift/health tracking over a dense device index space (the
+/// same `acc 0..k, cpu k..k+ℓ` layout the engine and the evaluators use).
+#[derive(Clone, Debug)]
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    devs: Vec<DevHealth>,
+    log: Vec<HealthTransition>,
+}
+
+impl HealthMonitor {
+    pub fn new(num_devices: usize, cfg: HealthConfig) -> HealthMonitor {
+        assert!(
+            cfg.clear_ratio < cfg.suspect_ratio,
+            "clear_ratio must sit below suspect_ratio (anti-flap band)"
+        );
+        HealthMonitor { cfg, devs: vec![DevHealth::fresh(); num_devices], log: Vec::new() }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devs.len()
+    }
+
+    pub fn state(&self, dev: usize) -> DeviceHealth {
+        self.devs[dev].state
+    }
+
+    /// Current drift EWMA (`observed / predicted`; 1.0 = on-model).
+    pub fn drift(&self, dev: usize) -> f64 {
+        self.devs[dev].ewma
+    }
+
+    /// All `Degraded` devices with their drift — the re-cost rung's input.
+    pub fn degraded(&self) -> Vec<(usize, f64)> {
+        self.devs
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.state == DeviceHealth::Degraded)
+            .map(|(i, d)| (i, d.ewma))
+            .collect()
+    }
+
+    /// Every transition recorded so far (the decision trace feeds on
+    /// this).
+    pub fn transitions(&self) -> &[HealthTransition] {
+        &self.log
+    }
+
+    /// Drop a device's slot (fleet decrement): later indices shift down
+    /// by one, mirroring the dense-index remap of
+    /// [`crate::coordinator::placement::Fleet::decrement`].
+    pub fn remove_device(&mut self, dev: usize) {
+        self.devs.remove(dev);
+    }
+
+    /// Insert a fresh `Healthy` slot at `dev` (fleet re-increment on
+    /// recovery): later indices shift up by one.
+    pub fn insert_device(&mut self, dev: usize) {
+        self.devs.insert(dev, DevHealth::fresh());
+    }
+
+    /// The device has outstanding work from `t` on — silence detection
+    /// arms against `max(busy_since, last completion)`.
+    pub fn note_busy(&mut self, dev: usize, t: f64) {
+        let d = &mut self.devs[dev];
+        if !d.busy {
+            d.busy = true;
+            d.busy_since = t;
+        }
+        if d.deadline.is_none()
+            && matches!(d.state, DeviceHealth::Healthy | DeviceHealth::Degraded)
+        {
+            d.deadline =
+                Some((d.last_heard.max(d.busy_since) + self.cfg.silence_timeout, Waiting::Silence));
+        }
+    }
+
+    /// No more outstanding work anywhere (end of a drained run): disarm
+    /// silence checks so an idle device is not probed forever. Probe
+    /// ladders in flight keep running.
+    pub fn clear_busy_all(&mut self) {
+        for d in &mut self.devs {
+            d.busy = false;
+            if matches!(d.deadline, Some((_, Waiting::Silence))) {
+                d.deadline = None;
+            }
+        }
+    }
+
+    fn transition(
+        log: &mut Vec<HealthTransition>,
+        dev: usize,
+        d: &mut DevHealth,
+        t: f64,
+        to: DeviceHealth,
+        why: String,
+    ) -> HealthTransition {
+        let tr = HealthTransition { t, dev, from: d.state, to, why };
+        d.state = to;
+        log.push(tr.clone());
+        tr
+    }
+
+    /// One observed service time against its prediction. Returns the
+    /// transition it caused, if any. A completion is also liveness
+    /// evidence: it clears probe ladders and re-arms silence detection.
+    pub fn observe(
+        &mut self,
+        dev: usize,
+        t: f64,
+        observed: f64,
+        predicted: f64,
+    ) -> Option<HealthTransition> {
+        if !(predicted > 1e-12 && observed.is_finite() && observed >= 0.0) {
+            return None;
+        }
+        let cfg = self.cfg;
+        let d = &mut self.devs[dev];
+        let ratio = observed / predicted;
+        d.ewma = cfg.ewma_alpha * ratio + (1.0 - cfg.ewma_alpha) * d.ewma;
+        d.obs += 1;
+        d.last_heard = t;
+        let mut out = None;
+        match d.state {
+            DeviceHealth::Healthy => {
+                if d.obs >= cfg.min_obs && d.ewma >= cfg.suspect_ratio {
+                    // the completion itself proves liveness, so the probe
+                    // round-trip is already answered: straight to Degraded
+                    out = Some(Self::transition(
+                        &mut self.log,
+                        dev,
+                        d,
+                        t,
+                        DeviceHealth::Degraded,
+                        format!("drift {:.2}x", d.ewma),
+                    ));
+                }
+            }
+            DeviceHealth::Suspect => {
+                // completing work is the evidence the probes were after
+                let (to, why) = if d.ewma >= cfg.suspect_ratio {
+                    (DeviceHealth::Degraded, format!("completed while drifted {:.2}x", d.ewma))
+                } else {
+                    (DeviceHealth::Healthy, "completed on-model".to_string())
+                };
+                d.deadline = None;
+                out = Some(Self::transition(&mut self.log, dev, d, t, to, why));
+            }
+            DeviceHealth::Degraded => {
+                if d.ewma <= cfg.clear_ratio {
+                    out = Some(Self::transition(
+                        &mut self.log,
+                        dev,
+                        d,
+                        t,
+                        DeviceHealth::Healthy,
+                        format!("drift cleared to {:.2}x", d.ewma),
+                    ));
+                }
+            }
+            DeviceHealth::Dead => {
+                // a completion from a declared-dead device: it recovered
+                d.deadline = None;
+                d.ewma = ratio;
+                out = Some(Self::transition(
+                    &mut self.log,
+                    dev,
+                    d,
+                    t,
+                    DeviceHealth::Healthy,
+                    "completed after being declared dead".to_string(),
+                ));
+            }
+        }
+        // re-arm silence detection against the fresh completion
+        if d.busy
+            && matches!(d.state, DeviceHealth::Healthy | DeviceHealth::Degraded)
+            && !matches!(d.deadline, Some((_, Waiting::ProbeResponse { .. })))
+        {
+            d.deadline = Some((t + cfg.silence_timeout, Waiting::Silence));
+        }
+        out
+    }
+
+    /// The earliest pending deadline (silence check, probe timeout or
+    /// re-admission probe) across all devices.
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.devs
+            .iter()
+            .filter_map(|d| d.deadline.map(|(t, _)| t))
+            .min_by(f64::total_cmp)
+    }
+
+    /// Advance the monitor's clock to `t`, firing every deadline at or
+    /// before it: silence checks escalate to `Suspect` + a probe, probe
+    /// timeouts retry with exponential backoff and eventually declare
+    /// `Dead`, and dead devices get periodic re-admission probes.
+    pub fn advance(&mut self, t: f64) -> AdvanceResult {
+        let cfg = self.cfg;
+        let mut res = AdvanceResult::default();
+        // deadlines can cascade (a probe timing out arms the next); loop
+        // until none is due
+        loop {
+            let mut fired = false;
+            for dev in 0..self.devs.len() {
+                let Some((due, waiting)) = self.devs[dev].deadline else { continue };
+                if due > t + 1e-12 {
+                    continue;
+                }
+                fired = true;
+                let d = &mut self.devs[dev];
+                match waiting {
+                    Waiting::Silence => {
+                        let quiet_since = d.last_heard.max(d.busy_since);
+                        if d.busy && due - quiet_since >= cfg.silence_timeout - 1e-9 {
+                            let why = format!(
+                                "silent for {:.2} with work outstanding",
+                                due - quiet_since
+                            );
+                            res.transitions.push(Self::transition(
+                                &mut self.log,
+                                dev,
+                                d,
+                                due,
+                                DeviceHealth::Suspect,
+                                why,
+                            ));
+                            d.deadline = Some((
+                                due + cfg.probe_timeout,
+                                Waiting::ProbeResponse { attempt: 0 },
+                            ));
+                            res.probes.push(dev);
+                        } else if d.busy {
+                            // heard from since the deadline was armed
+                            d.deadline =
+                                Some((quiet_since + cfg.silence_timeout, Waiting::Silence));
+                        } else {
+                            d.deadline = None;
+                        }
+                    }
+                    Waiting::ProbeResponse { attempt } => {
+                        if attempt + 1 >= cfg.max_probe_attempts {
+                            let why = format!(
+                                "{} probes timed out (backoff {}x)",
+                                cfg.max_probe_attempts, cfg.probe_backoff
+                            );
+                            res.transitions.push(Self::transition(
+                                &mut self.log,
+                                dev,
+                                d,
+                                due,
+                                DeviceHealth::Dead,
+                                why,
+                            ));
+                            d.deadline = Some((due + cfg.reprobe_dead_every, Waiting::Reprobe));
+                        } else {
+                            let next = attempt + 1;
+                            d.deadline = Some((
+                                due + cfg.probe_timeout * cfg.probe_backoff.powi(next as i32),
+                                Waiting::ProbeResponse { attempt: next },
+                            ));
+                            res.probes.push(dev);
+                        }
+                    }
+                    Waiting::Reprobe => {
+                        d.deadline = Some((due + cfg.reprobe_dead_every, Waiting::Reprobe));
+                        res.probes.push(dev);
+                    }
+                }
+            }
+            if !fired {
+                break;
+            }
+        }
+        res
+    }
+
+    /// A probe of `dev` was answered at `t` (the device is alive). From
+    /// `Suspect` this resolves the straggler-vs-loss question; from
+    /// `Dead` it re-admits the device.
+    pub fn probe_ok(&mut self, dev: usize, t: f64) -> Option<HealthTransition> {
+        let cfg = self.cfg;
+        let d = &mut self.devs[dev];
+        d.last_heard = t;
+        let out = match d.state {
+            DeviceHealth::Suspect => {
+                let (to, why) = if d.obs >= cfg.min_obs && d.ewma >= cfg.suspect_ratio {
+                    (DeviceHealth::Degraded, format!("probe ok, drift {:.2}x", d.ewma))
+                } else {
+                    (DeviceHealth::Healthy, "probe ok".to_string())
+                };
+                Some(Self::transition(&mut self.log, dev, d, t, to, why))
+            }
+            DeviceHealth::Dead => {
+                d.ewma = 1.0;
+                d.obs = 0;
+                Some(Self::transition(
+                    &mut self.log,
+                    dev,
+                    d,
+                    t,
+                    DeviceHealth::Healthy,
+                    "re-admission probe answered".to_string(),
+                ))
+            }
+            _ => None,
+        };
+        let d = &mut self.devs[dev];
+        d.deadline = if d.busy
+            && matches!(d.state, DeviceHealth::Healthy | DeviceHealth::Degraded)
+        {
+            Some((t + cfg.silence_timeout, Waiting::Silence))
+        } else {
+            None
+        };
+        out
+    }
+
+    /// Feed per-stage service-time samples from the serving loop's
+    /// [`crate::runtime::server::Metrics`]: `stage_dev[s]` is stage `s`'s
+    /// dense device index and `predicted_ms[s]` its cost-model service
+    /// time. Samples are replayed in order at timestamp `t` (wall
+    /// spacing within one metrics scrape is below the monitor's time
+    /// resolution). Returns the transitions caused.
+    pub fn ingest_stage_samples(
+        &mut self,
+        stage_dev: &[usize],
+        stage_service_ms: &[Vec<f64>],
+        predicted_ms: &[f64],
+        t: f64,
+    ) -> Vec<HealthTransition> {
+        let mut out = Vec::new();
+        for (s, samples) in stage_service_ms.iter().enumerate() {
+            let (Some(&dev), Some(&pred)) = (stage_dev.get(s), predicted_ms.get(s)) else {
+                continue;
+            };
+            for &ms in samples {
+                if let Some(tr) = self.observe(dev, t, ms, pred) {
+                    out.push(tr);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig::default()
+    }
+
+    #[test]
+    fn on_model_observations_stay_healthy() {
+        let mut m = HealthMonitor::new(2, cfg());
+        for i in 0..10 {
+            assert!(m.observe(0, i as f64, 1.0, 1.0).is_none());
+        }
+        assert_eq!(m.state(0), DeviceHealth::Healthy);
+        assert!((m.drift(0) - 1.0).abs() < 1e-12);
+        assert!(m.transitions().is_empty());
+    }
+
+    #[test]
+    fn sustained_drift_degrades_but_never_kills() {
+        let mut m = HealthMonitor::new(1, cfg());
+        // 2x drift: first observation is guarded by min_obs, the second
+        // pushes the EWMA over the suspect ratio
+        assert!(m.observe(0, 0.0, 2.0, 1.0).is_none());
+        let tr = m.observe(0, 1.0, 2.0, 1.0).expect("transition");
+        assert_eq!(tr.to, DeviceHealth::Degraded);
+        assert_eq!(m.state(0), DeviceHealth::Degraded);
+        // a straggler keeps completing: state stays Degraded, never Dead
+        for i in 2..20 {
+            m.observe(0, i as f64, 2.0, 1.0);
+        }
+        assert_eq!(m.state(0), DeviceHealth::Degraded);
+    }
+
+    #[test]
+    fn drift_clears_back_to_healthy_with_hysteresis_band() {
+        let mut m = HealthMonitor::new(1, cfg());
+        m.observe(0, 0.0, 2.0, 1.0);
+        m.observe(0, 1.0, 2.0, 1.0);
+        assert_eq!(m.state(0), DeviceHealth::Degraded);
+        // recovery: ratios back to 1.0 decay the EWMA below clear_ratio
+        let mut t = 2.0;
+        while m.state(0) == DeviceHealth::Degraded {
+            m.observe(0, t, 1.0, 1.0);
+            t += 1.0;
+            assert!(t < 32.0, "EWMA must decay below clear_ratio");
+        }
+        assert_eq!(m.state(0), DeviceHealth::Healthy);
+        let last = m.transitions().last().unwrap();
+        assert_eq!(last.from, DeviceHealth::Degraded);
+        assert_eq!(last.to, DeviceHealth::Healthy);
+    }
+
+    #[test]
+    fn silence_probes_then_declares_dead_with_backoff() {
+        let c = cfg();
+        let mut m = HealthMonitor::new(1, c);
+        m.observe(0, 0.0, 1.0, 1.0);
+        m.note_busy(0, 0.0);
+        // silence deadline at last_heard + silence_timeout
+        let t_sil = 0.0 + c.silence_timeout;
+        assert_eq!(m.next_deadline(), Some(t_sil));
+        let r = m.advance(t_sil);
+        assert_eq!(r.probes, vec![0]);
+        assert_eq!(m.state(0), DeviceHealth::Suspect);
+        // never answer: the ladder is timeout·(1 + backoff + backoff²)
+        let ladder: f64 = (0..c.max_probe_attempts)
+            .map(|i| c.probe_timeout * c.probe_backoff.powi(i as i32))
+            .sum();
+        let r = m.advance(t_sil + ladder + 1e-9);
+        assert_eq!(m.state(0), DeviceHealth::Dead);
+        assert!(r.transitions.iter().any(|tr| tr.to == DeviceHealth::Dead));
+        // detection_bound covers silence + ladder
+        assert!(c.detection_bound() >= c.silence_timeout + ladder - 1e-9);
+        // dead devices keep getting re-admission probes
+        let r = m.advance(t_sil + ladder + c.reprobe_dead_every + 1e-6);
+        assert_eq!(r.probes, vec![0]);
+    }
+
+    #[test]
+    fn straggler_answers_probe_and_lands_degraded_not_dead() {
+        let c = cfg();
+        let mut m = HealthMonitor::new(1, c);
+        // drifted history, then silence (a very slow task in flight)
+        m.observe(0, 0.0, 2.0, 1.0);
+        m.observe(0, 1.0, 2.0, 1.0);
+        assert_eq!(m.state(0), DeviceHealth::Degraded);
+        m.note_busy(0, 1.0);
+        let t_sil = 1.0 + c.silence_timeout;
+        let r = m.advance(t_sil);
+        assert_eq!(r.probes, vec![0]);
+        assert_eq!(m.state(0), DeviceHealth::Suspect);
+        // the device answers: straggler, not loss
+        let tr = m.probe_ok(0, t_sil + 0.5).expect("transition");
+        assert_eq!(tr.to, DeviceHealth::Degraded);
+        assert!(tr.actionable());
+    }
+
+    #[test]
+    fn dead_device_readmitted_on_probe_answer() {
+        let c = cfg();
+        let mut m = HealthMonitor::new(1, c);
+        m.note_busy(0, 0.0);
+        m.advance(c.silence_timeout + c.detection_bound());
+        assert_eq!(m.state(0), DeviceHealth::Dead);
+        let tr = m.probe_ok(0, 100.0).expect("transition");
+        assert_eq!(tr.from, DeviceHealth::Dead);
+        assert_eq!(tr.to, DeviceHealth::Healthy);
+        assert!(tr.actionable());
+        assert!((m.drift(0) - 1.0).abs() < 1e-12, "drift resets on re-admission");
+    }
+
+    #[test]
+    fn remove_and_insert_shift_slots() {
+        let mut m = HealthMonitor::new(3, cfg());
+        m.observe(1, 0.0, 2.0, 1.0);
+        m.observe(1, 1.0, 2.0, 1.0);
+        assert_eq!(m.state(1), DeviceHealth::Degraded);
+        m.remove_device(0);
+        assert_eq!(m.num_devices(), 2);
+        assert_eq!(m.state(0), DeviceHealth::Degraded, "slot 1 shifted down to 0");
+        m.insert_device(0);
+        assert_eq!(m.state(0), DeviceHealth::Healthy, "fresh slot");
+        assert_eq!(m.state(1), DeviceHealth::Degraded, "shifted back up");
+    }
+
+    #[test]
+    fn clear_busy_disarms_silence_but_not_probe_ladders() {
+        let c = cfg();
+        let mut m = HealthMonitor::new(2, c);
+        m.note_busy(0, 0.0);
+        m.note_busy(1, 0.0);
+        // device 1 already escalated to a probe ladder
+        m.advance(c.silence_timeout);
+        assert_eq!(m.state(1), DeviceHealth::Suspect);
+        m.clear_busy_all();
+        // device 0 was also suspect (same silence deadline) — both keep
+        // their probe ladders; no *new* silence deadlines exist
+        let next = m.next_deadline().expect("probe timeouts pending");
+        assert!(next > c.silence_timeout);
+        // the ladders still run to completion
+        m.advance(c.silence_timeout + c.detection_bound());
+        assert_eq!(m.state(0), DeviceHealth::Dead);
+        assert_eq!(m.state(1), DeviceHealth::Dead);
+    }
+
+    #[test]
+    fn ingest_stage_samples_maps_stages_to_devices() {
+        let mut m = HealthMonitor::new(2, cfg());
+        let stage_dev = vec![0, 1];
+        let samples = vec![vec![1.0, 1.0, 1.0], vec![2.1, 2.0, 2.2]];
+        let predicted = vec![1.0, 1.0];
+        let trs = m.ingest_stage_samples(&stage_dev, &samples, &predicted, 5.0);
+        assert_eq!(m.state(0), DeviceHealth::Healthy);
+        assert_eq!(m.state(1), DeviceHealth::Degraded);
+        assert!(trs.iter().any(|t| t.dev == 1 && t.to == DeviceHealth::Degraded));
+    }
+}

@@ -8,9 +8,15 @@
 //!   connected by channels, a dynamic batcher, and latency/throughput
 //!   metrics. (The offline build has no tokio; OS threads + mpsc channels
 //!   implement the same dataflow.)
+//! * [`health`] — observed-vs-predicted drift detection: per-device EWMA
+//!   drift ratios and the `Healthy → Suspect → Degraded → Dead` state
+//!   machine (probe retry + backoff) the re-planning controller
+//!   ([`crate::simx::controller`]) reacts to.
 
+pub mod health;
 pub mod pjrt_stub;
 pub mod server;
 pub mod stage;
 
+pub use health::{DeviceHealth, HealthConfig, HealthMonitor, HealthTransition};
 pub use stage::{Stage, StageError};

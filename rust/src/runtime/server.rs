@@ -35,19 +35,46 @@ struct Batch {
 pub struct Metrics {
     pub completed: usize,
     pub latencies_ms: Vec<f64>,
+    /// Per-stage service times (wall ms per batch execution, in
+    /// completion order) — the observed side of the drift detection
+    /// [`crate::runtime::health::HealthMonitor::ingest_stage_samples`]
+    /// runs against the cost model's predictions.
+    pub stage_service_ms: Vec<Vec<f64>>,
     pub started: Option<Instant>,
     pub finished: Option<Instant>,
 }
 
 impl Metrics {
+    /// The `p`-quantile of the request latencies (`0.0 ≤ p ≤ 1.0`;
+    /// anything else — including NaN — returns `NaN` rather than
+    /// clamping to a silently wrong answer). O(n) selection, no sort.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.latencies_ms.is_empty() {
+        if self.latencies_ms.is_empty() || !(0.0..=1.0).contains(&p) {
             return f64::NAN;
         }
         let mut v = self.latencies_ms.clone();
-        v.sort_by(f64::total_cmp);
         let i = ((v.len() as f64 - 1.0) * p).round() as usize;
-        v[i]
+        let (_, x, _) = v.select_nth_unstable_by(i, f64::total_cmp);
+        *x
+    }
+
+    /// Several quantiles in one pass: sorts the latency vector once
+    /// instead of selecting per call. Out-of-range entries map to `NaN`
+    /// like [`Metrics::percentile`].
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        if self.latencies_ms.is_empty() {
+            return vec![f64::NAN; ps.len()];
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(f64::total_cmp);
+        ps.iter()
+            .map(|&p| {
+                if !(0.0..=1.0).contains(&p) {
+                    return f64::NAN;
+                }
+                v[((v.len() as f64 - 1.0) * p).round() as usize]
+            })
+            .collect()
     }
 
     pub fn throughput_per_s(&self) -> f64 {
@@ -97,6 +124,7 @@ where
 {
     let metrics = Arc::new(Mutex::new(Metrics::default()));
     let num_stages = stage_factories.len();
+    metrics.lock().unwrap().stage_service_ms = vec![Vec::new(); num_stages];
 
     // channels: batcher → s0 → s1 → … → tail
     let mut senders: Vec<SyncSender<Batch>> = Vec::new();
@@ -121,11 +149,17 @@ where
         let tx = senders[si + 1].clone();
         rx_cursor = receivers_iter.next();
         let ready = Arc::clone(&warmup);
+        let stage_metrics = Arc::clone(&metrics);
         handles.push(std::thread::spawn(move || {
             let mut f = factory();
             ready.wait();
+            // service times buffer locally; one metrics lock per batch
+            // (after the execute, off the blocking path of upstream sends)
             while let Ok(batch) = rx.recv() {
+                let started = Instant::now();
                 let out = f(batch.batch, batch.data);
+                let service_ms = started.elapsed().as_secs_f64() * 1e3;
+                stage_metrics.lock().unwrap().stage_service_ms[si].push(service_ms);
                 let fwd = Batch {
                     ids: batch.ids,
                     enqueued: batch.enqueued,
@@ -535,10 +569,66 @@ mod tests {
         let m = Metrics {
             completed: 4,
             latencies_ms: vec![1.0, 5.0, 2.0, 10.0],
-            started: None,
-            finished: None,
+            ..Default::default()
         };
         assert!(m.percentile(0.5) <= m.percentile(0.99));
         assert_eq!(m.percentile(1.0), 10.0);
+        assert_eq!(m.percentile(0.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_rejects_out_of_range() {
+        let m = Metrics {
+            completed: 3,
+            latencies_ms: vec![3.0, 1.0, 2.0],
+            ..Default::default()
+        };
+        assert!(m.percentile(-0.1).is_nan());
+        assert!(m.percentile(1.1).is_nan());
+        assert!(m.percentile(f64::NAN).is_nan());
+        assert!(Metrics::default().percentile(0.5).is_nan());
+    }
+
+    #[test]
+    fn batch_percentiles_match_single_calls() {
+        let m = Metrics {
+            completed: 5,
+            latencies_ms: vec![7.0, 1.0, 9.0, 3.0, 5.0],
+            ..Default::default()
+        };
+        let ps = [0.0, 0.5, 0.9, 1.0];
+        let batch = m.percentiles(&ps);
+        for (i, &p) in ps.iter().enumerate() {
+            assert_eq!(batch[i], m.percentile(p), "p = {p}");
+        }
+        assert!(m.percentiles(&[2.0])[0].is_nan());
+        assert!(Metrics::default().percentiles(&[0.5])[0].is_nan());
+    }
+
+    #[test]
+    fn serve_records_per_stage_service_times() {
+        let stages: Vec<DynFactory> = vec![
+            Box::new(|| Box::new(|_b, d| d) as DynStage),
+            Box::new(|| {
+                Box::new(|_b, d| {
+                    std::thread::sleep(Duration::from_millis(2));
+                    d
+                }) as DynStage
+            }),
+        ];
+        let cfg = ServerConfig { max_batch: 4, input_elems: 1, ..Default::default() };
+        let m = serve(reqs(8, 1), stages, &cfg);
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.stage_service_ms.len(), 2, "one sample vector per stage");
+        for (s, samples) in m.stage_service_ms.iter().enumerate() {
+            assert!(!samples.is_empty(), "stage {s} recorded no batches");
+            assert!(samples.iter().all(|&x| x >= 0.0));
+        }
+        // both stages saw the same batch count
+        assert_eq!(m.stage_service_ms[0].len(), m.stage_service_ms[1].len());
+        // the sleeping stage is measurably slower than the identity stage
+        let sum: [f64; 2] =
+            [m.stage_service_ms[0].iter().sum(), m.stage_service_ms[1].iter().sum()];
+        assert!(sum[1] > sum[0], "slow stage must dominate: {sum:?}");
     }
 }

@@ -1,0 +1,426 @@
+//! Seeded chaos campaigns for the monitored serving loop.
+//!
+//! A campaign fuzzes hundreds of randomized fail / slow / recover /
+//! spike scripts (deterministic per seed, [`crate::util::rng::Rng`])
+//! through [`run_monitored`] on a fixed workload × fleet, and checks the
+//! resilience invariants on **every** run:
+//!
+//! 1. **Liveness** — the controller returns: every injected sample is
+//!    either completed or shed with a classified
+//!    [`crate::simx::controller::ShedCause`]
+//!    (`completed + shed == injected`), never silently lost and never
+//!    deadlocked.
+//! 2. **Hysteresis** — accepted plan swaps number at most
+//!    [`ControllerConfig::max_swaps`] and consecutive swaps are at least
+//!    the (scaled) cooldown apart.
+//! 3. **Near-oracle throughput** — for clean single-permanent-fail runs,
+//!    the final steady time-per-sample is within
+//!    [`ChaosConfig::oracle_factor`] of the *oracle* that re-plans at
+//!    the instant of the fault with perfect knowledge
+//!    ([`ServingPlanner::plan_after_device_loss`] + a plain engine run).
+//!
+//! Violations are collected (not panicked) into
+//! [`ChaosReport::violations`] so a campaign reports every failure at
+//! once; `tests/chaos_campaign.rs` and the `chaos` CLI subcommand assert
+//! the list is empty. Script generation never emits a fail for the last
+//! remaining accelerator class member unless a CPU pool exists, and caps
+//! concurrent permanent fails at `k - 1` — total fleet loss is a
+//! different (trivially shed) regime than the degradation ladder under
+//! test.
+
+use crate::coordinator::placement::{Device, PlanRequest};
+use crate::graph::OpGraph;
+use crate::runtime::server::ServingPlanner;
+use crate::simx::controller::{run_monitored, ControllerConfig, MonitorOutcome, Verdict};
+use crate::simx::engine::{self, Schedule, SimConfig};
+use crate::simx::event::{EventScript, ScriptAction, ScriptedEvent};
+use crate::util::rng::Rng;
+
+/// Campaign shape. `runs` scripts are generated from `seed` (run `i`
+/// uses seed `seed + i`, so any single run reproduces in isolation).
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    pub runs: usize,
+    /// Base samples per run, drawn uniformly from this inclusive range.
+    pub samples_min: usize,
+    pub samples_max: usize,
+    /// Mean number of fault events per script (0–2 fails, 0–2 slows,
+    /// 0–1 spikes are drawn independently; see `gen_script`).
+    pub max_fails: usize,
+    /// Probability that a generated fail is followed by a recover.
+    pub p_recover: f64,
+    /// Straggler slow-down factors are drawn from `[slow_min, slow_max]`
+    /// (a factor < 1 multiplies device speed down).
+    pub slow_min: f64,
+    pub slow_max: f64,
+    /// Max extra samples a single spike injects.
+    pub spike_max: usize,
+    /// Script horizon in beats (event times are drawn in `[0, horizon)`
+    /// and scaled by the run's measured beat).
+    pub horizon_beats: f64,
+    /// Allowed ratio of monitored steady tps over the oracle's for
+    /// single-permanent-fail runs (invariant 3; DESIGN.md §7).
+    pub oracle_factor: f64,
+    pub controller: ControllerConfig,
+    pub schedule: Schedule,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            seed: 0xC1A05,
+            runs: 50,
+            samples_min: 12,
+            samples_max: 16,
+            max_fails: 2,
+            p_recover: 0.5,
+            slow_min: 0.2,
+            slow_max: 0.9,
+            spike_max: 6,
+            horizon_beats: 10.0,
+            oracle_factor: 2.0,
+            controller: ControllerConfig::default(),
+            schedule: Schedule::Pipelined,
+        }
+    }
+}
+
+/// Outcome of one fuzzed run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub seed: u64,
+    /// The generated script, in the CLI grammar (reproducible input).
+    pub script: String,
+    pub samples: usize,
+    pub verdict: Verdict,
+    pub injected: usize,
+    pub completed: usize,
+    pub shed: usize,
+    pub plan_swaps: usize,
+    pub makespan: f64,
+    pub final_steady_tps: f64,
+    /// `Some(monitored / oracle)` when invariant 3 applied to this run.
+    pub oracle_ratio: Option<f64>,
+}
+
+/// Aggregate campaign result.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosReport {
+    pub runs: Vec<RunReport>,
+    pub completed_runs: usize,
+    pub shed_runs: usize,
+    /// Shed runs by cause (`Display` name → count), for the CLI summary.
+    pub shed_by_cause: Vec<(String, usize)>,
+    /// Every invariant violation across the campaign, human-readable.
+    pub violations: Vec<String>,
+}
+
+impl ChaosReport {
+    /// `Err(first violation)` when any invariant failed.
+    pub fn ok(&self) -> Result<(), String> {
+        match self.violations.first() {
+            None => Ok(()),
+            Some(v) => Err(format!("{} violation(s), first: {v}", self.violations.len())),
+        }
+    }
+}
+
+/// A seeded chaos campaign over one workload × fleet.
+pub struct ChaosCampaign<'a> {
+    pub g: &'a OpGraph,
+    pub req: &'a PlanRequest,
+    pub cfg: ChaosConfig,
+}
+
+impl<'a> ChaosCampaign<'a> {
+    pub fn new(g: &'a OpGraph, req: &'a PlanRequest, cfg: ChaosConfig) -> ChaosCampaign<'a> {
+        ChaosCampaign { g, req, cfg }
+    }
+
+    /// Generate one script from `rng`. Times are in absolute simulation
+    /// units (`beat` = predicted time-per-sample of the healthy plan).
+    fn gen_script(&self, rng: &mut Rng, beat: f64) -> EventScript {
+        let cfg = &self.cfg;
+        let k = self.req.fleet.k();
+        let horizon = cfg.horizon_beats * beat;
+        let mut events: Vec<ScriptedEvent> = Vec::new();
+        let mut at = |rng: &mut Rng| (rng.gen_f64() * horizon * 1e3).round() / 1e3;
+
+        // permanent/transient fails: never more than k - 1 accelerators
+        // down at once (total loss is out of scope; see module docs)
+        let fail_budget = cfg.max_fails.min(k.saturating_sub(1));
+        let n_fails = if fail_budget == 0 { 0 } else { rng.gen_range(fail_budget + 1) };
+        let mut devs: Vec<usize> = (0..k).collect();
+        rng.shuffle(&mut devs);
+        for &d in devs.iter().take(n_fails) {
+            let t_fail = at(rng);
+            events.push(ScriptedEvent {
+                at: t_fail,
+                action: ScriptAction::Fail { device: Device::Acc(d) },
+            });
+            if rng.gen_bool(cfg.p_recover) {
+                let dt = rng.gen_f64_range(0.5 * beat, horizon);
+                events.push(ScriptedEvent {
+                    at: ((t_fail + dt) * 1e3).round() / 1e3,
+                    action: ScriptAction::Recover { device: Device::Acc(d) },
+                });
+            }
+        }
+        // stragglers (any accelerator, including failed ones — recover
+        // resets the scale, so the interleavings are the interesting part)
+        for _ in 0..rng.gen_range(3) {
+            let d = rng.gen_range(k.max(1));
+            let factor =
+                (rng.gen_f64_range(cfg.slow_min, cfg.slow_max) * 1e3).round() / 1e3;
+            events.push(ScriptedEvent {
+                at: at(rng),
+                action: ScriptAction::Slow { device: Device::Acc(d), factor },
+            });
+        }
+        // load spikes
+        if cfg.spike_max > 0 && rng.gen_bool(0.5) {
+            events.push(ScriptedEvent {
+                at: at(rng),
+                action: ScriptAction::Spike { count: 1 + rng.gen_range(cfg.spike_max) },
+            });
+        }
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        EventScript { events }
+    }
+
+    /// Run the campaign. Deterministic for a given `(cfg.seed, g, req)`.
+    pub fn run(&self, planner: &mut ServingPlanner) -> ChaosReport {
+        let mut report = ChaosReport::default();
+        // one healthy plan up front: beat for time scaling + oracle base
+        let beat = match planner.plan_request(self.g, self.req) {
+            Ok(s) => crate::algos::objective::max_load_req(self.g, self.req, &s.placement)
+                .max(1e-9),
+            Err(e) => {
+                report
+                    .violations
+                    .push(format!("workload/fleet has no healthy plan: {e}"));
+                return report;
+            }
+        };
+        for i in 0..self.cfg.runs {
+            let seed = self.cfg.seed.wrapping_add(i as u64);
+            let mut rng = Rng::new(seed);
+            let script = self.gen_script(&mut rng, beat);
+            let samples = self.cfg.samples_min
+                + rng.gen_range(self.cfg.samples_max - self.cfg.samples_min + 1);
+            match run_monitored(
+                self.g,
+                self.req,
+                &script,
+                self.cfg.schedule,
+                samples,
+                planner,
+                &self.cfg.controller,
+            ) {
+                Ok(out) => self.check_run(seed, &script, samples, out, planner, &mut report),
+                Err(e) => report.violations.push(format!(
+                    "seed {seed} script '{script}': run_monitored errored: {e}"
+                )),
+            }
+        }
+        report.completed_runs =
+            report.runs.iter().filter(|r| r.verdict == Verdict::Completed).count();
+        report.shed_runs = report.runs.len() - report.completed_runs;
+        for r in &report.runs {
+            if let Verdict::Shed(cause) = &r.verdict {
+                let name = cause.to_string();
+                match report.shed_by_cause.iter_mut().find(|(n, _)| *n == name) {
+                    Some((_, c)) => *c += 1,
+                    None => report.shed_by_cause.push((name, 1)),
+                }
+            }
+        }
+        report
+    }
+
+    fn check_run(
+        &self,
+        seed: u64,
+        script: &EventScript,
+        samples: usize,
+        out: MonitorOutcome,
+        planner: &mut ServingPlanner,
+        report: &mut ChaosReport,
+    ) {
+        let tag = format!("seed {seed} script '{script}'");
+        // invariant 1: conservation (liveness is the return itself)
+        if out.completed + out.shed != out.injected {
+            report.violations.push(format!(
+                "{tag}: completed {} + shed {} != injected {}",
+                out.completed, out.shed, out.injected
+            ));
+        }
+        // invariant 2: hysteresis
+        if out.plan_swaps > self.cfg.controller.max_swaps {
+            report.violations.push(format!(
+                "{tag}: {} swaps over budget {}",
+                out.plan_swaps, self.cfg.controller.max_swaps
+            ));
+        }
+        for w in out.swap_times.windows(2) {
+            if w[1] - w[0] < out.cooldown - 1e-9 {
+                report.violations.push(format!(
+                    "{tag}: swaps at {:.3} and {:.3} inside cooldown {:.3}",
+                    w[0], w[1], out.cooldown
+                ));
+            }
+        }
+        // invariant 3: near-oracle steady tps on clean
+        // single-permanent-acc-fail runs
+        let oracle_ratio = self.oracle_ratio(script, samples, &out, planner);
+        if let Some(ratio) = oracle_ratio {
+            if ratio > self.cfg.oracle_factor {
+                report.violations.push(format!(
+                    "{tag}: steady tps {:.4} is {ratio:.2}x the oracle (allowed {:.2}x)",
+                    out.final_steady_tps, self.cfg.oracle_factor
+                ));
+            }
+        }
+        report.runs.push(RunReport {
+            seed,
+            script: script.to_string(),
+            samples,
+            verdict: out.verdict,
+            injected: out.injected,
+            completed: out.completed,
+            shed: out.shed,
+            plan_swaps: out.plan_swaps,
+            makespan: out.makespan,
+            final_steady_tps: out.final_steady_tps,
+            oracle_ratio,
+        });
+    }
+
+    /// `Some(monitored_tps / oracle_tps)` when the run qualifies for
+    /// invariant 3: exactly one accelerator fail, never recovered, no
+    /// stragglers left active at the end, verdict Completed with at
+    /// least one swap.
+    fn oracle_ratio(
+        &self,
+        script: &EventScript,
+        samples: usize,
+        out: &MonitorOutcome,
+        planner: &mut ServingPlanner,
+    ) -> Option<f64> {
+        if out.verdict != Verdict::Completed || out.plan_swaps == 0 {
+            return None;
+        }
+        if !out.final_steady_tps.is_finite() {
+            return None;
+        }
+        let fails: Vec<Device> = script
+            .events
+            .iter()
+            .filter_map(|e| match e.action {
+                ScriptAction::Fail { device } => Some(device),
+                _ => None,
+            })
+            .collect();
+        if fails.len() != 1 {
+            return None;
+        }
+        let failed = fails[0];
+        if !matches!(failed, Device::Acc(_)) {
+            return None;
+        }
+        let recovered = script.events.iter().any(
+            |e| matches!(e.action, ScriptAction::Recover { device } if device == failed),
+        );
+        // any slow event muddies the comparison — the oracle runs nominal
+        let slowed = script
+            .events
+            .iter()
+            .any(|e| matches!(e.action, ScriptAction::Slow { .. }));
+        if recovered || slowed {
+            return None;
+        }
+        let (oracle_req, oracle_stages) =
+            planner.plan_after_device_loss(self.g, self.req, failed).ok()?;
+        let oracle = engine::simulate_req(
+            self.g,
+            &oracle_req,
+            &oracle_stages.placement,
+            self.cfg.schedule,
+            samples.max(8),
+            &SimConfig::for_request(&oracle_req),
+        );
+        if !oracle.steady_tps.is_finite() || oracle.steady_tps <= 0.0 {
+            return None;
+        }
+        Some(out.final_steady_tps / oracle.steady_tps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::SolveOpts;
+    use crate::coordinator::placement::Scenario;
+    use crate::coordinator::planner::Algorithm;
+    use crate::graph::Node;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(10.0).acc(1.0).mem(1.0).comm(0.1));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn scripts_are_deterministic_per_seed() {
+        let g = chain(6);
+        let req = Scenario::new(3, 1, f64::INFINITY).to_request();
+        let camp = ChaosCampaign::new(&g, &req, ChaosConfig::default());
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let s1 = camp.gen_script(&mut a, 2.0);
+        let s2 = camp.gen_script(&mut b, 2.0);
+        assert_eq!(s1, s2);
+        // and the grammar roundtrips, so every script is reproducible
+        // from its printed form
+        if !s1.is_empty() {
+            assert_eq!(EventScript::parse(&s1.to_string()).unwrap(), s1);
+        }
+    }
+
+    #[test]
+    fn fail_count_never_reaches_fleet_size() {
+        let g = chain(6);
+        let req = Scenario::new(2, 1, f64::INFINITY).to_request();
+        let camp = ChaosCampaign::new(&g, &req, ChaosConfig::default());
+        for seed in 0..40 {
+            let mut rng = Rng::new(seed);
+            let s = camp.gen_script(&mut rng, 2.0);
+            let fails = s
+                .events
+                .iter()
+                .filter(|e| matches!(e.action, ScriptAction::Fail { .. }))
+                .count();
+            assert!(fails < 2, "k=2 fleet must keep one accelerator: {s}");
+        }
+    }
+
+    #[test]
+    fn small_campaign_holds_all_invariants() {
+        // a fast in-tree smoke (the full 200-run campaign lives in
+        // tests/chaos_campaign.rs)
+        let g = chain(6);
+        let req = Scenario::new(3, 1, f64::INFINITY).to_request();
+        let cfg = ChaosConfig { runs: 8, seed: 42, ..ChaosConfig::default() };
+        let camp = ChaosCampaign::new(&g, &req, cfg);
+        let mut planner = ServingPlanner::new(Algorithm::Dp, SolveOpts::default());
+        let report = camp.run(&mut planner);
+        assert_eq!(report.runs.len(), 8);
+        assert!(report.ok().is_ok(), "violations: {:#?}", report.violations);
+    }
+}

@@ -1,0 +1,1278 @@
+//! Hysteresis re-planning controller: the serving loop that survives.
+//!
+//! [`crate::simx::loop_`] reacts to exactly one scripted fault with one
+//! un-rate-limited re-plan. This module closes the loop the way a
+//! production controller must: a [`HealthMonitor`] watches
+//! observed-vs-predicted task times from the engine trace, and every
+//! *actionable* health transition is answered through a
+//! **graceful-degradation ladder** under a **hysteresis contract**
+//! (DESIGN.md §7):
+//!
+//! 1. **Re-cost + re-plan in place** — a `Degraded` (straggling but
+//!    alive) device is carved into its own single-device class with its
+//!    observed slow-factor folded into the class speed; the planner
+//!    re-plans against that drift-adjusted fleet, and the new plan is
+//!    swapped in only if it beats the current one by
+//!    [`ControllerConfig::min_improvement`].
+//! 2. **`Fleet::decrement` re-plan** — a `Dead` device is removed from
+//!    the fleet ([`ServingPlanner::plan_after_device_loss`]) and the
+//!    shrunk fleet re-planned. Never skipped for improvement (the
+//!    current plan cannot finish), but *deferred* to the end of the
+//!    cooldown window rather than dropped.
+//! 3. **CPU failover** — when the shrunk fleet has no plan, the dead
+//!    device's nodes hot-failover to the CPU pool
+//!    ([`crate::simx::loop_::fallback_after_loss`]); skipped when an op
+//!    has no CPU cost (that is a [`PlaceError`], not an ∞ placement).
+//! 4. **Admission control** — when nothing can place the work (or the
+//!    injection backlog exceeds [`ControllerConfig::backlog_cap`]),
+//!    load is shed with a classified [`ShedCause`] instead of
+//!    deadlocking.
+//!
+//! The hysteresis contract: at most [`ControllerConfig::max_swaps`] plan
+//! swaps per run, consecutive swaps at least
+//! [`ControllerConfig::cooldown`] apart, and improvement-gated swaps
+//! only above the `min_improvement` threshold — an oscillating
+//! slow/recover script cannot thrash the planner.
+//!
+//! Execution is an **epoch-segmented replay**: the run simulates under
+//! the current plan until the first accepted swap at time `T`, the epoch
+//! is cut at `T` (completions at or before `T` count; in-flight work
+//! replays from scratch next epoch — the re-injection approximation),
+//! and a new epoch starts on the new plan with the not-yet-completed
+//! backlog. Scripted ground truth answers the monitor's probes, keeps
+//! per-device fail/slow/recover state across fleet mutations, and
+//! schedules re-admission of recovered capacity
+//! ([`crate::coordinator::placement::Fleet::increment`]).
+//!
+//! All time-dimensioned config fields are expressed in **beats** — units
+//! of the initial plan's predicted time-per-sample — and scaled once at
+//! run start, so the same defaults behave identically on fast and slow
+//! workloads.
+
+use crate::algos::{objective, PlaceError};
+use crate::coordinator::placement::{
+    Device, DeviceKind, Placement, PlanRequest,
+};
+use crate::graph::OpGraph;
+use crate::runtime::health::{DeviceHealth, HealthConfig, HealthMonitor, HealthTransition};
+use crate::runtime::server::ServingPlanner;
+use crate::simx::engine::{self, Schedule, SimConfig, Stall};
+use crate::simx::event::{EventScript, ScriptAction, ScriptedEvent};
+use crate::simx::loop_::fallback_after_loss;
+
+/// Controller thresholds. Time fields are in beats (initial predicted
+/// time-per-sample); [`run_monitored`] scales them once at start.
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Health-monitor thresholds (its time fields are beats too).
+    pub health: HealthConfig,
+    /// Minimum time between consecutive plan swaps. Improvement-gated
+    /// swaps inside the window are rejected; dead-device swaps are
+    /// deferred to the window's end (never dropped).
+    pub cooldown: f64,
+    /// Minimum fractional predicted improvement (`old/new - 1`) before
+    /// an improvement-gated swap is accepted.
+    pub min_improvement: f64,
+    /// Hard cap on plan swaps per run (the hysteresis bound the chaos
+    /// campaign asserts).
+    pub max_swaps: usize,
+    /// Injection-backlog bound: epochs starting with more outstanding
+    /// samples shed the excess (admission control).
+    pub backlog_cap: usize,
+    /// Epoch budget; exhausting it sheds with [`ShedCause::Unresolved`]
+    /// (a backstop — accepted swaps are already bounded by `max_swaps`).
+    pub max_epochs: usize,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> ControllerConfig {
+        ControllerConfig {
+            health: HealthConfig::default(),
+            cooldown: 12.0,
+            min_improvement: 0.05,
+            max_swaps: 5,
+            backlog_cap: 512,
+            max_epochs: 24,
+        }
+    }
+}
+
+impl ControllerConfig {
+    /// Multiply every time-dimensioned field by `unit` (beats → absolute
+    /// simulation time).
+    pub fn scaled(mut self, unit: f64) -> ControllerConfig {
+        self.cooldown *= unit;
+        self.health = self.health.scaled(unit);
+        self
+    }
+}
+
+/// Why a run shed load instead of completing (the classified `Stall`
+/// analogue at the controller level).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShedCause {
+    /// Every ladder rung errored: no placement can finish the work.
+    NoFeasiblePlacement,
+    /// A dead device needed a swap but the hysteresis budget was spent.
+    SwapBudgetExhausted,
+    /// The engine reported a memory deadlock (schedule infeasible).
+    MemoryDeadlock,
+    /// The epoch/scan budget ran out before the run settled.
+    Unresolved,
+}
+
+impl std::fmt::Display for ShedCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ShedCause::NoFeasiblePlacement => "no-feasible-placement",
+            ShedCause::SwapBudgetExhausted => "swap-budget-exhausted",
+            ShedCause::MemoryDeadlock => "memory-deadlock",
+            ShedCause::Unresolved => "unresolved",
+        })
+    }
+}
+
+/// How a monitored run ended. In both cases
+/// `completed + shed == injected` — nothing is silently dropped.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verdict {
+    /// Every non-shed sample completed.
+    Completed,
+    /// Remaining load was shed for the classified cause.
+    Shed(ShedCause),
+}
+
+/// One controller decision (accepted or rejected), the JSON decision
+/// trace's unit.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// Absolute simulation time of the decision.
+    pub t: f64,
+    /// What fired, e.g. `"dead:acc1"`, `"degraded:acc0*2.1"`,
+    /// `"readmit:fast"`, `"backlog"`.
+    pub trigger: String,
+    /// The ladder rung taken, e.g. `"decrement-replan:fast"`,
+    /// `"replan-in-place"`, `"cpu-failover"`, `"shed:12"`.
+    pub action: String,
+    pub accepted: bool,
+    /// Why (cooldown, improvement below threshold, plan error, …).
+    pub reason: String,
+    /// Predicted time-per-sample before / after (NaN when not computed).
+    pub predicted_before: f64,
+    pub predicted_after: f64,
+    pub swaps_so_far: usize,
+}
+
+/// Outcome of a monitored run.
+#[derive(Clone, Debug)]
+pub struct MonitorOutcome {
+    pub verdict: Verdict,
+    /// Base samples + every scripted spike.
+    pub injected: usize,
+    pub completed: usize,
+    pub shed: usize,
+    /// Absolute time the run ended (completion or shed).
+    pub makespan: f64,
+    /// Steady-state time-per-sample of the final epoch (NaN when shed).
+    pub final_steady_tps: f64,
+    pub plan_swaps: usize,
+    /// Absolute times of the accepted swaps (consecutive gaps honor the
+    /// cooldown — asserted by the chaos campaign).
+    pub swap_times: Vec<f64>,
+    pub decisions: Vec<Decision>,
+    /// Every health transition the monitor recorded.
+    pub transitions: Vec<HealthTransition>,
+    pub final_placement: Placement,
+    pub final_request: PlanRequest,
+    pub epochs: usize,
+    /// The beat length the config was scaled by (initial predicted
+    /// time-per-sample).
+    pub time_unit: f64,
+    /// The scaled cooldown actually enforced.
+    pub cooldown: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Scripted ground truth
+// ---------------------------------------------------------------------------
+
+/// The original script as a queryable oracle: per-device alive/slow state
+/// at any absolute time (stable order among equal times, matching the
+/// engine's FIFO event heap), in the **original** dense device space.
+struct ScriptTruth {
+    events: Vec<ScriptedEvent>,
+}
+
+impl ScriptTruth {
+    fn new(script: &EventScript) -> ScriptTruth {
+        let mut events = script.events.clone();
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        ScriptTruth { events }
+    }
+
+    /// `(alive, slow_scale)` of `dev` after every event with `at ≤ t`.
+    fn state_of(&self, dev: Device, t: f64) -> (bool, f64) {
+        let mut alive = true;
+        let mut scale = 1.0;
+        for e in &self.events {
+            if e.at > t + 1e-12 {
+                break;
+            }
+            match e.action {
+                ScriptAction::Fail { device } if device == dev => alive = false,
+                ScriptAction::Slow { device, factor } if device == dev => scale *= factor,
+                ScriptAction::Recover { device } if device == dev => {
+                    alive = true;
+                    scale = 1.0;
+                }
+                _ => {}
+            }
+        }
+        (alive, scale)
+    }
+
+    fn alive(&self, dev: Device, t: f64) -> bool {
+        self.state_of(dev, t).0
+    }
+
+    fn first_recover_after(&self, dev: Device, t: f64) -> Option<f64> {
+        self.events
+            .iter()
+            .find(|e| {
+                e.at > t
+                    && matches!(e.action, ScriptAction::Recover { device } if device == dev)
+            })
+            .map(|e| e.at)
+    }
+
+    /// Spike samples arriving in `(epoch_start, cut]` — with the one
+    /// boundary exception that the very first epoch also owns spikes at
+    /// exactly `t = 0`.
+    fn spikes_fired(&self, epoch_start: f64, cut: f64) -> usize {
+        self.events
+            .iter()
+            .filter(|e| {
+                (e.at > epoch_start + 1e-12 || (epoch_start == 0.0 && e.at == 0.0))
+                    && e.at <= cut + 1e-12
+            })
+            .map(|e| match e.action {
+                ScriptAction::Spike { count } => count,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    fn total_spikes(&self) -> usize {
+        self.spikes_fired(0.0, f64::INFINITY)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense-space bookkeeping helpers
+// ---------------------------------------------------------------------------
+
+/// Apply a permutation over accelerator slots to a placement (CPU
+/// assignments untouched).
+fn apply_acc_perm(p: &Placement, pi: &[usize]) -> Placement {
+    let assignment = p
+        .assignment
+        .iter()
+        .map(|&d| match d {
+            Device::Acc(s) => Device::Acc(pi[s]),
+            cpu => cpu,
+        })
+        .collect();
+    Placement::new(assignment, p.objective, p.algorithm.clone())
+}
+
+fn invert_perm(pi: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; pi.len()];
+    for (i, &x) in pi.iter().enumerate() {
+        inv[x] = i;
+    }
+    inv
+}
+
+/// Shift a placement's same-kind slots at or above `ins` up by one (a
+/// device was re-admitted at dense slot `ins` of that kind).
+fn shift_plan_for_insert(p: &Placement, ins: usize, kind: DeviceKind) -> Placement {
+    let assignment = p
+        .assignment
+        .iter()
+        .map(|&d| match (d, kind) {
+            (Device::Acc(s), DeviceKind::Accelerator) if s >= ins => Device::Acc(s + 1),
+            (Device::Cpu(j), DeviceKind::Cpu) if j >= ins => Device::Cpu(j + 1),
+            (other, _) => other,
+        })
+        .collect();
+    Placement::new(assignment, p.objective, p.algorithm.clone())
+}
+
+/// Carve every degraded accelerator slot into its own single-device
+/// class with the observed slow-factor folded into the class speed
+/// (`speed / drift`). Returns the adjusted request plus the permutation
+/// `pi[old_slot] = new_slot` over accelerator slots: within each class
+/// the non-degraded devices keep their order at the front, the degraded
+/// ones move to the class range's tail (within a class devices are
+/// interchangeable, so this is a relabeling, not a migration).
+fn drift_adjusted_request(
+    req: &PlanRequest,
+    degraded: &[(usize, f64)],
+) -> (PlanRequest, Vec<usize>) {
+    let k = req.fleet.k();
+    let mut pi: Vec<usize> = (0..k).collect();
+    let mut classes = Vec::new();
+    let mut base = 0usize;
+    for c in &req.fleet.classes {
+        if c.kind != DeviceKind::Accelerator {
+            classes.push(c.clone());
+            continue;
+        }
+        let n = c.count;
+        let deg: Vec<(usize, f64)> = degraded
+            .iter()
+            .copied()
+            .filter(|&(s, _)| s >= base && s < base + n)
+            .collect();
+        if deg.is_empty() {
+            classes.push(c.clone());
+        } else {
+            let keep = n - deg.len();
+            if keep > 0 {
+                let mut kept = c.clone();
+                kept.count = keep;
+                classes.push(kept);
+            }
+            let mut next_keep = base;
+            let mut next_deg = base + keep;
+            for s in base..base + n {
+                if let Some(&(_, drift)) = deg.iter().find(|&&(d, _)| d == s) {
+                    pi[s] = next_deg;
+                    next_deg += 1;
+                    let mut solo = c.clone();
+                    solo.name = format!("{}~s{s}", c.name);
+                    solo.count = 1;
+                    solo.speed = c.speed / drift.max(1.0);
+                    classes.push(solo);
+                } else {
+                    pi[s] = next_keep;
+                    next_keep += 1;
+                }
+            }
+        }
+        base += n;
+    }
+    let mut adj = req.clone();
+    adj.fleet.classes = classes;
+    (adj, pi)
+}
+
+/// Dense slot (within its kind) a re-admitted device of `class` lands
+/// on: the tail of the class's range, classes walked in declaration
+/// order.
+fn class_tail_slot(req: &PlanRequest, class: &str, kind: DeviceKind) -> usize {
+    let mut seen = 0usize;
+    for c in req.fleet.classes.iter().filter(|c| c.kind == kind) {
+        seen += c.count;
+        if c.name == class {
+            return seen - 1;
+        }
+    }
+    seen.saturating_sub(1)
+}
+
+// ---------------------------------------------------------------------------
+// The monitored run
+// ---------------------------------------------------------------------------
+
+/// A staged plan swap, applied after the epoch is cut.
+enum SwapKind {
+    /// Rung 2: dead device decremented, fleet re-planned.
+    Decrement { dense: usize, orig: usize, kind: DeviceKind, req: PlanRequest, plan: Placement },
+    /// Rung 3: dead device's nodes moved to the CPU pool, fleet kept.
+    Failover { plan: Placement },
+    /// Rung 1: drift-adjusted re-plan on the unchanged fleet.
+    Replan { plan: Placement },
+    /// Recovered capacity re-admitted (`Fleet::increment`) + re-plan.
+    Readmit { ins: usize, orig: usize, kind: DeviceKind, req: PlanRequest, plan: Placement },
+}
+
+enum ScanEnd {
+    /// Accepted swap at the absolute cut time.
+    Swap(f64, SwapKind),
+    /// Epoch ran to completion with no accepted swap.
+    Clean,
+    /// Terminal shed at the absolute time.
+    Shed(f64, ShedCause),
+}
+
+/// Run `script` against a monitored, self-healing serving loop (see the
+/// module docs) and report what happened. `cfg` is in beats and scaled
+/// internally by the initial plan's predicted time-per-sample.
+pub fn run_monitored(
+    g: &OpGraph,
+    req: &PlanRequest,
+    script: &EventScript,
+    schedule: Schedule,
+    samples: usize,
+    planner: &mut ServingPlanner,
+    cfg: &ControllerConfig,
+) -> Result<MonitorOutcome, PlaceError> {
+    let healthy = planner.plan_request(g, req)?;
+    let unit = objective::max_load_req(g, req, &healthy.placement).max(1e-9);
+    let cfg = cfg.clone().scaled(unit);
+    let truth = ScriptTruth::new(script);
+
+    let mut cur_req = req.clone();
+    let mut plan = healthy.placement;
+    let phantom_cpu = cur_req.fleet.l() == 0;
+    let mut orig_acc: Vec<usize> = (0..cur_req.fleet.k()).collect();
+    let mut orig_cpu: Vec<usize> = (0..cur_req.fleet.l()).collect();
+    let mut monitor = HealthMonitor::new(
+        cur_req.fleet.k() + cur_req.fleet.l().max(1),
+        cfg.health,
+    );
+
+    let injected_total = samples + truth.total_spikes();
+    let mut pending = samples;
+    let mut completed_total = 0usize;
+    let mut shed_total = 0usize;
+    let mut swaps = 0usize;
+    let mut swap_times: Vec<f64> = Vec::new();
+    let mut last_swap = f64::NEG_INFINITY;
+    let mut decisions: Vec<Decision> = Vec::new();
+    // (detection time, class, orig slot, kind) of removed devices whose
+    // scripted recovery is pending re-admission
+    let mut readmits: Vec<(f64, String, usize, DeviceKind)> = Vec::new();
+    let mut t0 = 0.0f64;
+    let mut epochs = 0usize;
+    let mut verdict: Option<(Verdict, f64, f64)> = None; // (verdict, makespan, steady)
+
+    'epochs: while verdict.is_none() {
+        epochs += 1;
+        if epochs > cfg.max_epochs {
+            shed_total = injected_total.saturating_sub(completed_total);
+            verdict = Some((Verdict::Shed(ShedCause::Unresolved), t0, f64::NAN));
+            break;
+        }
+        // --- admission control: bound the injection backlog -------------
+        if pending > cfg.backlog_cap {
+            let drop = pending - cfg.backlog_cap;
+            shed_total += drop;
+            pending = cfg.backlog_cap;
+            decisions.push(Decision {
+                t: t0,
+                trigger: "backlog".into(),
+                action: format!("shed:{drop}"),
+                accepted: true,
+                reason: format!("backlog {} over cap {}", pending + drop, cfg.backlog_cap),
+                predicted_before: f64::NAN,
+                predicted_after: f64::NAN,
+                swaps_so_far: swaps,
+            });
+        }
+
+        // --- effective script for this epoch -----------------------------
+        let k = cur_req.fleet.k();
+        let l_dense = cur_req.fleet.l().max(1);
+        let cur_dev = |slot: usize| -> Device {
+            if slot < k {
+                Device::Acc(orig_acc[slot])
+            } else {
+                let j = slot - k;
+                Device::Cpu(orig_cpu.get(j).copied().unwrap_or(j))
+            }
+        };
+        let mut eff: Vec<ScriptedEvent> = Vec::new();
+        for slot in 0..k + l_dense {
+            let here = if slot < k { Device::Acc(slot) } else { Device::Cpu(slot - k) };
+            let (alive, scale) = truth.state_of(cur_dev(slot), t0);
+            if !alive {
+                eff.push(ScriptedEvent { at: 0.0, action: ScriptAction::Fail { device: here } });
+            } else if (scale - 1.0).abs() > 1e-12 {
+                eff.push(ScriptedEvent {
+                    at: 0.0,
+                    action: ScriptAction::Slow { device: here, factor: scale },
+                });
+            }
+        }
+        let remap = |d: Device| -> Option<Device> {
+            match d {
+                Device::Acc(o) => orig_acc.iter().position(|&x| x == o).map(Device::Acc),
+                Device::Cpu(o) if phantom_cpu => Some(Device::Cpu(o)),
+                Device::Cpu(o) => orig_cpu.iter().position(|&x| x == o).map(Device::Cpu),
+            }
+        };
+        for e in &truth.events {
+            let future = e.at > t0 + 1e-12;
+            let spike_at_zero =
+                t0 == 0.0 && e.at == 0.0 && matches!(e.action, ScriptAction::Spike { .. });
+            if !(future || spike_at_zero) {
+                continue;
+            }
+            let at = (e.at - t0).max(0.0);
+            let action = match e.action {
+                ScriptAction::Fail { device } => match remap(device) {
+                    Some(d) => ScriptAction::Fail { device: d },
+                    None => continue,
+                },
+                ScriptAction::Slow { device, factor } => match remap(device) {
+                    Some(d) => ScriptAction::Slow { device: d, factor },
+                    None => continue,
+                },
+                ScriptAction::Recover { device } => match remap(device) {
+                    Some(d) => ScriptAction::Recover { device: d },
+                    None => continue,
+                },
+                spike @ ScriptAction::Spike { .. } => spike,
+            };
+            eff.push(ScriptedEvent { at, action });
+        }
+        let eff = EventScript { events: eff };
+
+        // --- simulate the epoch ------------------------------------------
+        let sim_cfg = SimConfig::for_request(&cur_req);
+        let res =
+            engine::simulate_with_events(g, &cur_req, &plan, schedule, pending, &eff, &sim_cfg);
+
+        // observations: (abs finish, dense dev, observed, predicted)
+        let mut obs: Vec<(f64, usize, f64, f64)> = res
+            .trace
+            .iter()
+            .map(|&(_, j, is_bw, start, finish)| {
+                let p = &res.pieces[j];
+                let predicted = if is_bw { p.bw_cost } else { p.fw_cost };
+                (t0 + finish, p.real_device.index(k), finish - start, predicted)
+            })
+            .collect();
+        obs.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+        // silence detection arms only against devices that own work
+        monitor.clear_busy_all();
+        if pending > 0 || res.injected > 0 {
+            let mut owns = vec![false; k + l_dense];
+            for p in &res.pieces {
+                owns[p.real_device.index(k)] = true;
+            }
+            for (d, &o) in owns.iter().enumerate() {
+                if o {
+                    monitor.note_busy(d, t0);
+                }
+            }
+        }
+
+        let hard_deadline =
+            t0 + res.total + 2.0 * cfg.health.detection_bound() + cfg.cooldown + unit;
+        let mut oi = 0usize;
+        let mut guard = 0usize;
+        let end: ScanEnd = 'scan: loop {
+            guard += 1;
+            if guard > 100_000 {
+                break 'scan ScanEnd::Shed(t0 + res.total, ShedCause::Unresolved);
+            }
+            let t_obs = obs.get(oi).map_or(f64::INFINITY, |o| o.0);
+            let t_dl = monitor.next_deadline().unwrap_or(f64::INFINITY);
+            let t_rm = readmits
+                .iter()
+                .map(|r| r.0)
+                .fold(f64::INFINITY, f64::min)
+                .max(t0);
+            if oi >= obs.len() {
+                // nothing left to observe: classify the epoch's end
+                match res.stall {
+                    None => break 'scan ScanEnd::Clean,
+                    Some(Stall::MemoryDeadlock { .. }) => {
+                        break 'scan ScanEnd::Shed(
+                            t0 + res.total,
+                            ShedCause::MemoryDeadlock,
+                        );
+                    }
+                    Some(Stall::DeviceLost { .. }) => {
+                        // keep driving monitor deadlines / readmits until
+                        // the probe ladder declares the device dead
+                        if t_dl.min(t_rm) > hard_deadline {
+                            break 'scan ScanEnd::Shed(
+                                hard_deadline,
+                                ShedCause::Unresolved,
+                            );
+                        }
+                    }
+                }
+            }
+            // fresh transitions to classify this iteration
+            let mut fresh: Vec<HealthTransition> = Vec::new();
+            let now;
+            if t_obs <= t_dl && t_obs <= t_rm {
+                let (t, dev, observed, predicted) = obs[oi];
+                oi += 1;
+                now = t;
+                if let Some(tr) = monitor.observe(dev, t, observed, predicted) {
+                    fresh.push(tr);
+                }
+            } else if t_rm < t_dl {
+                // a removed device's scripted recovery was detected
+                now = t_rm;
+                let idx = readmits
+                    .iter()
+                    .position(|r| r.0 <= now)
+                    .expect("a readmit is due");
+                let (_, class, o, kind) = readmits.remove(idx);
+                if swaps >= cfg.max_swaps {
+                    decisions.push(Decision {
+                        t: now,
+                        trigger: format!("readmit:{class}"),
+                        action: "none".into(),
+                        accepted: false,
+                        reason: "swap budget exhausted".into(),
+                        predicted_before: f64::NAN,
+                        predicted_after: f64::NAN,
+                        swaps_so_far: swaps,
+                    });
+                    continue;
+                }
+                if now < last_swap + cfg.cooldown {
+                    // defer, never drop: re-admission re-fires after the
+                    // cooldown window closes
+                    readmits.push((last_swap + cfg.cooldown, class, o, kind));
+                    continue;
+                }
+                let mut cand_req = cur_req.clone();
+                if !cand_req.fleet.increment(&class) {
+                    continue; // class vanished; nothing to re-admit
+                }
+                let ins = class_tail_slot(&cand_req, &class, kind);
+                let shifted = shift_plan_for_insert(&plan, ins, kind);
+                let before = objective::max_load_req(g, &cand_req, &shifted);
+                match planner.plan_request(g, &cand_req) {
+                    Ok(cand) => {
+                        let after = objective::max_load_req(g, &cand_req, &cand.placement);
+                        let ok = before / after >= 1.0 + cfg.min_improvement;
+                        decisions.push(Decision {
+                            t: now,
+                            trigger: format!("readmit:{class}"),
+                            action: format!("readmit-replan:{class}"),
+                            accepted: ok,
+                            reason: if ok {
+                                format!("predicted {before:.4} -> {after:.4}")
+                            } else {
+                                format!(
+                                    "improvement {:.3} below threshold {:.3}",
+                                    before / after - 1.0,
+                                    cfg.min_improvement
+                                )
+                            },
+                            predicted_before: before,
+                            predicted_after: after,
+                            swaps_so_far: swaps,
+                        });
+                        if ok {
+                            break 'scan ScanEnd::Swap(
+                                now,
+                                SwapKind::Readmit {
+                                    ins,
+                                    orig: o,
+                                    kind,
+                                    req: cand_req,
+                                    plan: cand.placement,
+                                },
+                            );
+                        }
+                        // rejected for improvement: dropped (documented)
+                    }
+                    Err(e) => decisions.push(Decision {
+                        t: now,
+                        trigger: format!("readmit:{class}"),
+                        action: format!("readmit-replan:{class}"),
+                        accepted: false,
+                        reason: format!("re-plan failed: {e}"),
+                        predicted_before: before,
+                        predicted_after: f64::NAN,
+                        swaps_so_far: swaps,
+                    }),
+                }
+                continue;
+            } else {
+                // a monitor deadline (silence check / probe timeout /
+                // re-admission probe of an in-fleet dead device)
+                if t_dl > hard_deadline {
+                    break 'scan ScanEnd::Shed(hard_deadline, ShedCause::Unresolved);
+                }
+                now = t_dl;
+                let adv = monitor.advance(now);
+                fresh.extend(adv.transitions);
+                for dev in adv.probes {
+                    if truth.alive(cur_dev(dev), now) {
+                        if let Some(tr) = monitor.probe_ok(dev, now) {
+                            fresh.push(tr);
+                        }
+                    }
+                }
+            }
+
+            // --- classify fresh transitions into ladder decisions --------
+            for tr in fresh {
+                if !tr.actionable() {
+                    continue;
+                }
+                let dev = tr.dev;
+                let here =
+                    if dev < k { Device::Acc(dev) } else { Device::Cpu(dev - k) };
+                if tr.to == DeviceHealth::Dead {
+                    // rung 2 (decrement re-plan), deferred by cooldown —
+                    // never improvement-gated: the current plan cannot
+                    // finish with this device dead
+                    if swaps >= cfg.max_swaps {
+                        decisions.push(Decision {
+                            t: now,
+                            trigger: format!("dead:{here}"),
+                            action: "shed".into(),
+                            accepted: true,
+                            reason: "swap budget exhausted".into(),
+                            predicted_before: plan.objective,
+                            predicted_after: f64::NAN,
+                            swaps_so_far: swaps,
+                        });
+                        break 'scan ScanEnd::Shed(now, ShedCause::SwapBudgetExhausted);
+                    }
+                    let swap_at = now.max(last_swap + cfg.cooldown);
+                    let cpu_pool_dead = here == Device::Cpu(0);
+                    match planner.plan_after_device_loss(g, &cur_req, here) {
+                        Ok((new_req, stages)) => {
+                            let class = cur_req
+                                .fleet
+                                .class_of(here)
+                                .map(|c| c.name.clone())
+                                .unwrap_or_default();
+                            decisions.push(Decision {
+                                t: now,
+                                trigger: format!("dead:{here}"),
+                                action: format!("decrement-replan:{class}"),
+                                accepted: true,
+                                reason: if swap_at > now {
+                                    format!("deferred to t={swap_at:.3} (cooldown)")
+                                } else {
+                                    "device lost".into()
+                                },
+                                predicted_before: plan.objective,
+                                predicted_after: stages.placement.objective,
+                                swaps_so_far: swaps,
+                            });
+                            let (orig, kind) = if dev < k {
+                                (orig_acc[dev], DeviceKind::Accelerator)
+                            } else {
+                                (
+                                    orig_cpu.get(dev - k).copied().unwrap_or(dev - k),
+                                    DeviceKind::Cpu,
+                                )
+                            };
+                            break 'scan ScanEnd::Swap(
+                                swap_at,
+                                SwapKind::Decrement {
+                                    dense: dev,
+                                    orig,
+                                    kind,
+                                    req: new_req,
+                                    plan: stages.placement,
+                                },
+                            );
+                        }
+                        Err(decrement_err) => {
+                            // rung 3: CPU failover (meaningless when the
+                            // CPU pool head itself is the dead device)
+                            let fb = if cpu_pool_dead {
+                                Err(PlaceError::Unsupported(
+                                    "CPU pool head died; failover target is itself".into(),
+                                ))
+                            } else {
+                                fallback_after_loss(g, &cur_req, &plan, here)
+                            };
+                            match fb {
+                                Ok(fb_plan) => {
+                                    decisions.push(Decision {
+                                        t: now,
+                                        trigger: format!("dead:{here}"),
+                                        action: "cpu-failover".into(),
+                                        accepted: true,
+                                        reason: format!(
+                                            "decrement re-plan failed ({decrement_err})"
+                                        ),
+                                        predicted_before: plan.objective,
+                                        predicted_after: fb_plan.objective,
+                                        swaps_so_far: swaps,
+                                    });
+                                    break 'scan ScanEnd::Swap(
+                                        swap_at,
+                                        SwapKind::Failover { plan: fb_plan },
+                                    );
+                                }
+                                Err(fb_err) => {
+                                    // rung 4: shed, classified
+                                    decisions.push(Decision {
+                                        t: now,
+                                        trigger: format!("dead:{here}"),
+                                        action: "shed".into(),
+                                        accepted: true,
+                                        reason: format!(
+                                            "no rung can place the work \
+                                             (decrement: {decrement_err}; \
+                                              failover: {fb_err})"
+                                        ),
+                                        predicted_before: plan.objective,
+                                        predicted_after: f64::NAN,
+                                        swaps_so_far: swaps,
+                                    });
+                                    break 'scan ScanEnd::Shed(
+                                        now,
+                                        ShedCause::NoFeasiblePlacement,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    // rung 1: drift-adjusted re-plan in place, gated on
+                    // cooldown + improvement. Fires on ->Degraded,
+                    // Degraded->Healthy (drift cleared) and
+                    // Dead->Healthy (in-fleet recovery).
+                    let trigger = match (tr.from, tr.to) {
+                        (_, DeviceHealth::Degraded) => {
+                            format!("degraded:{here}*{:.2}", monitor.drift(dev))
+                        }
+                        (DeviceHealth::Dead, _) => format!("recovered:{here}"),
+                        _ => format!("cleared:{here}"),
+                    };
+                    if swaps >= cfg.max_swaps {
+                        decisions.push(Decision {
+                            t: now,
+                            trigger,
+                            action: "replan-in-place".into(),
+                            accepted: false,
+                            reason: "swap budget exhausted".into(),
+                            predicted_before: f64::NAN,
+                            predicted_after: f64::NAN,
+                            swaps_so_far: swaps,
+                        });
+                        continue;
+                    }
+                    if now < last_swap + cfg.cooldown {
+                        decisions.push(Decision {
+                            t: now,
+                            trigger,
+                            action: "replan-in-place".into(),
+                            accepted: false,
+                            reason: format!(
+                                "cooldown until t={:.3}",
+                                last_swap + cfg.cooldown
+                            ),
+                            predicted_before: f64::NAN,
+                            predicted_after: f64::NAN,
+                            swaps_so_far: swaps,
+                        });
+                        continue;
+                    }
+                    let degraded: Vec<(usize, f64)> = monitor
+                        .degraded()
+                        .into_iter()
+                        .filter(|&(s, _)| s < k)
+                        .collect();
+                    let (adj_req, pi) = drift_adjusted_request(&cur_req, &degraded);
+                    let mapped_old = apply_acc_perm(&plan, &pi);
+                    let before = objective::max_load_req(g, &adj_req, &mapped_old);
+                    match planner.plan_request(g, &adj_req) {
+                        Ok(cand) => {
+                            let after =
+                                objective::max_load_req(g, &adj_req, &cand.placement);
+                            let ok = before / after >= 1.0 + cfg.min_improvement;
+                            decisions.push(Decision {
+                                t: now,
+                                trigger,
+                                action: "replan-in-place".into(),
+                                accepted: ok,
+                                reason: if ok {
+                                    format!("predicted {before:.4} -> {after:.4}")
+                                } else {
+                                    format!(
+                                        "improvement {:.3} below threshold {:.3}",
+                                        before / after - 1.0,
+                                        cfg.min_improvement
+                                    )
+                                },
+                                predicted_before: before,
+                                predicted_after: after,
+                                swaps_so_far: swaps,
+                            });
+                            if ok {
+                                let inv = invert_perm(&pi);
+                                let mut new_plan = apply_acc_perm(&cand.placement, &inv);
+                                new_plan.objective =
+                                    objective::max_load_req(g, &cur_req, &new_plan);
+                                break 'scan ScanEnd::Swap(
+                                    now,
+                                    SwapKind::Replan { plan: new_plan },
+                                );
+                            }
+                        }
+                        Err(e) => decisions.push(Decision {
+                            t: now,
+                            trigger,
+                            action: "replan-in-place".into(),
+                            accepted: false,
+                            reason: format!("re-plan failed: {e}"),
+                            predicted_before: before,
+                            predicted_after: f64::NAN,
+                            swaps_so_far: swaps,
+                        }),
+                    }
+                }
+            }
+        };
+
+        // --- cut the epoch and apply the staged outcome -------------------
+        match end {
+            ScanEnd::Clean => {
+                completed_total += res.completed;
+                pending = 0;
+                verdict = Some((Verdict::Completed, t0 + res.total, res.steady_tps));
+            }
+            ScanEnd::Shed(t, cause) => {
+                // count what completed before the shed, shed the rest
+                let rel = t - t0;
+                let done_now = res
+                    .sample_done
+                    .iter()
+                    .filter(|d| d.is_finite() && **d <= rel + 1e-9)
+                    .count();
+                completed_total += done_now;
+                shed_total = injected_total.saturating_sub(completed_total);
+                verdict = Some((Verdict::Shed(cause), t, f64::NAN));
+            }
+            ScanEnd::Swap(t, kind) => {
+                let rel = t - t0;
+                let done_now = res
+                    .sample_done
+                    .iter()
+                    .filter(|d| d.is_finite() && **d <= rel + 1e-9)
+                    .count();
+                completed_total += done_now;
+                let fired = truth.spikes_fired(t0, t);
+                pending = (pending + fired).saturating_sub(done_now);
+                swaps += 1;
+                swap_times.push(t);
+                last_swap = t;
+                match kind {
+                    SwapKind::Decrement { dense, orig, kind, req, plan: p } => {
+                        // schedule re-admission if the script later
+                        // recovers this device (one reprobe interval of
+                        // detection lag)
+                        let k_old = cur_req.fleet.k();
+                        let dev_now = match kind {
+                            DeviceKind::Accelerator => Device::Acc(dense),
+                            DeviceKind::Cpu => Device::Cpu(dense - k_old),
+                        };
+                        let od = match kind {
+                            DeviceKind::Accelerator => Device::Acc(orig),
+                            DeviceKind::Cpu => Device::Cpu(orig),
+                        };
+                        let class = cur_req
+                            .fleet
+                            .class_of(dev_now)
+                            .map(|c| c.name.clone())
+                            .unwrap_or_default();
+                        if let Some(tr_at) = truth.first_recover_after(od, t) {
+                            readmits.push((
+                                tr_at + cfg.health.reprobe_dead_every,
+                                class,
+                                orig,
+                                kind,
+                            ));
+                        }
+                        match kind {
+                            DeviceKind::Accelerator => {
+                                orig_acc.remove(dense);
+                                monitor.remove_device(dense);
+                            }
+                            DeviceKind::Cpu => {
+                                orig_cpu.remove(dense - k_old);
+                                // the last CPU's slot stays behind as the
+                                // engine's phantom CPU slot
+                                if req.fleet.l() > 0 {
+                                    monitor.remove_device(dense);
+                                }
+                            }
+                        }
+                        cur_req = req;
+                        plan = p;
+                    }
+                    SwapKind::Failover { plan: p } | SwapKind::Replan { plan: p } => {
+                        plan = p;
+                    }
+                    SwapKind::Readmit { ins, orig, kind, req, plan: p } => {
+                        match kind {
+                            DeviceKind::Accelerator => {
+                                orig_acc.insert(ins, orig);
+                                monitor.insert_device(ins);
+                            }
+                            DeviceKind::Cpu => {
+                                // a 0-CPU fleet kept a phantom slot; the
+                                // re-admitted device takes it over
+                                if cur_req.fleet.l() == 0 {
+                                    monitor.remove_device(cur_req.fleet.k());
+                                }
+                                orig_cpu.insert(ins, orig);
+                                monitor.insert_device(req.fleet.k() + ins);
+                            }
+                        }
+                        cur_req = req;
+                        plan = p;
+                    }
+                }
+                t0 = t;
+                continue 'epochs;
+            }
+        }
+    }
+
+    let (verdict, makespan, steady) = verdict.expect("loop sets a verdict");
+    Ok(MonitorOutcome {
+        verdict,
+        injected: injected_total,
+        completed: completed_total,
+        shed: shed_total,
+        makespan,
+        final_steady_tps: steady,
+        plan_swaps: swaps,
+        swap_times,
+        decisions,
+        transitions: monitor.transitions().to_vec(),
+        final_placement: plan,
+        final_request: cur_req,
+        epochs,
+        time_unit: unit,
+        cooldown: cfg.cooldown,
+    })
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::SolveOpts;
+    use crate::coordinator::placement::Scenario;
+    use crate::coordinator::planner::Algorithm;
+    use crate::graph::Node;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(10.0).acc(1.0).mem(1.0).comm(0.1));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    fn planner() -> ServingPlanner {
+        ServingPlanner::new(Algorithm::Dp, SolveOpts::default())
+    }
+
+    fn run(
+        g: &OpGraph,
+        req: &PlanRequest,
+        spec: &str,
+        samples: usize,
+        cfg: &ControllerConfig,
+    ) -> MonitorOutcome {
+        let script = EventScript::parse(spec).unwrap();
+        let mut pl = planner();
+        run_monitored(g, req, &script, engine::Schedule::Pipelined, samples, &mut pl, cfg)
+            .unwrap()
+    }
+
+    /// The loop's conservation law, checked after every test run.
+    fn check_invariants(out: &MonitorOutcome) {
+        assert_eq!(
+            out.completed + out.shed,
+            out.injected,
+            "conservation: completed {} + shed {} != injected {}",
+            out.completed,
+            out.shed,
+            out.injected
+        );
+        assert_eq!(out.plan_swaps, out.swap_times.len());
+        for w in out.swap_times.windows(2) {
+            assert!(
+                w[1] - w[0] >= out.cooldown - 1e-9,
+                "swaps at {} and {} violate cooldown {}",
+                w[0],
+                w[1],
+                out.cooldown
+            );
+        }
+    }
+
+    #[test]
+    fn no_event_run_matches_plain_simulation() {
+        // the acceptance bar: with no scripted events the monitored loop
+        // is a bitwise replay of the plain engine run
+        let g = chain(6);
+        let req = Scenario::new(3, 1, f64::INFINITY).to_request();
+        let mut pl = planner();
+        let stages = pl.plan_request(&g, &req).unwrap();
+        let base = engine::simulate_req(
+            &g,
+            &req,
+            &stages.placement,
+            engine::Schedule::Pipelined,
+            24,
+            &SimConfig::for_request(&req),
+        );
+        let out = run(&g, &req, "", 24, &ControllerConfig::default());
+        check_invariants(&out);
+        assert_eq!(out.verdict, Verdict::Completed);
+        assert_eq!(out.plan_swaps, 0);
+        assert_eq!(out.epochs, 1);
+        assert_eq!(out.completed, 24);
+        assert_eq!(out.final_steady_tps.to_bits(), base.steady_tps.to_bits());
+        assert_eq!(out.makespan.to_bits(), base.total.to_bits());
+        assert!(out.decisions.is_empty());
+    }
+
+    #[test]
+    fn single_fail_is_detected_and_replanned_around() {
+        // a permanent accelerator loss: silence -> probes -> Dead ->
+        // decrement re-plan; the run then finishes on the shrunk fleet
+        let g = chain(6);
+        let req = Scenario::new(3, 1, f64::INFINITY).to_request();
+        let out = run(&g, &req, "fail:acc1@t=3", 20, &ControllerConfig::default());
+        check_invariants(&out);
+        assert_eq!(out.verdict, Verdict::Completed, "decisions: {:#?}", out.decisions);
+        assert_eq!(out.completed, 20);
+        assert_eq!(out.plan_swaps, 1);
+        assert_eq!(out.final_request.fleet.k(), 2, "fleet must shrink by the dead device");
+        assert!(
+            out.decisions
+                .iter()
+                .any(|d| d.accepted && d.action.starts_with("decrement-replan")),
+            "decisions: {:#?}",
+            out.decisions
+        );
+        // the monitor, not the script, timed the detection
+        let dead_at = out
+            .transitions
+            .iter()
+            .find(|tr| tr.to == DeviceHealth::Dead)
+            .map(|tr| tr.t)
+            .expect("a Dead transition");
+        assert!(dead_at > 3.0, "death declared only after the probe ladder ran");
+    }
+
+    #[test]
+    fn quick_recover_needs_no_swap_at_all() {
+        // outage shorter than the detection bound: in-flight work resumes
+        // on recovery before the probe ladder condemns the device
+        let g = chain(6);
+        let req = Scenario::new(3, 1, f64::INFINITY).to_request();
+        let out = run(
+            &g,
+            &req,
+            "fail:acc1@t=3,recover:acc1@t=6",
+            20,
+            &ControllerConfig::default(),
+        );
+        check_invariants(&out);
+        assert_eq!(out.verdict, Verdict::Completed, "decisions: {:#?}", out.decisions);
+        assert_eq!(out.completed, 20);
+        assert_eq!(out.plan_swaps, 0, "decisions: {:#?}", out.decisions);
+        assert_eq!(out.final_request.fleet.k(), 3);
+    }
+
+    #[test]
+    fn sustained_straggler_triggers_inplace_replan() {
+        // a 4x straggler never dies (completions keep arriving) but the
+        // drift EWMA crosses the threshold and rung 1 rebalances around it
+        let g = chain(6);
+        let req = Scenario::new(3, 1, f64::INFINITY).to_request();
+        let out = run(&g, &req, "slow:acc1*0.25@t=0", 24, &ControllerConfig::default());
+        check_invariants(&out);
+        assert_eq!(out.verdict, Verdict::Completed, "decisions: {:#?}", out.decisions);
+        assert_eq!(out.completed, 24);
+        assert_eq!(out.final_request.fleet.k(), 3, "straggler must stay in the fleet");
+        assert!(
+            out.decisions
+                .iter()
+                .any(|d| d.accepted && d.action == "replan-in-place"),
+            "decisions: {:#?}",
+            out.decisions
+        );
+        assert!(out.plan_swaps >= 1);
+    }
+
+    #[test]
+    fn backlog_over_cap_sheds_instead_of_deadlocking() {
+        let g = chain(4);
+        let req = Scenario::new(2, 1, f64::INFINITY).to_request();
+        let cfg = ControllerConfig { backlog_cap: 8, ..ControllerConfig::default() };
+        let out = run(&g, &req, "", 20, &cfg);
+        check_invariants(&out);
+        assert_eq!(out.verdict, Verdict::Completed);
+        assert_eq!(out.completed, 8);
+        assert_eq!(out.shed, 12);
+        assert!(
+            out.decisions.iter().any(|d| d.trigger == "backlog" && d.action == "shed:12"),
+            "decisions: {:#?}",
+            out.decisions
+        );
+    }
+
+    #[test]
+    fn oscillating_straggler_respects_hysteresis() {
+        // slow/recover flapping: however noisy the script, accepted swaps
+        // stay under the budget and at least a cooldown apart (asserted
+        // by check_invariants)
+        let g = chain(6);
+        let req = Scenario::new(3, 1, f64::INFINITY).to_request();
+        let cfg = ControllerConfig { max_swaps: 3, ..ControllerConfig::default() };
+        let out = run(
+            &g,
+            &req,
+            "slow:acc1*0.25@t=0,recover:acc1@t=30,slow:acc1*0.25@t=60,recover:acc1@t=90",
+            48,
+            &cfg,
+        );
+        check_invariants(&out);
+        assert!(out.plan_swaps <= 3, "decisions: {:#?}", out.decisions);
+        assert_eq!(out.verdict, Verdict::Completed, "decisions: {:#?}", out.decisions);
+    }
+
+    #[test]
+    fn fail_then_recover_readmits_the_device() {
+        // device dies long enough to be swapped out, then recovers: the
+        // controller schedules a re-admission probe and grows the fleet
+        // back when the re-plan pays for itself
+        let g = chain(6);
+        let req = Scenario::new(3, 1, f64::INFINITY).to_request();
+        // generous sample count so the run is still going when the
+        // re-admission probe fires (recovery + reprobe interval)
+        let out = run(
+            &g,
+            &req,
+            "fail:acc1@t=3,recover:acc1@t=80",
+            160,
+            &ControllerConfig::default(),
+        );
+        check_invariants(&out);
+        assert_eq!(out.verdict, Verdict::Completed, "decisions: {:#?}", out.decisions);
+        if out
+            .decisions
+            .iter()
+            .any(|d| d.accepted && d.action.starts_with("readmit-replan"))
+        {
+            assert_eq!(out.final_request.fleet.k(), 3, "re-admission must restore k");
+        } else {
+            // run may have drained before the probe fired; the swap-out
+            // alone must still have happened
+            assert_eq!(out.final_request.fleet.k(), 2);
+        }
+    }
+}

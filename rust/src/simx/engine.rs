@@ -21,8 +21,8 @@
 //!   [`SimConfig::link_bandwidth`] set, macro-dependency hand-offs are
 //!   delayed by `size / bw` and serialize per directed device pair
 //!   (replacing the legacy zero-cost hand-off).
-//! * `DeviceFail` / `DeviceSlow` — scripted fault / straggler injection
-//!   ([`crate::simx::event::EventScript`]).
+//! * `DeviceFail` / `DeviceSlow` / `DeviceRecover` — scripted fault /
+//!   straggler / recovery injection ([`crate::simx::event::EventScript`]).
 //! * `SampleInject` — request arrivals: the base stream at `t = 0` plus
 //!   scripted load spikes.
 //!
@@ -347,6 +347,7 @@ enum Ev {
     TransferDone { sample: usize, to_piece: usize },
     DeviceFail { dev: usize },
     DeviceSlow { dev: usize, factor: f64 },
+    DeviceRecover { dev: usize },
 }
 
 /// Heap entry ordered so `BinaryHeap` (a max-heap) pops the *earliest*
@@ -525,6 +526,10 @@ pub fn simulate_with_events(
                 None => continue,
             },
             ScriptAction::Spike { count } => Ev::SampleInject { count },
+            ScriptAction::Recover { device } => match dense_of(device) {
+                Some(d) => Ev::DeviceRecover { dev: d },
+                None => continue,
+            },
         };
         push(&mut heap, &mut seq, e.at, ev);
     }
@@ -588,6 +593,14 @@ pub fn simulate_with_events(
                 }
                 Ev::DeviceFail { dev } => devs[dev].alive = false,
                 Ev::DeviceSlow { dev, factor } => devs[dev].slow_scale *= factor,
+                // recovery to nominal: accept work again, straggler scale
+                // resets (all script events sit in the heap from the
+                // start, so a recover wakes the loop even after every
+                // in-flight task drained on a dead fleet)
+                Ev::DeviceRecover { dev } => {
+                    devs[dev].alive = true;
+                    devs[dev].slow_scale = 1.0;
+                }
                 Ev::TransferDone { sample, to_piece } => {
                     let st = &mut samples[sample];
                     st.rem_deps[to_piece] -= 1;
@@ -916,6 +929,60 @@ mod tests {
             other => panic!("expected DeviceLost, got {other:?}"),
         }
         assert!(res.ok().is_err());
+    }
+
+    #[test]
+    fn recover_after_fail_completes_every_sample() {
+        let g = chain(6);
+        let sc = Scenario::new(3, 1, f64::INFINITY);
+        let p = dp::solve(&g, &sc).unwrap();
+        let req = sc.to_request();
+        // same fault as device_loss_stalls_downstream_samples, but the
+        // device comes back — no sample may stay stranded, even though
+        // the pipeline fully drained while acc1 was down
+        let script = EventScript::parse("fail:acc1@t=3,recover:acc1@t=40").unwrap();
+        let res = simulate_with_events(
+            &g,
+            &req,
+            &p,
+            Schedule::Pipelined,
+            24,
+            &script,
+            &SimConfig::default(),
+        );
+        assert_eq!(res.completed, res.injected, "recovery must unstall the run");
+        assert!(res.stall.is_none());
+        assert!(res.ok().is_ok());
+        // the outage is visible in the makespan: work restarted at t=40
+        assert!(res.total >= 40.0, "makespan {} must cover the outage", res.total);
+    }
+
+    #[test]
+    fn recover_resets_straggler_scale() {
+        let g = chain(6);
+        let sc = Scenario::new(3, 1, f64::INFINITY);
+        let p = dp::solve(&g, &sc).unwrap();
+        let req = sc.to_request();
+        let base = simulate_req(&g, &req, &p, Schedule::Pipelined, 30, &SimConfig::default());
+        // heavy straggler, then recovery to nominal early in the run:
+        // steady state (tail window) must match the undisturbed run
+        let script = EventScript::parse("slow:acc1*0.1@t=0,recover:acc1@t=6").unwrap();
+        let rec = simulate_with_events(
+            &g,
+            &req,
+            &p,
+            Schedule::Pipelined,
+            30,
+            &script,
+            &SimConfig::default(),
+        );
+        assert_eq!(rec.completed, 30);
+        assert!(
+            rec.steady_tps < base.steady_tps * 1.3,
+            "post-recovery steady state must be near-nominal: {} vs {}",
+            rec.steady_tps,
+            base.steady_tps
+        );
     }
 
     #[test]

@@ -11,6 +11,9 @@
 //!   compound multiplicatively across repeated `slow` events).
 //! * `spike:+8@t=12` — load spike: 8 extra samples are injected at
 //!   `t=12` on top of the base request stream.
+//! * `recover:acc0@t=20` — the device comes back at nominal speed: a
+//!   failed `acc0` accepts work again and any accumulated `slow` factors
+//!   reset to 1.0 (transient faults; failure is no longer permanent).
 //!
 //! The grammar is `KIND:BODY@t=TIME`, comma-separated; `Display` re-emits
 //! it and `parse ∘ Display` is the identity (mirroring
@@ -30,6 +33,10 @@ pub enum ScriptAction {
     Slow { device: Device, factor: f64 },
     /// Load spike: `count` extra samples enter the stream.
     Spike { count: usize },
+    /// Recovery to nominal: a failed device accepts work again and its
+    /// accumulated `slow` factors reset to 1.0. A no-op on a device that
+    /// is already healthy and at full speed.
+    Recover { device: Device },
 }
 
 /// One scripted event: an action at an absolute simulation time.
@@ -128,6 +135,7 @@ impl EventScript {
                     }
                     ScriptAction::Spike { count }
                 }
+                "recover" => ScriptAction::Recover { device: Device::parse(body)? },
                 other => return Err(format!("unknown event kind '{other}' in '{entry}'")),
             };
             events.push(ScriptedEvent { at, action });
@@ -148,6 +156,7 @@ impl std::fmt::Display for EventScript {
                 ScriptAction::Fail { device } => write!(f, "fail:{device}")?,
                 ScriptAction::Slow { device, factor } => write!(f, "slow:{device}*{factor}")?,
                 ScriptAction::Spike { count } => write!(f, "spike:+{count}")?,
+                ScriptAction::Recover { device } => write!(f, "recover:{device}")?,
             }
             write!(f, "@t={}", e.at)?;
         }
@@ -182,11 +191,29 @@ mod tests {
     }
 
     #[test]
+    fn parse_recover_and_roundtrip() {
+        let s = EventScript::parse("fail:acc1@t=4,recover:acc1@t=11").unwrap();
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(
+            s.events[1],
+            ScriptedEvent { at: 11.0, action: ScriptAction::Recover { device: Device::Acc(1) } }
+        );
+        // recover events are not fails: the re-planning helpers ignore them
+        assert_eq!(s.first_fail(), Some((4.0, Device::Acc(1))));
+        let round = EventScript::parse(&s.to_string()).unwrap();
+        assert_eq!(s, round, "display was: {s}");
+        assert!(EventScript::parse("recover:gpu0@t=5").is_err());
+        assert!(EventScript::parse("recover:acc0").is_err());
+    }
+
+    #[test]
     fn display_reparses() {
         for spec in [
             "fail:acc0@t=5,slow:acc1*0.5@t=9,spike:+8@t=12",
             "slow:cpu0*0.25@t=1.5",
             "fail:acc3@t=0",
+            "recover:acc0@t=7.5,recover:cpu1@t=8",
+            "fail:acc0@t=2,slow:acc0*0.5@t=3,recover:acc0@t=9,spike:+2@t=10",
             "",
         ] {
             let s = EventScript::parse(spec).unwrap();

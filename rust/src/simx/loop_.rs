@@ -109,6 +109,9 @@ fn remap_after_loss(script: &EventScript, failed: Device) -> EventScript {
                     ScriptAction::Slow { device, factor } => {
                         ScriptAction::Slow { device: remap(device)?, factor }
                     }
+                    ScriptAction::Recover { device } => {
+                        ScriptAction::Recover { device: remap(device)? }
+                    }
                     spike @ ScriptAction::Spike { .. } => spike,
                 };
                 Some(ScriptedEvent { at: e.at, action })
@@ -118,16 +121,28 @@ fn remap_after_loss(script: &EventScript, failed: Device) -> EventScript {
 }
 
 /// The no-replan fallback after losing `failed`: its nodes hot-failover to
-/// the CPU pool (`Cpu(0)`), everything else stays put. Always a valid
-/// placement (the CPU pool is uncapped and supports every op with a
-/// finite `p_cpu`); usually a badly degraded one — that is the point of
-/// comparison.
+/// the CPU pool (`Cpu(0)`), everything else stays put. Usually a badly
+/// degraded placement — that is the point of comparison — but only a
+/// *valid* one when every re-homed op actually runs on a CPU: an op with
+/// no finite `p_cpu` (accelerator-only kernels) has nowhere to fail over
+/// to, and this errors instead of silently returning an
+/// infinite-objective placement (the re-planning controller skips this
+/// ladder rung on that error).
 pub fn fallback_after_loss(
     g: &OpGraph,
     req: &PlanRequest,
     p: &Placement,
     failed: Device,
-) -> Placement {
+) -> Result<Placement, PlaceError> {
+    for (v, &d) in p.assignment.iter().enumerate() {
+        if d == failed && !g.nodes[v].p_cpu.is_finite() {
+            return Err(PlaceError::Unsupported(format!(
+                "op '{}' on lost device {failed} has no finite CPU cost — CPU failover \
+                 cannot place it",
+                g.nodes[v].name
+            )));
+        }
+    }
     let assignment = p
         .assignment
         .iter()
@@ -135,7 +150,7 @@ pub fn fallback_after_loss(
         .collect();
     let mut out = Placement::new(assignment, 0.0, format!("{} + CPU failover", p.algorithm));
     out.objective = objective::max_load_req(g, req, &out);
-    out
+    Ok(out)
 }
 
 /// Run the full loss → drift → re-plan cycle (see the module docs).
@@ -218,7 +233,7 @@ pub fn run_device_loss_demo_with(
     let cfg = SimConfig::for_request(req);
     let healthy_sim = engine::simulate_req(g, req, healthy, schedule, samples, &cfg);
 
-    let degraded = fallback_after_loss(g, req, healthy, failed_device);
+    let degraded = fallback_after_loss(g, req, healthy, failed_device)?;
     let degraded_sim =
         engine::simulate_with_events(g, req, &degraded, schedule, samples, &residual, &cfg);
 
@@ -246,4 +261,82 @@ pub fn run_device_loss_demo_with(
         disrupted_injected: disrupted.injected,
         disrupted_stall: disrupted.stall,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::placement::{DeviceClass, Fleet};
+    use crate::graph::Node;
+
+    fn ev(spec: &str) -> EventScript {
+        EventScript::parse(spec).unwrap()
+    }
+
+    #[test]
+    fn remap_drops_lost_slot_and_shifts_higher_accs() {
+        // two fails in one script: reacting to acc1 drops acc1's own
+        // events and shifts acc2 → acc1; acc0 and CPUs stay put
+        let s = ev("fail:acc1@t=3,fail:acc2@t=7,slow:acc0*0.5@t=4,slow:cpu0*0.9@t=5");
+        let r = remap_after_loss(&s, Device::Acc(1));
+        assert_eq!(r, ev("fail:acc1@t=7,slow:acc0*0.5@t=4,slow:cpu0*0.9@t=5"));
+    }
+
+    #[test]
+    fn remap_drops_all_events_of_the_lost_device() {
+        // fail + slow + recover on the same device all die with it
+        let s = ev("fail:acc0@t=2,slow:acc0*0.5@t=1,recover:acc0@t=9,spike:+3@t=4");
+        let r = remap_after_loss(&s, Device::Acc(0));
+        assert_eq!(r, ev("spike:+3@t=4"));
+    }
+
+    #[test]
+    fn remap_of_highest_dense_index_shifts_nothing() {
+        // losing the highest accelerator slot: no survivor shifts
+        let s = ev("fail:acc2@t=5,slow:acc1*0.5@t=6,recover:acc2@t=11");
+        let r = remap_after_loss(&s, Device::Acc(2));
+        assert_eq!(r, ev("slow:acc1*0.5@t=6"));
+    }
+
+    #[test]
+    fn remap_of_cpu_loss_is_identity() {
+        let s = ev("fail:cpu0@t=5,slow:acc0*0.5@t=6");
+        assert_eq!(remap_after_loss(&s, Device::Cpu(0)), s);
+    }
+
+    #[test]
+    fn residual_drops_only_fail_events() {
+        // multi-fault script: both fails drop; slow/spike/recover survive
+        let s = ev("fail:acc0@t=2,fail:acc1@t=3,slow:acc1*0.5@t=4,spike:+2@t=5,recover:acc0@t=8");
+        let r = residual_script(&s);
+        assert_eq!(r, ev("slow:acc1*0.5@t=4,spike:+2@t=5,recover:acc0@t=8"));
+        assert!(residual_script(&ev("fail:acc0@t=1")).is_empty());
+    }
+
+    #[test]
+    fn fallback_errors_on_accelerator_only_ops() {
+        // op 1 has no finite CPU cost: failing its device over to the CPU
+        // pool must be a PlaceError, not an infinite-objective placement
+        let mut g = OpGraph::new();
+        g.add_node(Node::new("a").cpu(10.0).acc(1.0).mem(1.0));
+        g.add_node(Node::new("kernel").cpu(f64::INFINITY).acc(1.0).mem(1.0));
+        g.add_node(Node::new("c").cpu(10.0).acc(1.0).mem(1.0));
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        let fleet = Fleet::new(vec![
+            DeviceClass::acc("a", 2, f64::INFINITY),
+            DeviceClass::cpu("cpu", 1),
+        ]);
+        let req = PlanRequest::new(fleet);
+        let p = Placement::new(
+            vec![Device::Acc(0), Device::Acc(1), Device::Acc(1)],
+            0.0,
+            "test",
+        );
+        assert!(fallback_after_loss(&g, &req, &p, Device::Acc(1)).is_err());
+        // losing acc0 is fine: only finite-p_cpu ops fail over
+        let ok = fallback_after_loss(&g, &req, &p, Device::Acc(0)).unwrap();
+        assert_eq!(ok.assignment[0], Device::Cpu(0));
+        assert!(ok.objective.is_finite());
+    }
 }

@@ -20,6 +20,16 @@
 //! * [`loop_`] — the drift-driven re-planning loop: a scripted fault
 //!   triggers `Fleet::decrement` → `ServingPlanner::plan_request` → plan
 //!   swap, with before/after TPS measured *in simulation*.
+//! * [`controller`] — the closed-loop version of [`loop_`]: a
+//!   [`crate::runtime::health::HealthMonitor`] consumes the engine trace,
+//!   and its transitions drive a hysteresis re-plan controller
+//!   (cooldown + improvement threshold + swap budget) down a
+//!   graceful-degradation ladder — re-plan in place, decrement re-plan,
+//!   CPU failover, admission-controlled shed.
+//! * [`chaos`] — seeded chaos campaigns: randomized fail/slow/recover/
+//!   spike scripts fuzzed through [`controller::run_monitored`], with
+//!   liveness, hysteresis and near-oracle-throughput invariants checked
+//!   on every run.
 //!
 //! The legacy [`crate::pipeline::sim`] API survives as a thin adapter
 //! over this engine (uniform-fleet results within ε of the frozen
@@ -27,11 +37,17 @@
 //! See DESIGN.md §6 for the event/resource model and the tolerance
 //! contract.
 
+pub mod chaos;
+pub mod controller;
 pub mod engine;
 pub mod event;
 pub mod loop_;
 pub mod validate;
 
+pub use chaos::{ChaosCampaign, ChaosConfig, ChaosReport, RunReport};
+pub use controller::{
+    run_monitored, ControllerConfig, Decision, MonitorOutcome, ShedCause, Verdict,
+};
 pub use engine::{
     build_pieces_req, simulate_req, simulate_with_events, Piece, Schedule, SimConfig,
     SimxResult, Stall,
