@@ -1,0 +1,207 @@
+//! Multi-tenant planning traffic bench: M worker threads fire a seeded
+//! synthetic request stream (mixed graphs × fleets × objectives) at one
+//! shared [`ConcurrentService`] and report p50/p99 plan latency, context
+//! hit/dedup rates, and throughput scaling against the single-threaded
+//! baseline. Feeds BENCH_4.json.
+//!
+//! `--smoke` runs a seconds-scale configuration for CI: it asserts the
+//! structural invariants (every request planned, hits + dedup + misses
+//! add up, misses bounded by the distinct-fingerprint count) instead of
+//! chasing stable timings on shared runners.
+
+use dnn_partition::coordinator::concurrent::ConcurrentService;
+use dnn_partition::coordinator::context::SolveOpts;
+use dnn_partition::coordinator::placement::{
+    AlgoChoice, DeviceClass, Fleet, Objective, PlanRequest,
+};
+use dnn_partition::coordinator::planner::Algorithm;
+use dnn_partition::graph::OpGraph;
+use dnn_partition::util::proptest::random_dag;
+use dnn_partition::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// One tenant request: an index into the graph pool plus the plan request.
+struct Traffic {
+    graph: usize,
+    req: PlanRequest,
+}
+
+fn fleets() -> Vec<Fleet> {
+    vec![
+        Fleet::uniform(2, 1, f64::INFINITY),
+        Fleet::uniform(4, 1, f64::INFINITY),
+        Fleet::new(vec![
+            DeviceClass::acc("fast", 1, f64::INFINITY).speed(2.0),
+            DeviceClass::acc("slow", 2, f64::INFINITY),
+            DeviceClass::cpu("cpu", 1),
+        ]),
+        Fleet::new(vec![
+            DeviceClass::acc("a", 2, 64.0).speed(1.5),
+            DeviceClass::acc("b", 2, 32.0),
+            DeviceClass::cpu("cpu", 2),
+        ]),
+    ]
+}
+
+/// Seeded request stream: `n` requests drawn from `graphs × fleets ×
+/// {objective, contiguity, algorithm}` with repetition by construction —
+/// repeats are what exercise the context cache, the single-flight path,
+/// and the incumbent cache, exactly like a serving tier re-planning a
+/// bounded set of live models.
+fn traffic(rng: &mut Rng, n: usize, graphs: usize, fleets: &[Fleet]) -> Vec<Traffic> {
+    (0..n)
+        .map(|_| {
+            let fleet = fleets[rng.gen_range(fleets.len())].clone();
+            let mut req = PlanRequest::new(fleet);
+            req = match rng.gen_range(4) {
+                // IP regimes (warm-seeded): throughput contiguous + not
+                0 => req
+                    .objective(Objective::Throughput)
+                    .algorithm(AlgoChoice::Fixed(Algorithm::IpContiguous)),
+                1 => req.objective(Objective::Throughput).contiguous(false),
+                // latency IP, both contiguity regimes
+                2 => req
+                    .objective(Objective::Latency)
+                    .contiguous(rng.gen_bool(0.5)),
+                // deterministic DP traffic (cache-hit dominated)
+                _ => req
+                    .objective(Objective::Throughput)
+                    .algorithm(AlgoChoice::Fixed(Algorithm::Dp)),
+            };
+            Traffic { graph: rng.gen_range(graphs), req }
+        })
+        .collect()
+}
+
+/// Drain the stream through the service with `m` workers; returns
+/// `(wall time, per-request latencies)`.
+fn run(
+    svc: &ConcurrentService,
+    graphs: &[OpGraph],
+    stream: &[Traffic],
+    opts: &SolveOpts,
+    m: usize,
+) -> (Duration, Vec<f64>) {
+    let next = AtomicUsize::new(0);
+    let started = Instant::now();
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(stream.len());
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..m)
+            .map(|_| {
+                let next = &next;
+                scope.spawn(move || {
+                    let mut mine = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(t) = stream.get(i) else { break };
+                        let t0 = Instant::now();
+                        svc.plan_request(&graphs[t.graph], &t.req, opts)
+                            .expect("traffic request must plan");
+                        mine.push(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                    mine
+                })
+            })
+            .collect();
+        for h in handles {
+            lat_ms.extend(h.join().expect("worker panicked"));
+        }
+    });
+    (started.elapsed(), lat_ms)
+}
+
+fn pctl(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    sorted[((sorted.len() as f64 - 1.0) * p).round() as usize]
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n_requests, graph_nodes) = if smoke { (60, 8) } else { (600, 12) };
+    let mut rng = Rng::new(0x7AFF1C);
+    let graphs: Vec<OpGraph> = (0..3)
+        .map(|i| random_dag(&mut rng, graph_nodes + 2 * i, 0.3))
+        .collect();
+    let fleets = fleets();
+    let stream = traffic(&mut rng, n_requests, graphs.len(), &fleets);
+    let distinct = {
+        use dnn_partition::coordinator::context::fingerprint_req;
+        let mut fps: Vec<u64> = stream
+            .iter()
+            .map(|t| fingerprint_req(&graphs[t.graph], &t.req))
+            .collect();
+        fps.sort_unstable();
+        fps.dedup();
+        fps.len()
+    };
+    let opts = SolveOpts {
+        ip_budget: Duration::from_millis(if smoke { 20 } else { 60 }),
+        ..SolveOpts::default()
+    };
+    println!(
+        "plan_traffic: {n_requests} requests, {} graphs × {} fleets, {distinct} distinct fingerprints{}",
+        graphs.len(),
+        fleets.len(),
+        if smoke { " (smoke)" } else { "" },
+    );
+
+    // single-threaded baseline (fresh service: cold caches)
+    let base_svc = ConcurrentService::new(8, 64);
+    let (base_wall, mut base_lat) = run(&base_svc, &graphs, &stream, &opts, 1);
+    base_lat.sort_by(f64::total_cmp);
+    println!(
+        "  m=1  wall {:7.1} ms  p50 {:6.2} ms  p99 {:6.2} ms  hits {} misses {} dedup {}",
+        base_wall.as_secs_f64() * 1e3,
+        pctl(&base_lat, 0.50),
+        pctl(&base_lat, 0.99),
+        base_svc.hits(),
+        base_svc.misses(),
+        base_svc.dedup_waits(),
+    );
+
+    for m in [2usize, 4, 8] {
+        let svc = ConcurrentService::new(8, 64);
+        let (wall, mut lat) = run(&svc, &graphs, &stream, &opts, m);
+        lat.sort_by(f64::total_cmp);
+        let planned = lat.len();
+        assert_eq!(planned, n_requests, "every request must be planned exactly once");
+        assert_eq!(
+            svc.hits() + svc.misses() + svc.dedup_waits(),
+            n_requests,
+            "every request is a hit, a miss, or a dedup wait"
+        );
+        assert!(
+            svc.misses() <= distinct,
+            "single-flight bound: misses ({}) must not exceed distinct fingerprints ({distinct})",
+            svc.misses(),
+        );
+        println!(
+            "  m={m}  wall {:7.1} ms  p50 {:6.2} ms  p99 {:6.2} ms  hits {} misses {} dedup {}  scaling {:.2}x",
+            wall.as_secs_f64() * 1e3,
+            pctl(&lat, 0.50),
+            pctl(&lat, 0.99),
+            svc.hits(),
+            svc.misses(),
+            svc.dedup_waits(),
+            base_wall.as_secs_f64() / wall.as_secs_f64(),
+        );
+    }
+
+    // warm-start payoff: re-running the stream against the already-warm
+    // baseline service hits both the context cache and the IP incumbents
+    let (warm_wall, mut warm_lat) = run(&base_svc, &graphs, &stream, &opts, 4);
+    warm_lat.sort_by(f64::total_cmp);
+    println!(
+        "  warm re-run (m=4): wall {:7.1} ms  p50 {:6.2} ms  p99 {:6.2} ms  ({:.2}x vs cold m=1)",
+        warm_wall.as_secs_f64() * 1e3,
+        pctl(&warm_lat, 0.50),
+        pctl(&warm_lat, 0.99),
+        base_wall.as_secs_f64() / warm_wall.as_secs_f64(),
+    );
+    if smoke {
+        println!("plan_traffic smoke OK");
+    }
+}

@@ -130,4 +130,38 @@ fn main() {
         "monitored fail/replan overhead over plain fleet-sim: {:.2}x",
         monitored.median.as_secs_f64() / fleet.median.as_secs_f64()
     );
+
+    // --- load spike at scale: the dispatcher stress row ------------------
+    // 100k in-flight samples make the ready set enormous; the per-device
+    // ready queues keep dispatch O(log) per task start where the old flat
+    // scan paid O(ready set) — this row is the before/after witness
+    let big_samples = 100_000;
+    let big_events = engine::simulate_req(
+        &g,
+        &uniform_req,
+        &p,
+        Schedule::Pipelined,
+        big_samples,
+        &SimConfig::default(),
+    )
+    .events_processed;
+    let big = bench(
+        &format!("simx/uniform-chain12-{big_samples}samples"),
+        Duration::from_secs(5),
+        3,
+        || {
+            engine::simulate_req(
+                &g,
+                &uniform_req,
+                &p,
+                Schedule::Pipelined,
+                big_samples,
+                &SimConfig::default(),
+            )
+        },
+    );
+    println!(
+        "simx/100k-sample events/sec ≈ {:.0} ({big_events} events per run)",
+        big_events as f64 / big.median.as_secs_f64()
+    );
 }

@@ -1,0 +1,491 @@
+//! Concurrent multi-tenant planning service: the `&self`-shareable engine
+//! behind [`crate::coordinator::service::PlannerService`] and the serving
+//! runtime (DESIGN.md §8).
+//!
+//! The single-threaded service serializes every tenant behind one `&mut
+//! self`; a production planner serves thousands of concurrent
+//! heterogeneous [`PlanRequest`]s. [`ConcurrentService`] takes planning to
+//! `&self` with three mechanisms, all on `std::sync` (the build stays
+//! dependency-free):
+//!
+//! * **Fingerprint-sharded LRU.** Contexts are keyed by
+//!   [`fingerprint_req`] and spread over N shards (`shard = fp % N`), each
+//!   an independently locked LRU of `Arc<ProblemCtx>`. The shard lock is
+//!   held only for the map operation — never across context construction
+//!   or solving — so a cache hit is a position scan + `Arc` clone, and
+//!   tenants on different shards never contend at all. The handed-out
+//!   `Arc<ProblemCtx>` is itself `Sync`: its `OnceLock` artifact cells
+//!   give per-artifact single-flight *within* a context for free.
+//! * **Single-flight context construction.** Two concurrent requests with
+//!   the same fingerprint build the `ProblemCtx` once: the first becomes
+//!   the builder and registers an in-flight entry; later arrivals block on
+//!   its condvar and receive the builder's `Arc` — they never clone the
+//!   graph or recompute anything ([`ConcurrentService::dedup_waits`]
+//!   counts them). The builder publishes into the LRU *before* notifying,
+//!   so a waiter's wake always finds the value.
+//! * **Budget-keyed incumbent cache.** IP solves store their final
+//!   incumbent ([`WarmSeed`]) under `(fingerprint, warm_seed_key)` with
+//!   the budget that produced it; a repeat solve of the same problem and
+//!   regime resumes from it instead of restarting — a longer-budget
+//!   re-solve continues where the short one stopped. Seeding is monotone
+//!   (engines take a seed only when strictly better than their own warm
+//!   start, and only improve it), so a warm-started solve never returns a
+//!   worse objective than a cold one. Seeds are only kept for
+//!   LRU-resident fingerprints and are dropped on eviction and
+//!   [`ConcurrentService::clear`], so the cache is bounded by
+//!   `capacity × |keys|` and can never serve a stale problem.
+
+use crate::algos::PlaceError;
+use crate::coordinator::context::{
+    fingerprint_req, PlanResult, ProblemCtx, SolveOpts, Solver, WarmSeed,
+};
+use crate::coordinator::placement::{PlanRequest, Scenario};
+use crate::coordinator::planner::{self, Algorithm};
+use crate::graph::OpGraph;
+use crate::workloads::Workload;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// One shard's state: an LRU of contexts, the in-flight build registry,
+/// and the incumbent seeds of the resident fingerprints.
+struct Shard {
+    /// Most-recently-used last.
+    entries: VecDeque<(u64, Arc<ProblemCtx>)>,
+    /// Fingerprints with a context build in flight (tiny: at most the
+    /// number of concurrently building tenants on this shard).
+    inflight: Vec<(u64, Arc<InFlight>)>,
+    /// Budget-keyed incumbent seeds, keyed `(fingerprint,
+    /// warm_seed_key)`. Invariant: every fingerprint here is resident in
+    /// `entries` (eviction and `clear` drop its seeds with it).
+    incumbents: Vec<((u64, u8), SeedEntry)>,
+}
+
+/// A context build in progress: waiters block on the condvar until the
+/// builder publishes the finished `Arc`.
+struct InFlight {
+    done: Mutex<Option<Arc<ProblemCtx>>>,
+    cv: Condvar,
+}
+
+impl InFlight {
+    fn new() -> InFlight {
+        InFlight { done: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn wait(&self) -> Arc<ProblemCtx> {
+        let mut done = self.done.lock().expect("in-flight lock poisoned");
+        loop {
+            if let Some(ctx) = done.as_ref() {
+                return Arc::clone(ctx);
+            }
+            done = self.cv.wait(done).expect("in-flight lock poisoned");
+        }
+    }
+
+    fn publish(&self, ctx: Arc<ProblemCtx>) {
+        *self.done.lock().expect("in-flight lock poisoned") = Some(ctx);
+        self.cv.notify_all();
+    }
+}
+
+/// One cached incumbent: the seed, its objective in its own search space,
+/// and the solve budget that produced it.
+struct SeedEntry {
+    seed: WarmSeed,
+    objective: f64,
+    budget: Duration,
+}
+
+/// Concurrent, shareable planning service — see the module docs. All
+/// planning entry points take `&self`; wrap one in an `Arc` and hand
+/// clones to worker threads (or borrow it across a
+/// [`std::thread::scope`]).
+pub struct ConcurrentService {
+    shards: Vec<Mutex<Shard>>,
+    /// Per-shard LRU capacity (total capacity ÷ shard count, rounded up).
+    shard_capacity: usize,
+    /// Lattice enumeration cap for the contexts this service creates.
+    ideal_cap: usize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    dedup_waits: AtomicUsize,
+}
+
+impl ConcurrentService {
+    /// Service over `shards` fingerprint shards caching up to `capacity`
+    /// contexts in total (both clamped to ≥ 1), with the default lattice
+    /// cap.
+    pub fn new(shards: usize, capacity: usize) -> ConcurrentService {
+        Self::with_ideal_cap(shards, capacity, crate::graph::ideals::DEFAULT_IDEAL_CAP)
+    }
+
+    /// [`ConcurrentService::new`] with an explicit lattice cap for the
+    /// contexts it creates (see
+    /// [`crate::coordinator::service::PlannerService::with_ideal_cap`]).
+    pub fn with_ideal_cap(
+        shards: usize,
+        capacity: usize,
+        ideal_cap: usize,
+    ) -> ConcurrentService {
+        let shards = shards.max(1);
+        ConcurrentService {
+            shard_capacity: capacity.max(1).div_ceil(shards),
+            shards: (0..shards)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        entries: VecDeque::new(),
+                        inflight: Vec::new(),
+                        incumbents: Vec::new(),
+                    })
+                })
+                .collect(),
+            ideal_cap,
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            dedup_waits: AtomicUsize::new(0),
+        }
+    }
+
+    fn shard(&self, fp: u64) -> &Mutex<Shard> {
+        &self.shards[(fp % self.shards.len() as u64) as usize]
+    }
+
+    /// The context for `(graph, scenario)` — the scalar adapter entry.
+    pub fn context(&self, g: &OpGraph, sc: &Scenario) -> Arc<ProblemCtx> {
+        self.context_request(g, &sc.to_request())
+    }
+
+    /// The context for `(graph, request)`: cached if its fingerprint is
+    /// resident, adopted from a concurrent builder if one is in flight,
+    /// freshly built (once, and cached) otherwise. Requests differing only
+    /// in solver selectors (objective / contiguity / algorithm) share one
+    /// context ([`fingerprint_req`] excludes them).
+    pub fn context_request(&self, g: &OpGraph, req: &PlanRequest) -> Arc<ProblemCtx> {
+        let fp = fingerprint_req(g, req);
+        let shard = self.shard(fp);
+        let flight = {
+            let mut s = shard.lock().expect("shard lock poisoned");
+            if let Some(pos) = s.entries.iter().position(|(key, _)| *key == fp) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                let entry = s.entries.remove(pos).expect("position just found");
+                s.entries.push_back(entry.clone());
+                return entry.1;
+            }
+            if let Some(f) = s.inflight.iter().find(|(key, _)| *key == fp) {
+                // another tenant is building this exact context right now:
+                // wait for its Arc instead of recomputing (single-flight)
+                let f = Arc::clone(&f.1);
+                drop(s);
+                self.dedup_waits.fetch_add(1, Ordering::Relaxed);
+                return f.wait();
+            }
+            // we are the builder: register before releasing the lock
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            let f = Arc::new(InFlight::new());
+            s.inflight.push((fp, Arc::clone(&f)));
+            f
+        };
+        // build OUTSIDE the shard lock — hits and other builds proceed
+        let ctx = Arc::new(ProblemCtx::from_request_with_cap(
+            g.clone(),
+            req.clone(),
+            self.ideal_cap,
+        ));
+        {
+            let mut s = shard.lock().expect("shard lock poisoned");
+            s.inflight.retain(|(key, _)| *key != fp);
+            s.entries.push_back((fp, Arc::clone(&ctx)));
+            while s.entries.len() > self.shard_capacity {
+                if let Some((evicted, _)) = s.entries.pop_front() {
+                    // satellite invariant: evicting a context drops its
+                    // incumbent seeds — the cache stays bounded and can
+                    // never seed a fingerprint it no longer holds
+                    s.incumbents.retain(|((key, _), _)| *key != evicted);
+                }
+            }
+        }
+        flight.publish(Arc::clone(&ctx));
+        ctx
+    }
+
+    /// The cached incumbent seed for `(fingerprint, key)`, if any.
+    fn lookup_seed(&self, fp: u64, key: u8) -> Option<WarmSeed> {
+        let s = self.shard(fp).lock().expect("shard lock poisoned");
+        s.incumbents
+            .iter()
+            .find(|((f, k), _)| *f == fp && *k == key)
+            .map(|(_, e)| e.seed.clone())
+    }
+
+    /// Store a solve's final incumbent under `(fingerprint, key)`, keeping
+    /// the best objective seen (ties broken toward the longer budget — a
+    /// longer-budget re-solve has explored strictly more of the tree, so
+    /// its equal-objective incumbent carries the stronger proof state).
+    /// Dropped silently when the fingerprint is no longer LRU-resident.
+    fn store_seed(&self, fp: u64, key: u8, seed: &WarmSeed, budget: Duration) {
+        let mut s = self.shard(fp).lock().expect("shard lock poisoned");
+        if !s.entries.iter().any(|(f, _)| *f == fp) {
+            return; // evicted while we were solving: do not resurrect
+        }
+        let objective = seed.objective();
+        match s.incumbents.iter_mut().find(|((f, k), _)| *f == fp && *k == key) {
+            Some((_, e)) => {
+                let better = objective < e.objective - 1e-12;
+                let longer_tie = objective <= e.objective + 1e-12 && budget > e.budget;
+                if better || longer_tie {
+                    *e = SeedEntry { seed: seed.clone(), objective, budget };
+                }
+            }
+            None => {
+                s.incumbents.push(((fp, key), SeedEntry { seed: seed.clone(), objective, budget }));
+            }
+        }
+    }
+
+    /// Plan `(graph, scenario)` with `alg`, reusing every cached artifact.
+    /// Seed-free (exactly the sequential service's historical behavior);
+    /// the incumbent cache rides [`ConcurrentService::plan_request`].
+    pub fn plan(
+        &self,
+        g: &OpGraph,
+        sc: &Scenario,
+        alg: Algorithm,
+        opts: &SolveOpts,
+    ) -> Result<PlanResult, PlaceError> {
+        let ctx = self.context(g, sc);
+        alg.solver().solve(&ctx, opts)
+    }
+
+    /// Plan a [`PlanRequest`] (fleet + objective + algorithm selection,
+    /// `Auto` included), reusing every cached artifact *and* the incumbent
+    /// cache: when the request resolves to an IP engine
+    /// ([`planner::warm_seed_key`]), the solve resumes from the best prior
+    /// incumbent of the same `(problem, regime)` and its own final
+    /// incumbent is stored back for the next tenant.
+    pub fn plan_request(
+        &self,
+        g: &OpGraph,
+        req: &PlanRequest,
+        opts: &SolveOpts,
+    ) -> Result<PlanResult, PlaceError> {
+        let ctx = self.context_request(g, req);
+        let key = planner::warm_seed_key(req);
+        let result = match key {
+            None => planner::solve_request(&ctx, req, opts)?,
+            Some(k) => {
+                let mut seeded = opts.clone();
+                seeded.warm_seed = self.lookup_seed(ctx.fingerprint(), k);
+                let result = planner::solve_request(&ctx, req, &seeded)?;
+                if let Some(seed) = &result.warm_seed {
+                    self.store_seed(ctx.fingerprint(), k, seed, seeded.ip_budget);
+                }
+                result
+            }
+        };
+        Ok(result)
+    }
+
+    /// [`ConcurrentService::plan`] for a [`Workload`], filling the expert
+    /// rule from the workload when the caller didn't set one.
+    pub fn plan_workload(
+        &self,
+        w: &Workload,
+        alg: Algorithm,
+        opts: &SolveOpts,
+    ) -> Result<PlanResult, PlaceError> {
+        let mut opts = opts.clone();
+        if opts.expert.is_none() {
+            opts.expert = w.expert;
+        }
+        self.plan(&w.graph, &w.scenario, alg, &opts)
+    }
+
+    /// Cache hits so far (across all shards).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses so far (= contexts built by this service).
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Requests that adopted a concurrent builder's context instead of
+    /// building their own (the single-flight dedup counter).
+    pub fn dedup_waits(&self) -> usize {
+        self.dedup_waits.load(Ordering::Relaxed)
+    }
+
+    /// Cached contexts currently held, across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("shard lock poisoned").entries.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Incumbent seeds currently cached, across all shards.
+    pub fn seeds_len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("shard lock poisoned").incumbents.len())
+            .sum()
+    }
+
+    /// Drop every cached context AND every incumbent seed (e.g. after an
+    /// external cost-model update that invalidates everything). In-flight
+    /// builds are not interrupted; they re-insert their (fresh) context on
+    /// completion.
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut s = shard.lock().expect("shard lock poisoned");
+            s.entries.clear();
+            s.incumbents.clear();
+        }
+    }
+}
+
+impl Default for ConcurrentService {
+    /// Eight shards × eight contexts each — a serving-sized default.
+    fn default() -> ConcurrentService {
+        ConcurrentService::new(8, 64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::placement::{AlgoChoice, Objective};
+    use crate::graph::Node;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(9.0).acc(1.0).mem(1.0).comm(0.2));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn shared_reference_planning_hits_cache() {
+        let g = chain(6);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let svc = ConcurrentService::new(4, 8);
+        let a = svc.context(&g, &sc);
+        let b = svc.context(&g, &sc);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(svc.hits(), 1);
+        assert_eq!(svc.misses(), 1);
+        assert_eq!(svc.dedup_waits(), 0);
+    }
+
+    #[test]
+    fn concurrent_same_fingerprint_builds_once() {
+        let g = chain(6);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        let svc = ConcurrentService::new(4, 8);
+        let ctxs: Vec<Arc<ProblemCtx>> = std::thread::scope(|scope| {
+            let handles: Vec<_> =
+                (0..8).map(|_| scope.spawn(|| svc.context(&g, &sc))).collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        for c in &ctxs[1..] {
+            assert!(Arc::ptr_eq(&ctxs[0], c), "all threads must share one context");
+        }
+        assert_eq!(svc.misses(), 1, "single-flight: exactly one build");
+        assert_eq!(
+            svc.hits() + svc.dedup_waits() + svc.misses(),
+            8,
+            "every request is a hit, a dedup wait, or the one build"
+        );
+    }
+
+    #[test]
+    fn eviction_drops_incumbent_seeds() {
+        let g = chain(6);
+        // capacity 2, one shard, so a third fingerprint evicts the first
+        let svc = ConcurrentService::new(1, 2);
+        let opts = SolveOpts { ip_budget: Duration::from_secs(2), ..SolveOpts::default() };
+        let req = |k| {
+            PlanRequest::new(crate::coordinator::placement::Fleet::uniform(
+                k,
+                1,
+                f64::INFINITY,
+            ))
+            .algorithm(AlgoChoice::Fixed(Algorithm::IpContiguous))
+        };
+        svc.plan_request(&g, &req(2), &opts).unwrap();
+        assert_eq!(svc.seeds_len(), 1, "IP solve must store its incumbent");
+        svc.plan_request(&g, &req(3), &opts).unwrap();
+        svc.plan_request(&g, &req(4), &opts).unwrap();
+        assert_eq!(svc.len(), 2, "capacity bound");
+        assert_eq!(svc.seeds_len(), 2, "evicted fingerprint's seed must go with it");
+        svc.clear();
+        assert!(svc.is_empty());
+        assert_eq!(svc.seeds_len(), 0, "clear drops seeds too");
+    }
+
+    #[test]
+    fn warm_seeded_resolve_is_never_worse_and_identical_when_closed() {
+        let g = chain(8);
+        let svc = ConcurrentService::new(2, 8);
+        // gap 0 ⇒ the IP closes this small instance to proven optimality,
+        // making the warm-started re-solve provably identical to the cold
+        let opts = SolveOpts {
+            ip_budget: Duration::from_secs(10),
+            gap_target: 0.0,
+            ..SolveOpts::default()
+        };
+        let req = PlanRequest::new(crate::coordinator::placement::Fleet::uniform(
+            2,
+            1,
+            f64::INFINITY,
+        ))
+        .objective(Objective::Throughput)
+        .algorithm(AlgoChoice::Fixed(Algorithm::IpContiguous));
+        let cold = svc.plan_request(&g, &req, &opts).unwrap();
+        let warm = svc.plan_request(&g, &req, &opts).unwrap();
+        assert_eq!(cold.placement.assignment, warm.placement.assignment);
+        assert_eq!(
+            cold.placement.objective.to_bits(),
+            warm.placement.objective.to_bits(),
+            "seeded re-solve of a closed instance must be bitwise identical"
+        );
+    }
+
+    #[test]
+    fn longer_budget_resolve_updates_the_stored_seed() {
+        let g = chain(6);
+        let svc = ConcurrentService::new(1, 4);
+        let req = PlanRequest::new(crate::coordinator::placement::Fleet::uniform(
+            2,
+            1,
+            f64::INFINITY,
+        ))
+        .algorithm(AlgoChoice::Fixed(Algorithm::IpContiguous));
+        let short = SolveOpts { ip_budget: Duration::from_millis(50), ..SolveOpts::default() };
+        let long = SolveOpts { ip_budget: Duration::from_secs(5), ..SolveOpts::default() };
+        svc.plan_request(&g, &req, &short).unwrap();
+        let fp = fingerprint_req(&g, &req);
+        let stored_short = {
+            let s = svc.shard(fp).lock().unwrap();
+            s.incumbents[0].1.budget
+        };
+        assert_eq!(stored_short, short.ip_budget);
+        svc.plan_request(&g, &req, &long).unwrap();
+        let stored_long = {
+            let s = svc.shard(fp).lock().unwrap();
+            s.incumbents[0].1.budget
+        };
+        assert_eq!(stored_long, long.ip_budget, "longer-budget solve takes over the seed");
+    }
+}

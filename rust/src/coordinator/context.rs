@@ -40,12 +40,55 @@ pub struct PlanResult {
     pub incumbent_at: Option<Duration>,
     pub gap: Option<f64>,
     pub note: String,
+    /// The solver's final incumbent in resumable form (IP engines only) —
+    /// what the [`crate::coordinator::concurrent::ConcurrentService`]
+    /// incumbent cache stores so a later solve of the same problem resumes
+    /// instead of restarting.
+    pub warm_seed: Option<WarmSeed>,
 }
 
 impl PlanResult {
     /// Result of a solver with no proof state (everything but the IPs).
     pub fn basic(placement: Placement, runtime: Duration) -> PlanResult {
-        PlanResult { placement, runtime, incumbent_at: None, gap: None, note: String::new() }
+        PlanResult {
+            placement,
+            runtime,
+            incumbent_at: None,
+            gap: None,
+            note: String::new(),
+            warm_seed: None,
+        }
+    }
+}
+
+/// A solver-produced incumbent that can seed a later solve of the *same*
+/// planning problem (equal [`fingerprint_req`]) under the *same* search
+/// regime (same engine + contiguity toggle — see
+/// `planner::warm_seed_key`). Throughput seeds live in the dense
+/// `dp_graph` space the throughput branch-and-bound assigns over; latency
+/// seeds are original-graph placements, re-validated by the latency IP
+/// like any caller-supplied warm start. Injection is monotone by
+/// construction: a seed only ever *replaces* an engine's initial incumbent
+/// when strictly better, and the searches only improve incumbents — a
+/// warm-started solve can never return a worse objective than a cold one.
+#[derive(Clone, Debug)]
+pub enum WarmSeed {
+    /// `(objective, dense dp_graph assignment)` — the throughput search's
+    /// native incumbent form.
+    Throughput { objective: f64, dense: Vec<usize> },
+    /// Original-graph placement — the latency IP's warm-start form.
+    Latency(Placement),
+}
+
+impl WarmSeed {
+    /// The seed's objective in its own search space (dp-proxy max-load for
+    /// throughput, end-to-end latency for latency) — the comparison basis
+    /// of the incumbent cache's keep-the-best rule.
+    pub fn objective(&self) -> f64 {
+        match self {
+            WarmSeed::Throughput { objective, .. } => *objective,
+            WarmSeed::Latency(p) => p.objective,
+        }
     }
 }
 
@@ -70,6 +113,11 @@ pub struct SolveOpts {
     pub ls_seed: u64,
     /// Scotch-like partitioner seed.
     pub scotch_seed: u64,
+    /// Prior incumbent to resume an IP solve from (injected by the
+    /// [`crate::coordinator::concurrent::ConcurrentService`] incumbent
+    /// cache; `None` = cold solve, the historical behavior). Ignored by
+    /// the non-IP solvers.
+    pub warm_seed: Option<WarmSeed>,
 }
 
 impl Default for SolveOpts {
@@ -82,6 +130,7 @@ impl Default for SolveOpts {
             ls_restarts: 10,
             ls_seed: 0xC0FFEE,
             scotch_seed: 0x5C07C4,
+            warm_seed: None,
         }
     }
 }
@@ -161,6 +210,7 @@ impl ProblemCtx {
         request: PlanRequest,
         ideal_cap: usize,
     ) -> ProblemCtx {
+        crate::util::counters::bump_ctx_build();
         let fingerprint = fingerprint_req(&graph, &request);
         let legacy_scenario = request.legacy_scenario();
         ProblemCtx {

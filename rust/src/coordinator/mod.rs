@@ -11,8 +11,12 @@
 //! (`plan(workload, algorithm)` / `plan_request`) used by the CLI,
 //! examples and benches; [`service`] is the fingerprint-keyed LRU
 //! ([`service::PlannerService`]) that makes serving-time re-planning —
-//! including live fleet mutations — run at cache-hit cost.
+//! including live fleet mutations — run at cache-hit cost; [`concurrent`]
+//! is the `&self`-shareable multi-tenant engine underneath it
+//! ([`concurrent::ConcurrentService`]: sharded context LRUs, single-flight
+//! context construction, budget-keyed IP incumbent cache).
 
+pub mod concurrent;
 pub mod context;
 pub mod placement;
 pub mod planner;

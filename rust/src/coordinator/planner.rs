@@ -11,7 +11,7 @@
 use crate::algos::hierarchy::Hierarchy;
 use crate::algos::{hierarchy, ip_latency, ip_throughput, objective, replication, PlaceError};
 use crate::baselines::{expert, greedy, local_search, pipedream, scotch_like};
-use crate::coordinator::context::{ProblemCtx, SolveOpts, Solver};
+use crate::coordinator::context::{ProblemCtx, SolveOpts, Solver, WarmSeed};
 use crate::coordinator::placement::{Objective, Placement, PlanRequest, Scenario};
 use crate::graph::OpGraph;
 use crate::workloads::Workload;
@@ -193,6 +193,31 @@ pub fn solve_request(
     }
 }
 
+/// The warm-seed cache key of the IP engine [`solve_request`] will run for
+/// this request, or `None` when the request resolves to a deterministic or
+/// heuristic solver (those gain nothing from incumbent seeding — their
+/// outputs are already cached whole in the [`ProblemCtx`]). The key
+/// encodes the engine *and* its contiguity regime, so a non-contiguous
+/// incumbent can never seed a contiguous search (it might violate
+/// constraint (16)) and a latency incumbent can never seed a throughput
+/// one (different space and objective). Used by
+/// [`crate::coordinator::concurrent::ConcurrentService`] as the second
+/// half of its `(fingerprint, key)` incumbent-cache key.
+pub fn warm_seed_key(req: &PlanRequest) -> Option<u8> {
+    match req.algorithm {
+        AlgoChoice::Fixed(Algorithm::IpContiguous) => Some(0),
+        AlgoChoice::Fixed(Algorithm::IpNonContiguous) => Some(1),
+        AlgoChoice::Fixed(Algorithm::IpLatency) => Some(if req.contiguous { 2 } else { 3 }),
+        AlgoChoice::Fixed(_) => None,
+        AlgoChoice::Auto => match req.objective {
+            Objective::Latency => Some(if req.contiguous { 2 } else { 3 }),
+            Objective::Throughput if !req.contiguous => Some(1),
+            // Auto throughput runs the DP/DPL — deterministic, no seed
+            Objective::Throughput => None,
+        },
+    }
+}
+
 /// Latency of any placement under the §4 schedule (for Table-4 baselines).
 pub fn latency_of(g: &OpGraph, sc: &Scenario, p: &Placement) -> f64 {
     objective::latency(g, sc, p)
@@ -261,15 +286,26 @@ impl Solver for IpThroughputSolver {
             contiguous: self.contiguous,
             time_limit: opts.ip_budget,
             gap_target: opts.gap_target,
+            // a latency seed is a different space/objective — regime
+            // matching is the incumbent cache's job (warm_seed_key), this
+            // is only the type-level filter
+            warm_seed: match &opts.warm_seed {
+                Some(WarmSeed::Throughput { objective, dense }) => {
+                    Some((*objective, dense.clone()))
+                }
+                _ => None,
+            },
             ..Default::default()
         };
         let r = ip_throughput::solve_ctx(ctx, &ip_opts)?;
+        let (obj, dense) = r.incumbent;
         Ok(PlanResult {
             placement: r.placement,
             runtime: r.elapsed,
             incumbent_at: Some(r.incumbent_at),
             gap: Some(r.gap),
             note: format!("{:?}", r.status),
+            warm_seed: Some(WarmSeed::Throughput { objective: obj, dense }),
         })
     }
 }
@@ -288,7 +324,12 @@ impl Solver for IpLatencySolver {
     }
 
     fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
-        let warm = vec![greedy::solve_req(ctx.graph(), ctx.request())];
+        let mut warm = vec![greedy::solve_req(ctx.graph(), ctx.request())];
+        // resume seed: a prior run's final placement of this exact problem
+        // + regime, re-validated by the engine like any other warm start
+        if let Some(WarmSeed::Latency(p)) = &opts.warm_seed {
+            warm.push(p.clone());
+        }
         let lat_opts = ip_latency::LatencyIpOptions {
             time_limit: opts.ip_budget,
             gap_target: opts.gap_target,
@@ -297,12 +338,14 @@ impl Solver for IpLatencySolver {
             ..Default::default()
         };
         let r = ip_latency::solve_ctx(ctx, &lat_opts)?;
+        let seed = WarmSeed::Latency(r.placement.clone());
         Ok(PlanResult {
             placement: r.placement,
             runtime: r.elapsed,
             incumbent_at: Some(r.incumbent_at),
             gap: Some(r.gap),
             note: format!("{:?}", r.status),
+            warm_seed: Some(seed),
         })
     }
 }

@@ -5,33 +5,34 @@
 //! (device loss, tighter memory caps, different `k`, comm-model what-ifs):
 //! the expensive part of each plan is the shared analysis
 //! ([`ProblemCtx`]), not the solver. [`PlannerService`] keys contexts by
-//! the [`fingerprint`] of `(graph, scenario)` and keeps a bounded LRU, so
-//! repeated plans of a known problem run at cache-hit cost and a scenario
-//! change only pays for the artifacts it actually invalidates (a new
-//! scenario over the same graph is a new context — invalidation is
+//! the [`fingerprint_req`] of `(graph, scenario)` and keeps a bounded LRU,
+//! so repeated plans of a known problem run at cache-hit cost and a
+//! scenario change only pays for the artifacts it actually invalidates (a
+//! new scenario over the same graph is a new context — invalidation is
 //! whole-context by construction, which is what makes the cache trivially
 //! correct: every artifact depends on the full key).
+//!
+//! Since the concurrent rework this type is a thin single-owner façade
+//! over a one-shard [`ConcurrentService`] — same caching contract, same
+//! counters, plus the engine's budget-keyed incumbent cache on
+//! [`PlannerService::plan_request`]. Multi-tenant callers should hold the
+//! [`ConcurrentService`] directly (it plans through `&self`).
 
 use crate::algos::PlaceError;
-use crate::coordinator::context::{
-    fingerprint_req, PlanResult, ProblemCtx, SolveOpts, Solver,
-};
+use crate::coordinator::concurrent::ConcurrentService;
+use crate::coordinator::context::{PlanResult, ProblemCtx, SolveOpts};
 use crate::coordinator::placement::{PlanRequest, Scenario};
-use crate::coordinator::planner::{self, Algorithm};
+use crate::coordinator::planner::Algorithm;
 use crate::graph::OpGraph;
 use crate::workloads::Workload;
-use std::collections::VecDeque;
 use std::sync::Arc;
+
+#[allow(unused_imports)] // doc links
+use crate::coordinator::context::fingerprint_req;
 
 /// Bounded LRU of [`ProblemCtx`]s keyed by content fingerprint.
 pub struct PlannerService {
-    capacity: usize,
-    /// Lattice enumeration cap for the contexts this service creates.
-    ideal_cap: usize,
-    /// Most-recently-used last.
-    entries: VecDeque<(u64, Arc<ProblemCtx>)>,
-    hits: usize,
-    misses: usize,
+    inner: ConcurrentService,
 }
 
 impl PlannerService {
@@ -47,41 +48,29 @@ impl PlannerService {
     /// falling back to DPL — lower it when serving IP-only plans over
     /// graphs whose lattices are huge.
     pub fn with_ideal_cap(capacity: usize, ideal_cap: usize) -> PlannerService {
-        PlannerService {
-            capacity: capacity.max(1),
-            ideal_cap,
-            entries: VecDeque::new(),
-            hits: 0,
-            misses: 0,
-        }
+        // one shard keeps the LRU order (and thus eviction behavior)
+        // exactly what the pre-concurrent service promised
+        PlannerService { inner: ConcurrentService::with_ideal_cap(1, capacity, ideal_cap) }
+    }
+
+    /// The shared engine, for callers graduating a single-owner service
+    /// into multi-tenant use.
+    pub fn engine(&self) -> &ConcurrentService {
+        &self.inner
     }
 
     /// The context for `(graph, scenario)`: cached if its fingerprint is
     /// known, freshly created (and cached) otherwise. A scenario shares
     /// its cache entry with the equivalent uniform-fleet request.
     pub fn context(&mut self, g: &OpGraph, sc: &Scenario) -> Arc<ProblemCtx> {
-        self.context_request(g, &sc.to_request())
+        self.inner.context(g, sc)
     }
 
     /// The context for `(graph, request)` — the fleet-level entry point.
     /// Keyed by [`fingerprint_req`], so requests differing only in solver
     /// selectors (objective / contiguity / algorithm) share one context.
     pub fn context_request(&mut self, g: &OpGraph, req: &PlanRequest) -> Arc<ProblemCtx> {
-        let fp = fingerprint_req(g, req);
-        if let Some(pos) = self.entries.iter().position(|(key, _)| *key == fp) {
-            self.hits += 1;
-            let entry = self.entries.remove(pos).expect("position just found");
-            self.entries.push_back(entry.clone());
-            return entry.1;
-        }
-        self.misses += 1;
-        let ctx =
-            Arc::new(ProblemCtx::from_request_with_cap(g.clone(), req.clone(), self.ideal_cap));
-        self.entries.push_back((fp, Arc::clone(&ctx)));
-        while self.entries.len() > self.capacity {
-            self.entries.pop_front();
-        }
-        ctx
+        self.inner.context_request(g, req)
     }
 
     /// Plan `(graph, scenario)` with `alg`, reusing every cached artifact.
@@ -92,23 +81,23 @@ impl PlannerService {
         alg: Algorithm,
         opts: &SolveOpts,
     ) -> Result<PlanResult, PlaceError> {
-        let ctx = self.context(g, sc);
-        alg.solver().solve(&ctx, opts)
+        self.inner.plan(g, sc, alg, opts)
     }
 
     /// Plan a [`PlanRequest`] (fleet + objective + algorithm selection,
     /// `Auto` included), reusing every cached artifact. Serving-time
     /// fleet mutations — device loss via
     /// [`crate::coordinator::placement::Fleet::decrement`], cap changes —
-    /// re-plan here at cache-hit cost for known fleets.
+    /// re-plan here at cache-hit cost for known fleets; IP-backed requests
+    /// additionally resume from the engine's cached incumbent of the same
+    /// `(problem, regime)`.
     pub fn plan_request(
         &mut self,
         g: &OpGraph,
         req: &PlanRequest,
         opts: &SolveOpts,
     ) -> Result<PlanResult, PlaceError> {
-        let ctx = self.context_request(g, req);
-        planner::solve_request(&ctx, req, opts)
+        self.inner.plan_request(g, req, opts)
     }
 
     /// [`PlannerService::plan`] for a [`Workload`], filling the expert rule
@@ -119,36 +108,33 @@ impl PlannerService {
         alg: Algorithm,
         opts: &SolveOpts,
     ) -> Result<PlanResult, PlaceError> {
-        let mut opts = opts.clone();
-        if opts.expert.is_none() {
-            opts.expert = w.expert;
-        }
-        self.plan(&w.graph, &w.scenario, alg, &opts)
+        self.inner.plan_workload(w, alg, opts)
     }
 
     /// Cache hits so far.
     pub fn hits(&self) -> usize {
-        self.hits
+        self.inner.hits()
     }
 
     /// Cache misses so far (= contexts created).
     pub fn misses(&self) -> usize {
-        self.misses
+        self.inner.misses()
     }
 
     /// Cached contexts currently held.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.inner.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.inner.is_empty()
     }
 
-    /// Drop every cached context (e.g. after an external cost-model update
-    /// that a caller knows invalidates everything).
+    /// Drop every cached context and incumbent seed (e.g. after an
+    /// external cost-model update that a caller knows invalidates
+    /// everything).
     pub fn clear(&mut self) {
-        self.entries.clear();
+        self.inner.clear()
     }
 }
 

@@ -11,6 +11,7 @@
 //!     [--runs N] [--seed N] [--samples N] [--fleet "SPEC"]
 //! dnn-partition export <wl> <out.json>     # dump paper-format JSON
 //! dnn-partition partition-file <in.json> <alg>   # plan an external workload
+//! dnn-partition bench-traffic [--smoke]    # concurrent planning traffic bench
 //! ```
 //!
 //! Workload names: `bert3op`, `bert6op`, `bert12op`, `resnet50op`,
@@ -128,6 +129,7 @@ struct CliFlags {
     runs: Option<usize>,
     seed: Option<u64>,
     samples: Option<usize>,
+    smoke: bool,
 }
 
 /// Strip `--NAME VALUE` / `--NAME=VALUE` flags out of the argument list,
@@ -178,6 +180,8 @@ fn extract_flags(args: &[String]) -> Result<(Vec<String>, CliFlags), String> {
             flags.assert_improves = true;
         } else if a == "--monitor" {
             flags.monitor = true;
+        } else if a == "--smoke" {
+            flags.smoke = true;
         } else if a.starts_with("--") {
             // a misspelled flag must not silently become a positional
             return Err(format!("unknown flag {a}"));
@@ -224,6 +228,10 @@ fn run(raw_args: &[String]) -> i32 {
         && (flags.runs.is_some() || flags.seed.is_some() || flags.samples.is_some())
     {
         eprintln!("--runs/--seed/--samples are only valid with `chaos`");
+        return 2;
+    }
+    if flags.smoke && cmd != Some("bench-traffic") {
+        eprintln!("--smoke is only valid with `bench-traffic`");
         return 2;
     }
     if flags.fleet.is_some()
@@ -652,14 +660,152 @@ fn run(raw_args: &[String]) -> i32 {
                 }
             }
         }
+        Some("bench-traffic") => run_bench_traffic(flags.smoke),
         _ => {
             eprintln!(
-                "usage: dnn-partition <list|partition|latency|simulate|chaos|export|partition-file> …\n\
+                "usage: dnn-partition <list|partition|latency|simulate|chaos|export|\
+                 partition-file|bench-traffic> …\n\
                  see `cargo doc` or README.md for details"
             );
             2
         }
     }
+}
+
+/// `bench-traffic [--smoke]`: hammer one shared
+/// [`ConcurrentService`](dnn_partition::coordinator::concurrent::ConcurrentService)
+/// with a seeded synthetic request stream from worker threads and report
+/// p50/p99 plan latency, cache hit/dedup rates, and scaling vs the
+/// single-threaded drain. `--smoke` is the CI configuration: small stream,
+/// tiny IP budgets, and hard assertions on the concurrency invariants
+/// (every request planned; hits + misses + dedup waits account for all of
+/// them; misses never exceed the distinct fingerprints — the single-flight
+/// bound).
+fn run_bench_traffic(smoke: bool) -> i32 {
+    use dnn_partition::coordinator::concurrent::ConcurrentService;
+    use dnn_partition::coordinator::context::fingerprint_req;
+    use dnn_partition::coordinator::placement::{DeviceClass, Objective, PlanRequest};
+    use dnn_partition::util::proptest::random_dag;
+    use dnn_partition::util::rng::Rng;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Instant;
+
+    let (n_requests, graph_nodes) = if smoke { (48, 8) } else { (400, 12) };
+    let mut rng = Rng::new(0x7AFF1C);
+    let graphs: Vec<_> = (0..3).map(|i| random_dag(&mut rng, graph_nodes + i, 0.3)).collect();
+    let fleets = vec![
+        Fleet::uniform(2, 1, f64::INFINITY),
+        Fleet::uniform(3, 1, f64::INFINITY),
+        Fleet::new(vec![
+            DeviceClass::acc("fast", 1, f64::INFINITY).speed(2.0),
+            DeviceClass::acc("slow", 2, f64::INFINITY),
+            DeviceClass::cpu("cpu", 1),
+        ]),
+    ];
+    let stream: Vec<(usize, PlanRequest)> = (0..n_requests)
+        .map(|_| {
+            let req = PlanRequest::new(fleets[rng.gen_range(fleets.len())].clone());
+            let req = match rng.gen_range(4) {
+                0 => req
+                    .objective(Objective::Throughput)
+                    .algorithm(AlgoChoice::Fixed(Algorithm::IpContiguous)),
+                1 => req.objective(Objective::Throughput).contiguous(false),
+                2 => req.objective(Objective::Latency).contiguous(rng.gen_bool(0.5)),
+                _ => req
+                    .objective(Objective::Throughput)
+                    .algorithm(AlgoChoice::Fixed(Algorithm::Dp)),
+            };
+            (rng.gen_range(graphs.len()), req)
+        })
+        .collect();
+    let mut fps: Vec<u64> =
+        stream.iter().map(|(g, r)| fingerprint_req(&graphs[*g], r)).collect();
+    fps.sort_unstable();
+    fps.dedup();
+    let distinct = fps.len();
+    let opts = SolveOpts {
+        ip_budget: Duration::from_millis(if smoke { 15 } else { 50 }),
+        ..SolveOpts::default()
+    };
+
+    let drain = |svc: &ConcurrentService, m: usize| -> (Duration, Vec<f64>) {
+        let next = AtomicUsize::new(0);
+        let t0 = Instant::now();
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(stream.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..m)
+                .map(|_| {
+                    let next = &next;
+                    let stream = &stream;
+                    let graphs = &graphs;
+                    let opts = &opts;
+                    scope.spawn(move || {
+                        let mut mine = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            let Some((g, req)) = stream.get(i) else { break };
+                            let t = Instant::now();
+                            svc.plan_request(&graphs[*g], req, opts)
+                                .expect("traffic request must plan");
+                            mine.push(t.elapsed().as_secs_f64() * 1e3);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            for h in handles {
+                lat_ms.extend(h.join().expect("worker panicked"));
+            }
+        });
+        (t0.elapsed(), lat_ms)
+    };
+    let pctl = |sorted: &[f64], p: f64| -> f64 {
+        sorted[((sorted.len() as f64 - 1.0) * p).round() as usize]
+    };
+
+    println!(
+        "bench-traffic{}: {n_requests} requests over {} graphs × {} fleets \
+         ({distinct} distinct problems)",
+        if smoke { " --smoke" } else { "" },
+        graphs.len(),
+        fleets.len(),
+    );
+    let base_svc = ConcurrentService::new(8, 64);
+    let (base_wall, mut base_lat) = drain(&base_svc, 1);
+    base_lat.sort_by(f64::total_cmp);
+    for m in [1usize, 4] {
+        let (hits, wall, lat) = if m == 1 {
+            (base_svc.hits(), base_wall, base_lat.clone()) // reuse the baseline drain
+        } else {
+            let svc = ConcurrentService::new(8, 64);
+            let (wall, mut lat) = drain(&svc, m);
+            lat.sort_by(f64::total_cmp);
+            if lat.len() != n_requests
+                || svc.hits() + svc.misses() + svc.dedup_waits() != n_requests
+                || svc.misses() > distinct
+            {
+                eprintln!(
+                    "traffic invariants violated: {} planned, {} hits + {} misses + \
+                     {} dedup waits, {distinct} distinct",
+                    lat.len(),
+                    svc.hits(),
+                    svc.misses(),
+                    svc.dedup_waits(),
+                );
+                return 1;
+            }
+            (svc.hits(), wall, lat)
+        };
+        println!(
+            "  m={m}: wall {:8.1} ms  p50 {:6.2} ms  p99 {:6.2} ms  hits {hits}  scaling {:.2}x",
+            wall.as_secs_f64() * 1e3,
+            pctl(&lat, 0.50),
+            pctl(&lat, 0.99),
+            base_wall.as_secs_f64() / wall.as_secs_f64(),
+        );
+    }
+    println!("bench-traffic OK");
+    0
 }
 
 /// Load a workload JSON file as a simulate target (its optional `fleet`

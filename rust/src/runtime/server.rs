@@ -267,18 +267,22 @@ pub fn stage_factories(
 // ---------------------------------------------------------------------------
 
 use crate::algos::PlaceError;
+use crate::coordinator::concurrent::ConcurrentService;
 use crate::coordinator::context::SolveOpts;
 use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::coordinator::planner::Algorithm;
-use crate::coordinator::service::PlannerService;
 use crate::graph::{topo, OpGraph};
 
-/// Re-planning front end for a live pipeline server: owns a
-/// [`PlannerService`] so scenario changes (device loss, a new memory cap,
-/// a different `k`) re-plan at cache-hit cost, and turns placements into
-/// the per-device stage node lists [`serve`] pipelines over.
+/// Re-planning front end for a live pipeline server: rides a (possibly
+/// shared) [`ConcurrentService`] so scenario changes (device loss, a new
+/// memory cap, a different `k`) re-plan at cache-hit cost, and turns
+/// placements into the per-device stage node lists [`serve`] pipelines
+/// over. [`ServingPlanner::new`] gives the planner a private engine;
+/// [`ServingPlanner::with_service`] joins it to an existing multi-tenant
+/// one, so every serving front end of a deployment shares one context and
+/// incumbent cache.
 pub struct ServingPlanner {
-    service: PlannerService,
+    service: Arc<ConcurrentService>,
     alg: Algorithm,
     opts: SolveOpts,
 }
@@ -293,7 +297,18 @@ pub struct PlannedStages {
 
 impl ServingPlanner {
     pub fn new(alg: Algorithm, opts: SolveOpts) -> ServingPlanner {
-        ServingPlanner { service: PlannerService::default(), alg, opts }
+        Self::with_service(Arc::new(ConcurrentService::default()), alg, opts)
+    }
+
+    /// A serving planner over a shared engine: N front ends (or tenants)
+    /// holding clones of the same `Arc` pool their context cache,
+    /// single-flight builds, and IP incumbents.
+    pub fn with_service(
+        service: Arc<ConcurrentService>,
+        alg: Algorithm,
+        opts: SolveOpts,
+    ) -> ServingPlanner {
+        ServingPlanner { service, alg, opts }
     }
 
     /// Plan (or re-plan) `g` under `sc` with the planner's default

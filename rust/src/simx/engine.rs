@@ -10,7 +10,9 @@
 //! objective predicts). Each
 //! `(sample, piece)` is a task; tasks run under device exclusivity and
 //! dependency order, with the [`Schedule`] policy picking among ready
-//! tasks.
+//! tasks. Ready tasks wait in per-device forward/backward priority queues
+//! ([`ReadyQueues`]): each start inspects only the admissible queue tops,
+//! so dispatch costs `O(log)` per task instead of a full ready-set scan.
 //!
 //! The engine advances a clock through a binary heap of typed events:
 //!
@@ -407,6 +409,85 @@ struct SampleState {
     resident_on: Vec<bool>,
 }
 
+/// A ready-to-run task, prioritized at push time: the schedule priority
+/// depends only on the sample index and the piece's forward/backward kind,
+/// neither of which changes while the task waits.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct ReadyTask {
+    prio: i64,
+    s: usize,
+    j: usize,
+}
+
+impl PartialOrd for ReadyTask {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ReadyTask {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // heap maximum = highest priority, ties to the smallest (s, j) —
+        // the dispatcher's historical global tie-break
+        self.prio
+            .cmp(&other.prio)
+            .then_with(|| other.s.cmp(&self.s))
+            .then_with(|| other.j.cmp(&self.j))
+    }
+}
+
+/// Per-device ready queues: each dense device keeps its forward and
+/// backward candidates in separate max-heaps ordered like [`ReadyTask`].
+///
+/// This replaces the historical flat ready `Vec` the dispatcher re-scanned
+/// wholly for every task start (`O(events · samples)` overall): a start
+/// now examines only the admissible *tops* of `2 · nd` heaps and pays one
+/// `O(log)` pop, and a busy or dead device is skipped in `O(1)` instead of
+/// once per queued task. Splitting forwards from backwards is what makes
+/// top-inspection sound: within each half, heap order is nonincreasing in
+/// priority and — for every schedule formula — nondecreasing in sample
+/// index, so the schedule-level blocks (SingleStream's in-order admission,
+/// GPipe's per-wave barrier) are monotone along the heap and a blocked top
+/// proves the whole half blocked. The per-sample memory-admission check is
+/// the one non-monotone rule; the dispatcher handles it by deferring
+/// blocked tops aside and restoring them after each pick.
+struct ReadyQueues {
+    /// `[device][0 = forward, 1 = backward]`.
+    queues: Vec<[BinaryHeap<ReadyTask>; 2]>,
+    schedule: Schedule,
+}
+
+impl ReadyQueues {
+    fn new(nd: usize, schedule: Schedule) -> ReadyQueues {
+        ReadyQueues {
+            queues: (0..nd).map(|_| [BinaryHeap::new(), BinaryHeap::new()]).collect(),
+            schedule,
+        }
+    }
+
+    fn push(&mut self, s: usize, j: usize, dev: usize, is_bw: bool) {
+        let prio: i64 = match self.schedule {
+            Schedule::PipeDream1F1B => (if is_bw { 1_000_000 } else { 0 }) - s as i64,
+            _ => -(s as i64) - if is_bw { 0 } else { 1 },
+        };
+        self.queues[dev][is_bw as usize].push(ReadyTask { prio, s, j });
+    }
+
+    /// Every queued `(sample, piece)`, devices in index order (stall
+    /// diagnostics only — order within a device's heap is unspecified).
+    fn iter(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.queues
+            .iter()
+            .flat_map(|q| q[0].iter().chain(q[1].iter()))
+            .map(|t| (t.s, t.j))
+    }
+
+    /// Lowest-indexed device with queued work, if any.
+    fn first_device(&self) -> Option<usize> {
+        self.queues.iter().position(|q| !q[0].is_empty() || !q[1].is_empty())
+    }
+}
+
 /// Run the engine with no scripted events (see [`simulate_with_events`]).
 pub fn simulate_req(
     g: &OpGraph,
@@ -537,20 +618,21 @@ pub fn simulate_with_events(
     // --- simulation state --------------------------------------------------
     let mut samples: Vec<SampleState> = Vec::new();
     let mut sample_done: Vec<f64> = Vec::new();
-    let mut ready: Vec<(usize, usize)> = Vec::new();
+    let mut ready = ReadyQueues::new(nd, schedule);
     let mut trace: Vec<(usize, usize, bool, f64, f64)> = Vec::new();
     let mut transfers: Vec<(usize, usize, usize, f64, f64)> = Vec::new();
     let mut link_free: BTreeMap<(usize, usize), f64> = BTreeMap::new();
     // unfinished forward tasks per injection wave (GPipe barrier state)
     let mut fw_left_per_wave: Vec<usize> = Vec::new();
     let fw_pieces = pieces.iter().filter(|x| x.fw_cost > 0.0).count();
+    let piece_is_bw: Vec<bool> = pieces.iter().map(|x| x.bw_cost > 0.0).collect();
     let mut completed = 0usize;
     let mut events_processed = 0usize;
 
     let inject = |count: usize,
                   samples: &mut Vec<SampleState>,
                   sample_done: &mut Vec<f64>,
-                  ready: &mut Vec<(usize, usize)>,
+                  ready: &mut ReadyQueues,
                   fw_left_per_wave: &mut Vec<usize>| {
         let wave = fw_left_per_wave.len();
         fw_left_per_wave.push(count * fw_pieces);
@@ -567,7 +649,7 @@ pub fn simulate_with_events(
             sample_done.push(f64::NAN);
             for (j, piece) in pieces.iter().enumerate() {
                 if piece.deps.is_empty() {
-                    ready.push((s, j));
+                    ready.push(s, j, piece_dev[j], piece_is_bw[j]);
                 }
             }
         }
@@ -605,7 +687,12 @@ pub fn simulate_with_events(
                     let st = &mut samples[sample];
                     st.rem_deps[to_piece] -= 1;
                     if st.rem_deps[to_piece] == 0 {
-                        ready.push((sample, to_piece));
+                        ready.push(
+                            sample,
+                            to_piece,
+                            piece_dev[to_piece],
+                            piece_is_bw[to_piece],
+                        );
                     }
                 }
                 Ev::ComputeDone { sample, piece } => {
@@ -651,7 +738,7 @@ pub fn simulate_with_events(
                                 let st = &mut samples[sample];
                                 st.rem_deps[b] -= 1;
                                 if st.rem_deps[b] == 0 {
-                                    ready.push((sample, b));
+                                    ready.push(sample, b, piece_dev[b], piece_is_bw[b]);
                                 }
                             }
                         }
@@ -662,51 +749,84 @@ pub fn simulate_with_events(
 
         // --- dispatcher: start every task admissible at time t ------------
         loop {
-            let mut best: Option<(i64, usize, usize, usize)> = None; // (prio, s, j, ready idx)
-            for (ri, &(s, j)) in ready.iter().enumerate() {
-                let d = piece_dev[j];
-                let dev = &devs[d];
+            let mut best: Option<(i64, usize, usize, usize, usize)> = None; // (prio, s, j, d, half)
+            // memory-blocked tops set aside this round; restored after the
+            // pick (a start changes residency, so they are re-judged)
+            let mut deferred: Vec<(usize, usize, ReadyTask)> = Vec::new();
+            for (d, dev) in devs.iter().enumerate() {
                 if !dev.alive || dev.busy_until > t {
-                    continue;
+                    continue; // one check retires the whole device
                 }
-                if schedule == Schedule::SingleStream && s > 0 && samples[s - 1].tasks_left > 0
-                {
-                    continue;
-                }
-                // GPipe barrier, per injection wave: a backward waits for
-                // every forward of its own and all earlier waves; a later
-                // spike's forwards never retro-block it
-                let is_bw = pieces[j].bw_cost > 0.0;
-                if schedule == Schedule::GPipe
-                    && is_bw
-                    && fw_left_per_wave[..=samples[s].wave].iter().any(|&x| x > 0)
-                {
-                    continue;
-                }
-                if cfg.enforce_memory && !samples[s].resident_on[d] {
-                    let need = dev.weights + (dev.resident + 1) as f64 * dev.act;
-                    if need > dev.cap * (1.0 + 1e-9) {
-                        continue;
+                for half in 0..2 {
+                    let top = loop {
+                        let Some(&top) = ready.queues[d][half].peek() else {
+                            break None;
+                        };
+                        // SingleStream admits samples strictly in order, so
+                        // samples complete as a prefix: a top whose
+                        // predecessor is unfinished proves every larger-s
+                        // entry behind it blocked too
+                        if schedule == Schedule::SingleStream
+                            && top.s > 0
+                            && samples[top.s - 1].tasks_left > 0
+                        {
+                            break None;
+                        }
+                        // GPipe barrier, per injection wave: a backward
+                        // waits for every forward of its own and all
+                        // earlier waves; a later spike's forwards never
+                        // retro-block it. Waves are nondecreasing in s and
+                        // a blocked wave blocks all later ones, so a
+                        // blocked top proves the whole backward half
+                        // blocked.
+                        if half == 1
+                            && schedule == Schedule::GPipe
+                            && fw_left_per_wave[..=samples[top.s].wave]
+                                .iter()
+                                .any(|&x| x > 0)
+                        {
+                            break None;
+                        }
+                        // residency is per-sample, so this check is not
+                        // monotone along the heap: defer the blocked top
+                        // and look at the next entry
+                        if cfg.enforce_memory && !samples[top.s].resident_on[d] {
+                            let need = dev.weights + (dev.resident + 1) as f64 * dev.act;
+                            if need > dev.cap * (1.0 + 1e-9) {
+                                let task =
+                                    ready.queues[d][half].pop().expect("peeked above");
+                                deferred.push((d, half, task));
+                                continue;
+                            }
+                        }
+                        break Some(top);
+                    };
+                    if let Some(top) = top {
+                        let better = match best {
+                            None => true,
+                            Some((bp, bs, bj, _, _)) => {
+                                top.prio > bp || (top.prio == bp && (top.s, top.j) < (bs, bj))
+                            }
+                        };
+                        if better {
+                            best = Some((top.prio, top.s, top.j, d, half));
+                        }
                     }
-                }
-                let prio: i64 = match schedule {
-                    Schedule::PipeDream1F1B => {
-                        (if is_bw { 1_000_000 } else { 0 }) - s as i64
-                    }
-                    _ => -(s as i64) - if is_bw { 0 } else { 1 },
-                };
-                let better = match best {
-                    None => true,
-                    Some((bp, bs, bj, _)) => {
-                        prio > bp || (prio == bp && (s, j) < (bs, bj))
-                    }
-                };
-                if better {
-                    best = Some((prio, s, j, ri));
                 }
             }
-            let Some((_, s, j, ri)) = best else { break };
-            ready.swap_remove(ri);
+            let Some((_, s, j, bd, bh)) = best else {
+                for (d, half, task) in deferred {
+                    ready.queues[d][half].push(task);
+                }
+                break;
+            };
+            // the winner is its half's top (its deferred entries are still
+            // set aside): pop it, then restore the deferred tasks
+            let won = ready.queues[bd][bh].pop().expect("winner peeked above");
+            debug_assert_eq!((won.s, won.j), (s, j));
+            for (d, half, task) in deferred {
+                ready.queues[d][half].push(task);
+            }
             let d = piece_dev[j];
             if !samples[s].resident_on[d] {
                 samples[s].resident_on[d] = true;
@@ -750,16 +870,14 @@ pub fn simulate_with_events(
                 // name a device whose memory admission actually blocks a
                 // ready task (barrier-blocked entries are symptoms, not
                 // the cause); fall back to any ready entry's device
-                let mem_blocked = ready.iter().find_map(|&(s, j)| {
+                let mem_blocked = ready.iter().find_map(|(s, j)| {
                     let d = piece_dev[j];
                     let dev = &devs[d];
                     let over = dev.weights + (dev.resident + 1) as f64 * dev.act
                         > dev.cap * (1.0 + 1e-9);
                     (cfg.enforce_memory && !samples[s].resident_on[d] && over).then_some(d)
                 });
-                let blocked = mem_blocked
-                    .or_else(|| ready.first().map(|&(_, j)| piece_dev[j]))
-                    .unwrap_or(0);
+                let blocked = mem_blocked.or_else(|| ready.first_device()).unwrap_or(0);
                 Some(Stall::MemoryDeadlock {
                     device: Device::from_index(blocked, k),
                     pending_samples,

@@ -1,5 +1,6 @@
 //! Thread-local instrumentation counters for the expensive shared analysis
-//! passes (ideal-lattice enumeration, reachability matrices).
+//! passes (ideal-lattice enumeration, reachability matrices), plus one
+//! process-wide counter for context construction.
 //!
 //! The [`crate::coordinator::context::ProblemCtx`] cache exists so that
 //! planning every algorithm of a scenario computes each of these artifacts
@@ -8,8 +9,16 @@
 //! thread-local (not global atomics) so concurrently running tests cannot
 //! pollute each other's deltas; the counted functions all run on the
 //! calling thread (the DP's layer workers never re-enter them).
+//!
+//! [`ctx_builds`] is the one exception: the single-flight dedup of
+//! [`crate::coordinator::concurrent::ConcurrentService`] promises at most
+//! one `ProblemCtx` construction per fingerprint *across* threads, which a
+//! thread-local counter cannot observe. It is a process-wide atomic;
+//! tests that assert on its delta serialize themselves (see
+//! `rust/tests/concurrent_service.rs`).
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 thread_local! {
     static ENUMERATE_CALLS: Cell<u64> = const { Cell::new(0) };
@@ -47,6 +56,19 @@ pub fn co_reachability_calls() -> u64 {
     CO_REACHABILITY_CALLS.with(Cell::get)
 }
 
+static CTX_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one `ProblemCtx` construction (called by
+/// `ProblemCtx::from_request_with_cap` — every constructor funnels there).
+pub fn bump_ctx_build() {
+    CTX_BUILDS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// `ProblemCtx` constructions performed process-wide so far.
+pub fn ctx_builds() -> u64 {
+    CTX_BUILDS.load(Ordering::Relaxed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,5 +85,9 @@ mod tests {
         let c = co_reachability_calls();
         bump_co_reachability();
         assert_eq!(co_reachability_calls(), c + 1);
+        let b = ctx_builds();
+        bump_ctx_build();
+        // ≥: other tests may build contexts concurrently (global atomic)
+        assert!(ctx_builds() >= b + 1);
     }
 }

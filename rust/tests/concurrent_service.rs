@@ -1,0 +1,214 @@
+//! PR-6 concurrency guarantees of
+//! [`ConcurrentService`](dnn_partition::coordinator::concurrent::ConcurrentService):
+//!
+//! * N threads hammering one shared service through `&self` produce
+//!   results **bitwise identical** to a sequential [`PlannerService`]
+//!   drain, for every registered solver — sharing may never change a
+//!   result, only its cost.
+//! * Single-flight dedup: concurrent requests for one fingerprint build
+//!   the [`ProblemCtx`] exactly once, observed through the process-wide
+//!   [`counters::ctx_builds`] counter.
+//!
+//! The ctx-build counter is a process-wide atomic, so the tests that
+//! assert on its delta serialize behind one mutex (other integration
+//! tests in this *file* are the only other bumpers in the process — each
+//! Rust test binary is its own process).
+
+use dnn_partition::baselines::expert::ExpertStyle;
+use dnn_partition::coordinator::concurrent::ConcurrentService;
+use dnn_partition::coordinator::context::SolveOpts;
+use dnn_partition::coordinator::placement::{AlgoChoice, Objective, PlanRequest, Scenario};
+use dnn_partition::coordinator::planner::Algorithm;
+use dnn_partition::coordinator::service::PlannerService;
+use dnn_partition::util::counters;
+use dnn_partition::util::proptest::random_dag;
+use dnn_partition::util::rng::Rng;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Serializes every test in this file: the single-flight tests assert on
+/// deltas of the process-wide ctx-build counter, so no other test here may
+/// build contexts concurrently (cargo runs a binary's tests in parallel
+/// threads of one process).
+static CTX_COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn exact_opts() -> SolveOpts {
+    SolveOpts {
+        ip_budget: Duration::from_secs(10),
+        // gap 0 ⇒ the IPs run to proven optimality on these small graphs,
+        // so every solve — warm-started or not — returns the same optimum
+        gap_target: 0.0,
+        expert: Some(ExpertStyle::EqualStripes),
+        ..SolveOpts::default()
+    }
+}
+
+#[test]
+fn hammering_matches_sequential_service_for_every_solver() {
+    let _guard = CTX_COUNTER_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::new(0xC0C0);
+    let g = random_dag(&mut rng, 8, 0.3);
+    let sc = Scenario::new(2, 1, f64::INFINITY);
+    let opts = exact_opts();
+
+    // sequential ground truth: one single-owner service, one pass
+    let mut seq = PlannerService::new(4);
+    let expected: Vec<_> = Algorithm::ALL
+        .iter()
+        .map(|&alg| seq.plan(&g, &sc, alg, &opts).unwrap())
+        .collect();
+
+    // concurrent: 4 threads × all 12 solvers against one shared service
+    let svc = ConcurrentService::new(4, 8);
+    let runs: Vec<Vec<_>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let (svc, g, sc, opts) = (&svc, &g, &sc, &opts);
+                scope.spawn(move || {
+                    Algorithm::ALL
+                        .iter()
+                        .map(|&alg| svc.plan(g, sc, alg, opts).unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    for (ti, results) in runs.iter().enumerate() {
+        for (ai, (alg, r)) in Algorithm::ALL.iter().zip(results).enumerate() {
+            assert_eq!(
+                expected[ai].placement.assignment, r.placement.assignment,
+                "thread {ti} {alg:?}: assignment diverged from the sequential service"
+            );
+            assert_eq!(
+                expected[ai].placement.objective.to_bits(),
+                r.placement.objective.to_bits(),
+                "thread {ti} {alg:?}: objective not bitwise identical ({} vs {})",
+                expected[ai].placement.objective,
+                r.placement.objective
+            );
+        }
+    }
+    assert_eq!(svc.misses(), 1, "12 solvers × 4 threads share one context");
+}
+
+#[test]
+fn hammered_plan_requests_match_sequential_for_ip_regimes() {
+    // plan_request engages the incumbent cache; concurrent hammering must
+    // still match the sequential drain bitwise, because exact_opts closes
+    // these instances (a seed can then only reproduce the optimum, never
+    // shift it — the warm-start monotonicity contract of DESIGN.md §8)
+    let _guard = CTX_COUNTER_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::new(0xD0D0);
+    let g = random_dag(&mut rng, 8, 0.3);
+    let opts = exact_opts();
+    let reqs: Vec<PlanRequest> = vec![
+        PlanRequest::new(dnn_partition::coordinator::placement::Fleet::uniform(
+            2,
+            1,
+            f64::INFINITY,
+        ))
+        .objective(Objective::Throughput)
+        .algorithm(AlgoChoice::Fixed(Algorithm::IpContiguous)),
+        PlanRequest::new(dnn_partition::coordinator::placement::Fleet::uniform(
+            2,
+            1,
+            f64::INFINITY,
+        ))
+        .objective(Objective::Throughput)
+        .contiguous(false),
+        PlanRequest::new(dnn_partition::coordinator::placement::Fleet::uniform(
+            2,
+            1,
+            f64::INFINITY,
+        ))
+        .objective(Objective::Latency),
+    ];
+
+    let mut seq = PlannerService::new(4);
+    let expected: Vec<_> =
+        reqs.iter().map(|r| seq.plan_request(&g, r, &opts).unwrap()).collect();
+
+    let svc = ConcurrentService::new(2, 8);
+    let runs: Vec<Vec<_>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let (svc, g, reqs, opts) = (&svc, &g, &reqs, &opts);
+                scope.spawn(move || {
+                    reqs.iter()
+                        .map(|r| svc.plan_request(g, r, opts).unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    for (ti, results) in runs.iter().enumerate() {
+        for (ri, (exp, got)) in expected.iter().zip(results).enumerate() {
+            assert_eq!(
+                exp.placement.assignment, got.placement.assignment,
+                "thread {ti} request {ri}: assignment diverged"
+            );
+            assert_eq!(
+                exp.placement.objective.to_bits(),
+                got.placement.objective.to_bits(),
+                "thread {ti} request {ri}: objective not bitwise identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_flight_builds_each_fingerprint_once() {
+    let _guard = CTX_COUNTER_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::new(0xF00D);
+    let g = random_dag(&mut rng, 8, 0.3);
+    let sc = Scenario::new(2, 1, f64::INFINITY);
+    let svc = ConcurrentService::new(4, 8);
+
+    let before = counters::ctx_builds();
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            let (svc, g, sc) = (&svc, &g, &sc);
+            scope.spawn(move || svc.context(g, sc));
+        }
+    });
+    let built = counters::ctx_builds() - before;
+    assert_eq!(built, 1, "8 concurrent requests must build the context once");
+    assert_eq!(svc.misses(), 1);
+    assert_eq!(
+        svc.hits() + svc.dedup_waits(),
+        7,
+        "the other 7 must hit the LRU or adopt the in-flight build"
+    );
+}
+
+#[test]
+fn single_flight_builds_once_per_distinct_fingerprint() {
+    let _guard = CTX_COUNTER_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::new(0xBEEF);
+    let g = random_dag(&mut rng, 8, 0.3);
+    let scenarios: Vec<Scenario> = (1..=3)
+        .map(|k| Scenario::new(k, 1, f64::INFINITY))
+        .collect();
+    let svc = ConcurrentService::new(4, 8);
+
+    let before = counters::ctx_builds();
+    std::thread::scope(|scope| {
+        for t in 0..9 {
+            let (svc, g, scenarios) = (&svc, &g, &scenarios);
+            scope.spawn(move || {
+                // each scenario is requested by 3 threads concurrently
+                svc.context(g, &scenarios[t % scenarios.len()])
+            });
+        }
+    });
+    let built = counters::ctx_builds() - before;
+    assert_eq!(
+        built,
+        scenarios.len() as u64,
+        "exactly one build per distinct fingerprint"
+    );
+    assert_eq!(svc.misses(), scenarios.len());
+}
