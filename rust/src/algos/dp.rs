@@ -427,6 +427,7 @@ fn process_ideal(
     req: &PlanRequest,
     ct: &ClassTable,
     lattice: &IdealLattice,
+    comm: &[f64],
     bw_comm: &[f64],
     i: IdealId,
     done: &[f64],
@@ -476,7 +477,7 @@ fn process_ideal(
             visited[sub] = stamp;
             // --- add v to S (incremental cost update) ---
             add_node(
-                g, v, full, in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem,
+                g, v, full, comm, in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem,
                 &mut s_comm_in, &mut s_comm_out, &mut inf_acc, &mut inf_cpu,
             );
             add_bw(g, v, full, bw_comm, pred_out_cnt, src_cnt, &mut s_bw_in, &mut s_bw_out);
@@ -505,7 +506,7 @@ fn process_ideal(
             if lb >= worst_improvable && worst_improvable.is_finite() {
                 // undo and skip subtree
                 remove_node(
-                    g, v, full, in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem,
+                    g, v, full, comm, in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem,
                     &mut s_comm_in, &mut s_comm_out, &mut inf_acc, &mut inf_cpu,
                 );
                 remove_bw(
@@ -540,7 +541,7 @@ fn process_ideal(
             if added != u32::MAX {
                 let v = added as usize;
                 remove_node(
-                    g, v, full, in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem,
+                    g, v, full, comm, in_cnt, &mut s_cpu, &mut s_compute, &mut s_mem,
                     &mut s_comm_in, &mut s_comm_out, &mut inf_acc, &mut inf_cpu,
                 );
                 remove_bw(
@@ -603,6 +604,18 @@ pub fn solve_on_lattice_req_opts(
     let slots = ct.slots;
     let ni = lattice.len();
 
+    // Topology-aware comm folding (DESIGN.md §9): the DP folds boundary
+    // comm into per-ideal sums before any device identity is known, so a
+    // per-pair price cannot be exact here. We charge the conservative
+    // worst-pair bound `c · max_slowdown + max_latency` — an upper bound on
+    // any realized crossing cost, so DP feasibility/pruning stays sound —
+    // and `Prepared::expand_req` re-scores the reconstructed placement with
+    // the exact per-pair objective. Without a topology (or with a uniform
+    // one) this is `c · 1.0 + 0.0`, bitwise-identical to the raw comm.
+    let wcomm: Vec<f64> =
+        g.nodes.iter().map(|n| req.fleet.worst_pair_cost(n.comm)).collect();
+    let wbw: Vec<f64> = bw_comm.iter().map(|&c| req.fleet.worst_pair_cost(c)).collect();
+
     let mut dp = vec![f64::INFINITY; ni * slots];
     // parent choice: (sub-ideal id, device class carved onto) per cell
     let mut parent: Vec<(u32, u8)> = vec![(u32::MAX, 0); ni * slots];
@@ -658,7 +671,7 @@ pub fn solve_on_lattice_req_opts(
                 dp_blk.chunks_mut(slots).zip(par_blk.chunks_mut(slots)).enumerate()
             {
                 process_ideal(
-                    g, req, ct_ref, lattice, bw_comm, *lo + off, done_ref, cells, parents,
+                    g, req, ct_ref, lattice, &wcomm, &wbw, *lo + off, done_ref, cells, parents,
                     scratch,
                 );
             }
@@ -786,6 +799,7 @@ fn add_node(
     g: &OpGraph,
     v: usize,
     full: IdealRef<'_>,
+    comm: &[f64],
     in_cnt: &mut [u32],
     s_cpu: &mut f64,
     s_compute: &mut f64,
@@ -808,16 +822,16 @@ fn add_node(
     *s_mem += g.nodes[v].mem;
     // v's successors outside the enclosing ideal ⇒ out-comm (fixed per I).
     if g.succs[v].iter().any(|&w| !full.contains(w)) {
-        *s_comm_out += g.nodes[v].comm;
+        *s_comm_out += comm[v];
     }
     // v stops being an external in-comm contributor.
     if in_cnt[v] > 0 {
-        *s_comm_in -= g.nodes[v].comm;
+        *s_comm_in -= comm[v];
     }
     // v's predecessors become/remain external contributors.
     for &u in &g.preds[v] {
         if in_cnt[u] == 0 {
-            *s_comm_in += g.nodes[u].comm;
+            *s_comm_in += comm[u];
         }
         in_cnt[u] += 1;
     }
@@ -829,6 +843,7 @@ fn remove_node(
     g: &OpGraph,
     v: usize,
     full: IdealRef<'_>,
+    comm: &[f64],
     in_cnt: &mut [u32],
     s_cpu: &mut f64,
     s_compute: &mut f64,
@@ -850,16 +865,16 @@ fn remove_node(
     }
     *s_mem -= g.nodes[v].mem;
     if g.succs[v].iter().any(|&w| !full.contains(w)) {
-        *s_comm_out -= g.nodes[v].comm;
+        *s_comm_out -= comm[v];
     }
     for &u in &g.preds[v] {
         in_cnt[u] -= 1;
         if in_cnt[u] == 0 {
-            *s_comm_in -= g.nodes[u].comm;
+            *s_comm_in -= comm[u];
         }
     }
     if in_cnt[v] > 0 {
-        *s_comm_in += g.nodes[v].comm;
+        *s_comm_in += comm[v];
     }
 }
 
@@ -952,8 +967,19 @@ impl CarveWalker {
     /// visit. `f(sub_id, &carve)` returns `false` to prune the entire
     /// lattice subtree below that sub-ideal (sound whenever the caller's
     /// bound grows monotonically with `S`, e.g. compute or memory sums).
-    pub fn walk<F>(&mut self, g: &OpGraph, lattice: &IdealLattice, i: IdealId, mut f: F)
-    where
+    ///
+    /// `comm` is the per-node boundary price the walk folds into
+    /// `comm_in`/`comm_out` — callers that run under a device topology pass
+    /// worst-pair-scaled costs (`fleet.worst_pair_cost(node.comm)`, see
+    /// DESIGN.md §9); raw `node.comm` reproduces the legacy scalar model.
+    pub fn walk<F>(
+        &mut self,
+        g: &OpGraph,
+        lattice: &IdealLattice,
+        comm: &[f64],
+        i: IdealId,
+        mut f: F,
+    ) where
         F: FnMut(IdealId, &Carve) -> bool,
     {
         let CarveWalker { visited, stamp, in_cnt, stack, carve } = self;
@@ -1000,6 +1026,7 @@ impl CarveWalker {
                     g,
                     v,
                     full,
+                    comm,
                     in_cnt,
                     &mut carve.cpu,
                     &mut carve.compute,
@@ -1018,6 +1045,7 @@ impl CarveWalker {
                         g,
                         v,
                         full,
+                        comm,
                         in_cnt,
                         &mut carve.cpu,
                         &mut carve.compute,
@@ -1038,6 +1066,7 @@ impl CarveWalker {
                         g,
                         v,
                         full,
+                        comm,
                         in_cnt,
                         &mut carve.cpu,
                         &mut carve.compute,
@@ -1380,9 +1409,10 @@ mod tests {
         for _ in 0..10 {
             let g = random_dag(&mut rng, 8, 0.3);
             let lattice = IdealLattice::enumerate(&g, usize::MAX).unwrap();
+            let comm: Vec<f64> = g.nodes.iter().map(|n| n.comm).collect();
             let mut walker = CarveWalker::new(lattice.len(), g.n());
             for i in 0..lattice.len() {
-                walker.walk(&g, &lattice, i, |sub, c| {
+                walker.walk(&g, &lattice, &comm, i, |sub, c| {
                     let s = lattice.difference_bitset(i, sub);
                     assert_eq!(c.members.len(), s.len(), "member count for ({i},{sub})");
                     let cpu = g.cpu_load(&s);

@@ -89,12 +89,16 @@ fn solve_on_lattice(
     // monotonically along the descent, so subtrees whose bound already
     // exceeds every improvable cell (or that can no longer fit the
     // cluster's memory) are pruned wholesale.
+    // Raw per-node comm: the hierarchy model prices cross-cluster traffic
+    // through its own `inter_factor` below — layering the fleet topology's
+    // worst-pair bound on top would double-count the slow link.
+    let comm: Vec<f64> = gg.nodes.iter().map(|n| n.comm).collect();
     let mut walker = CarveWalker::new(ni, gg.n());
     for i in 1..ni {
         let (head, tail) = outer.split_at_mut(i * (nc + 1));
         let cells = &mut tail[..nc + 1];
         let parents = &mut parent[i * (nc + 1)..(i + 1) * (nc + 1)];
-        walker.walk(gg, lattice, i, |cur, carve| {
+        walker.walk(gg, lattice, &comm, i, |cur, carve| {
             if cur == i {
                 return true; // S = ∅ handled by the unused-cluster pass
             }

@@ -579,14 +579,20 @@ pub fn build_model_req(g: &OpGraph, req: &PlanRequest, big_m: f64) -> LatencyMod
         }
     }
     // (7) Finish_i = Start_i + Σ CommIn·c + Σ x·p_acc/speed + Σ CommOut·c
+    // Per-pair topology: one CommIn/Out indicator per (node, acc) can't see
+    // the peer device, so crossings price at the cheapest off-diagonal pair
+    // (slowdown 1 by normalization + minimum latency) — a valid relaxation,
+    // exact without a topology. The specialized search scores leaves with
+    // the pair-exact evaluator.
+    let min_lat = req.fleet.min_comm_latency();
     for i in 0..k {
         let speed = req.fleet.acc_speed(i);
         let mut coeffs = vec![(fin0 + i, 1.0), (start0 + i, -1.0)];
         for v in 0..n {
-            coeffs.push((cin(v, i), -g.nodes[v].comm));
+            coeffs.push((cin(v, i), -(g.nodes[v].comm + min_lat)));
             let p = if g.nodes[v].p_acc.is_finite() { g.nodes[v].p_acc / speed } else { 1e12 };
             coeffs.push((x(v, i + 1), -p));
-            coeffs.push((cout(v, i), -g.nodes[v].comm));
+            coeffs.push((cout(v, i), -(g.nodes[v].comm + min_lat)));
         }
         lp.add(coeffs, Sense::Eq, 0.0);
     }

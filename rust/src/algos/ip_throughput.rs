@@ -198,10 +198,18 @@ struct Search<'a> {
     devices: Vec<DeviceState>,
     assignment: Vec<usize>,
     assigned: BitSet,
-    out_paid: Vec<bool>,
+    /// Running worst-destination egress price charged per producer (0.0 =
+    /// no crossing yet) — the incremental form of the evaluator's
+    /// max-over-destinations egress under per-pair topology pricing.
+    /// Without a topology every crossing prices at `comm`, so this
+    /// degenerates to the old pay-once boolean bitwise.
+    out_cost: Vec<f64>,
     /// Shared undo stacks with watermarks — no per-node-expansion `Vec`s.
-    undo_in: Vec<usize>,
-    undo_out: Vec<usize>,
+    /// Entries carry the exact charged amounts so undo subtracts the same
+    /// value it added (per-pair prices aren't reconstructible later).
+    undo_in: Vec<(usize, f64)>,
+    /// `(producer, previous out_cost, comm_out delta charged)`.
+    undo_out: Vec<(usize, f64, f64)>,
     /// Reused word scratch for the contiguity check / reach rebuild.
     mid_scratch: Vec<u64>,
     reach_scratch: Vec<u64>,
@@ -277,7 +285,7 @@ impl<'a> Search<'a> {
                 .collect(),
             assignment: vec![usize::MAX; g.n()],
             assigned: BitSet::new(g.n()),
-            out_paid: vec![false; g.n()],
+            out_cost: vec![0.0; g.n()],
             undo_in: Vec::with_capacity(64),
             undo_out: Vec::with_capacity(64),
             mid_scratch: vec![0; stride],
@@ -452,16 +460,25 @@ impl<'a> Search<'a> {
             if du == d {
                 continue;
             }
-            // u → v crosses du → d
+            // u → v crosses du → d, priced at that device pair (DESIGN.md
+            // §9); identity (`comm·1 + 0`) without a topology
             if is_acc && !self.devices[d].in_paid.contains(u) {
                 self.devices[d].in_paid.insert(u);
-                self.devices[d].comm_in += self.g.nodes[u].comm;
-                self.undo_in.push(u);
+                let t = self.req.fleet.transfer_cost(du, d, self.g.nodes[u].comm);
+                self.devices[d].comm_in += t;
+                self.undo_in.push((u, t));
             }
-            if du < self.k && !self.out_paid[u] {
-                self.out_paid[u] = true;
-                self.devices[du].comm_out += self.g.nodes[u].comm;
-                self.undo_out.push(u);
+            if du < self.k {
+                // egress pays once at the WORST destination pair so far
+                // (matches the evaluator's max-over-destinations egress)
+                let t = self.req.fleet.transfer_cost(du, d, self.g.nodes[u].comm);
+                if t > self.out_cost[u] {
+                    let prev = self.out_cost[u];
+                    let delta = t - prev;
+                    self.devices[du].comm_out += delta;
+                    self.out_cost[u] = t;
+                    self.undo_out.push((u, prev, delta));
+                }
             }
         }
         undo
@@ -470,15 +487,15 @@ impl<'a> Search<'a> {
     fn unassign(&mut self, v: usize, d: usize, undo: Undo) {
         let is_acc = d < self.k;
         while self.undo_in.len() > undo.in_mark {
-            let u = self.undo_in.pop().unwrap();
+            let (u, t) = self.undo_in.pop().unwrap();
             self.devices[d].in_paid.remove(u);
-            self.devices[d].comm_in -= self.g.nodes[u].comm;
+            self.devices[d].comm_in -= t;
         }
         while self.undo_out.len() > undo.out_mark {
-            let u = self.undo_out.pop().unwrap();
-            self.out_paid[u] = false;
+            let (u, prev, delta) = self.undo_out.pop().unwrap();
             let du = self.assignment[u];
-            self.devices[du].comm_out -= self.g.nodes[u].comm;
+            self.devices[du].comm_out -= delta;
+            self.out_cost[u] = prev;
         }
         let speed = self.speed[d];
         let ds = &mut self.devices[d];
@@ -663,10 +680,16 @@ pub fn build_model_req(g: &OpGraph, req: &PlanRequest, contiguous: bool) -> Thro
         let mut coeffs: Vec<(usize, f64)> = vec![(load0 + i, -1.0)];
         if i < k {
             let speed = req.fleet.acc_speed(i);
+            // Per-pair topology: the literal model keeps one CommIn/Out
+            // indicator per (node, accelerator), so crossings are priced at
+            // the cheapest off-diagonal pair (slowdown 1 by normalization,
+            // plus the minimum latency) — a valid relaxation, exact without
+            // a topology. The specialized search is the pair-exact engine.
+            let min_lat = req.fleet.min_comm_latency();
             for v in 0..n {
                 coeffs.push((x(v, i), g.nodes[v].p_acc / speed));
-                coeffs.push((cin(v, i), g.nodes[v].comm));
-                coeffs.push((cout(v, i), g.nodes[v].comm));
+                coeffs.push((cin(v, i), g.nodes[v].comm + min_lat));
+                coeffs.push((cout(v, i), g.nodes[v].comm + min_lat));
             }
         } else {
             let speed = req.fleet.cpu_speed(i - k);

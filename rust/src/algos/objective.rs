@@ -51,7 +51,12 @@ impl DeviceLoads {
     /// Compute loads of every device. Accelerator comm follows §3 (pay
     /// `c_u` for boundary crossings, once per direction per node); CPU
     /// devices pay compute only (RAM access is free in the model).
-    /// Compute times divide by the device's class `speed`.
+    /// Compute times divide by the device's class `speed`; comm prices
+    /// through the fleet's per-pair topology accessor (DESIGN.md §9):
+    /// each in-transfer at the actual producer→consumer pair, each
+    /// out-transfer once at its *worst* destination pair (one egress
+    /// serialization priced at the slowest consumer link — exactly the
+    /// scalar pay-once rule when the topology is uniform or absent).
     pub fn of_req(g: &OpGraph, req: &PlanRequest, p: &Placement) -> DeviceLoads {
         let (k, l) = (req.fleet.k(), req.fleet.l());
         let nd = k + l.max(1);
@@ -71,16 +76,29 @@ impl DeviceLoads {
                 }
                 Device::Acc(i) => {
                     parts[idx].compute += g.nodes[v].p_acc / req.fleet.acc_speed(i);
-                    // out-comm: v's output leaves the device
-                    if g.succs[v].iter().any(|&w| p.assignment[w] != d) {
-                        parts[idx].comm_out += g.nodes[v].comm;
+                    // out-comm: v's output leaves the device, priced at the
+                    // worst destination pair it must reach
+                    let mut out = 0.0_f64;
+                    let mut crossed = false;
+                    for &w in &g.succs[v] {
+                        if p.assignment[w] != d {
+                            crossed = true;
+                            out = out.max(req.fleet.transfer_cost(
+                                idx,
+                                p.assignment[w].index(k),
+                                g.nodes[v].comm,
+                            ));
+                        }
+                    }
+                    if crossed {
+                        parts[idx].comm_out += out;
                     }
                 }
             }
         }
         // in-comm: for each accelerator, each external producer u feeding it
         // is paid once (per §3 / Fig. 6 CommIn), in the direction of the
-        // *consumer* side nodes.
+        // *consumer* side nodes, priced at the producer's pair.
         for i in 0..k {
             let d = Device::Acc(i);
             for dir in [NodeKind::Forward, NodeKind::Backward] {
@@ -94,7 +112,11 @@ impl DeviceLoads {
                             paid.insert(u);
                             let parts =
                                 if dir == NodeKind::Forward { &mut fw } else { &mut bw };
-                            parts[i].comm_in += g.nodes[u].comm;
+                            parts[i].comm_in += req.fleet.transfer_cost(
+                                p.assignment[u].index(k),
+                                i,
+                                g.nodes[u].comm,
+                            );
                         }
                     }
                 }
@@ -291,12 +313,32 @@ fn latency_with_granularity(
                         start = start.max(done_at[u]);
                         if !paid.contains(u) {
                             paid.insert(u);
-                            comm_in += g.nodes[u].comm;
+                            // producer→piece pair pricing; same-device
+                            // cross-piece transfers keep paying `c_u`
+                            // (diagonal transfer_cost is exactly `s`)
+                            comm_in += req.fleet.transfer_cost(
+                                p.assignment[u].index(k),
+                                dev,
+                                g.nodes[u].comm,
+                            );
                         }
                     }
                 }
-                if g.succs[w].iter().any(|&x| !set.contains(x)) {
-                    comm_out += g.nodes[w].comm;
+                // out-transfer priced at the worst external destination
+                let mut out = 0.0_f64;
+                let mut crossed = false;
+                for &x in &g.succs[w] {
+                    if !set.contains(x) {
+                        crossed = true;
+                        out = out.max(req.fleet.transfer_cost(
+                            dev,
+                            p.assignment[x].index(k),
+                            g.nodes[w].comm,
+                        ));
+                    }
+                }
+                if crossed {
+                    comm_out += out;
                 }
             }
             let finish = start + comm_in + compute + comm_out;
@@ -436,6 +478,25 @@ mod tests {
         // latency too: pieces on the fast device compute at half cost
         let solo = Placement::new(vec![Device::Acc(0); 4], 0.0, "t");
         assert!((latency_req(&g, &req, &solo) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topology_scales_cross_island_comm() {
+        use crate::coordinator::placement::{Fleet, PlanRequest};
+        let g = chain_g(4); // acc 1.0 each, comm 0.5
+        // two 2-acc islands {0,1} / {2,3}: a 0↔2 crossing slows down 8x
+        // (the intra links at bw 8 set the normalization reference)
+        let fleet = Fleet::parse("4xacc,1xcpu,topo=islands:2x2@8/1").unwrap();
+        let req = PlanRequest::new(fleet);
+        let p = Placement::new(
+            vec![Device::Acc(0), Device::Acc(0), Device::Acc(2), Device::Acc(2)],
+            0.0,
+            "t",
+        );
+        // acc0: compute 2 + out 0.5*8 = 6; acc2: in 0.5*8 + compute 2 = 6
+        assert!((max_load_req(&g, &req, &p) - 6.0).abs() < 1e-9);
+        // latency: piece {0,1} = 2 + out 4 = 6; piece {2,3} = 6 + in 4 + 2 = 12
+        assert!((latency_req(&g, &req, &p) - 12.0).abs() < 1e-9);
     }
 
     #[test]

@@ -149,12 +149,17 @@ fn solve_on_lattice(
     // compute(S)/k)` lower-bounds every candidate from any superset of S,
     // both terms grow monotonically, so a subtree whose bound can no
     // longer improve any still-improvable cell of ideal `i` is pruned.
+    // Boundary comm priced at the worst device pair (conservative, like the
+    // flat DP — DESIGN.md §9); replicas are placed interchangeably, so no
+    // tighter per-pair price exists here. Identity without a topology.
+    let wcomm: Vec<f64> =
+        gg.nodes.iter().map(|n| req.fleet.worst_pair_cost(n.comm)).collect();
     let mut walker = CarveWalker::new(ni, gg.n());
     for i in 1..ni {
         let (head, tail) = dp.split_at_mut(i * slots);
         let cells = &mut tail[..slots];
         let parents = &mut parent[i * slots..(i + 1) * slots];
-        walker.walk(gg, lattice, i, |cur, carve| {
+        walker.walk(gg, lattice, &wcomm, i, |cur, carve| {
             if cur == i {
                 // S = ∅: the dp[∅][k'][l'] = 0 seeds already cover unused
                 // devices, so the empty carve relaxes nothing

@@ -136,7 +136,13 @@ pub fn solve_req(g: &OpGraph, req: &PlanRequest) -> Placement {
         map,
     };
     let group_of = linearize_by_contraction(&con.graph);
-    let path = contract::contract_groups(&con.graph, &group_of);
+    let mut path = contract::contract_groups(&con.graph, &group_of);
+    // The path DP can't see device pairs, so segment-boundary comm is
+    // priced at the topology's worst pair (identity without one); the
+    // final objective below is re-scored pair-exactly on the original graph.
+    for node in path.graph.nodes.iter_mut() {
+        node.comm = req.fleet.worst_pair_cost(node.comm);
+    }
     let order = topo::toposort(&path.graph).expect("path contraction broke acyclicity");
     let m = order.len();
     let k = req.fleet.k();

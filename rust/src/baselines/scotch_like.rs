@@ -30,14 +30,22 @@ impl WGraph {
 }
 
 /// Partition `g` into `parts` balanced parts, Scotch-style. Returns the
-/// part index per node.
+/// part index per node. Edge weights are the producers' raw transfer
+/// costs; [`partition_comm`] takes explicit (e.g. topology-scaled) costs.
 pub fn partition(g: &OpGraph, parts: usize, seed: u64) -> Vec<usize> {
+    let comm: Vec<f64> = g.nodes.iter().map(|n| n.comm).collect();
+    partition_comm(g, &comm, parts, seed)
+}
+
+/// [`partition`] with an explicit per-producer edge cost, so the cut
+/// objective can reflect a device topology's worst-pair comm price.
+pub fn partition_comm(g: &OpGraph, comm: &[f64], parts: usize, seed: u64) -> Vec<usize> {
     // Build the undirected working graph: vertex weight = accelerator
     // processing time (the dominant execution cost), edge weight = the
     // producer's transfer cost.
     let mut adj: Vec<Vec<(usize, f64)>> = vec![Vec::new(); g.n()];
     for (u, v) in g.edges() {
-        let w = g.nodes[u].comm.max(1e-6);
+        let w = comm[u].max(1e-6);
         adj[u].push((v, w));
         adj[v].push((u, w));
     }
@@ -239,7 +247,9 @@ pub fn solve(g: &OpGraph, sc: &Scenario, seed: u64) -> Placement {
 pub fn solve_req(g: &OpGraph, req: &PlanRequest, seed: u64) -> Placement {
     let k = req.fleet.k();
     let nd = k + req.fleet.l().max(1);
-    let part = partition(g, nd, seed);
+    // cut weights at the topology's worst-pair price (identity without one)
+    let wcomm: Vec<f64> = g.nodes.iter().map(|n| req.fleet.worst_pair_cost(n.comm)).collect();
+    let part = partition_comm(g, &wcomm, nd, seed);
     let assignment: Vec<Device> = part.iter().map(|&p| Device::from_index(p, k)).collect();
     let mut placement = Placement::new(assignment, 0.0, "Scotch");
     // Score WITHOUT the memory check (Scotch violates it; Table 4 flags
@@ -257,7 +267,8 @@ pub fn solve_latency(g: &OpGraph, sc: &Scenario, seed: u64) -> Placement {
 
 /// [`solve_latency`] over a fleet.
 pub fn solve_latency_req(g: &OpGraph, req: &PlanRequest, seed: u64) -> Placement {
-    let part = partition(g, req.fleet.k().max(1), seed);
+    let wcomm: Vec<f64> = g.nodes.iter().map(|n| req.fleet.worst_pair_cost(n.comm)).collect();
+    let part = partition_comm(g, &wcomm, req.fleet.k().max(1), seed);
     let assignment: Vec<Device> = part.iter().map(|&p| Device::Acc(p)).collect();
     let mut placement = Placement::new(assignment, 0.0, "Scotch");
     let mut relaxed = req.clone();

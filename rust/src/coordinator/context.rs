@@ -488,6 +488,24 @@ pub fn fingerprint_req(g: &OpGraph, req: &PlanRequest) -> u64 {
         TrainSchedule::GPipe => 1,
     });
     h.f64(req.fleet.bandwidth);
+    // Interconnect topology: per-pair slowdowns/latencies are part of the
+    // cost model, so two requests differing only in `topo=` must not share
+    // cached analysis or deterministic solutions. Hash the derived cost
+    // matrices (what every solver actually reads), not the spec string.
+    match &req.fleet.topology {
+        None => h.u64(0),
+        Some(t) => {
+            h.u64(1);
+            let n = t.n();
+            h.u64(n as u64);
+            for a in 0..n {
+                for b in 0..n {
+                    h.f64(t.slowdown(a, b));
+                    h.f64(t.latency(a, b));
+                }
+            }
+        }
+    }
     h.0
 }
 

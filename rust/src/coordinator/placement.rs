@@ -189,15 +189,28 @@ pub struct Fleet {
     pub classes: Vec<DeviceClass>,
     /// Interconnect bandwidth (App.-C.2 AllReduce term; size/time units).
     pub bandwidth: f64,
+    /// Optional per-device-pair interconnect topology (DESIGN.md §9).
+    /// `None` is the legacy scalar path: every pair-cost accessor below
+    /// degenerates to the identity, bitwise-identical to pre-topology
+    /// behavior. When present, its slot count equals
+    /// [`Fleet::num_devices`] in dense order.
+    pub topology: Option<crate::topo::Topology>,
 }
 
 impl Fleet {
     pub fn new(classes: Vec<DeviceClass>) -> Fleet {
-        Fleet { classes, bandwidth: 1.0 }
+        Fleet { classes, bandwidth: 1.0, topology: None }
     }
 
     pub fn bandwidth(mut self, b: f64) -> Fleet {
         self.bandwidth = b;
+        self
+    }
+
+    /// Attach an interconnect topology (builder style). Callers are
+    /// responsible for matching its slot count to the fleet's.
+    pub fn topology(mut self, t: crate::topo::Topology) -> Fleet {
+        self.topology = Some(t);
         self
     }
 
@@ -351,12 +364,34 @@ impl Fleet {
         }
     }
 
+    /// Dense slot index one past class `name`'s current device block
+    /// (accelerator classes stack from 0, CPU classes from `k`).
+    fn class_block_end(&self, name: &str) -> Option<usize> {
+        let target = self.classes.iter().find(|c| c.name == name)?;
+        let mut end = if target.kind == DeviceKind::Cpu { self.k() } else { 0 };
+        for c in self.classes_of(target.kind) {
+            end += c.count;
+            if std::ptr::eq(c, target) {
+                return Some(end);
+            }
+        }
+        None
+    }
+
     /// Decrement `name`'s device count (serving-time device loss). Returns
-    /// `false` when the class is unknown or already empty.
+    /// `false` when the class is unknown or already empty. An attached
+    /// topology drops the lost device's slot (uniform topologies stay
+    /// uniform; structured ones degrade to an explicit matrix — see
+    /// [`crate::topo::Topology::without_slot`]); if the slot cannot be
+    /// removed the topology falls back to the scalar path (`None`).
     pub fn decrement(&mut self, name: &str) -> bool {
+        let slot = self.class_block_end(name).map(|e| e.saturating_sub(1));
         match self.classes.iter_mut().find(|c| c.name == name) {
             Some(c) if c.count > 0 => {
                 c.count -= 1;
+                if let (Some(t), Some(slot)) = (self.topology.take(), slot) {
+                    self.topology = t.without_slot(slot).ok();
+                }
                 true
             }
             _ => false,
@@ -366,11 +401,18 @@ impl Fleet {
     /// Re-increment `name`'s device count (serving-time device recovery) —
     /// the inverse of [`Fleet::decrement`], used by the re-planning
     /// controller when a declared-dead device answers a re-admission
-    /// probe. Returns `false` when the class is unknown.
+    /// probe. Returns `false` when the class is unknown. An attached
+    /// topology gains a slot cloned from the class's surviving twin (or
+    /// its dense neighbor when the class was fully drained — see
+    /// [`crate::topo::Topology::with_cloned_slot`]).
     pub fn increment(&mut self, name: &str) -> bool {
+        let end = self.class_block_end(name);
         match self.classes.iter_mut().find(|c| c.name == name) {
             Some(c) => {
                 c.count += 1;
+                if let (Some(t), Some(end)) = (self.topology.take(), end) {
+                    self.topology = t.with_cloned_slot(end.saturating_sub(1)).ok();
+                }
                 true
             }
             None => false,
@@ -383,7 +425,7 @@ impl Fleet {
     }
 
     /// All caps lifted — the scoring mode of the memory-oblivious
-    /// baselines (Scotch, expert).
+    /// baselines (Scotch, expert). Carries the topology unchanged.
     pub fn with_unbounded_memory(&self) -> Fleet {
         let mut f = self.clone();
         for c in &mut f.classes {
@@ -392,15 +434,100 @@ impl Fleet {
         f
     }
 
+    // ---- per-pair comm pricing (DESIGN.md §9) -------------------------
+    //
+    // Dense slots follow `Device::index`: accelerators 0..k, CPUs k..k+ℓ.
+    // Without a topology every accessor is the exact identity, which keeps
+    // the scalar path bitwise-unchanged.
+
+    /// Normalized slowdown of the `a → b` link (`1.0` without a topology,
+    /// on the diagonal, and on every fastest-tier pair).
+    #[inline]
+    pub fn pair_slowdown(&self, a: usize, b: usize) -> f64 {
+        match &self.topology {
+            Some(t) => t.slowdown(a, b),
+            None => 1.0,
+        }
+    }
+
+    /// Latency of the `a → b` link (`0.0` without a topology).
+    #[inline]
+    pub fn pair_latency(&self, a: usize, b: usize) -> f64 {
+        match &self.topology {
+            Some(t) => t.latency(a, b),
+            None => 0.0,
+        }
+    }
+
+    /// Cost of moving `s` reference-seconds of data from dense slot `a`
+    /// to dense slot `b`: `s * pair_slowdown + pair_latency`, exactly `s`
+    /// on the diagonal — THE comm-pricing accessor every solver and
+    /// evaluator routes cut-edge costs through (no site multiplies raw
+    /// `fleet.bandwidth`; the only scalar-bandwidth consumers left are
+    /// the App.-C.2 AllReduce term and simx's base link rate).
+    #[inline]
+    pub fn transfer_cost(&self, a: usize, b: usize, s: f64) -> f64 {
+        match &self.topology {
+            Some(t) => t.transfer_cost(a, b, s),
+            None => s,
+        }
+    }
+
+    /// [`Fleet::transfer_cost`], but free on the same device — the
+    /// canonical `pair_cost(src, dst, bytes)` form.
+    #[inline]
+    pub fn pair_cost(&self, a: usize, b: usize, s: f64) -> f64 {
+        match &self.topology {
+            Some(t) => t.pair_cost(a, b, s),
+            None => {
+                if a == b {
+                    0.0
+                } else {
+                    s
+                }
+            }
+        }
+    }
+
+    /// Largest pair slowdown (`1.0` without a topology) — the numerator
+    /// of the DP family's conservative worst-pair comm bound.
+    pub fn max_comm_slowdown(&self) -> f64 {
+        self.topology.as_ref().map_or(1.0, |t| t.max_slowdown())
+    }
+
+    /// Largest pair latency (`0.0` without a topology).
+    pub fn max_comm_latency(&self) -> f64 {
+        self.topology.as_ref().map_or(0.0, |t| t.max_latency())
+    }
+
+    /// Smallest off-diagonal pair latency (`0.0` without a topology) —
+    /// the optimistic half of the MILPs' pair-free relaxation (the
+    /// smallest off-diagonal *slowdown* is `1.0` by normalization).
+    pub fn min_comm_latency(&self) -> f64 {
+        self.topology.as_ref().map_or(0.0, |t| t.min_offdiag_latency())
+    }
+
+    /// Conservative worst-pair cost `s * max_slowdown + max_latency`;
+    /// bitwise `s` without a topology (`s * 1.0 + 0.0`).
+    #[inline]
+    pub fn worst_pair_cost(&self, s: f64) -> f64 {
+        s * self.max_comm_slowdown() + self.max_comm_latency()
+    }
+
     /// Parse a CLI fleet spec: comma-separated
-    /// `COUNTxNAME[@SPEED][:MEM][+acc|+cpu]` entries plus an optional
-    /// `bw=BANDWIDTH` entry, e.g. `"2xfast@2.0:16,4xslow:8,1xcpu,bw=2"`.
+    /// `COUNTxNAME[@SPEED][:MEM][+acc|+cpu]` entries plus optional
+    /// `bw=BANDWIDTH` and `topo=SPEC` entries, e.g.
+    /// `"2xfast@2.0:16,4xslow:8,1xcpu,bw=2"` or
+    /// `"8xacc:32768,1xcpu,topo=islands:2x4@900/64"` (topology grammar in
+    /// [`crate::topo::TopoSpec`]; island/tier shapes cover the
+    /// accelerators, CPU slots ride the slowest tier).
     /// Without an explicit `+acc`/`+cpu` suffix the kind is inferred from
     /// the name (a name starting with `cpu` declares a CPU class);
     /// `COUNTx` defaults to 1, `@SPEED` to 1.0, `:MEM` to unlimited.
     pub fn parse(spec: &str) -> Result<Fleet, String> {
         let mut classes = Vec::new();
         let mut bandwidth = 1.0;
+        let mut topo_spec = None;
         for raw in spec.split(',') {
             let entry = raw.trim();
             if entry.is_empty() {
@@ -413,6 +540,15 @@ impl Fleet {
                     return Err(format!("bandwidth must be positive in '{entry}'"));
                 }
                 continue;
+            }
+            if let Some(t) = entry.strip_prefix("topo=") {
+                topo_spec = Some(crate::topo::TopoSpec::parse(t)?);
+                continue;
+            }
+            if let Some((key, _)) = entry.split_once('=') {
+                return Err(format!(
+                    "unknown fleet clause '{key}=' in '{entry}' (expected bw= or topo=)"
+                ));
             }
             let (entry_body, explicit_kind) = match entry.rsplit_once('+') {
                 Some((body, "acc")) => (body, Some(DeviceKind::Accelerator)),
@@ -452,7 +588,14 @@ impl Fleet {
         if classes.is_empty() {
             return Err("empty fleet spec".into());
         }
-        Ok(Fleet::new(classes).bandwidth(bandwidth))
+        let mut fleet = Fleet::new(classes).bandwidth(bandwidth);
+        if let Some(spec) = topo_spec {
+            // Materialize once the device counts are known; island/tier
+            // shapes must cover exactly the fleet's accelerators.
+            let t = crate::topo::Topology::from_spec(&spec, fleet.k(), fleet.l())?;
+            fleet.topology = Some(t);
+        }
+        Ok(fleet)
     }
 }
 
@@ -484,6 +627,9 @@ impl std::fmt::Display for Fleet {
         }
         if self.bandwidth != 1.0 {
             write!(f, ",bw={}", self.bandwidth)?;
+        }
+        if let Some(t) = &self.topology {
+            write!(f, ",topo={}", t.spec())?;
         }
         Ok(())
     }
@@ -1039,6 +1185,57 @@ mod tests {
         assert_eq!(explicit.bandwidth, 2.5);
         assert!(Fleet::parse("2xpool+tpu").is_err());
         assert!(Fleet::parse("bw=-1,1xgpu").is_err());
+    }
+
+    #[test]
+    fn fleet_topo_clause_parses_and_reparses() {
+        let fleet = Fleet::parse("4xfast:16,1xcpu,topo=islands:2x2@800/100").unwrap();
+        let t = fleet.topology.as_ref().expect("topology attached");
+        assert_eq!(t.n(), 5);
+        assert_eq!(fleet.pair_slowdown(0, 1), 1.0);
+        assert_eq!(fleet.pair_slowdown(0, 2), 8.0);
+        assert_eq!(fleet.transfer_cost(0, 2, 2.0), 16.0);
+        assert_eq!(fleet.pair_cost(0, 0, 2.0), 0.0);
+        assert_eq!(fleet.max_comm_slowdown(), 8.0);
+        assert_eq!(fleet.worst_pair_cost(2.0), 16.0);
+        let round = Fleet::parse(&fleet.to_string()).unwrap();
+        assert_eq!(fleet, round, "display was: {fleet}");
+        // shape/fleet mismatch and bad clauses stay loud
+        assert!(Fleet::parse("2xfast,1xcpu,topo=islands:2x2@800/100").is_err());
+        assert!(Fleet::parse("2xfast,1xcpu,topo=ring:4@10").is_err());
+        assert!(Fleet::parse("2xfast,1xcpu,topology=uniform:1").is_err());
+    }
+
+    #[test]
+    fn topologyless_fleet_accessors_are_identity() {
+        let fleet = Fleet::parse("2xfast:16,1xcpu").unwrap();
+        for (a, b) in [(0, 0), (0, 1), (2, 0)] {
+            assert_eq!(fleet.pair_slowdown(a, b).to_bits(), 1.0_f64.to_bits());
+            assert_eq!(fleet.pair_latency(a, b).to_bits(), 0.0_f64.to_bits());
+            assert_eq!(fleet.transfer_cost(a, b, 3.25).to_bits(), 3.25_f64.to_bits());
+        }
+        assert_eq!(fleet.pair_cost(1, 1, 3.25), 0.0);
+        assert_eq!(fleet.pair_cost(0, 1, 3.25), 3.25);
+        assert_eq!(fleet.worst_pair_cost(3.25).to_bits(), 3.25_f64.to_bits());
+    }
+
+    #[test]
+    fn decrement_and_increment_maintain_topology_slots() {
+        // interleaved islands {0,2} / {1,3}: losing the class's last slot
+        // (3) leaves island {0,2} intact
+        let mut fleet = Fleet::parse("4xfast:16,1xcpu,topo=islands:0.2|1.3@800/100").unwrap();
+        assert!(fleet.decrement("fast"));
+        let t = fleet.topology.as_ref().expect("topology survives decrement");
+        assert_eq!(t.n(), fleet.num_devices());
+        assert_eq!(fleet.pair_slowdown(0, 2), 1.0);
+        assert_eq!(fleet.pair_slowdown(0, 1), 8.0);
+        assert!(fleet.increment("fast"));
+        let t = fleet.topology.as_ref().expect("topology survives increment");
+        assert_eq!(t.n(), fleet.num_devices());
+        // the revived slot is cloned from its twin (slot 2) and joins its
+        // island over the twin's fastest link
+        assert_eq!(fleet.pair_slowdown(2, 3), 1.0);
+        assert_eq!(fleet.pair_slowdown(1, 3), 8.0);
     }
 
     #[test]

@@ -39,6 +39,11 @@
 //! * [`baselines`] — greedy / Scotch-like / local search / PipeDream / expert.
 //! * [`workloads`] — BERT, ResNet50, Inception-v3, GNMT generators and the
 //!   paper's JSON interchange format.
+//! * [`topo`] — device-interconnect topology: per-device-pair
+//!   bandwidth/latency matrices with hierarchical constructors
+//!   (uniform / islands / tiered / explicit matrix), the canonical
+//!   `pair_cost` accessor every comm-cost site routes through, and the
+//!   `topo=` clause of the `--fleet` grammar (DESIGN.md §9).
 //! * [`simx`] — fleet-aware discrete-event simulation: typed-event engine
 //!   (compute/transfer/fault/straggler/recovery/load-spike), live
 //!   memory-occupancy accounting, prediction-vs-simulation validation,
@@ -64,6 +69,7 @@ pub mod pipeline;
 pub mod runtime;
 pub mod simx;
 pub mod solver;
+pub mod topo;
 pub mod util;
 pub mod workloads;
 

@@ -40,6 +40,23 @@
 //! `fleet` key; see `workloads::json`). An optional `bw=X` entry sets the
 //! interconnect bandwidth, `+acc`/`+cpu` suffixes force a class kind.
 //!
+//! An optional `topo=SPEC` entry declares a hierarchical interconnect
+//! topology with per-device-pair comm costs (DESIGN.md §9):
+//!
+//! ```text
+//! topo=uniform:900                   # all pairs at one rate (= scalar path)
+//! topo=islands:2x4@900/64            # 2 islands of 4 accs; intra 900, inter 64
+//! topo=islands:0.2|1.3@900/64        # explicit island membership by slot
+//! topo=tiered:2x2x2@900/64/8         # hosts x islands x accs; nvlink/pcie/net
+//! topo=matrix:0;5/5;0                # explicit per-pair bandwidth rows
+//! dnn-partition partition bert24 dp --fleet "8xacc:32768,1xcpu,topo=islands:2x4@900/64"
+//! ```
+//!
+//! CPU slots ride the slowest tier. Cross-island boundaries are priced
+//! per device pair by every solver, the objective evaluators, and the
+//! simulate replay; without `topo=` (or with `uniform:`) the legacy
+//! scalar cost model applies bit-for-bit.
+//!
 //! ## Fleet simulation (`simulate`)
 //!
 //! `simulate` replays the plan through the `simx` discrete-event engine —
@@ -266,7 +283,9 @@ fn run(raw_args: &[String]) -> i32 {
             println!(
                 "\nk above is the paper's uniform deployment; override with\n\
                  --fleet \"COUNTxNAME[@SPEED][:MEM],…\" on partition/simulate/\n\
-                 latency/partition-file, e.g. --fleet \"2xfast@2:32768,4xslow:16384,1xcpu\""
+                 latency/partition-file, e.g. --fleet \"2xfast@2:32768,4xslow:16384,1xcpu\";\n\
+                 add topo=islands:2x4@900/64 (or tiered:/matrix:/uniform:) for\n\
+                 per-device-pair interconnect costs"
             );
             0
         }

@@ -724,7 +724,14 @@ pub fn simulate_with_events(
                                 let key = (d, piece_dev[b]);
                                 let free = link_free.get(&key).copied().unwrap_or(0.0);
                                 let start = free.max(t);
-                                let finish = start + size / bw;
+                                // directed-pair link: the topology scales
+                                // this pair's effective rate and adds its
+                                // latency (identity without a topology:
+                                // `+ 0.0 + size·1.0/bw`, bitwise the old
+                                // `size/bw` for non-negative sizes)
+                                let finish = start
+                                    + req.fleet.pair_latency(d, piece_dev[b])
+                                    + size * req.fleet.pair_slowdown(d, piece_dev[b]) / bw;
                                 link_free.insert(key, finish);
                                 transfers.push((sample, piece, b, start, finish));
                                 push(

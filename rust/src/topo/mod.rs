@@ -1,0 +1,700 @@
+//! Device-interconnect topology: per-device-pair bandwidth/latency.
+//!
+//! The paper charges every cut edge one scalar bandwidth; real fleets are
+//! NVLink islands over PCIe hosts over a datacenter network (Moirai,
+//! QuickP's `DeviceGraph`). [`Topology`] holds a dense per-ordered-pair
+//! matrix over the fleet's device slots — accelerators first, in class
+//! order, then CPUs, the same dense index space as `Fleet::dense_view` —
+//! and prices a transfer of `s` reference-seconds across the pair
+//! `(a, b)` as
+//!
+//! ```text
+//! transfer_cost(a, b, s) = s * slowdown(a, b) + latency(a, b)
+//! ```
+//!
+//! `slowdown(a, b) = ref_bw / bw(a, b)` is normalized against the
+//! *fastest* off-diagonal link (`ref_bw = max bw`), so `slowdown >= 1.0`
+//! everywhere and equals exactly `1.0` on every pair of a uniform
+//! topology. Node `comm` costs stay what they always were — transfer
+//! time at reference bandwidth — and the topology only stretches them.
+//! The diagonal is pinned to `slowdown = 1.0`, `latency = 0.0`, which
+//! makes the uniform case bitwise-identical to the scalar path:
+//! `s * 1.0 + 0.0 == s` in IEEE-754 for every finite non-negative `s`.
+//! [`Topology::pair_cost`] additionally zeroes same-device transfers.
+//!
+//! Hierarchical constructors mirror real cluster shapes:
+//! [`Topology::uniform`] (the `bw=` special case), [`Topology::islands`]
+//! (NVLink islands bridged by a slow interconnect),
+//! [`Topology::tiered`] (NVLink within an island, PCIe within a host,
+//! network across hosts) and [`Topology::from_matrix`] (explicit).
+//! Island/tier specs describe the *accelerators*; CPU slots attach to
+//! everything over the slowest tier (inter-island / network), which is
+//! where host RAM actually sits.
+//!
+//! [`TopoSpec`] is the parse/Display surface — the `topo=` clause of the
+//! `--fleet` grammar and the JSON `topology` section both round-trip
+//! through it:
+//!
+//! ```text
+//! topo=uniform:900                    every pair at 900 (≡ scalar path)
+//! topo=islands:2x4@900/64             2 islands of 4, 900 intra / 64 inter
+//! topo=islands:0.2|1.3@900/64        explicit groups: {0,2} and {1,3}
+//! topo=tiered:2x2x2@900/64/12         2 hosts × 2 islands × 2 devices
+//! topo=matrix:0;64/64;0+0;0.5/0.5;0   explicit bw rows (+ optional latency)
+//! ```
+
+use std::fmt;
+
+/// Parseable, display-able description of a topology. Kept alongside the
+/// materialized matrices so `Fleet::parse` / `Display` round-trip the
+/// exact clause the user wrote.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TopoSpec {
+    /// Every off-diagonal pair at the same bandwidth (scalar special case).
+    Uniform { bw: f64 },
+    /// Accelerator islands: fast links within a group, slow across groups
+    /// and to CPUs. `groups` partitions the accelerator dense indices.
+    Islands { groups: Vec<Vec<usize>>, intra_bw: f64, inter_bw: f64 },
+    /// Three-tier cluster: `hosts` hosts × `islands_per_host` islands ×
+    /// `size` accelerators; NVLink within an island, PCIe within a host,
+    /// network across hosts (and to CPUs).
+    Tiered {
+        hosts: usize,
+        islands_per_host: usize,
+        size: usize,
+        nvlink: f64,
+        pcie: f64,
+        net: f64,
+    },
+    /// Explicit per-pair bandwidth (and optional latency) matrices over
+    /// *all* device slots. Diagonal entries are ignored.
+    Matrix { bw: Vec<Vec<f64>>, lat: Vec<Vec<f64>> },
+}
+
+fn parse_rate(s: &str, what: &str) -> Result<f64, String> {
+    let v: f64 =
+        s.parse().map_err(|_| format!("topology: bad {what} '{s}' (expected a number)"))?;
+    if !(v.is_finite() && v > 0.0) {
+        return Err(format!("topology: {what} must be positive and finite, got '{s}'"));
+    }
+    Ok(v)
+}
+
+fn parse_groups(shape: &str) -> Result<Vec<Vec<usize>>, String> {
+    let mut groups = Vec::new();
+    for gs in shape.split('|') {
+        let mut g = Vec::new();
+        for ms in gs.split('.') {
+            let m: usize = ms.parse().map_err(|_| {
+                format!("topology: bad island member '{ms}' in '{shape}' (expected device index)")
+            })?;
+            g.push(m);
+        }
+        if g.is_empty() {
+            return Err(format!("topology: empty island group in '{shape}'"));
+        }
+        groups.push(g);
+    }
+    Ok(groups)
+}
+
+fn parse_matrix(part: &str, what: &str) -> Result<Vec<Vec<f64>>, String> {
+    let mut rows = Vec::new();
+    for rs in part.split('/') {
+        let mut row = Vec::new();
+        for es in rs.split(';') {
+            let v: f64 = es
+                .parse()
+                .map_err(|_| format!("topology: bad {what} matrix entry '{es}'"))?;
+            row.push(v);
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+fn fmt_matrix(m: &[Vec<f64>]) -> String {
+    m.iter()
+        .map(|row| row.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(";"))
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+impl TopoSpec {
+    /// Parse the value of a `topo=` clause (grammar in the module docs).
+    pub fn parse(s: &str) -> Result<TopoSpec, String> {
+        let (kind, rest) = s.split_once(':').ok_or_else(|| {
+            format!("topology spec '{s}' missing ':' (expected e.g. 'islands:2x4@900/64')")
+        })?;
+        match kind {
+            "uniform" => Ok(TopoSpec::Uniform { bw: parse_rate(rest, "bandwidth")? }),
+            "islands" => {
+                let (shape, rates) = rest.split_once('@').ok_or_else(|| {
+                    format!("islands spec '{s}' missing '@INTRA/INTER' rates")
+                })?;
+                let (intra, inter) = rates.split_once('/').ok_or_else(|| {
+                    format!("islands spec '{s}' rates must be 'INTRA/INTER'")
+                })?;
+                let intra_bw = parse_rate(intra, "intra-island bandwidth")?;
+                let inter_bw = parse_rate(inter, "inter-island bandwidth")?;
+                // `GxS` = G consecutive blocks of S; anything else is the
+                // explicit `0.2|1.3` group form.
+                let block = shape.split_once('x').and_then(|(g, sz)| {
+                    match (g.parse::<usize>(), sz.parse::<usize>()) {
+                        (Ok(g), Ok(sz)) if g > 0 && sz > 0 => Some((g, sz)),
+                        _ => None,
+                    }
+                });
+                let groups = match block {
+                    Some((g, sz)) => {
+                        (0..g).map(|i| (i * sz..(i + 1) * sz).collect()).collect()
+                    }
+                    None => parse_groups(shape)?,
+                };
+                Ok(TopoSpec::Islands { groups, intra_bw, inter_bw })
+            }
+            "tiered" => {
+                let (shape, rates) = rest.split_once('@').ok_or_else(|| {
+                    format!("tiered spec '{s}' missing '@NV/PCIE/NET' rates")
+                })?;
+                let dims: Vec<&str> = shape.split('x').collect();
+                let rs: Vec<&str> = rates.split('/').collect();
+                if dims.len() != 3 || rs.len() != 3 {
+                    return Err(format!(
+                        "tiered spec '{s}' must be 'tiered:HxGxS@NV/PCIE/NET'"
+                    ));
+                }
+                let dim = |i: usize, what: &str| -> Result<usize, String> {
+                    match dims[i].parse::<usize>() {
+                        Ok(v) if v > 0 => Ok(v),
+                        _ => Err(format!("tiered spec: bad {what} '{}'", dims[i])),
+                    }
+                };
+                Ok(TopoSpec::Tiered {
+                    hosts: dim(0, "host count")?,
+                    islands_per_host: dim(1, "islands-per-host")?,
+                    size: dim(2, "island size")?,
+                    nvlink: parse_rate(rs[0], "nvlink bandwidth")?,
+                    pcie: parse_rate(rs[1], "pcie bandwidth")?,
+                    net: parse_rate(rs[2], "network bandwidth")?,
+                })
+            }
+            "matrix" => {
+                let (bw_part, lat_part) = match rest.split_once('+') {
+                    Some((b, l)) => (b, Some(l)),
+                    None => (rest, None),
+                };
+                let bw = parse_matrix(bw_part, "bandwidth")?;
+                let lat = match lat_part {
+                    Some(l) => parse_matrix(l, "latency")?,
+                    None => bw.iter().map(|r| vec![0.0; r.len()]).collect(),
+                };
+                Ok(TopoSpec::Matrix { bw, lat })
+            }
+            other => Err(format!(
+                "unknown topology kind '{other}' (expected uniform|islands|tiered|matrix)"
+            )),
+        }
+    }
+
+    /// Number of accelerator slots the spec pins down, if any (`Matrix`
+    /// pins the *total* slot count instead and returns `None` here).
+    fn acc_slots(&self) -> Option<usize> {
+        match self {
+            TopoSpec::Uniform { .. } | TopoSpec::Matrix { .. } => None,
+            TopoSpec::Islands { groups, .. } => Some(groups.iter().map(Vec::len).sum()),
+            TopoSpec::Tiered { hosts, islands_per_host, size, .. } => {
+                Some(hosts * islands_per_host * size)
+            }
+        }
+    }
+}
+
+impl fmt::Display for TopoSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TopoSpec::Uniform { bw } => write!(f, "uniform:{bw}"),
+            TopoSpec::Islands { groups, intra_bw, inter_bw } => {
+                // Prefer the compact GxS form when the groups are the
+                // consecutive equal-size blocks it denotes.
+                let sz = groups.first().map_or(0, Vec::len);
+                let block = sz > 0
+                    && groups.iter().enumerate().all(|(i, g)| {
+                        g.len() == sz && g.iter().enumerate().all(|(j, &m)| m == i * sz + j)
+                    });
+                if block {
+                    write!(f, "islands:{}x{}@{}/{}", groups.len(), sz, intra_bw, inter_bw)
+                } else {
+                    let shape = groups
+                        .iter()
+                        .map(|g| {
+                            g.iter().map(|m| m.to_string()).collect::<Vec<_>>().join(".")
+                        })
+                        .collect::<Vec<_>>()
+                        .join("|");
+                    write!(f, "islands:{shape}@{intra_bw}/{inter_bw}")
+                }
+            }
+            TopoSpec::Tiered { hosts, islands_per_host, size, nvlink, pcie, net } => {
+                write!(f, "tiered:{hosts}x{islands_per_host}x{size}@{nvlink}/{pcie}/{net}")
+            }
+            TopoSpec::Matrix { bw, lat } => {
+                write!(f, "matrix:{}", fmt_matrix(bw))?;
+                if lat.iter().any(|r| r.iter().any(|&v| v != 0.0)) {
+                    write!(f, "+{}", fmt_matrix(lat))?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Materialized per-pair cost model over `n` dense device slots.
+///
+/// Row-major `n × n` matrices; `slow` is the normalized slowdown
+/// (diagonal exactly `1.0`), `lat` the per-pair latency (diagonal `0.0`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    spec: TopoSpec,
+    n: usize,
+    /// Raw off-diagonal bandwidths (diagonal unused; kept so slot
+    /// add/remove can rebuild without losing the user's units).
+    bw: Vec<f64>,
+    slow: Vec<f64>,
+    lat: Vec<f64>,
+    max_slow: f64,
+    max_lat: f64,
+    min_lat: f64,
+}
+
+impl Topology {
+    /// Build from raw matrices. `bw`/`lat` are row-major `n × n`;
+    /// diagonal entries are ignored (pinned to slowdown 1, latency 0).
+    fn build(spec: TopoSpec, n: usize, bw: Vec<f64>, lat: Vec<f64>) -> Result<Topology, String> {
+        debug_assert_eq!(bw.len(), n * n);
+        debug_assert_eq!(lat.len(), n * n);
+        if n == 0 {
+            return Err("topology: fleet has no devices".into());
+        }
+        let mut reference = 0.0_f64;
+        for a in 0..n {
+            for b in 0..n {
+                if a == b {
+                    continue;
+                }
+                let w = bw[a * n + b];
+                if !(w.is_finite() && w > 0.0) {
+                    return Err(format!(
+                        "topology: bandwidth for pair ({a},{b}) must be positive, got {w}"
+                    ));
+                }
+                let l = lat[a * n + b];
+                if !(l.is_finite() && l >= 0.0) {
+                    return Err(format!(
+                        "topology: latency for pair ({a},{b}) must be non-negative, got {l}"
+                    ));
+                }
+                reference = reference.max(w);
+            }
+        }
+        let mut slow = vec![1.0; n * n];
+        let mut lat_m = vec![0.0; n * n];
+        let (mut max_slow, mut max_lat, mut min_lat) = (1.0_f64, 0.0_f64, f64::INFINITY);
+        for a in 0..n {
+            for b in 0..n {
+                if a == b {
+                    continue;
+                }
+                let s = reference / bw[a * n + b];
+                let l = lat[a * n + b];
+                slow[a * n + b] = s;
+                lat_m[a * n + b] = l;
+                max_slow = max_slow.max(s);
+                max_lat = max_lat.max(l);
+                min_lat = min_lat.min(l);
+            }
+        }
+        if !min_lat.is_finite() {
+            min_lat = 0.0; // n == 1: no off-diagonal pairs
+        }
+        Ok(Topology { spec, n, bw, slow, lat: lat_m, max_slow, max_lat, min_lat })
+    }
+
+    /// Materialize a spec for a fleet with `k` accelerator and `l` CPU
+    /// slots (dense order: accelerators `0..k`, CPUs `k..k+l`).
+    pub fn from_spec(spec: &TopoSpec, k: usize, l: usize) -> Result<Topology, String> {
+        let n = k + l;
+        if let Some(acc) = spec.acc_slots() {
+            if acc != k {
+                return Err(format!(
+                    "topology spec '{spec}' covers {acc} accelerators but the fleet has {k}"
+                ));
+            }
+        }
+        match spec {
+            TopoSpec::Uniform { bw } => {
+                let m = vec![*bw; n * n];
+                Topology::build(spec.clone(), n, m, vec![0.0; n * n])
+            }
+            TopoSpec::Islands { groups, intra_bw, inter_bw } => {
+                let mut island = vec![usize::MAX; n];
+                for (gi, g) in groups.iter().enumerate() {
+                    for &m in g {
+                        if m >= k {
+                            return Err(format!(
+                                "topology: island member {m} is not an accelerator (k = {k})"
+                            ));
+                        }
+                        if island[m] != usize::MAX {
+                            return Err(format!(
+                                "topology: accelerator {m} appears in two islands"
+                            ));
+                        }
+                        island[m] = gi;
+                    }
+                }
+                let mut bw = vec![*inter_bw; n * n];
+                for a in 0..k {
+                    for b in 0..k {
+                        if island[a] == island[b] {
+                            bw[a * n + b] = *intra_bw;
+                        }
+                    }
+                }
+                Topology::build(spec.clone(), n, bw, vec![0.0; n * n])
+            }
+            TopoSpec::Tiered { islands_per_host, size, nvlink, pcie, net, .. } => {
+                let mut bw = vec![*net; n * n];
+                for a in 0..k {
+                    for b in 0..k {
+                        if a / size == b / size {
+                            bw[a * n + b] = *nvlink;
+                        } else if a / (size * islands_per_host) == b / (size * islands_per_host)
+                        {
+                            bw[a * n + b] = *pcie;
+                        }
+                    }
+                }
+                Topology::build(spec.clone(), n, bw, vec![0.0; n * n])
+            }
+            TopoSpec::Matrix { bw, lat } => {
+                let dim_ok = |m: &Vec<Vec<f64>>| {
+                    m.len() == n && m.iter().all(|r| r.len() == n)
+                };
+                if !dim_ok(bw) || !dim_ok(lat) {
+                    return Err(format!(
+                        "topology: matrix must be {n}x{n} for this fleet (got {}x{})",
+                        bw.len(),
+                        bw.first().map_or(0, Vec::len)
+                    ));
+                }
+                let flat =
+                    |m: &Vec<Vec<f64>>| m.iter().flat_map(|r| r.iter().copied()).collect();
+                // The validator skips the diagonal, so placeholder 0s there
+                // are fine.
+                Topology::build(spec.clone(), n, flat(bw), flat(lat))
+            }
+        }
+    }
+
+    /// All `n` slots at one bandwidth — the scalar `bw=` special case.
+    pub fn uniform(n: usize, bw: f64) -> Result<Topology, String> {
+        Topology::from_spec(&TopoSpec::Uniform { bw }, n, 0)
+    }
+
+    /// Accelerator islands over a slow interconnect. `groups` must
+    /// partition `0..total` where `total` is the number of members.
+    pub fn islands(
+        groups: Vec<Vec<usize>>,
+        intra_bw: f64,
+        inter_bw: f64,
+    ) -> Result<Topology, String> {
+        let k = groups.iter().map(Vec::len).sum();
+        Topology::from_spec(&TopoSpec::Islands { groups, intra_bw, inter_bw }, k, 0)
+    }
+
+    /// Three-tier cluster of `hosts × islands_per_host × size` devices.
+    pub fn tiered(
+        hosts: usize,
+        islands_per_host: usize,
+        size: usize,
+        nvlink: f64,
+        pcie: f64,
+        net: f64,
+    ) -> Result<Topology, String> {
+        let spec = TopoSpec::Tiered { hosts, islands_per_host, size, nvlink, pcie, net };
+        Topology::from_spec(&spec, hosts * islands_per_host * size, 0)
+    }
+
+    /// Explicit per-pair matrices (diagonal entries ignored).
+    pub fn from_matrix(bw: Vec<Vec<f64>>, lat: Vec<Vec<f64>>) -> Result<Topology, String> {
+        let n = bw.len();
+        Topology::from_spec(&TopoSpec::Matrix { bw, lat }, n, 0)
+    }
+
+    /// Number of device slots covered.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The parse/Display spec this topology was materialized from.
+    pub fn spec(&self) -> &TopoSpec {
+        &self.spec
+    }
+
+    /// Dense pair index; out-of-range slots clamp to the last one. (The
+    /// solvers model a phantom CPU slot when the fleet declares `l = 0`;
+    /// clamping prices its links like the last real device's.)
+    #[inline]
+    fn at(&self, a: usize, b: usize) -> usize {
+        a.min(self.n - 1) * self.n + b.min(self.n - 1)
+    }
+
+    /// Normalized slowdown for `a → b`; `1.0` on the diagonal and on
+    /// every pair of a uniform topology.
+    #[inline]
+    pub fn slowdown(&self, a: usize, b: usize) -> f64 {
+        self.slow[self.at(a, b)]
+    }
+
+    /// Per-pair latency for `a → b`; `0.0` on the diagonal.
+    #[inline]
+    pub fn latency(&self, a: usize, b: usize) -> f64 {
+        self.lat[self.at(a, b)]
+    }
+
+    /// Cost of moving `s` reference-seconds of data `a → b`:
+    /// `s * slowdown + latency`. Diagonal cost is exactly `s`.
+    #[inline]
+    pub fn transfer_cost(&self, a: usize, b: usize, s: f64) -> f64 {
+        let i = self.at(a, b);
+        s * self.slow[i] + self.lat[i]
+    }
+
+    /// Like [`Self::transfer_cost`] but free on the same device — the
+    /// canonical accessor for cut-edge pricing.
+    #[inline]
+    pub fn pair_cost(&self, a: usize, b: usize, s: f64) -> f64 {
+        if a.min(self.n - 1) == b.min(self.n - 1) {
+            0.0
+        } else {
+            self.transfer_cost(a, b, s)
+        }
+    }
+
+    /// Largest off-diagonal slowdown (`1.0` for uniform / single-slot).
+    pub fn max_slowdown(&self) -> f64 {
+        self.max_slow
+    }
+
+    /// Largest off-diagonal latency (`0.0` for uniform / single-slot).
+    pub fn max_latency(&self) -> f64 {
+        self.max_lat
+    }
+
+    /// Smallest off-diagonal latency (`0.0` when there are no pairs).
+    /// The smallest off-diagonal *slowdown* is `1.0` by normalization.
+    pub fn min_offdiag_latency(&self) -> f64 {
+        self.min_lat
+    }
+
+    /// Conservative worst-pair bound: `s * max_slowdown + max_latency`.
+    /// Bitwise-identity (`s * 1.0 + 0.0`) on uniform topologies.
+    #[inline]
+    pub fn worst_pair_cost(&self, s: f64) -> f64 {
+        s * self.max_slow + self.max_lat
+    }
+
+    /// Topology with slot `i` removed (for `Fleet::decrement`). Uniform
+    /// specs stay uniform; every other spec degrades to an explicit
+    /// matrix over the surviving slots.
+    pub fn without_slot(&self, i: usize) -> Result<Topology, String> {
+        let n = self.n;
+        if n <= 1 {
+            return Err("topology: cannot remove the last device slot".into());
+        }
+        let i = i.min(n - 1);
+        if let TopoSpec::Uniform { bw } = &self.spec {
+            return Topology::uniform(n - 1, *bw);
+        }
+        let keep: Vec<usize> = (0..n).filter(|&s| s != i).collect();
+        let pick = |m: &[f64]| -> Vec<Vec<f64>> {
+            keep.iter()
+                .map(|&a| keep.iter().map(|&b| if a == b { 0.0 } else { m[a * n + b] }).collect())
+                .collect()
+        };
+        Topology::from_matrix(pick(&self.bw), pick(&self.lat))
+    }
+
+    /// Topology with a copy of slot `i` inserted at `i + 1` (for
+    /// `Fleet::increment`): the clone inherits slot `i`'s rows/columns
+    /// and connects to `i` itself over `i`'s fastest link — "the new
+    /// device joins its twin's island". Uniform specs stay uniform.
+    pub fn with_cloned_slot(&self, i: usize) -> Result<Topology, String> {
+        let n = self.n;
+        let i = i.min(n - 1);
+        if let TopoSpec::Uniform { bw } = &self.spec {
+            return Topology::uniform(n + 1, *bw);
+        }
+        // Fastest link out of `i` prices the twin pair; a single-slot
+        // topology has no links, so fall back to the reference rate 1.
+        let mut best = (1.0_f64, 0.0_f64);
+        let mut seen = false;
+        for b in 0..n {
+            if b != i && (!seen || self.bw[i * n + b] > best.0) {
+                best = (self.bw[i * n + b], self.lat[i * n + b]);
+                seen = true;
+            }
+        }
+        let idx = |s: usize| if s <= i { s } else { s - 1 }; // new-slot index → old
+        let m = n + 1;
+        let grid = |src: &[f64], twin: f64| -> Vec<Vec<f64>> {
+            (0..m)
+                .map(|a| {
+                    (0..m)
+                        .map(|b| {
+                            if a == b {
+                                0.0
+                            } else if (a == i || a == i + 1) && (b == i || b == i + 1) {
+                                twin
+                            } else {
+                                src[idx(a) * n + idx(b)]
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        Topology::from_matrix(grid(&self.bw, best.0), grid(&self.lat, best.1))
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.spec.fmt(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_bitwise_identity() {
+        let t = Topology::uniform(4, 900.0).unwrap();
+        for a in 0..4 {
+            for b in 0..4 {
+                assert_eq!(t.slowdown(a, b).to_bits(), 1.0_f64.to_bits());
+                assert_eq!(t.latency(a, b).to_bits(), 0.0_f64.to_bits());
+                for &s in &[0.0, 0.3, 7.25, 1e9] {
+                    assert_eq!(t.transfer_cost(a, b, s).to_bits(), s.to_bits());
+                }
+            }
+        }
+        assert_eq!(t.max_slowdown().to_bits(), 1.0_f64.to_bits());
+        assert_eq!(t.max_latency().to_bits(), 0.0_f64.to_bits());
+        assert_eq!(t.worst_pair_cost(2.5).to_bits(), 2.5_f64.to_bits());
+    }
+
+    #[test]
+    fn islands_price_cross_island_pairs() {
+        // 2 islands of 2 accelerators + 1 CPU slot.
+        let spec = TopoSpec::parse("islands:2x2@800/100").unwrap();
+        let t = Topology::from_spec(&spec, 4, 1).unwrap();
+        assert_eq!(t.n(), 5);
+        assert_eq!(t.slowdown(0, 1), 1.0); // intra = fastest link
+        assert_eq!(t.slowdown(0, 2), 8.0); // 800 / 100
+        assert_eq!(t.slowdown(0, 4), 8.0); // CPU over the slow tier
+        assert_eq!(t.pair_cost(0, 0, 3.0), 0.0);
+        assert_eq!(t.pair_cost(0, 2, 3.0), 24.0);
+        assert_eq!(t.max_slowdown(), 8.0);
+    }
+
+    #[test]
+    fn tiered_has_three_rates() {
+        let t = Topology::tiered(2, 2, 2, 900.0, 90.0, 9.0).unwrap();
+        assert_eq!(t.n(), 8);
+        assert_eq!(t.slowdown(0, 1), 1.0); // same island
+        assert_eq!(t.slowdown(0, 2), 10.0); // same host, PCIe
+        assert_eq!(t.slowdown(0, 4), 100.0); // cross-host network
+    }
+
+    #[test]
+    fn matrix_latency_and_asymmetry() {
+        let t = Topology::from_matrix(
+            vec![vec![0.0, 4.0], vec![2.0, 0.0]],
+            vec![vec![0.0, 0.5], vec![0.25, 0.0]],
+        )
+        .unwrap();
+        assert_eq!(t.slowdown(0, 1), 1.0); // 4 is the reference
+        assert_eq!(t.slowdown(1, 0), 2.0);
+        assert_eq!(t.transfer_cost(0, 1, 2.0), 2.5);
+        assert_eq!(t.transfer_cost(1, 0, 2.0), 4.25);
+        assert_eq!(t.min_offdiag_latency(), 0.25);
+    }
+
+    #[test]
+    fn spec_display_parse_roundtrip() {
+        for s in [
+            "uniform:900",
+            "islands:2x4@900/64",
+            "islands:0.2|1.3@900/64",
+            "tiered:2x2x2@900/64/12",
+            "matrix:0;64/64;0",
+            "matrix:0;64/64;0+0;0.5/0.5;0",
+        ] {
+            let spec = TopoSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s, "display drifted for {s}");
+            assert_eq!(TopoSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+        // Block-structured explicit groups collapse to the GxS form.
+        let spec = TopoSpec::parse("islands:0.1|2.3@900/64").unwrap();
+        assert_eq!(spec.to_string(), "islands:2x2@900/64");
+    }
+
+    #[test]
+    fn bad_specs_are_loud() {
+        for s in [
+            "islands:2x4",            // no rates
+            "islands:2x4@900",        // one rate
+            "ring:4@10",              // unknown kind
+            "uniform:-1",             // non-positive
+            "uniform:abc",            // not a number
+            "matrix:0;1",             // not square (1x2)
+            "islands:0.0|1@10/1",     // duplicate member
+        ] {
+            let err = TopoSpec::parse(s)
+                .and_then(|spec| Topology::from_spec(&spec, 2, 0).map(|_| ()));
+            assert!(err.is_err(), "expected '{s}' to be rejected");
+        }
+        // Spec / fleet size mismatch.
+        let spec = TopoSpec::parse("islands:2x4@900/64").unwrap();
+        assert!(Topology::from_spec(&spec, 6, 1).is_err());
+    }
+
+    #[test]
+    fn slot_removal_and_cloning() {
+        let t = Topology::islands(vec![vec![0, 1], vec![2, 3]], 800.0, 100.0).unwrap();
+        let smaller = t.without_slot(3).unwrap();
+        assert_eq!(smaller.n(), 3);
+        assert_eq!(smaller.slowdown(0, 1), 1.0);
+        assert_eq!(smaller.slowdown(0, 2), 8.0);
+        let bigger = t.with_cloned_slot(1).unwrap();
+        assert_eq!(bigger.n(), 5);
+        assert_eq!(bigger.slowdown(1, 2), 1.0); // twin joins slot 1's island
+        assert_eq!(bigger.slowdown(0, 2), 1.0); // clone of old pair (0,1)
+        assert_eq!(bigger.slowdown(2, 4), 8.0); // still slow to island 2
+        // Uniform stays uniform (and stays an identity).
+        let u = Topology::uniform(3, 50.0).unwrap();
+        assert_eq!(u.without_slot(0).unwrap().spec(), &TopoSpec::Uniform { bw: 50.0 });
+        assert_eq!(u.with_cloned_slot(2).unwrap().n(), 4);
+    }
+
+    #[test]
+    fn clamping_covers_phantom_cpu_slot() {
+        let t = Topology::uniform(3, 10.0).unwrap();
+        // Index 7 is out of range; it clamps to the last slot.
+        assert_eq!(t.slowdown(0, 7), 1.0);
+        assert_eq!(t.pair_cost(7, 9, 5.0), 0.0); // both clamp to slot 2
+    }
+}

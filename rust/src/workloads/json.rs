@@ -123,10 +123,16 @@ pub fn fleet_to_json(fleet: &Fleet) -> Json {
             Json::obj(fields)
         })
         .collect();
-    Json::obj(vec![
+    let mut fields = vec![
         ("bandwidth", Json::num(fleet.bandwidth)),
         ("classes", Json::Arr(classes)),
-    ])
+    ];
+    if let Some(t) = &fleet.topology {
+        // the spec string is the canonical serialized form — it re-
+        // materializes against the fleet's own device counts on parse
+        fields.push(("topology", Json::obj(vec![("spec", Json::str(t.spec().to_string()))])));
+    }
+    Json::obj(fields)
 }
 
 /// Parse a `fleet` section.
@@ -156,7 +162,19 @@ pub fn fleet_from_json(j: &Json) -> Result<Fleet, String> {
     if !(bandwidth.is_finite() && bandwidth > 0.0) {
         return Err("fleet bandwidth must be positive".into());
     }
-    Ok(Fleet { classes, bandwidth })
+    let mut fleet = Fleet { classes, bandwidth, topology: None };
+    // `topology` is either `{"spec": "islands:2x4@900/64"}` or the bare
+    // spec string; absence keeps the scalar-bandwidth path
+    let tj = j.get("topology");
+    let spec_str = tj.get("spec").as_str().or_else(|| tj.as_str());
+    if let Some(s) = spec_str {
+        let spec = crate::topo::TopoSpec::parse(s)
+            .map_err(|e| format!("fleet topology: {e}"))?;
+        let topo = crate::topo::Topology::from_spec(&spec, fleet.k(), fleet.l())
+            .map_err(|e| format!("fleet topology: {e}"))?;
+        fleet.topology = Some(topo);
+    }
+    Ok(fleet)
 }
 
 fn json_latency(v: f64) -> Json {
