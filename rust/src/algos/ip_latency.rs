@@ -123,6 +123,7 @@ pub fn solve_ctx(
         }
     }
     search.run();
+    search.flush_obs();
 
     let (obj, dense) = search.incumbent.clone().ok_or(PlaceError::NoIncumbent)?;
     let assignment: Vec<Device> = dense
@@ -191,6 +192,13 @@ struct LatSearch<'a> {
     start: Instant,
     deadline: Instant,
     complete: bool,
+    /// Search telemetry (see `ip_throughput::Search` — same scheme):
+    /// plain hot-loop bumps, flushed to obs once per solve, never read by
+    /// the search itself.
+    prune_bound: usize,
+    prune_memory: usize,
+    prune_contiguity: usize,
+    incumbent_log: Vec<(Duration, f64)>,
 }
 
 impl<'a> LatSearch<'a> {
@@ -266,6 +274,38 @@ impl<'a> LatSearch<'a> {
             start,
             order,
             complete: true,
+            prune_bound: 0,
+            prune_memory: 0,
+            prune_contiguity: 0,
+            incumbent_log: Vec::new(),
+        }
+    }
+
+    /// Flush the per-solve telemetry into the obs registry (counters
+    /// always, `ip.incumbent` instants only while recording is enabled).
+    fn flush_obs(&self) {
+        crate::obs::counter("ip_nodes_explored_total").add(self.nodes as u64);
+        crate::obs::counter("ip_prunes_total{reason=\"bound\"}").add(self.prune_bound as u64);
+        crate::obs::counter("ip_prunes_total{reason=\"memory\"}").add(self.prune_memory as u64);
+        crate::obs::counter("ip_prunes_total{reason=\"contiguity\"}")
+            .add(self.prune_contiguity as u64);
+        crate::obs::counter("ip_incumbent_updates_total").add(self.incumbent_log.len() as u64);
+        if crate::obs::is_enabled() {
+            let start_us = crate::obs::now_us() - self.start.elapsed().as_secs_f64() * 1e6;
+            for (at, obj) in &self.incumbent_log {
+                crate::obs::instant_at(
+                    "ip.incumbent",
+                    "ip",
+                    start_us + at.as_secs_f64() * 1e6,
+                    vec![
+                        ("objective".to_string(), crate::util::json::Json::num(*obj)),
+                        (
+                            "at_ms".to_string(),
+                            crate::util::json::Json::num(at.as_secs_f64() * 1e3),
+                        ),
+                    ],
+                );
+            }
         }
     }
 
@@ -291,8 +331,10 @@ impl<'a> LatSearch<'a> {
         if self.opts.polish {
             if let Some((obj, dense)) = self.incumbent.clone() {
                 if let Some(better) = self.polish(obj, dense) {
+                    let better_obj = better.0;
                     self.incumbent = Some(better);
                     self.incumbent_at = self.start.elapsed();
+                    self.incumbent_log.push((self.incumbent_at, better_obj));
                 }
             }
         }
@@ -311,6 +353,7 @@ impl<'a> LatSearch<'a> {
             {
                 self.incumbent = Some((obj, self.assignment.clone()));
                 self.incumbent_at = self.start.elapsed();
+                self.incumbent_log.push((self.incumbent_at, obj));
             }
             return;
         }
@@ -329,6 +372,7 @@ impl<'a> LatSearch<'a> {
             if self.g.nodes[v].p_acc.is_infinite()
                 || self.acc_mem[i] + self.g.nodes[v].mem > self.cap[i]
             {
+                self.prune_memory += 1;
                 continue;
             }
             if self.acc_set[i].is_empty() {
@@ -339,6 +383,7 @@ impl<'a> LatSearch<'a> {
                 seen_empty[class] = true;
             }
             if self.opts.contiguous && !self.contiguity_ok(v, i) {
+                self.prune_contiguity += 1;
                 continue;
             }
             cands.push((ready + self.g.nodes[v].p_acc / self.acc_speed[i], i + 1));
@@ -364,6 +409,8 @@ impl<'a> LatSearch<'a> {
                 .is_some_and(|(best, _)| lb >= best - 1e-12);
             if !prune {
                 self.dfs(pos + 1);
+            } else {
+                self.prune_bound += 1;
             }
             // undo
             if d > 0 {

@@ -138,6 +138,7 @@ pub fn solve_ctx(ctx: &ProblemCtx, opts: &IpOptions) -> Result<IpResult, PlaceEr
         }
     }
     search.run();
+    search.flush_obs();
 
     let (obj, dense) = search.incumbent.clone().ok_or(PlaceError::Infeasible)?;
     let mut placement = prepared.expand_req(g, req, obj, &dense);
@@ -221,6 +222,15 @@ struct Search<'a> {
     start: Instant,
     deadline: Instant,
     complete: bool,
+    /// Search telemetry (plain fields bumped in the hot loop, flushed to
+    /// the obs registry once per solve — DESIGN.md §10). Never read by
+    /// the search itself, so recording is bitwise-invisible to results.
+    prune_bound: usize,
+    prune_memory: usize,
+    prune_contiguity: usize,
+    /// `(when, objective)` per incumbent improvement — the timeline that
+    /// makes warm-start wins visible as `ip.incumbent` trace instants.
+    incumbent_log: Vec<(Duration, f64)>,
 }
 
 impl<'a> Search<'a> {
@@ -298,6 +308,40 @@ impl<'a> Search<'a> {
             start,
             order,
             complete: true,
+            prune_bound: 0,
+            prune_memory: 0,
+            prune_contiguity: 0,
+            incumbent_log: Vec::new(),
+        }
+    }
+
+    /// Push the per-solve telemetry into the obs registry: counters
+    /// always, the incumbent timeline as trace instants only while
+    /// recording is enabled. Called once after `run()` — nothing here
+    /// touches the hot loop beyond the plain field bumps.
+    fn flush_obs(&self) {
+        crate::obs::counter("ip_nodes_explored_total").add(self.nodes as u64);
+        crate::obs::counter("ip_prunes_total{reason=\"bound\"}").add(self.prune_bound as u64);
+        crate::obs::counter("ip_prunes_total{reason=\"memory\"}").add(self.prune_memory as u64);
+        crate::obs::counter("ip_prunes_total{reason=\"contiguity\"}")
+            .add(self.prune_contiguity as u64);
+        crate::obs::counter("ip_incumbent_updates_total").add(self.incumbent_log.len() as u64);
+        if crate::obs::is_enabled() {
+            let start_us = crate::obs::now_us() - self.start.elapsed().as_secs_f64() * 1e6;
+            for (at, obj) in &self.incumbent_log {
+                crate::obs::instant_at(
+                    "ip.incumbent",
+                    "ip",
+                    start_us + at.as_secs_f64() * 1e6,
+                    vec![
+                        ("objective".to_string(), crate::util::json::Json::num(*obj)),
+                        (
+                            "at_ms".to_string(),
+                            crate::util::json::Json::num(at.as_secs_f64() * 1e3),
+                        ),
+                    ],
+                );
+            }
         }
     }
 
@@ -340,6 +384,7 @@ impl<'a> Search<'a> {
                 if let Some((better_obj, better)) = self.polish(obj, dense) {
                     self.incumbent = Some((better_obj, better));
                     self.incumbent_at = self.start.elapsed();
+                    self.incumbent_log.push((self.incumbent_at, better_obj));
                 }
             }
         }
@@ -360,6 +405,7 @@ impl<'a> Search<'a> {
             {
                 self.incumbent = Some((obj, self.assignment.clone()));
                 self.incumbent_at = self.start.elapsed();
+                self.incumbent_log.push((self.incumbent_at, obj));
             }
             return;
         }
@@ -385,12 +431,14 @@ impl<'a> Search<'a> {
                 if self.g.nodes[v].p_acc.is_infinite()
                     || self.devices[d].mem + self.g.nodes[v].mem > self.mem_cap[d]
                 {
+                    self.prune_memory += 1;
                     continue;
                 }
             } else if self.g.nodes[v].p_cpu.is_infinite() {
                 continue;
             }
             if self.opts.contiguous && !self.contiguity_ok(v, d) {
+                self.prune_contiguity += 1;
                 continue;
             }
             let p = if is_acc { self.g.nodes[v].p_acc } else { self.g.nodes[v].p_cpu };
@@ -411,6 +459,8 @@ impl<'a> Search<'a> {
                 .is_some_and(|(best, _)| lb >= best - 1e-12);
             if !prune {
                 self.dfs(pos + 1);
+            } else {
+                self.prune_bound += 1;
             }
             self.unassign(v, d, undo);
             if !self.complete {

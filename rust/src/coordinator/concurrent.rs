@@ -42,11 +42,12 @@ use crate::coordinator::context::{
 use crate::coordinator::placement::{PlanRequest, Scenario};
 use crate::coordinator::planner::{self, Algorithm};
 use crate::graph::OpGraph;
+use crate::obs;
 use crate::workloads::Workload;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// One shard's state: an LRU of contexts, the in-flight build registry,
 /// and the incumbent seeds of the resident fingerprints.
@@ -98,12 +99,38 @@ struct SeedEntry {
     budget: Duration,
 }
 
+/// One shard's registered obs series (DESIGN.md §10): hit/miss/dedup
+/// counters plus a plan-latency histogram, labeled `{shard="i"}` so the
+/// Prometheus export shows where tenants contend. Handles are resolved
+/// once at construction; bumping them is a relaxed atomic op. Instances
+/// sharing a shard index share the series — the registry aggregates
+/// process-wide.
+struct ShardObs {
+    hits: Arc<obs::Counter>,
+    misses: Arc<obs::Counter>,
+    dedup: Arc<obs::Counter>,
+    latency_ms: Arc<obs::AtomicHistogram>,
+}
+
+impl ShardObs {
+    fn new(i: usize) -> ShardObs {
+        ShardObs {
+            hits: obs::counter(&format!("plan_shard_hits_total{{shard=\"{i}\"}}")),
+            misses: obs::counter(&format!("plan_shard_misses_total{{shard=\"{i}\"}}")),
+            dedup: obs::counter(&format!("plan_shard_dedup_waits_total{{shard=\"{i}\"}}")),
+            latency_ms: obs::histogram(&format!("plan_latency_ms{{shard=\"{i}\"}}")),
+        }
+    }
+}
+
 /// Concurrent, shareable planning service — see the module docs. All
 /// planning entry points take `&self`; wrap one in an `Arc` and hand
 /// clones to worker threads (or borrow it across a
 /// [`std::thread::scope`]).
 pub struct ConcurrentService {
     shards: Vec<Mutex<Shard>>,
+    /// Parallel to `shards`: the registered per-shard obs series.
+    shard_obs: Vec<ShardObs>,
     /// Per-shard LRU capacity (total capacity ÷ shard count, rounded up).
     shard_capacity: usize,
     /// Lattice enumeration cap for the contexts this service creates.
@@ -132,6 +159,7 @@ impl ConcurrentService {
         let shards = shards.max(1);
         ConcurrentService {
             shard_capacity: capacity.max(1).div_ceil(shards),
+            shard_obs: (0..shards).map(ShardObs::new).collect(),
             shards: (0..shards)
                 .map(|_| {
                     Mutex::new(Shard {
@@ -148,8 +176,12 @@ impl ConcurrentService {
         }
     }
 
+    fn shard_index(&self, fp: u64) -> usize {
+        (fp % self.shards.len() as u64) as usize
+    }
+
     fn shard(&self, fp: u64) -> &Mutex<Shard> {
-        &self.shards[(fp % self.shards.len() as u64) as usize]
+        &self.shards[self.shard_index(fp)]
     }
 
     /// The context for `(graph, scenario)` — the scalar adapter entry.
@@ -164,11 +196,13 @@ impl ConcurrentService {
     /// context ([`fingerprint_req`] excludes them).
     pub fn context_request(&self, g: &OpGraph, req: &PlanRequest) -> Arc<ProblemCtx> {
         let fp = fingerprint_req(g, req);
+        let sobs = &self.shard_obs[self.shard_index(fp)];
         let shard = self.shard(fp);
         let flight = {
             let mut s = shard.lock().expect("shard lock poisoned");
             if let Some(pos) = s.entries.iter().position(|(key, _)| *key == fp) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                sobs.hits.inc();
                 let entry = s.entries.remove(pos).expect("position just found");
                 s.entries.push_back(entry.clone());
                 return entry.1;
@@ -179,10 +213,12 @@ impl ConcurrentService {
                 let f = Arc::clone(&f.1);
                 drop(s);
                 self.dedup_waits.fetch_add(1, Ordering::Relaxed);
+                sobs.dedup.inc();
                 return f.wait();
             }
             // we are the builder: register before releasing the lock
             self.misses.fetch_add(1, Ordering::Relaxed);
+            sobs.misses.inc();
             let f = Arc::new(InFlight::new());
             s.inflight.push((fp, Arc::clone(&f)));
             f
@@ -270,6 +306,8 @@ impl ConcurrentService {
         req: &PlanRequest,
         opts: &SolveOpts,
     ) -> Result<PlanResult, PlaceError> {
+        let _span = obs::span_cat("plan_request", "planner");
+        let started = Instant::now();
         let ctx = self.context_request(g, req);
         let key = planner::warm_seed_key(req);
         let result = match key {
@@ -284,6 +322,8 @@ impl ConcurrentService {
                 result
             }
         };
+        let sobs = &self.shard_obs[self.shard_index(ctx.fingerprint())];
+        sobs.latency_ms.observe(started.elapsed().as_secs_f64() * 1e3);
         Ok(result)
     }
 

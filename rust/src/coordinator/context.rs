@@ -271,7 +271,10 @@ impl ProblemCtx {
 
     /// App.-B preprocessed problem (see [`Prepared`]).
     pub fn prepared(&self) -> Result<&Prepared, PlaceError> {
-        Self::cached(&self.prepared, || Prepared::build(&self.graph))
+        Self::cached(&self.prepared, || {
+            let _span = crate::obs::span_cat("ctx.prepared", "ctx");
+            Prepared::build(&self.graph)
+        })
     }
 
     /// `dp_graph` with gradient comm folded into node comm (zero fold for
@@ -300,6 +303,7 @@ impl ProblemCtx {
     pub fn lattice(&self) -> Result<&IdealLattice, PlaceError> {
         Self::cached(&self.lattice, || {
             let prepared = self.prepared()?;
+            let _span = crate::obs::span_cat("ctx.lattice", "ctx");
             IdealLattice::enumerate(&prepared.dp_graph, self.ideal_cap)
                 .map_err(PlaceError::TooManyIdeals)
         })
@@ -309,6 +313,7 @@ impl ProblemCtx {
     pub fn lin_lattice(&self) -> Result<&IdealLattice, PlaceError> {
         Self::cached(&self.lin_lattice, || {
             let prepared = self.prepared()?;
+            let _span = crate::obs::span_cat("ctx.lin_lattice", "ctx");
             let order = topo::dfs_linearization(&prepared.dp_graph);
             Ok(IdealLattice::from_prefixes(prepared.dp_graph.n(), &order))
         })
@@ -327,6 +332,7 @@ impl ProblemCtx {
     pub fn dp_reach(&self) -> Result<&BitMatrix, PlaceError> {
         Self::cached(&self.dp_reach, || {
             self.dp_order()?; // DAG guard
+            let _span = crate::obs::span_cat("ctx.dp_reach", "ctx");
             Ok(topo::reachability_matrix(&self.prepared()?.dp_graph))
         })
     }
@@ -335,6 +341,7 @@ impl ProblemCtx {
     pub fn dp_co_reach(&self) -> Result<&BitMatrix, PlaceError> {
         Self::cached(&self.dp_co_reach, || {
             self.dp_order()?;
+            let _span = crate::obs::span_cat("ctx.dp_co_reach", "ctx");
             Ok(topo::co_reachability_matrix(&self.prepared()?.dp_graph))
         })
     }
@@ -351,6 +358,7 @@ impl ProblemCtx {
     pub fn orig_reach(&self) -> Result<&BitMatrix, PlaceError> {
         Self::cached(&self.orig_reach, || {
             self.orig_order()?;
+            let _span = crate::obs::span_cat("ctx.orig_reach", "ctx");
             Ok(topo::reachability_matrix(&self.graph))
         })
     }
@@ -359,6 +367,7 @@ impl ProblemCtx {
     pub fn orig_co_reach(&self) -> Result<&BitMatrix, PlaceError> {
         Self::cached(&self.orig_co_reach, || {
             self.orig_order()?;
+            let _span = crate::obs::span_cat("ctx.orig_co_reach", "ctx");
             Ok(topo::co_reachability_matrix(&self.graph))
         })
     }
@@ -371,6 +380,7 @@ impl ProblemCtx {
         Self::cached(&self.dp_solution, || {
             let prepared = self.prepared()?;
             let lattice = self.lattice()?;
+            let _span = crate::obs::span_cat("ctx.dp_solve", "ctx");
             dp::solve_on_lattice_req(
                 &prepared.dp_graph,
                 &self.request,
@@ -415,6 +425,7 @@ impl ProblemCtx {
         Self::cached(&self.dpl_solution, || {
             let prepared = self.prepared()?;
             let lattice = self.lin_lattice()?;
+            let _span = crate::obs::span_cat("ctx.dpl_solve", "ctx");
             dp::solve_on_lattice_req(
                 &prepared.dp_graph,
                 &self.request,

@@ -139,7 +139,20 @@ pub fn plan(
 ) -> Result<PlanResult, PlaceError> {
     let opts = SolveOpts { ip_budget, expert: w.expert, ..SolveOpts::default() };
     let ctx = ProblemCtx::from_request(w.graph.clone(), w.request());
-    alg.solver().solve(&ctx, &opts)
+    run_traced(&*alg.solver(), &ctx, &opts)
+}
+
+/// Run a solver under an obs span named after it (`solve.dp`,
+/// `solve.ip-contiguous`, …) so solver phases nest inside whatever span
+/// the caller has open (a `--profile` run, a serving re-plan). Inert when
+/// recording is off; never changes the call itself.
+fn run_traced(
+    s: &dyn Solver,
+    ctx: &ProblemCtx,
+    opts: &SolveOpts,
+) -> Result<PlanResult, PlaceError> {
+    let _span = crate::obs::span_cat(&format!("solve.{}", s.name()), "solver");
+    s.solve(ctx, opts)
 }
 
 /// One-shot planning of a [`PlanRequest`] (fleet + objective + algorithm
@@ -173,19 +186,19 @@ pub fn solve_request(
 ) -> Result<PlanResult, PlaceError> {
     match req.algorithm {
         AlgoChoice::Fixed(Algorithm::IpLatency) => {
-            IpLatencySolver { contiguous: req.contiguous }.solve(ctx, opts)
+            run_traced(&IpLatencySolver { contiguous: req.contiguous }, ctx, opts)
         }
-        AlgoChoice::Fixed(alg) => alg.solver().solve(ctx, opts),
+        AlgoChoice::Fixed(alg) => run_traced(&*alg.solver(), ctx, opts),
         AlgoChoice::Auto => match req.objective {
             Objective::Latency => {
-                IpLatencySolver { contiguous: req.contiguous }.solve(ctx, opts)
+                run_traced(&IpLatencySolver { contiguous: req.contiguous }, ctx, opts)
             }
             Objective::Throughput if !req.contiguous => {
-                Algorithm::IpNonContiguous.solver().solve(ctx, opts)
+                run_traced(&*Algorithm::IpNonContiguous.solver(), ctx, opts)
             }
-            Objective::Throughput => match Algorithm::Dp.solver().solve(ctx, opts) {
+            Objective::Throughput => match run_traced(&*Algorithm::Dp.solver(), ctx, opts) {
                 Err(PlaceError::TooManyIdeals(_)) => {
-                    Algorithm::Dpl.solver().solve(ctx, opts)
+                    run_traced(&*Algorithm::Dpl.solver(), ctx, opts)
                 }
                 r => r,
             },

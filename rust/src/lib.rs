@@ -54,6 +54,10 @@
 //!   (DESIGN.md §7).
 //! * [`pipeline`] — legacy uniform-scenario façade over the `simx` engine
 //!   (Figs. 2/5/7 schedules).
+//! * [`obs`] — the unified observability layer (DESIGN.md §10): RAII
+//!   spans, registered counters, fixed-bucket log2 histograms, and the
+//!   Chrome-trace / Prometheus / JSON exporters behind the `stats` CLI
+//!   subcommand and `--profile` trace files.
 //! * [`runtime`] + [`coordinator`] — PJRT stage executor and the pipelined
 //!   serving loop; [`coordinator::context`] is the shared per-problem
 //!   analysis cache every solver plugs into (the [`coordinator::context::Solver`]
@@ -65,6 +69,7 @@ pub mod algos;
 pub mod baselines;
 pub mod coordinator;
 pub mod graph;
+pub mod obs;
 pub mod pipeline;
 pub mod runtime;
 pub mod simx;

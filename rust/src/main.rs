@@ -12,7 +12,14 @@
 //! dnn-partition export <wl> <out.json>     # dump paper-format JSON
 //! dnn-partition partition-file <in.json> <alg>   # plan an external workload
 //! dnn-partition bench-traffic [--smoke]    # concurrent planning traffic bench
+//! dnn-partition stats                      # exercise the planner, print Prometheus metrics
 //! ```
+//!
+//! `partition`, `simulate` and `bench-traffic` accept
+//! `--profile FILE.trace.json`: record the run's solver/context spans
+//! (plus, for `simulate`, the virtual-time device/link Gantt lanes) and
+//! write a Chrome `trace_event` file loadable in Perfetto or
+//! `chrome://tracing` (DESIGN.md §10).
 //!
 //! Workload names: `bert3op`, `bert6op`, `bert12op`, `resnet50op`,
 //! `bert24`, `resnet50`, `inceptionv3`, `gnmt` — suffix `-train` for the
@@ -70,8 +77,9 @@
 //!   steady-state TPS, demonstrating whether re-planning pays.
 //! * `--schedule single-stream|pipelined|1f1b|gpipe` — override the
 //!   default policy (1F1B for training workloads, pipelined otherwise).
-//! * `--trace out.json` — dump the per-task/per-transfer trace, memory
-//!   peaks and stall diagnosis as JSON.
+//! * `--trace out.json` — dump the per-task/per-transfer trace (Chrome
+//!   `trace_event` format: per-device and per-link lanes, memory peaks
+//!   and stall diagnosis in the envelope metadata).
 //! * `--assert-improves` — exit non-zero unless the re-planned
 //!   time-per-sample strictly beats the degraded no-replan fallback
 //!   (the CI smoke contract).
@@ -94,6 +102,8 @@
 use dnn_partition::coordinator::context::SolveOpts;
 use dnn_partition::coordinator::placement::{AlgoChoice, Device, Fleet};
 use dnn_partition::coordinator::planner::{self, Algorithm};
+use dnn_partition::obs;
+use dnn_partition::simx::trace as simx_trace;
 use dnn_partition::pipeline::sim::Schedule;
 use dnn_partition::runtime::server::ServingPlanner;
 use dnn_partition::simx::chaos::{ChaosCampaign, ChaosConfig};
@@ -147,6 +157,7 @@ struct CliFlags {
     seed: Option<u64>,
     samples: Option<usize>,
     smoke: bool,
+    profile: Option<String>,
 }
 
 /// Strip `--NAME VALUE` / `--NAME=VALUE` flags out of the argument list,
@@ -183,6 +194,8 @@ fn extract_flags(args: &[String]) -> Result<(Vec<String>, CliFlags), String> {
             );
         } else if let Some(path) = valued("trace", &mut i)? {
             flags.trace = Some(path);
+        } else if let Some(path) = valued("profile", &mut i)? {
+            flags.profile = Some(path);
         } else if let Some(v) = valued("runs", &mut i)? {
             flags.runs =
                 Some(v.parse().map_err(|_| format!("bad --runs: '{v}' is not a count"))?);
@@ -251,6 +264,12 @@ fn run(raw_args: &[String]) -> i32 {
         eprintln!("--smoke is only valid with `bench-traffic`");
         return 2;
     }
+    if flags.profile.is_some()
+        && !matches!(cmd, Some("partition" | "simulate" | "bench-traffic"))
+    {
+        eprintln!("--profile is only valid with partition/simulate/bench-traffic");
+        return 2;
+    }
     if flags.fleet.is_some()
         && !matches!(
             cmd,
@@ -262,6 +281,15 @@ fn run(raw_args: &[String]) -> i32 {
         );
         return 2;
     }
+    // Profiling turns on span collection before the command runs; the
+    // trace file is assembled afterwards from the recorder's wall-time
+    // spans (pid 1) plus any virtual-time simx lanes the command
+    // collected (pid 2).
+    if flags.profile.is_some() {
+        obs::set_enabled(true);
+    }
+    let mut sim_events: Vec<obs::TraceEvent> = Vec::new();
+    let code = (|sim_events: &mut Vec<obs::TraceEvent>| -> i32 {
     match args.first().map(String::as_str) {
         Some("list") => {
             println!("{:<14} {:>6} {:>7} {:>3}  granularity  task", "workload", "nodes", "edges", "k");
@@ -456,6 +484,9 @@ fn run(raw_args: &[String]) -> i32 {
                         d.reason
                     );
                 }
+                if flags.profile.is_some() {
+                    sim_events.extend(simx_trace::decision_events(&out, 2, 0));
+                }
                 let json = monitor_to_json(&w, alg, schedule, &out);
                 match &flags.trace {
                     Some(path) => {
@@ -486,6 +517,10 @@ fn run(raw_args: &[String]) -> i32 {
                 &script,
                 &cfg,
             );
+            simx_trace::record_obs(&res);
+            if flags.profile.is_some() {
+                sim_events.extend(simx_trace::trace_events(&res, 2));
+            }
             println!(
                 "{} {:?} [{schedule}]: predicted TPS {:.2}, simulated steady-state {:.2} \
                  over {}/{} samples",
@@ -680,15 +715,91 @@ fn run(raw_args: &[String]) -> i32 {
             }
         }
         Some("bench-traffic") => run_bench_traffic(flags.smoke),
+        Some("stats") => run_stats(),
         _ => {
             eprintln!(
                 "usage: dnn-partition <list|partition|latency|simulate|chaos|export|\
-                 partition-file|bench-traffic> …\n\
+                 partition-file|bench-traffic|stats> …\n\
                  see `cargo doc` or README.md for details"
             );
             2
         }
     }
+    })(&mut sim_events);
+    if let Some(path) = &flags.profile {
+        match write_profile(path, &sim_events) {
+            Ok(()) => println!("profile written to {path}"),
+            Err(e) => {
+                eprintln!("{e}");
+                if code == 0 {
+                    return 1;
+                }
+            }
+        }
+    }
+    code
+}
+
+/// Assemble and write the `--profile` Chrome trace: recorder spans as
+/// wall-time lanes on pid 1, simx virtual-time lanes (if the command
+/// produced any) on pid 2.
+fn write_profile(path: &str, sim_events: &[obs::TraceEvent]) -> Result<(), String> {
+    obs::flush_thread();
+    let snap = obs::snapshot();
+    let mut events = obs::span_events(&snap, 1);
+    events.extend_from_slice(sim_events);
+    let json = obs::chrome_trace(&events, Vec::new());
+    std::fs::write(path, json.to_string_pretty())
+        .map_err(|e| format!("cannot write {path}: {e}"))
+}
+
+/// `stats`: run a representative planning/simulation exercise (context
+/// builds, cache hits and dedup, an IP search, a linked simulation) and
+/// print the obs registry in Prometheus text exposition format.
+fn run_stats() -> i32 {
+    use dnn_partition::coordinator::concurrent::ConcurrentService;
+    use dnn_partition::coordinator::placement::Scenario;
+    use dnn_partition::graph::{Node, OpGraph};
+
+    // a chain that provably splits across the three accelerators (the
+    // simx engine tests pin this shape), so every metric family below has
+    // non-trivial traffic: ctx builds, shard hit/miss, IP search, device
+    // utilization and cross-device link bytes
+    let mut g = OpGraph::new();
+    for i in 0..6 {
+        g.add_node(Node::new(format!("c{i}")).cpu(10.0).acc(1.0).mem(1.0).comm(0.5));
+    }
+    for i in 1..6 {
+        g.add_edge(i - 1, i);
+    }
+    let sc = Scenario::new(3, 1, f64::INFINITY);
+    let opts = SolveOpts { ip_budget: Duration::from_secs(2), ..SolveOpts::default() };
+    let svc = ConcurrentService::default();
+
+    // one miss, one hit (per-shard counters + plan latency histograms)
+    for _ in 0..2 {
+        if let Err(e) = svc.plan(&g, &sc, Algorithm::Dp, &opts) {
+            eprintln!("stats exercise failed: {e}");
+            return 1;
+        }
+    }
+    // an IP search on the same cached context (nodes, prunes, incumbents)
+    let ip = match svc.plan(&g, &sc, Algorithm::IpContiguous, &opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("stats exercise failed: {e}");
+            return 1;
+        }
+    };
+    // a linked simulation (device utilization, per-pair link bytes)
+    let req = sc.to_request();
+    let cfg = SimConfig { link_bandwidth: Some(1.0), ..SimConfig::default() };
+    let res =
+        simx_engine::simulate_req(&g, &req, &ip.placement, Schedule::Pipelined, 8, &cfg);
+    simx_trace::record_obs(&res);
+
+    print!("{}", obs::prometheus(&obs::snapshot()));
+    0
 }
 
 /// `bench-traffic [--smoke]`: hammer one shared
@@ -922,8 +1033,11 @@ fn monitor_to_json(
     ])
 }
 
-/// Serialize a simulation run (tasks, transfers, memory peaks, stall
-/// diagnosis) for `simulate --trace FILE`.
+/// Serialize a simulation run for `simulate --trace FILE` in Chrome
+/// `trace_event` format (one trace format across the CLI): tasks and
+/// transfers become per-device / per-link lanes with sample/piece/bytes
+/// detail in event `args`; run summary, memory peaks and stall diagnosis
+/// ride in the envelope metadata keys viewers ignore.
 fn trace_to_json(
     w: &Workload,
     alg: Algorithm,
@@ -931,54 +1045,31 @@ fn trace_to_json(
     req: &dnn_partition::prelude::PlanRequest,
     res: &SimxResult,
 ) -> Json {
-    let tasks: Vec<Json> = res
-        .trace
-        .iter()
-        .map(|&(s, j, bw, start, finish)| {
-            Json::obj(vec![
-                ("sample", Json::num(s as f64)),
-                ("piece", Json::num(j as f64)),
-                ("device", Json::str(res.pieces[j].real_device.to_string())),
-                ("backward", Json::Bool(bw)),
-                ("start", Json::num(start)),
-                ("finish", Json::num(finish)),
-            ])
-        })
-        .collect();
-    let transfers: Vec<Json> = res
-        .transfers
-        .iter()
-        .map(|&(s, from, to, start, finish)| {
-            Json::obj(vec![
-                ("sample", Json::num(s as f64)),
-                ("fromPiece", Json::num(from as f64)),
-                ("toPiece", Json::num(to as f64)),
-                ("start", Json::num(start)),
-                ("finish", Json::num(finish)),
-            ])
-        })
-        .collect();
-    Json::obj(vec![
-        ("workload", Json::str(w.name.clone())),
-        ("algorithm", Json::str(alg.name())),
-        ("schedule", Json::str(schedule.name())),
-        ("fleet", Json::str(req.fleet.to_string())),
-        ("steadyTps", Json::num(res.steady_tps)),
-        ("total", Json::num(res.total)),
-        ("completed", Json::num(res.completed as f64)),
-        ("injected", Json::num(res.injected as f64)),
-        ("eventsProcessed", Json::num(res.events_processed as f64)),
-        (
-            "stall",
-            match res.stall {
-                Some(s) => Json::str(s.to_string()),
-                None => Json::Null,
-            },
-        ),
-        ("memPeak", Json::Arr(res.mem_peak.iter().map(|&m| Json::num(m)).collect())),
-        ("tasks", Json::Arr(tasks)),
-        ("transfers", Json::Arr(transfers)),
-    ])
+    let num_or_null =
+        |v: f64| if v.is_finite() { Json::num(v) } else { Json::Null };
+    let events = simx_trace::trace_events(res, 2);
+    obs::chrome_trace(
+        &events,
+        vec![
+            ("workload", Json::str(w.name.clone())),
+            ("algorithm", Json::str(alg.name())),
+            ("schedule", Json::str(schedule.name())),
+            ("fleet", Json::str(req.fleet.to_string())),
+            ("steadyTps", num_or_null(res.steady_tps)),
+            ("total", num_or_null(res.total)),
+            ("completed", Json::num(res.completed as f64)),
+            ("injected", Json::num(res.injected as f64)),
+            ("eventsProcessed", Json::num(res.events_processed as f64)),
+            (
+                "stall",
+                match res.stall {
+                    Some(s) => Json::str(s.to_string()),
+                    None => Json::Null,
+                },
+            ),
+            ("memPeak", Json::Arr(res.mem_peak.iter().map(|&m| Json::num(m)).collect())),
+        ],
+    )
 }
 
 fn print_split(w: &Workload, p: &dnn_partition::prelude::Placement) {

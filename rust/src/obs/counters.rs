@@ -1,0 +1,130 @@
+//! The crate's cache-instrumentation counters, folded into obs (PR 9 —
+//! previously `util::counters`, which now re-exports this module so every
+//! `bump_*`/`ctx_builds` call site and test assertion is untouched).
+//!
+//! The [`crate::coordinator::context::ProblemCtx`] cache exists so that
+//! planning every algorithm of a scenario computes each expensive shared
+//! artifact at most once; these counters let tests assert that property
+//! directly on the real entry points instead of trusting the cache
+//! plumbing. They are thread-local (not global atomics) so concurrently
+//! running tests cannot pollute each other's deltas; the counted
+//! functions all run on the calling thread (the DP's layer workers never
+//! re-enter them).
+//!
+//! [`ctx_builds`] is the one exception: the single-flight dedup of
+//! [`crate::coordinator::concurrent::ConcurrentService`] promises at most
+//! one `ProblemCtx` construction per fingerprint *across* threads, which a
+//! thread-local counter cannot observe. It lives on the process-wide obs
+//! registry; tests that assert on its delta serialize themselves (see
+//! `rust/tests/concurrent_service.rs`).
+//!
+//! Every bump is mirrored into a registered [`crate::obs::Counter`]
+//! (`lattice_enumerations_total`, `reachability_builds_total`,
+//! `co_reachability_builds_total`, `ctx_builds_total`) so the `stats` CLI
+//! and the Prometheus exporter see process-wide totals, while the
+//! thread-local cells keep their exact per-thread semantics for tests.
+
+use std::cell::Cell;
+use std::sync::{Arc, OnceLock};
+
+use crate::obs::recorder::{counter, Counter};
+
+thread_local! {
+    static ENUMERATE_CALLS: Cell<u64> = const { Cell::new(0) };
+    static REACHABILITY_CALLS: Cell<u64> = const { Cell::new(0) };
+    static CO_REACHABILITY_CALLS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn enumerate_total() -> &'static Arc<Counter> {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| counter("lattice_enumerations_total"))
+}
+
+fn reachability_total() -> &'static Arc<Counter> {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| counter("reachability_builds_total"))
+}
+
+fn co_reachability_total() -> &'static Arc<Counter> {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| counter("co_reachability_builds_total"))
+}
+
+fn ctx_builds_total() -> &'static Arc<Counter> {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| counter("ctx_builds_total"))
+}
+
+/// Record one `IdealLattice::enumerate` invocation (called by `graph::ideals`).
+pub fn bump_enumerate() {
+    ENUMERATE_CALLS.with(|c| c.set(c.get() + 1));
+    enumerate_total().inc();
+}
+
+/// Record one `topo::reachability_matrix` invocation.
+pub fn bump_reachability() {
+    REACHABILITY_CALLS.with(|c| c.set(c.get() + 1));
+    reachability_total().inc();
+}
+
+/// Record one `topo::co_reachability_matrix` invocation.
+pub fn bump_co_reachability() {
+    CO_REACHABILITY_CALLS.with(|c| c.set(c.get() + 1));
+    co_reachability_total().inc();
+}
+
+/// Lattice enumerations performed by this thread so far.
+pub fn enumerate_calls() -> u64 {
+    ENUMERATE_CALLS.with(Cell::get)
+}
+
+/// Reachability-matrix builds performed by this thread so far.
+pub fn reachability_calls() -> u64 {
+    REACHABILITY_CALLS.with(Cell::get)
+}
+
+/// Co-reachability-matrix builds performed by this thread so far.
+pub fn co_reachability_calls() -> u64 {
+    CO_REACHABILITY_CALLS.with(Cell::get)
+}
+
+/// Record one `ProblemCtx` construction (called by
+/// `ProblemCtx::from_request_with_cap` — every constructor funnels there).
+pub fn bump_ctx_build() {
+    ctx_builds_total().inc();
+}
+
+/// `ProblemCtx` constructions performed process-wide so far.
+pub fn ctx_builds() -> u64 {
+    ctx_builds_total().get()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_increment_monotonically() {
+        let a = enumerate_calls();
+        bump_enumerate();
+        bump_enumerate();
+        assert_eq!(enumerate_calls(), a + 2);
+        let r = reachability_calls();
+        bump_reachability();
+        assert_eq!(reachability_calls(), r + 1);
+        let c = co_reachability_calls();
+        bump_co_reachability();
+        assert_eq!(co_reachability_calls(), c + 1);
+        let b = ctx_builds();
+        bump_ctx_build();
+        // ≥: other tests may build contexts concurrently (global counter)
+        assert!(ctx_builds() >= b + 1);
+    }
+
+    #[test]
+    fn bumps_mirror_into_registered_totals() {
+        let before = crate::obs::counter("lattice_enumerations_total").get();
+        bump_enumerate();
+        assert!(crate::obs::counter("lattice_enumerations_total").get() >= before + 1);
+    }
+}

@@ -1,0 +1,364 @@
+//! The three read-side surfaces of the recorder (DESIGN.md §10):
+//!
+//! 1. **Chrome `trace_event` JSON** — `{"traceEvents": [...]}` loadable in
+//!    Perfetto / `chrome://tracing`. Wall-clock spans become `"X"`
+//!    (complete) events nested by time on per-thread lanes; instants
+//!    become `"i"`; lane naming uses `"M"` metadata events. The same
+//!    [`TraceEvent`] vocabulary carries simx's *virtual-time* Gantt lanes
+//!    on a separate `pid`, so one file shows solver wall time next to the
+//!    simulated pipeline.
+//! 2. **Prometheus text exposition** — counters and histograms in the
+//!    standard `# TYPE` / `name{labels} value` format. A series name may
+//!    embed labels verbatim (`plan_shard_hits_total{shard="3"}`);
+//!    histogram buckets are sparse (only non-empty `le` bounds plus
+//!    `+Inf`), which scrapers accept and humans can read.
+//! 3. **Structured JSON snapshot** — the whole [`Snapshot`] as one `Json`
+//!    tree for programmatic diffing.
+
+use crate::obs::hist::Histogram;
+use crate::obs::recorder::Snapshot;
+use crate::util::json::Json;
+
+/// One Chrome `trace_event`. `ph` is the phase: `'X'` complete span,
+/// `'i'` instant, `'M'` metadata, `'C'` counter track.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: String,
+    pub cat: String,
+    pub ph: char,
+    /// Microseconds. Wall lanes use recorder time; simx lanes use
+    /// simulated time (1 cost unit = 1 ms = 1000 µs).
+    pub ts_us: f64,
+    /// Only meaningful for `'X'` events.
+    pub dur_us: f64,
+    pub pid: u32,
+    pub tid: u32,
+    pub args: Vec<(String, Json)>,
+}
+
+impl TraceEvent {
+    pub fn complete(
+        name: impl Into<String>,
+        cat: impl Into<String>,
+        ts_us: f64,
+        dur_us: f64,
+        pid: u32,
+        tid: u32,
+    ) -> TraceEvent {
+        TraceEvent {
+            name: name.into(),
+            cat: cat.into(),
+            ph: 'X',
+            ts_us,
+            dur_us,
+            pid,
+            tid,
+            args: Vec::new(),
+        }
+    }
+
+    pub fn instant(
+        name: impl Into<String>,
+        cat: impl Into<String>,
+        ts_us: f64,
+        pid: u32,
+        tid: u32,
+    ) -> TraceEvent {
+        TraceEvent {
+            name: name.into(),
+            cat: cat.into(),
+            ph: 'i',
+            ts_us,
+            dur_us: f64::NAN,
+            pid,
+            tid,
+            args: Vec::new(),
+        }
+    }
+
+    /// `"M"` metadata event; `kind` is `"thread_name"` / `"process_name"`.
+    pub fn meta(kind: &str, value: &str, pid: u32, tid: u32) -> TraceEvent {
+        TraceEvent {
+            name: kind.to_string(),
+            cat: "__metadata".to_string(),
+            ph: 'M',
+            ts_us: 0.0,
+            dur_us: f64::NAN,
+            pid,
+            tid,
+            args: vec![("name".to_string(), Json::str(value))],
+        }
+    }
+
+    pub fn arg(mut self, key: &str, val: Json) -> TraceEvent {
+        self.args.push((key.to_string(), val));
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("name", Json::str(self.name.clone())),
+            ("cat", Json::str(self.cat.clone())),
+            ("ph", Json::str(self.ph.to_string())),
+            ("ts", Json::num(self.ts_us)),
+            ("pid", Json::num(self.pid as f64)),
+            ("tid", Json::num(self.tid as f64)),
+        ];
+        if self.ph == 'X' {
+            fields.push(("dur", Json::num(if self.dur_us.is_nan() { 0.0 } else { self.dur_us })));
+        }
+        if self.ph == 'i' {
+            // scope "t": the instant belongs to its thread lane
+            fields.push(("s", Json::str("t")));
+        }
+        if !self.args.is_empty() {
+            fields.push((
+                "args",
+                Json::Obj(self.args.iter().map(|(k, v)| (k.clone(), v.clone())).collect()),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Assemble the standard envelope: `{"traceEvents": [...],
+/// "displayTimeUnit": "ms", <extra...>}`. `extra` carries run metadata
+/// (workload, algorithm, steady TPS, …) that viewers ignore.
+pub fn chrome_trace(events: &[TraceEvent], extra: Vec<(&str, Json)>) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("traceEvents", Json::Arr(events.iter().map(TraceEvent::to_json).collect())),
+        ("displayTimeUnit", Json::str("ms")),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+/// Convert the recorder's wall-clock spans/instants into trace events on
+/// `pid`, one lane per recording thread.
+pub fn span_events(snap: &Snapshot, pid: u32) -> Vec<TraceEvent> {
+    let mut out = Vec::with_capacity(snap.spans.len() + snap.threads.len() + 1);
+    out.push(TraceEvent::meta("process_name", "planner (wall time)", pid, 0));
+    for (tid, name) in &snap.threads {
+        out.push(TraceEvent::meta("thread_name", name, pid, *tid));
+    }
+    for rec in &snap.spans {
+        let mut ev = if rec.is_instant() {
+            TraceEvent::instant(rec.name.clone(), rec.cat, rec.ts_us, pid, rec.tid)
+        } else {
+            TraceEvent::complete(rec.name.clone(), rec.cat, rec.ts_us, rec.dur_us, pid, rec.tid)
+        };
+        ev.args = rec.args.clone();
+        out.push(ev);
+    }
+    out
+}
+
+/// `name` or `name{labels}` → `(sanitized_base, Some(labels))`.
+fn split_labels(name: &str) -> (String, Option<&str>) {
+    let (base, labels) = match name.find('{') {
+        Some(i) => (&name[..i], name[i..].strip_prefix('{').and_then(|r| r.strip_suffix('}'))),
+        None => (name, None),
+    };
+    let base: String = base
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    (base, labels)
+}
+
+fn prom_line(out: &mut String, base: &str, suffix: &str, labels: &[String], value: &str) {
+    out.push_str(base);
+    out.push_str(suffix);
+    if !labels.is_empty() {
+        out.push('{');
+        out.push_str(&labels.join(","));
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(value);
+    out.push('\n');
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render the snapshot in Prometheus text exposition format.
+pub fn prometheus(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    let mut last_type: Option<String> = None;
+    let mut type_line = |out: &mut String, base: &str, kind: &str| {
+        if last_type.as_deref() != Some(base) {
+            out.push_str(&format!("# TYPE {base} {kind}\n"));
+            last_type = Some(base.to_string());
+        }
+    };
+    for (name, val) in &snap.counters {
+        let (base, labels) = split_labels(name);
+        type_line(&mut out, &base, "counter");
+        let labels: Vec<String> = labels.iter().map(|l| l.to_string()).collect();
+        prom_line(&mut out, &base, "", &labels, &val.to_string());
+    }
+    for (name, h) in &snap.hists {
+        let (base, labels) = split_labels(name);
+        type_line(&mut out, &base, "histogram");
+        let series: Vec<String> = labels.iter().map(|l| l.to_string()).collect();
+        for (le, cum) in h.cumulative() {
+            let mut with_le = series.clone();
+            with_le.push(format!("le=\"{}\"", fmt_f64(le)));
+            prom_line(&mut out, &base, "_bucket", &with_le, &cum.to_string());
+        }
+        let mut inf = series.clone();
+        inf.push("le=\"+Inf\"".to_string());
+        prom_line(&mut out, &base, "_bucket", &inf, &h.count().to_string());
+        prom_line(&mut out, &base, "_sum", &series, &fmt_f64(h.sum()));
+        prom_line(&mut out, &base, "_count", &series, &h.count().to_string());
+    }
+    out
+}
+
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn hist_json(h: &Histogram) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count() as f64)),
+        ("sum", num_or_null(h.sum())),
+        ("min", num_or_null(h.min())),
+        ("max", num_or_null(h.max())),
+        ("mean", num_or_null(h.mean())),
+        ("p50", num_or_null(h.p(50.0))),
+        ("p90", num_or_null(h.p(90.0))),
+        ("p99", num_or_null(h.p(99.0))),
+        (
+            "buckets",
+            Json::Arr(
+                h.cumulative()
+                    .into_iter()
+                    .map(|(le, cum)| Json::Arr(vec![num_or_null(le), Json::num(cum as f64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The whole snapshot as one JSON tree (counters, histogram summaries,
+/// span log, thread-lane names).
+pub fn snapshot_json(snap: &Snapshot) -> Json {
+    let counters =
+        Json::Obj(snap.counters.iter().map(|(n, v)| (n.clone(), Json::num(*v as f64))).collect());
+    let hists = Json::Obj(snap.hists.iter().map(|(n, h)| (n.clone(), hist_json(h))).collect());
+    let spans = Json::Arr(
+        snap.spans
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("cat", Json::str(r.cat)),
+                    ("tid", Json::num(r.tid as f64)),
+                    ("depth", Json::num(r.depth as f64)),
+                    ("ts_us", Json::num(r.ts_us)),
+                    ("dur_us", if r.is_instant() { Json::Null } else { Json::num(r.dur_us) }),
+                    (
+                        "args",
+                        Json::Obj(r.args.iter().map(|(k, v)| (k.clone(), v.clone())).collect()),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    let threads = Json::Obj(
+        snap.threads.iter().map(|(tid, name)| (tid.to_string(), Json::str(name.clone()))).collect(),
+    );
+    Json::obj(vec![
+        ("counters", counters),
+        ("histograms", hists),
+        ("spans", spans),
+        ("threads", threads),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::SpanRecord;
+
+    fn sample_snapshot() -> Snapshot {
+        let mut h = Histogram::new();
+        for v in [1.0, 2.0, 300.0] {
+            h.record(v);
+        }
+        Snapshot {
+            counters: vec![
+                ("ctx_builds_total".to_string(), 3),
+                ("plan_shard_hits_total{shard=\"0\"}".to_string(), 7),
+            ],
+            hists: vec![("plan_latency_ms".to_string(), h)],
+            spans: vec![SpanRecord {
+                name: "ctx.lattice".to_string(),
+                cat: "ctx",
+                tid: 0,
+                depth: 1,
+                ts_us: 10.0,
+                dur_us: 25.0,
+                args: vec![("ideals".to_string(), Json::num(12.0))],
+            }],
+            threads: vec![(0, "main".to_string())],
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let text = prometheus(&sample_snapshot());
+        assert!(text.contains("# TYPE ctx_builds_total counter"));
+        assert!(text.contains("ctx_builds_total 3"));
+        assert!(text.contains("plan_shard_hits_total{shard=\"0\"} 7"));
+        assert!(text.contains("# TYPE plan_latency_ms histogram"));
+        assert!(text.contains("plan_latency_ms_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("plan_latency_ms_count 3"));
+        assert!(text.contains("plan_latency_ms_sum 303"));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_required_fields() {
+        let snap = sample_snapshot();
+        let events = span_events(&snap, 1);
+        let json = chrome_trace(&events, vec![("workload", Json::str("unit-test"))]);
+        let text = json.to_string_pretty();
+        let parsed = Json::parse(&text).expect("trace must be valid JSON");
+        let evs = parsed.get("traceEvents").as_arr().unwrap();
+        assert!(evs.len() >= 3, "process meta + thread meta + span");
+        let span = evs.iter().find(|e| e.get("ph").as_str() == Some("X")).unwrap();
+        assert_eq!(span.get("name").as_str(), Some("ctx.lattice"));
+        assert_eq!(span.get("dur").as_f64(), Some(25.0));
+        assert_eq!(span.get("args").get("ideals").as_f64(), Some(12.0));
+    }
+
+    #[test]
+    fn snapshot_json_has_no_nan_tokens() {
+        // an empty histogram has ±inf min/max and NaN quantiles — the JSON
+        // exporter must map them all to null, or the output won't parse
+        let snap = Snapshot {
+            counters: vec![],
+            hists: vec![("empty_ms".to_string(), Histogram::new())],
+            spans: vec![],
+            threads: vec![],
+        };
+        let text = snapshot_json(&snap).to_string_pretty();
+        let parsed = Json::parse(&text).expect("snapshot must be valid JSON");
+        assert_eq!(parsed.get("histograms").get("empty_ms").get("p50"), &Json::Null);
+    }
+}

@@ -1,0 +1,309 @@
+//! Fixed-bucket log2 histograms: bounded memory, mergeable, quantiles
+//! without retaining samples.
+//!
+//! The bucket scheme is shared by the plain [`Histogram`] (single-owner
+//! aggregation, e.g. inside a mutexed metrics struct) and the lock-free
+//! [`AtomicHistogram`] (the recorder registry's concurrent form): 64
+//! buckets laid out by the value's binary exponent.
+//!
+//! * bucket `0` — underflow: `v ≤ 0`, NaN, subnormals, and anything below
+//!   `2^MIN_EXP`;
+//! * bucket `i` (`1 ≤ i ≤ 62`) — `2^(MIN_EXP+i-1) ≤ v < 2^(MIN_EXP+i)`;
+//! * bucket `63` — overflow: everything at or above `2^(MIN_EXP+62)`,
+//!   including `+∞`.
+//!
+//! With `MIN_EXP = -20` the covered range is ≈ `9.5e-7 .. 4.4e12`, which
+//! spans sub-microsecond spans, multi-hour latencies in milliseconds, and
+//! terabyte transfer counts in one shape. A quantile estimate is the
+//! bucket's upper bound clamped to the observed `[min, max]`, so the
+//! relative error is at most one bucket (2×) and exact when all samples
+//! share a bucket. Merging adds per-bucket counts — histograms recorded on
+//! different threads or machines combine losslessly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets (one underflow + 62 log2 + one overflow).
+pub const BUCKETS: usize = 64;
+
+/// Exponent of the first finite bucket's lower bound: bucket 1 starts at
+/// `2^MIN_EXP`.
+pub const MIN_EXP: i32 = -20;
+
+/// Bucket index for a sample (see the module docs for the layout).
+pub fn bucket_of(v: f64) -> usize {
+    if v.is_nan() || v <= 0.0 {
+        return 0;
+    }
+    let raw_exp = ((v.to_bits() >> 52) & 0x7ff) as i32;
+    if raw_exp == 0 {
+        return 0; // subnormal: far below 2^MIN_EXP
+    }
+    if raw_exp == 0x7ff {
+        return BUCKETS - 1; // +inf
+    }
+    let idx = (raw_exp - 1023) - MIN_EXP + 1;
+    idx.clamp(0, (BUCKETS - 1) as i32) as usize
+}
+
+/// Inclusive lower bound of bucket `i` (0 for the underflow bucket).
+pub fn bucket_lower(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        (2.0f64).powi(MIN_EXP + i as i32 - 1)
+    }
+}
+
+/// Exclusive upper bound of bucket `i` (`+∞` for the overflow bucket).
+pub fn bucket_upper(i: usize) -> f64 {
+    if i + 1 == BUCKETS {
+        f64::INFINITY
+    } else {
+        (2.0f64).powi(MIN_EXP + i as i32)
+    }
+}
+
+/// A mergeable fixed-memory log2 histogram. ~600 bytes regardless of how
+/// many samples it has absorbed — the bound that lets long serving runs
+/// keep per-stage latency distributions forever (DESIGN.md §10).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Absorb one sample.
+    pub fn record(&mut self, v: f64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Add another histogram's contents into this one. Bucket counts add,
+    /// so merging is commutative and (with exactly-representable sums)
+    /// associative — the property the obs tests pin.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Smallest sample seen (`+∞` when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest sample seen (`-∞` when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Raw count of bucket `i`.
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+
+    /// Quantile estimate for `q ∈ [0, 1]`: the upper bound of the bucket
+    /// holding the `⌈q·count⌉`-th sample, clamped to the observed
+    /// `[min, max]`. NaN when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for i in 0..BUCKETS {
+            seen += self.counts[i];
+            if seen >= target {
+                let rep = if i + 1 == BUCKETS { self.max } else { bucket_upper(i) };
+                return rep.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Percentile convenience: `p(99.0)` is `quantile(0.99)`.
+    pub fn p(&self, pct: f64) -> f64 {
+        self.quantile(pct / 100.0)
+    }
+
+    /// `(upper_bound, cumulative_count)` for every non-empty bucket, the
+    /// shape both text exporters consume.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for i in 0..BUCKETS {
+            if self.counts[i] > 0 {
+                cum += self.counts[i];
+                out.push((bucket_upper(i), cum));
+            }
+        }
+        out
+    }
+}
+
+/// The registry's concurrent histogram: identical buckets, all-atomic
+/// fields, `observe` from any thread without a lock. `sum`/`min`/`max`
+/// are f64 bit-patterns updated by CAS loops.
+pub struct AtomicHistogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> AtomicHistogram {
+        AtomicHistogram::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+
+    /// Absorb one sample (lock-free; relaxed ordering — totals are read
+    /// only at snapshot time, never used for synchronization).
+    pub fn observe(&self, v: f64) {
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        fold_f64(&self.sum_bits, v, |acc, v| acc + v);
+        fold_f64(&self.min_bits, v, f64::min);
+        fold_f64(&self.max_bits, v, f64::max);
+    }
+
+    /// Copy the current totals into a plain mergeable [`Histogram`].
+    /// Concurrent `observe`s may land between field reads; each snapshot
+    /// field is individually consistent, which is all the exporters need.
+    pub fn snapshot(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for (i, c) in self.counts.iter().enumerate() {
+            h.counts[i] = c.load(Ordering::Relaxed);
+        }
+        h.count = self.count.load(Ordering::Relaxed);
+        h.sum = f64::from_bits(self.sum_bits.load(Ordering::Relaxed));
+        h.min = f64::from_bits(self.min_bits.load(Ordering::Relaxed));
+        h.max = f64::from_bits(self.max_bits.load(Ordering::Relaxed));
+        h
+    }
+
+    /// Zero every field (used by `obs::reset` between CLI phases/tests).
+    pub fn clear(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_bits.store(0.0f64.to_bits(), Ordering::Relaxed);
+        self.min_bits.store(f64::INFINITY.to_bits(), Ordering::Relaxed);
+        self.max_bits.store(f64::NEG_INFINITY.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// CAS-loop update of an f64 stored as bits: `bits ← op(bits, v)`.
+fn fold_f64(bits: &AtomicU64, v: f64, op: impl Fn(f64, f64) -> f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let next = op(f64::from_bits(cur), v).to_bits();
+        match bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_exhaustive_and_ordered() {
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(-1.0), 0);
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(f64::INFINITY), BUCKETS - 1);
+        // every value lands in the bucket whose bounds contain it
+        for i in 1..BUCKETS - 1 {
+            let lo = bucket_lower(i);
+            assert_eq!(bucket_of(lo), i, "lower bound of bucket {i}");
+            assert_eq!(bucket_of(lo * 1.5), i, "interior of bucket {i}");
+            assert_eq!(bucket_of(bucket_upper(i)), i + 1, "upper bound is exclusive");
+        }
+    }
+
+    #[test]
+    fn atomic_matches_plain() {
+        let a = AtomicHistogram::new();
+        let mut h = Histogram::new();
+        for v in [0.5, 3.0, 3.0, 120.0, 1e9] {
+            a.observe(v);
+            h.record(v);
+        }
+        assert_eq!(a.snapshot(), h);
+        a.clear();
+        assert_eq!(a.snapshot().count(), 0);
+    }
+
+    #[test]
+    fn quantiles_are_clamped_to_observed_range() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(7.0);
+        }
+        // all samples equal ⇒ every quantile is exact
+        assert_eq!(h.quantile(0.5), 7.0);
+        assert_eq!(h.quantile(0.99), 7.0);
+        assert_eq!(h.p(50.0), 7.0);
+        assert!(Histogram::new().quantile(0.5).is_nan());
+    }
+}

@@ -1,0 +1,49 @@
+//! # obs — the unified observability layer (DESIGN.md §10)
+//!
+//! A zero-dependency telemetry core every subsystem emits into and every
+//! surface (CLI `stats`, `--profile` trace files, CI smoke checks, benches)
+//! reads back out of:
+//!
+//! * [`Span`] — RAII scoped timers with parent nesting, buffered
+//!   thread-locally and flushed to the process-wide recorder
+//!   ([`recorder`] documents the flush contract);
+//! * [`Counter`] — registered, always-live relaxed atomics;
+//! * [`Histogram`] / [`AtomicHistogram`] — fixed-bucket log2 histograms:
+//!   bounded memory, mergeable, p50/p90/p99 without retaining samples
+//!   ([`hist`] documents the bucket scheme);
+//! * three exporters ([`export`]): Chrome `trace_event` JSON (Perfetto —
+//!   solver phases as nested wall-time spans, simx compute/transfer tasks
+//!   as per-device virtual-time Gantt lanes), Prometheus text exposition,
+//!   and a structured JSON snapshot.
+//!
+//! What emits what:
+//!
+//! * `coordinator::context` — artifact-build spans (`ctx.prepared`,
+//!   `ctx.lattice`, `ctx.reach`, `ctx.dp`, …) and `ctx_builds_total`;
+//! * `algos::ip_throughput` / `ip_latency` — search telemetry: nodes
+//!   explored, prunes by reason, incumbent-update instants
+//!   (`ip.incumbent`) that make warm-start wins visible;
+//! * `coordinator::concurrent` — per-shard hit/miss/dedup counters and
+//!   plan-latency histograms;
+//! * `simx` — per-device busy/utilization and per-directed-pair link
+//!   transfer totals, plus virtual-time Gantt trace events; the
+//!   controller's re-plan decisions become trace instants;
+//! * `runtime::server` — per-stage service-time histograms (bounded,
+//!   replacing the unbounded sample vectors).
+//!
+//! Everything is cheap when idle: counters/histograms are single relaxed
+//! atomic ops, and span collection is off until [`set_enabled`]`(true)` —
+//! a disabled recorder's spans are inert guards. Recording is
+//! bitwise-invisible to solver results (pinned by `rust/tests/obs.rs`).
+
+pub mod counters;
+pub mod export;
+pub mod hist;
+pub mod recorder;
+
+pub use export::{chrome_trace, prometheus, snapshot_json, span_events, TraceEvent};
+pub use hist::{AtomicHistogram, Histogram};
+pub use recorder::{
+    counter, flush_thread, histogram, instant, instant_at, is_enabled, now_us, reset,
+    reset_events, set_enabled, snapshot, span, span_cat, Counter, Snapshot, Span, SpanRecord,
+};

@@ -1,0 +1,365 @@
+//! The process-wide recorder: RAII [`Span`]s buffered per thread,
+//! registered [`Counter`]s and [`AtomicHistogram`]s, and the coherent
+//! [`Snapshot`] the exporters read.
+//!
+//! ## Cost contract (DESIGN.md §10)
+//!
+//! * **Counters and histograms are always live.** They are plain relaxed
+//!   atomics with no allocation on the hot path; callers cache the `Arc`
+//!   handle once (`obs::counter(name)`) and bump it forever. The `stats`
+//!   CLI can therefore report cache/search/link totals without anyone
+//!   having opted into tracing.
+//! * **Spans and instants only exist while recording is enabled.** A
+//!   disabled recorder makes [`span`] return an inert guard — one relaxed
+//!   load, no clock read, no allocation — so instrumented hot paths cost
+//!   nothing in production solves (the obs test suite pins bitwise-equal
+//!   solver results with recording on vs off).
+//! * **Flush contract.** Finished spans accumulate in a thread-local
+//!   buffer and migrate to the global event log under one mutex lock when
+//!   the thread's outermost span closes, when the buffer hits
+//!   [`FLUSH_AT`] records, or when the thread exits (the thread-local's
+//!   `Drop` — this is what makes spans from `util::par`'s scoped workers
+//!   visible after `run_workers` returns). [`snapshot`] flushes the
+//!   calling thread, so a thread sees its own history; other threads'
+//!   *open* buffers become visible at their next flush point.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::obs::hist::{AtomicHistogram, Histogram};
+use crate::util::json::Json;
+
+/// Thread-local buffer size that forces an early flush.
+pub const FLUSH_AT: usize = 256;
+
+/// One finished span or instant, in recorder time (µs since the recorder
+/// was first touched). `dur_us` is NaN for instants.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub name: String,
+    /// Coarse category for trace viewers ("ctx", "solver", "ip", …).
+    pub cat: &'static str,
+    /// Dense per-thread lane id (assigned on a thread's first record).
+    pub tid: u32,
+    /// Number of enclosing spans open on the same thread at entry.
+    pub depth: u32,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub args: Vec<(String, Json)>,
+}
+
+impl SpanRecord {
+    pub fn is_instant(&self) -> bool {
+        self.dur_us.is_nan()
+    }
+}
+
+/// A monotonically increasing named total. Always live (see module docs);
+/// `get` is exact for asserting deltas in tests.
+pub struct Counter {
+    val: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.val.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.val.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.val.load(Ordering::Relaxed)
+    }
+
+    fn clear(&self) {
+        self.val.store(0, Ordering::Relaxed);
+    }
+}
+
+struct Recorder {
+    enabled: AtomicBool,
+    epoch: Instant,
+    events: Mutex<Vec<SpanRecord>>,
+    /// `(tid, thread name)` pairs, one per thread that ever recorded.
+    threads: Mutex<Vec<(u32, String)>>,
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    hists: Mutex<BTreeMap<String, Arc<AtomicHistogram>>>,
+}
+
+fn global() -> &'static Recorder {
+    static R: OnceLock<Recorder> = OnceLock::new();
+    R.get_or_init(|| Recorder {
+        enabled: AtomicBool::new(false),
+        epoch: Instant::now(),
+        events: Mutex::new(Vec::new()),
+        threads: Mutex::new(Vec::new()),
+        counters: Mutex::new(BTreeMap::new()),
+        hists: Mutex::new(BTreeMap::new()),
+    })
+}
+
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+struct ThreadBuf {
+    tid: u32,
+    depth: u32,
+    buf: Vec<SpanRecord>,
+}
+
+impl ThreadBuf {
+    fn new() -> ThreadBuf {
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        global().threads.lock().unwrap().push((tid, name));
+        ThreadBuf { tid, depth: 0, buf: Vec::new() }
+    }
+
+    fn flush(&mut self) {
+        if !self.buf.is_empty() {
+            global().events.lock().unwrap().append(&mut self.buf);
+        }
+    }
+}
+
+impl Drop for ThreadBuf {
+    // Thread exit is a flush point: scoped `util::par` workers hand their
+    // spans over before `run_workers` returns.
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadBuf> = RefCell::new(ThreadBuf::new());
+}
+
+/// Turn span/instant collection on or off (counters/histograms are always
+/// live). The CLI's `--profile` flips this on for the run.
+pub fn set_enabled(on: bool) {
+    global().enabled.store(on, Ordering::Relaxed);
+}
+
+pub fn is_enabled() -> bool {
+    global().enabled.load(Ordering::Relaxed)
+}
+
+struct SpanLive {
+    name: String,
+    cat: &'static str,
+    ts_us: f64,
+    begin: Instant,
+    depth: u32,
+    args: Vec<(String, Json)>,
+}
+
+/// RAII scoped timer: records a [`SpanRecord`] on drop. Inert (no clock
+/// read, no allocation) when recording is disabled at entry.
+#[must_use = "a Span records its duration on drop; bind it: let _span = obs::span(..)"]
+pub struct Span(Option<SpanLive>);
+
+impl Span {
+    /// Attach a key/value shown under the event's `args` in trace viewers.
+    pub fn arg(mut self, key: &str, val: Json) -> Span {
+        if let Some(live) = self.0.as_mut() {
+            live.args.push((key.to_string(), val));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(live) = self.0.take() else { return };
+        let dur_us = live.begin.elapsed().as_secs_f64() * 1e6;
+        // try_with: a span dropped during thread teardown (after the
+        // thread-local was destroyed) silently discards its record.
+        let _ = TLS.try_with(|tls| {
+            let mut tls = tls.borrow_mut();
+            tls.depth = tls.depth.saturating_sub(1);
+            let rec = SpanRecord {
+                name: live.name,
+                cat: live.cat,
+                tid: tls.tid,
+                depth: live.depth,
+                ts_us: live.ts_us,
+                dur_us,
+                args: live.args,
+            };
+            tls.buf.push(rec);
+            if tls.depth == 0 || tls.buf.len() >= FLUSH_AT {
+                tls.flush();
+            }
+        });
+    }
+}
+
+/// Open a span in the default category. See [`span_cat`].
+pub fn span(name: &str) -> Span {
+    span_cat(name, "span")
+}
+
+/// Open a span: times `name` from now until the guard drops, nested under
+/// whatever spans the calling thread already has open.
+pub fn span_cat(name: &str, cat: &'static str) -> Span {
+    if !is_enabled() {
+        return Span(None);
+    }
+    let begin = Instant::now();
+    let ts_us = begin.duration_since(global().epoch).as_secs_f64() * 1e6;
+    let depth = TLS
+        .try_with(|tls| {
+            let mut tls = tls.borrow_mut();
+            let d = tls.depth;
+            tls.depth += 1;
+            d
+        })
+        .unwrap_or(0);
+    Span(Some(SpanLive { name: name.to_string(), cat, ts_us, begin, depth, args: Vec::new() }))
+}
+
+/// Microseconds since the recorder epoch — the timestamp base every span
+/// and instant uses. Lets callers that buffered their own event times
+/// (e.g. the IP incumbent log) convert to recorder time for
+/// [`instant_at`].
+pub fn now_us() -> f64 {
+    global().epoch.elapsed().as_secs_f64() * 1e6
+}
+
+/// Record a zero-duration instant event (e.g. an IP incumbent update or a
+/// controller decision). No-op while recording is disabled.
+pub fn instant(name: &str, cat: &'static str, args: Vec<(String, Json)>) {
+    instant_at(name, cat, now_us(), args);
+}
+
+/// [`instant`] with an explicit recorder-time timestamp (µs since epoch),
+/// for events whose true time predates their emission.
+pub fn instant_at(name: &str, cat: &'static str, ts_us: f64, args: Vec<(String, Json)>) {
+    if !is_enabled() {
+        return;
+    }
+    let _ = TLS.try_with(|tls| {
+        let mut tls = tls.borrow_mut();
+        let rec = SpanRecord {
+            name: name.to_string(),
+            cat,
+            tid: tls.tid,
+            depth: tls.depth,
+            ts_us,
+            dur_us: f64::NAN,
+            args,
+        };
+        tls.buf.push(rec);
+        if tls.depth == 0 || tls.buf.len() >= FLUSH_AT {
+            tls.flush();
+        }
+    });
+}
+
+/// Get-or-create the named counter. Cache the handle — the lookup takes
+/// the registry lock, the handle itself is a lock-free atomic.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut m = global().counters.lock().unwrap();
+    m.entry(name.to_string())
+        .or_insert_with(|| Arc::new(Counter { val: AtomicU64::new(0) }))
+        .clone()
+}
+
+/// Get-or-create the named histogram (same caching advice as [`counter`]).
+pub fn histogram(name: &str) -> Arc<AtomicHistogram> {
+    let mut m = global().hists.lock().unwrap();
+    m.entry(name.to_string()).or_insert_with(|| Arc::new(AtomicHistogram::new())).clone()
+}
+
+/// Flush the calling thread's span buffer to the global log (spans from
+/// other live threads surface at *their* next flush point).
+pub fn flush_thread() {
+    let _ = TLS.try_with(|tls| tls.borrow_mut().flush());
+}
+
+/// A coherent copy of everything the recorder holds.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub hists: Vec<(String, Histogram)>,
+    pub spans: Vec<SpanRecord>,
+    /// `(tid, thread name)` for every thread that ever recorded a span.
+    pub threads: Vec<(u32, String)>,
+}
+
+impl Snapshot {
+    /// Value of a counter by exact name (0 when absent).
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    /// Histogram by exact name.
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+}
+
+/// Snapshot counters, histograms, and the event log (flushing the calling
+/// thread first).
+pub fn snapshot() -> Snapshot {
+    flush_thread();
+    let r = global();
+    let counters =
+        r.counters.lock().unwrap().iter().map(|(n, c)| (n.clone(), c.get())).collect();
+    let hists =
+        r.hists.lock().unwrap().iter().map(|(n, h)| (n.clone(), h.snapshot())).collect();
+    let spans = r.events.lock().unwrap().clone();
+    let threads = r.threads.lock().unwrap().clone();
+    Snapshot { counters, hists, spans, threads }
+}
+
+/// Drop all buffered span/instant events (counters/histograms keep their
+/// totals). Used between CLI phases that want separate trace files.
+pub fn reset_events() {
+    flush_thread();
+    global().events.lock().unwrap().clear();
+}
+
+/// Zero every counter and histogram and drop all events. Registered
+/// handles stay valid — they simply read 0 again.
+pub fn reset() {
+    reset_events();
+    let r = global();
+    for c in r.counters.lock().unwrap().values() {
+        c.clear();
+    }
+    for h in r.hists.lock().unwrap().values() {
+        h.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_register_once_and_accumulate() {
+        let a = counter("obs_recorder_test_total");
+        let b = counter("obs_recorder_test_total");
+        let before = a.get();
+        b.inc();
+        a.add(2);
+        assert_eq!(a.get(), before + 3, "both handles must hit the same cell");
+        assert!(snapshot().counter_value("obs_recorder_test_total") >= before + 3);
+    }
+
+    #[test]
+    fn histogram_handles_share_state() {
+        let h = histogram("obs_recorder_test_ms");
+        let before = h.snapshot().count();
+        histogram("obs_recorder_test_ms").observe(4.0);
+        assert_eq!(h.snapshot().count(), before + 1);
+    }
+}

@@ -523,7 +523,8 @@ impl HealthMonitor {
     }
 
     /// Feed per-stage service-time samples from the serving loop's
-    /// [`crate::runtime::server::Metrics`]: `stage_dev[s]` is stage `s`'s
+    /// [`crate::runtime::server::Metrics::recent_stage_samples`] window:
+    /// `stage_dev[s]` is stage `s`'s
     /// dense device index and `predicted_ms[s]` its cost-model service
     /// time. Samples are replayed in order at timestamp `t` (wall
     /// spacing within one metrics scrape is below the monitor's time

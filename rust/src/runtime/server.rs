@@ -9,6 +9,7 @@
 //! numbers the end-to-end example compares against the simulator's
 //! prediction.
 
+use crate::obs::Histogram;
 use std::collections::VecDeque;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -30,21 +31,48 @@ struct Batch {
     batch: usize,
 }
 
+/// How many per-stage service-time samples the recent-window ring keeps
+/// (the drift detector's input; the full distribution lives in the
+/// bounded histogram).
+pub const RECENT_STAGE_SAMPLES: usize = 64;
+
 /// Latency/throughput metrics collected at the pipeline tail.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub completed: usize,
     pub latencies_ms: Vec<f64>,
-    /// Per-stage service times (wall ms per batch execution, in
-    /// completion order) — the observed side of the drift detection
+    /// Per-stage service-time distributions (wall ms per batch
+    /// execution) as bounded [`Histogram`]s — a serving loop can run
+    /// forever without metrics memory growing (DESIGN.md §10).
+    pub stage_service: Vec<Histogram>,
+    /// Ring of the most recent service-time samples per stage (capped at
+    /// [`RECENT_STAGE_SAMPLES`]) — the observed side of the drift
+    /// detection
     /// [`crate::runtime::health::HealthMonitor::ingest_stage_samples`]
     /// runs against the cost model's predictions.
-    pub stage_service_ms: Vec<Vec<f64>>,
+    pub stage_recent_ms: Vec<VecDeque<f64>>,
     pub started: Option<Instant>,
     pub finished: Option<Instant>,
 }
 
 impl Metrics {
+    /// Absorb one stage service-time sample: histogram + recent ring.
+    pub fn record_stage(&mut self, stage: usize, ms: f64) {
+        self.stage_service[stage].record(ms);
+        let ring = &mut self.stage_recent_ms[stage];
+        if ring.len() == RECENT_STAGE_SAMPLES {
+            ring.pop_front();
+        }
+        ring.push_back(ms);
+    }
+
+    /// The recent-window samples per stage, in arrival order — the shape
+    /// [`crate::runtime::health::HealthMonitor::ingest_stage_samples`]
+    /// consumes.
+    pub fn recent_stage_samples(&self) -> Vec<Vec<f64>> {
+        self.stage_recent_ms.iter().map(|r| r.iter().copied().collect()).collect()
+    }
+
     /// The `p`-quantile of the request latencies (`0.0 ≤ p ≤ 1.0`;
     /// anything else — including NaN — returns `NaN` rather than
     /// clamping to a silently wrong answer). O(n) selection, no sort.
@@ -124,7 +152,11 @@ where
 {
     let metrics = Arc::new(Mutex::new(Metrics::default()));
     let num_stages = stage_factories.len();
-    metrics.lock().unwrap().stage_service_ms = vec![Vec::new(); num_stages];
+    {
+        let mut m = metrics.lock().unwrap();
+        m.stage_service = vec![Histogram::new(); num_stages];
+        m.stage_recent_ms = vec![VecDeque::new(); num_stages];
+    }
 
     // channels: batcher → s0 → s1 → … → tail
     let mut senders: Vec<SyncSender<Batch>> = Vec::new();
@@ -159,7 +191,8 @@ where
                 let started = Instant::now();
                 let out = f(batch.batch, batch.data);
                 let service_ms = started.elapsed().as_secs_f64() * 1e3;
-                stage_metrics.lock().unwrap().stage_service_ms[si].push(service_ms);
+                stage_metrics.lock().unwrap().record_stage(si, service_ms);
+                crate::obs::histogram("serve_stage_service_ms").observe(service_ms);
                 let fwd = Batch {
                     ids: batch.ids,
                     enqueued: batch.enqueued,
@@ -184,6 +217,7 @@ where
             }
             m.completed += batch.ids.len();
             m.finished = Some(now);
+            crate::obs::counter("serve_requests_total").add(batch.ids.len() as u64);
         }
     });
 
@@ -634,16 +668,37 @@ mod tests {
         let cfg = ServerConfig { max_batch: 4, input_elems: 1, ..Default::default() };
         let m = serve(reqs(8, 1), stages, &cfg);
         assert_eq!(m.completed, 8);
-        assert_eq!(m.stage_service_ms.len(), 2, "one sample vector per stage");
-        for (s, samples) in m.stage_service_ms.iter().enumerate() {
-            assert!(!samples.is_empty(), "stage {s} recorded no batches");
-            assert!(samples.iter().all(|&x| x >= 0.0));
+        assert_eq!(m.stage_service.len(), 2, "one histogram per stage");
+        assert_eq!(m.stage_recent_ms.len(), 2, "one recent ring per stage");
+        for (s, h) in m.stage_service.iter().enumerate() {
+            assert!(h.count() > 0, "stage {s} recorded no batches");
+            assert!(h.min() >= 0.0);
         }
-        // both stages saw the same batch count
-        assert_eq!(m.stage_service_ms[0].len(), m.stage_service_ms[1].len());
+        // both stages saw the same batch count; the ring mirrors it while
+        // under the cap
+        assert_eq!(m.stage_service[0].count(), m.stage_service[1].count());
+        let recent = m.recent_stage_samples();
+        assert_eq!(recent[0].len() as u64, m.stage_service[0].count());
         // the sleeping stage is measurably slower than the identity stage
-        let sum: [f64; 2] =
-            [m.stage_service_ms[0].iter().sum(), m.stage_service_ms[1].iter().sum()];
+        let sum = [m.stage_service[0].sum(), m.stage_service[1].sum()];
         assert!(sum[1] > sum[0], "slow stage must dominate: {sum:?}");
+    }
+
+    #[test]
+    fn recent_stage_ring_is_bounded() {
+        let mut m = Metrics {
+            stage_service: vec![Histogram::new()],
+            stage_recent_ms: vec![VecDeque::new()],
+            ..Default::default()
+        };
+        for i in 0..(RECENT_STAGE_SAMPLES + 10) {
+            m.record_stage(0, i as f64);
+        }
+        assert_eq!(m.stage_service[0].count() as usize, RECENT_STAGE_SAMPLES + 10);
+        let recent = m.recent_stage_samples();
+        assert_eq!(recent[0].len(), RECENT_STAGE_SAMPLES, "ring must stay capped");
+        // the ring keeps the newest samples
+        assert_eq!(recent[0][0], 10.0);
+        assert_eq!(*recent[0].last().unwrap(), (RECENT_STAGE_SAMPLES + 9) as f64);
     }
 }

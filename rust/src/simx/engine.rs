@@ -194,9 +194,9 @@ pub struct SimxResult {
     pub total: f64,
     /// Per-task `(sample, piece, is_backward, start, finish)`.
     pub trace: Vec<(usize, usize, bool, f64, f64)>,
-    /// Per-transfer `(sample, from_piece, to_piece, start, finish)` (empty
-    /// without [`SimConfig::link_bandwidth`]).
-    pub transfers: Vec<(usize, usize, usize, f64, f64)>,
+    /// Per-transfer `(sample, from_piece, to_piece, bytes, start, finish)`
+    /// (empty without [`SimConfig::link_bandwidth`]).
+    pub transfers: Vec<(usize, usize, usize, f64, f64, f64)>,
     pub pieces: Vec<Piece>,
     /// Samples injected (base stream + spikes).
     pub injected: usize,
@@ -620,7 +620,7 @@ pub fn simulate_with_events(
     let mut sample_done: Vec<f64> = Vec::new();
     let mut ready = ReadyQueues::new(nd, schedule);
     let mut trace: Vec<(usize, usize, bool, f64, f64)> = Vec::new();
-    let mut transfers: Vec<(usize, usize, usize, f64, f64)> = Vec::new();
+    let mut transfers: Vec<(usize, usize, usize, f64, f64, f64)> = Vec::new();
     let mut link_free: BTreeMap<(usize, usize), f64> = BTreeMap::new();
     // unfinished forward tasks per injection wave (GPipe barrier state)
     let mut fw_left_per_wave: Vec<usize> = Vec::new();
@@ -733,7 +733,7 @@ pub fn simulate_with_events(
                                     + req.fleet.pair_latency(d, piece_dev[b])
                                     + size * req.fleet.pair_slowdown(d, piece_dev[b]) / bw;
                                 link_free.insert(key, finish);
-                                transfers.push((sample, piece, b, start, finish));
+                                transfers.push((sample, piece, b, size, start, finish));
                                 push(
                                     &mut heap,
                                     &mut seq,

@@ -30,6 +30,10 @@
 //!   spike scripts fuzzed through [`controller::run_monitored`], with
 //!   liveness, hysteresis and near-oracle-throughput invariants checked
 //!   on every run.
+//! * [`trace`] — observability glue (DESIGN.md §10): engine runs become
+//!   Chrome-trace Gantt lanes in virtual time plus utilization/link
+//!   counters in the obs registry; controller decisions become trace
+//!   instants.
 //!
 //! The legacy [`crate::pipeline::sim`] API survives as a thin adapter
 //! over this engine (uniform-fleet results within ε of the frozen
@@ -42,6 +46,7 @@ pub mod controller;
 pub mod engine;
 pub mod event;
 pub mod loop_;
+pub mod trace;
 pub mod validate;
 
 pub use chaos::{ChaosCampaign, ChaosConfig, ChaosReport, RunReport};

@@ -1,0 +1,272 @@
+//! Observability glue for the simulation engine (DESIGN.md §10): turn a
+//! [`SimxResult`] into Chrome trace-event Gantt lanes and registry
+//! counters, and a [`MonitorOutcome`]'s re-plan decisions into trace
+//! instants.
+//!
+//! Simulated time is mapped as 1 cost unit = 1 ms = 1000 µs, on its own
+//! trace `pid` so virtual-time lanes sit next to (not interleaved with)
+//! the planner's wall-clock spans. Lanes are one per real device, then
+//! one per directed device pair that actually carried a transfer.
+
+use crate::coordinator::placement::Device;
+use crate::obs::TraceEvent;
+use crate::simx::controller::MonitorOutcome;
+use crate::simx::engine::{SimxResult, Stall};
+use crate::util::json::Json;
+
+/// Simulated cost units → trace microseconds (1 unit = 1 ms).
+const UNIT_US: f64 = 1000.0;
+
+/// Real devices with at least one piece, in dense order (lane order).
+fn lane_devices(res: &SimxResult) -> Vec<Device> {
+    let mut devices: Vec<Device> = res.pieces.iter().map(|p| p.real_device).collect();
+    devices.sort();
+    devices.dedup();
+    devices
+}
+
+/// Directed device pairs that carried at least one transfer, sorted.
+fn lane_links(res: &SimxResult) -> Vec<(Device, Device)> {
+    let mut links: Vec<(Device, Device)> = res
+        .transfers
+        .iter()
+        .map(|&(_, a, b, _, _, _)| (res.pieces[a].real_device, res.pieces[b].real_device))
+        .collect();
+    links.sort();
+    links.dedup();
+    links
+}
+
+/// Convert a simulation run into per-device Gantt lanes (`'X'` events in
+/// virtual time) plus per-directed-pair link lanes, all on `pid`.
+/// Task/transfer detail (sample, piece, bytes) rides in event `args`.
+pub fn trace_events(res: &SimxResult, pid: u32) -> Vec<TraceEvent> {
+    let devices = lane_devices(res);
+    let links = lane_links(res);
+    let lane_of = |d: Device| devices.iter().position(|&x| x == d).unwrap_or(0) as u32;
+    let link_lane_of = |a: Device, b: Device| {
+        (devices.len() + links.iter().position(|&x| x == (a, b)).unwrap_or(0)) as u32
+    };
+
+    let mut out = Vec::with_capacity(res.trace.len() + res.transfers.len() + devices.len() + 2);
+    out.push(TraceEvent::meta("process_name", "simx (virtual time)", pid, 0));
+    for &d in &devices {
+        out.push(TraceEvent::meta("thread_name", &d.to_string(), pid, lane_of(d)));
+    }
+    for &(a, b) in &links {
+        out.push(TraceEvent::meta(
+            "thread_name",
+            &format!("link {a}->{b}"),
+            pid,
+            link_lane_of(a, b),
+        ));
+    }
+    for &(s, j, is_bw, start, finish) in &res.trace {
+        let d = res.pieces[j].real_device;
+        let name = format!("s{s} {}", if is_bw { "bw" } else { "fw" });
+        out.push(
+            TraceEvent::complete(
+                name,
+                if is_bw { "simx.bw" } else { "simx.fw" },
+                start * UNIT_US,
+                (finish - start) * UNIT_US,
+                pid,
+                lane_of(d),
+            )
+            .arg("sample", Json::num(s as f64))
+            .arg("piece", Json::num(j as f64))
+            .arg("device", Json::str(d.to_string()))
+            .arg("backward", Json::Bool(is_bw)),
+        );
+    }
+    for &(s, a, b, bytes, start, finish) in &res.transfers {
+        let (da, db) = (res.pieces[a].real_device, res.pieces[b].real_device);
+        out.push(
+            TraceEvent::complete(
+                format!("s{s} {da}->{db}"),
+                "simx.xfer",
+                start * UNIT_US,
+                (finish - start) * UNIT_US,
+                pid,
+                link_lane_of(da, db),
+            )
+            .arg("sample", Json::num(s as f64))
+            .arg("fromPiece", Json::num(a as f64))
+            .arg("toPiece", Json::num(b as f64))
+            .arg("bytes", Json::num(bytes)),
+        );
+    }
+    out
+}
+
+/// Record a run's utilization and link statistics into the obs registry:
+/// per-device busy/idle totals (µs of virtual time) and a utilization
+/// histogram, per-directed-pair transfer counts / bytes / busy time,
+/// sample and event totals, and a stall counter by kind.
+pub fn record_obs(res: &SimxResult) {
+    let devices = lane_devices(res);
+    let makespan = res.total.max(0.0);
+    for &d in &devices {
+        let busy: f64 = res
+            .trace
+            .iter()
+            .filter(|&&(_, j, _, _, _)| res.pieces[j].real_device == d)
+            .map(|&(_, _, _, start, finish)| finish - start)
+            .sum();
+        let idle = (makespan - busy).max(0.0);
+        crate::obs::counter(&format!("simx_device_busy_us_total{{device=\"{d}\"}}"))
+            .add((busy * UNIT_US) as u64);
+        crate::obs::counter(&format!("simx_device_idle_us_total{{device=\"{d}\"}}"))
+            .add((idle * UNIT_US) as u64);
+        if makespan > 0.0 {
+            crate::obs::histogram("simx_device_utilization").observe(busy / makespan);
+        }
+    }
+    for &(a, b) in &lane_links(res) {
+        let (mut n, mut bytes, mut busy) = (0u64, 0.0_f64, 0.0_f64);
+        for &(_, fp, tp, sz, start, finish) in &res.transfers {
+            if res.pieces[fp].real_device == a && res.pieces[tp].real_device == b {
+                n += 1;
+                bytes += sz;
+                busy += finish - start;
+            }
+        }
+        crate::obs::counter(&format!("simx_link_transfers_total{{link=\"{a}->{b}\"}}")).add(n);
+        crate::obs::counter(&format!("simx_link_bytes_total{{link=\"{a}->{b}\"}}"))
+            .add(bytes as u64);
+        crate::obs::counter(&format!("simx_link_busy_us_total{{link=\"{a}->{b}\"}}"))
+            .add((busy * UNIT_US) as u64);
+    }
+    crate::obs::counter("simx_samples_injected_total").add(res.injected as u64);
+    crate::obs::counter("simx_samples_completed_total").add(res.completed as u64);
+    crate::obs::counter("simx_events_processed_total").add(res.events_processed as u64);
+    if let Some(stall) = res.stall {
+        let kind = match stall {
+            Stall::DeviceLost { .. } => "device_lost",
+            Stall::MemoryDeadlock { .. } => "memory_deadlock",
+        };
+        crate::obs::counter(&format!("simx_stalls_total{{kind=\"{kind}\"}}")).inc();
+    }
+}
+
+/// Convert a monitored run's controller decisions into `'i'` instants on
+/// a dedicated lane of `pid` (decision times are in the trace's virtual
+/// unit, same mapping as [`trace_events`]).
+pub fn decision_events(out: &MonitorOutcome, pid: u32, tid: u32) -> Vec<TraceEvent> {
+    let mut evs = Vec::with_capacity(out.decisions.len() + 1);
+    evs.push(TraceEvent::meta("thread_name", "controller", pid, tid));
+    for d in &out.decisions {
+        let name = if d.accepted {
+            format!("replan: {}", d.action)
+        } else {
+            format!("rejected: {}", d.action)
+        };
+        crate::obs::counter(&format!(
+            "controller_decisions_total{{accepted=\"{}\"}}",
+            d.accepted
+        ))
+        .inc();
+        evs.push(
+            TraceEvent::instant(name, "controller", d.t * UNIT_US, pid, tid)
+                .arg("trigger", Json::str(d.trigger.clone()))
+                .arg("action", Json::str(d.action.clone()))
+                .arg("accepted", Json::Bool(d.accepted))
+                .arg("reason", Json::str(d.reason.clone()))
+                .arg(
+                    "predictedBefore",
+                    if d.predicted_before.is_finite() {
+                        Json::num(d.predicted_before)
+                    } else {
+                        Json::Null
+                    },
+                )
+                .arg(
+                    "predictedAfter",
+                    if d.predicted_after.is_finite() {
+                        Json::num(d.predicted_after)
+                    } else {
+                        Json::Null
+                    },
+                )
+                .arg("swapsSoFar", Json::num(d.swaps_so_far as f64)),
+        );
+    }
+    evs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::dp;
+    use crate::coordinator::placement::Scenario;
+    use crate::graph::{Node, OpGraph};
+    use crate::simx::engine::{simulate_req, Schedule, SimConfig};
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new();
+        for i in 0..n {
+            g.add_node(Node::new(format!("c{i}")).cpu(10.0).acc(1.0).mem(1.0).comm(0.5));
+        }
+        for i in 1..n {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    #[test]
+    fn trace_events_cover_tasks_and_transfers() {
+        let g = chain(6);
+        let sc = Scenario::new(3, 1, f64::INFINITY);
+        let p = dp::solve(&g, &sc).unwrap();
+        let req = sc.to_request();
+        let cfg = SimConfig { link_bandwidth: Some(1.0), ..SimConfig::default() };
+        let res = simulate_req(&g, &req, &p, Schedule::Pipelined, 8, &cfg);
+        assert!(!res.transfers.is_empty());
+        let evs = trace_events(&res, 2);
+        let tasks =
+            evs.iter().filter(|e| e.cat == "simx.fw" || e.cat == "simx.bw").count();
+        let xfers = evs.iter().filter(|e| e.cat == "simx.xfer").count();
+        assert_eq!(tasks, res.trace.len());
+        assert_eq!(xfers, res.transfers.len());
+        // transfers carry their byte size in args
+        let xfer = evs.iter().find(|e| e.cat == "simx.xfer").unwrap();
+        assert!(xfer.args.iter().any(|(k, _)| k == "bytes"));
+        // every event sits on a named lane
+        let lanes: std::collections::BTreeSet<u32> = evs
+            .iter()
+            .filter(|e| e.ph == 'M' && e.name == "thread_name")
+            .map(|e| e.tid)
+            .collect();
+        assert!(evs.iter().filter(|e| e.ph != 'M').all(|e| lanes.contains(&e.tid)));
+    }
+
+    #[test]
+    fn record_obs_accumulates_device_and_link_series() {
+        let g = chain(6);
+        let sc = Scenario::new(3, 1, f64::INFINITY);
+        let p = dp::solve(&g, &sc).unwrap();
+        let req = sc.to_request();
+        let cfg = SimConfig { link_bandwidth: Some(1.0), ..SimConfig::default() };
+        let res = simulate_req(&g, &req, &p, Schedule::Pipelined, 8, &cfg);
+        let busy_before =
+            crate::obs::counter("simx_device_busy_us_total{device=\"acc0\"}").get();
+        let injected_before = crate::obs::counter("simx_samples_injected_total").get();
+        record_obs(&res);
+        assert!(
+            crate::obs::counter("simx_device_busy_us_total{device=\"acc0\"}").get()
+                > busy_before
+        );
+        assert_eq!(
+            crate::obs::counter("simx_samples_injected_total").get(),
+            injected_before + res.injected as u64
+        );
+        let links = lane_links(&res);
+        assert!(!links.is_empty());
+        let (a, b) = links[0];
+        assert!(
+            crate::obs::counter(&format!("simx_link_transfers_total{{link=\"{a}->{b}\"}}"))
+                .get()
+                > 0
+        );
+    }
+}

@@ -1,93 +1,12 @@
-//! Thread-local instrumentation counters for the expensive shared analysis
-//! passes (ideal-lattice enumeration, reachability matrices), plus one
-//! process-wide counter for context construction.
-//!
-//! The [`crate::coordinator::context::ProblemCtx`] cache exists so that
-//! planning every algorithm of a scenario computes each of these artifacts
-//! at most once; these counters let tests assert that property directly on
-//! the real entry points instead of trusting the cache plumbing. They are
-//! thread-local (not global atomics) so concurrently running tests cannot
-//! pollute each other's deltas; the counted functions all run on the
-//! calling thread (the DP's layer workers never re-enter them).
-//!
-//! [`ctx_builds`] is the one exception: the single-flight dedup of
-//! [`crate::coordinator::concurrent::ConcurrentService`] promises at most
-//! one `ProblemCtx` construction per fingerprint *across* threads, which a
-//! thread-local counter cannot observe. It is a process-wide atomic;
-//! tests that assert on its delta serialize themselves (see
-//! `rust/tests/concurrent_service.rs`).
+//! Compatibility re-export: the instrumentation counters moved to
+//! [`crate::obs::counters`] when the unified observability layer landed
+//! (PR 9, DESIGN.md §10). The `bump_*` / `*_calls` / [`ctx_builds`]
+//! names are unchanged, so every call site and test assertion written
+//! against `util::counters` keeps working; the obs module additionally
+//! mirrors each bump into a registered process-wide
+//! [`crate::obs::Counter`] for the `stats` CLI and Prometheus export.
 
-use std::cell::Cell;
-use std::sync::atomic::{AtomicU64, Ordering};
-
-thread_local! {
-    static ENUMERATE_CALLS: Cell<u64> = const { Cell::new(0) };
-    static REACHABILITY_CALLS: Cell<u64> = const { Cell::new(0) };
-    static CO_REACHABILITY_CALLS: Cell<u64> = const { Cell::new(0) };
-}
-
-/// Record one `IdealLattice::enumerate` invocation (called by `graph::ideals`).
-pub fn bump_enumerate() {
-    ENUMERATE_CALLS.with(|c| c.set(c.get() + 1));
-}
-
-/// Record one `topo::reachability_matrix` invocation.
-pub fn bump_reachability() {
-    REACHABILITY_CALLS.with(|c| c.set(c.get() + 1));
-}
-
-/// Record one `topo::co_reachability_matrix` invocation.
-pub fn bump_co_reachability() {
-    CO_REACHABILITY_CALLS.with(|c| c.set(c.get() + 1));
-}
-
-/// Lattice enumerations performed by this thread so far.
-pub fn enumerate_calls() -> u64 {
-    ENUMERATE_CALLS.with(Cell::get)
-}
-
-/// Reachability-matrix builds performed by this thread so far.
-pub fn reachability_calls() -> u64 {
-    REACHABILITY_CALLS.with(Cell::get)
-}
-
-/// Co-reachability-matrix builds performed by this thread so far.
-pub fn co_reachability_calls() -> u64 {
-    CO_REACHABILITY_CALLS.with(Cell::get)
-}
-
-static CTX_BUILDS: AtomicU64 = AtomicU64::new(0);
-
-/// Record one `ProblemCtx` construction (called by
-/// `ProblemCtx::from_request_with_cap` — every constructor funnels there).
-pub fn bump_ctx_build() {
-    CTX_BUILDS.fetch_add(1, Ordering::Relaxed);
-}
-
-/// `ProblemCtx` constructions performed process-wide so far.
-pub fn ctx_builds() -> u64 {
-    CTX_BUILDS.load(Ordering::Relaxed)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn counters_increment_monotonically() {
-        let a = enumerate_calls();
-        bump_enumerate();
-        bump_enumerate();
-        assert_eq!(enumerate_calls(), a + 2);
-        let r = reachability_calls();
-        bump_reachability();
-        assert_eq!(reachability_calls(), r + 1);
-        let c = co_reachability_calls();
-        bump_co_reachability();
-        assert_eq!(co_reachability_calls(), c + 1);
-        let b = ctx_builds();
-        bump_ctx_build();
-        // ≥: other tests may build contexts concurrently (global atomic)
-        assert!(ctx_builds() >= b + 1);
-    }
-}
+pub use crate::obs::counters::{
+    bump_co_reachability, bump_ctx_build, bump_enumerate, bump_reachability,
+    co_reachability_calls, ctx_builds, enumerate_calls, reachability_calls,
+};

@@ -1,0 +1,210 @@
+//! PR-9 observability guarantees: the log2 histogram's bucket layout and
+//! merge algebra, the recorder's flush contract across `util::par` scoped
+//! workers, the disabled recorder's no-op promise, and — the load-bearing
+//! one — that recording is *bitwise invisible* to every registered
+//! solver's results.
+//!
+//! The recorder is process-global and `cargo test` runs tests on parallel
+//! threads, so every test that touches `set_enabled` serializes on
+//! [`OBS_LOCK`], uses unique span/counter names, and asserts deltas
+//! rather than absolute registry values.
+
+use dnn_partition::baselines::expert::ExpertStyle;
+use dnn_partition::coordinator::context::{ProblemCtx, SolveOpts, Solver};
+use dnn_partition::coordinator::placement::Scenario;
+use dnn_partition::coordinator::planner::Algorithm;
+use dnn_partition::obs;
+use dnn_partition::obs::hist::{bucket_lower, bucket_upper, BUCKETS};
+use dnn_partition::obs::Histogram;
+use dnn_partition::util::proptest::random_dag;
+use dnn_partition::util::rng::Rng;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Serializes tests that flip the global `set_enabled` flag.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_lock() -> std::sync::MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[test]
+fn histogram_bucket_boundaries() {
+    let mut h = Histogram::new();
+    // degenerate samples all land in the underflow bucket
+    for v in [f64::NAN, -3.0, 0.0, 1e-300] {
+        h.record(v);
+    }
+    assert_eq!(h.bucket_count(0), 4);
+    // a bucket's inclusive lower bound stays inside it; its exclusive
+    // upper bound is the next bucket's lower bound
+    let mut h = Histogram::new();
+    for i in 1..BUCKETS - 1 {
+        h.record(bucket_lower(i));
+    }
+    for i in 1..BUCKETS - 1 {
+        assert_eq!(h.bucket_count(i), 1, "lower bound of bucket {i} must stay in it");
+        assert_eq!(bucket_upper(i), bucket_lower(i + 1), "buckets must tile the range");
+    }
+    // +inf overflows; the overflow bucket still feeds count/min/max
+    let mut h = Histogram::new();
+    h.record(f64::INFINITY);
+    assert_eq!(h.bucket_count(BUCKETS - 1), 1);
+    assert_eq!(h.count(), 1);
+}
+
+#[test]
+fn histogram_merge_is_associative() {
+    // samples are small integers and powers of two, so the f64 sums are
+    // exact and merge order cannot perturb them — `PartialEq` compares
+    // counts, sum, min, and max bitwise-equal here
+    let mut parts = Vec::new();
+    for (lo, hi) in [(1u64, 40), (41, 90), (91, 200)] {
+        let mut h = Histogram::new();
+        for v in lo..=hi {
+            h.record(v as f64);
+        }
+        parts.push(h);
+    }
+    // (a ⊕ b) ⊕ c
+    let mut left = parts[0].clone();
+    left.merge(&parts[1]);
+    left.merge(&parts[2]);
+    // a ⊕ (b ⊕ c)
+    let mut bc = parts[1].clone();
+    bc.merge(&parts[2]);
+    let mut right = parts[0].clone();
+    right.merge(&bc);
+    assert_eq!(left, right, "merge must be associative");
+    // and both equal recording every sample into one histogram
+    let mut direct = Histogram::new();
+    for v in 1..=200u64 {
+        direct.record(v as f64);
+    }
+    assert_eq!(left, direct, "merge must equal direct recording");
+    assert_eq!(left.count(), 200);
+    assert_eq!(left.sum(), (1..=200u64).sum::<u64>() as f64);
+}
+
+#[test]
+fn spans_nest_across_par_worker_threads() {
+    let _guard = obs_lock();
+    obs::set_enabled(true);
+    let mut states: Vec<usize> = (0..3).collect();
+    dnn_partition::util::par::run_workers(&mut states, |t, _s| {
+        let _outer = obs::span_cat(&format!("obs_test_outer_{t}"), "obs_test");
+        let _inner = obs::span_cat(&format!("obs_test_inner_{t}"), "obs_test");
+    });
+    obs::set_enabled(false);
+    // worker threads exited inside run_workers, so their thread-local
+    // buffers have flushed: all six spans must already be visible here
+    let snap = obs::snapshot();
+    let find = |name: &str| {
+        snap.spans
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("span {name} missing from snapshot"))
+    };
+    let mut tids = Vec::new();
+    for t in 0..3 {
+        let outer = find(&format!("obs_test_outer_{t}"));
+        let inner = find(&format!("obs_test_inner_{t}"));
+        assert_eq!(inner.tid, outer.tid, "worker {t}: nested spans share a lane");
+        assert_eq!(
+            inner.depth,
+            outer.depth + 1,
+            "worker {t}: inner span must nest one level deeper"
+        );
+        assert!(
+            inner.ts_us >= outer.ts_us
+                && inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us + 1.0,
+            "worker {t}: inner span must sit inside its parent's interval"
+        );
+        tids.push(outer.tid);
+    }
+    tids.sort_unstable();
+    tids.dedup();
+    assert_eq!(tids.len(), 3, "three scoped workers must land on three distinct lanes");
+    // every recording thread has a registered name
+    for &tid in &tids {
+        assert!(
+            snap.threads.iter().any(|(t, _)| *t == tid),
+            "tid {tid} missing from thread registry"
+        );
+    }
+}
+
+#[test]
+fn disabled_recorder_records_no_spans() {
+    let _guard = obs_lock();
+    obs::set_enabled(false);
+    {
+        let _span = obs::span("obs_test_disabled_span").arg(
+            "ignored",
+            dnn_partition::util::json::Json::Bool(true),
+        );
+        obs::instant("obs_test_disabled_instant", "obs_test", Vec::new());
+    }
+    obs::flush_thread();
+    let snap = obs::snapshot();
+    assert!(
+        !snap.spans.iter().any(|s| s.name.starts_with("obs_test_disabled")),
+        "a disabled recorder must not collect spans or instants"
+    );
+    // counters stay live regardless of the span switch
+    let before = obs::counter("obs_test_disabled_total").get();
+    obs::counter("obs_test_disabled_total").inc();
+    assert_eq!(obs::counter("obs_test_disabled_total").get(), before + 1);
+}
+
+fn exact_opts() -> SolveOpts {
+    SolveOpts {
+        ip_budget: Duration::from_secs(10),
+        // gap 0 ⇒ the IPs run to proven optimality on these small graphs,
+        // so results depend only on the search — not on where a budget cut
+        // happens to land
+        gap_target: 0.0,
+        expert: Some(ExpertStyle::EqualStripes),
+        ..SolveOpts::default()
+    }
+}
+
+#[test]
+fn every_solver_bitwise_identical_recording_on_vs_off() {
+    let _guard = obs_lock();
+    let mut rng = Rng::new(0x0B5);
+    let opts = exact_opts();
+    for case in 0..2 {
+        let g = random_dag(&mut rng, 8, 0.3);
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        for alg in Algorithm::ALL {
+            obs::set_enabled(false);
+            let off_ctx = ProblemCtx::new(g.clone(), sc.clone());
+            let off = alg
+                .solver()
+                .solve(&off_ctx, &opts)
+                .unwrap_or_else(|e| panic!("case {case} {alg:?} recording off: {e}"));
+            obs::set_enabled(true);
+            let on_ctx = ProblemCtx::new(g.clone(), sc.clone());
+            let on = alg
+                .solver()
+                .solve(&on_ctx, &opts)
+                .unwrap_or_else(|e| panic!("case {case} {alg:?} recording on: {e}"));
+            obs::set_enabled(false);
+            assert_eq!(
+                off.placement.assignment, on.placement.assignment,
+                "case {case} {alg:?}: recording changed the assignment"
+            );
+            assert_eq!(
+                off.placement.objective.to_bits(),
+                on.placement.objective.to_bits(),
+                "case {case} {alg:?}: objective not bitwise identical ({} vs {})",
+                off.placement.objective,
+                on.placement.objective
+            );
+        }
+    }
+    // drop the spans the recorded solves accumulated so later profiling
+    // phases (and other snapshots) start from a clean event log
+    obs::reset_events();
+}

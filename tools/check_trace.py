@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace_event JSON file emitted by the CLI.
+
+The CLI's ``--profile FILE`` (wall-clock solver spans + virtual-time simx
+lanes) and ``simulate --trace FILE`` (simx lanes only) both write the
+Chrome trace_event "JSON Object Format": a top-level object whose
+``traceEvents`` array holds ``X`` (complete), ``i`` (instant) and ``M``
+(metadata) events. This checker enforces the schema Perfetto / chrome://
+tracing actually need, so CI catches a malformed exporter before a human
+ever loads a trace.
+
+Usage:
+    check_trace.py FILE [--require-solver-spans] [--require-sim-lanes]
+
+Exit status 0 when the file validates (and all required content is
+present), 1 with a diagnostic on stderr otherwise. Stdlib only.
+"""
+
+import argparse
+import json
+import sys
+
+NUM = (int, float)
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_num(v):
+    # bool is an int subclass; a trace with ts=true is malformed
+    return isinstance(v, NUM) and not isinstance(v, bool)
+
+
+def check_event(i, e):
+    if not isinstance(e, dict):
+        fail(f"traceEvents[{i}] is not an object")
+    name = e.get("name")
+    if not isinstance(name, str) or not name:
+        fail(f"traceEvents[{i}] has no string 'name'")
+    ph = e.get("ph")
+    if not isinstance(ph, str) or len(ph) != 1:
+        fail(f"traceEvents[{i}] ({name!r}) has no one-char 'ph'")
+    for key in ("ts", "pid", "tid"):
+        if not is_num(e.get(key)):
+            fail(f"traceEvents[{i}] ({name!r}) has no numeric {key!r}")
+    if ph == "X" and not is_num(e.get("dur")):
+        fail(f"traceEvents[{i}] ({name!r}) is 'X' but has no numeric 'dur'")
+    if "args" in e and not isinstance(e["args"], dict):
+        fail(f"traceEvents[{i}] ({name!r}) has non-object 'args'")
+    if "cat" in e and not isinstance(e["cat"], str):
+        fail(f"traceEvents[{i}] ({name!r}) has non-string 'cat'")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace_event JSON file to validate")
+    ap.add_argument(
+        "--require-solver-spans",
+        action="store_true",
+        help="fail unless at least one 'X' event has cat == 'solver'",
+    )
+    ap.add_argument(
+        "--require-sim-lanes",
+        action="store_true",
+        help="fail unless at least one event has a cat starting with 'simx.'",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace, encoding="utf-8") as f:
+            doc = json.load(f)
+    except OSError as e:
+        fail(f"cannot read {args.trace}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{args.trace} is not valid JSON: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level must be a JSON object (trace_event Object Format)")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("top-level 'traceEvents' must be an array")
+    if not events:
+        fail("traceEvents is empty")
+
+    for i, e in enumerate(events):
+        check_event(i, e)
+
+    spans = sum(1 for e in events if e.get("ph") == "X")
+    instants = sum(1 for e in events if e.get("ph") == "i")
+    metas = sum(1 for e in events if e.get("ph") == "M")
+
+    if args.require_solver_spans and not any(
+        e.get("ph") == "X" and e.get("cat") == "solver" for e in events
+    ):
+        fail("no 'X' event with cat 'solver' (solver spans missing)")
+    if args.require_sim_lanes and not any(
+        str(e.get("cat", "")).startswith("simx.") for e in events
+    ):
+        fail("no event with cat 'simx.*' (simulation lanes missing)")
+
+    print(
+        f"check_trace: OK: {args.trace}: {len(events)} events "
+        f"({spans} spans, {instants} instants, {metas} metadata)"
+    )
+
+
+if __name__ == "__main__":
+    main()
