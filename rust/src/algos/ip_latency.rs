@@ -21,7 +21,7 @@
 //!   move polish on the exact latency objective.
 
 use super::{objective, PlaceError};
-use crate::coordinator::context::ProblemCtx;
+use crate::coordinator::context::{ProblemCtx, SolveBudget};
 use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::graph::OpGraph;
 use crate::solver::lp::{Lp, Sense};
@@ -41,6 +41,10 @@ pub struct LatencyIpOptions {
     pub polish: bool,
     /// Extra warm-start placements (e.g. from baselines).
     pub warm_starts: Vec<Placement>,
+    /// Cooperative cancellation: deadline clamp on `time_limit` and/or a
+    /// deterministic node cap. [`SolveBudget::UNLIMITED`] (the default) is
+    /// bitwise-invisible.
+    pub budget: SolveBudget,
 }
 
 impl Default for LatencyIpOptions {
@@ -51,6 +55,7 @@ impl Default for LatencyIpOptions {
             contiguous: true,
             polish: true,
             warm_starts: Vec::new(),
+            budget: SolveBudget::UNLIMITED,
         }
     }
 }
@@ -64,6 +69,9 @@ pub struct LatencyIpResult {
     pub nodes_explored: usize,
     pub elapsed: Duration,
     pub incumbent_at: Duration,
+    /// True when the caller's [`LatencyIpOptions::budget`] cut the search
+    /// short (the anytime signal).
+    pub truncated: bool,
 }
 
 /// Solve latency minimization. Device model: `Cpu(0)` is the pooled CPU
@@ -125,6 +133,7 @@ pub fn solve_ctx(
     search.run();
     search.flush_obs();
 
+    let truncated = search.budget_hit;
     let (obj, dense) = search.incumbent.clone().ok_or(PlaceError::NoIncumbent)?;
     let assignment: Vec<Device> = dense
         .iter()
@@ -140,6 +149,7 @@ pub fn solve_ctx(
         nodes_explored: search.nodes,
         elapsed: start.elapsed(),
         incumbent_at: search.incumbent_at,
+        truncated,
         placement,
     })
 }
@@ -190,7 +200,14 @@ struct LatSearch<'a> {
     nodes: usize,
     status: SolveStatus,
     start: Instant,
+    /// `start + time_limit` clamped by the budget's deadline.
     deadline: Instant,
+    /// `start + time_limit` alone (see `ip_throughput::Search`).
+    own_deadline: Instant,
+    /// Deterministic node cap from the budget (`u64::MAX` = none).
+    node_cap: u64,
+    /// Set when the budget (deadline or node cap) stopped the search.
+    budget_hit: bool,
     complete: bool,
     /// Search telemetry (see `ip_throughput::Search` — same scheme):
     /// plain hot-loop bumps, flushed to obs once per solve, never read by
@@ -253,7 +270,10 @@ impl<'a> LatSearch<'a> {
             acc_speed,
             acc_class,
             cpu_speed,
-            deadline: start + opts.time_limit,
+            deadline: opts.budget.clamp_deadline(start, opts.time_limit),
+            own_deadline: start + opts.time_limit,
+            node_cap: opts.budget.node_limit.unwrap_or(u64::MAX),
+            budget_hit: false,
             opts,
             reach,
             co_reach,
@@ -342,8 +362,18 @@ impl<'a> LatSearch<'a> {
 
     fn dfs(&mut self, pos: usize) {
         self.nodes += 1;
+        // node cap first (deterministic, one compare; never trips at the
+        // u64::MAX default), then the amortized wall-clock check
+        if self.nodes as u64 >= self.node_cap {
+            self.complete = false;
+            self.budget_hit = true;
+            return;
+        }
         if self.nodes % 2048 == 0 && Instant::now() > self.deadline {
             self.complete = false;
+            if self.deadline < self.own_deadline {
+                self.budget_hit = true;
+            }
             return;
         }
         if pos == self.order.len() {
@@ -498,7 +528,11 @@ impl<'a> LatSearch<'a> {
         let mut cur = dense;
         let mut cur_obj = obj;
         let mut improved = false;
-        let polish_deadline = Instant::now() + Duration::from_secs(5);
+        // own 5s cap, clamped by the caller's budget deadline
+        let mut polish_deadline = Instant::now() + Duration::from_secs(5);
+        if let Some(d) = self.opts.budget.deadline {
+            polish_deadline = polish_deadline.min(d);
+        }
         'outer: loop {
             let mut best: Option<(f64, usize, usize)> = None;
             for v in 0..self.g.n() {

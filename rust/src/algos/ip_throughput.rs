@@ -18,7 +18,7 @@
 
 use super::dp::DpError;
 use super::{objective, PlaceError};
-use crate::coordinator::context::ProblemCtx;
+use crate::coordinator::context::{ProblemCtx, SolveBudget};
 use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::graph::OpGraph;
 use crate::solver::lp::{Lp, Sense};
@@ -43,6 +43,11 @@ pub struct IpOptions {
     /// when strictly better than it, so seeding is monotone: the search
     /// never returns a worse objective than a cold run.
     pub warm_seed: Option<(f64, Vec<usize>)>,
+    /// Cooperative cancellation: an absolute deadline that clamps
+    /// `time_limit` and/or a deterministic cap on branch-and-bound nodes.
+    /// [`SolveBudget::UNLIMITED`] (the default) is bitwise-invisible — the
+    /// search takes exactly the pre-budget path.
+    pub budget: SolveBudget,
 }
 
 impl Default for IpOptions {
@@ -53,6 +58,7 @@ impl Default for IpOptions {
             contiguous: true,
             polish: true,
             warm_seed: None,
+            budget: SolveBudget::UNLIMITED,
         }
     }
 }
@@ -75,6 +81,10 @@ pub struct IpResult {
     /// [`IpOptions::warm_seed`]. (The placement's `objective` is re-scored
     /// on the original graph and may differ from this proxy value.)
     pub incumbent: (f64, Vec<usize>),
+    /// True when the caller's [`IpOptions::budget`] (deadline or node
+    /// limit) cut the search short — the anytime signal, distinct from the
+    /// engine's own `time_limit` expiring.
+    pub truncated: bool,
 }
 
 /// Solve the Fig.-6 IP with the specialized branch-and-bound.
@@ -140,7 +150,13 @@ pub fn solve_ctx(ctx: &ProblemCtx, opts: &IpOptions) -> Result<IpResult, PlaceEr
     search.run();
     search.flush_obs();
 
-    let (obj, dense) = search.incumbent.clone().ok_or(PlaceError::Infeasible)?;
+    let (obj, dense) = match search.incumbent.clone() {
+        Some(inc) => inc,
+        // a truncated empty search proved nothing — report the budget, not
+        // a (false) infeasibility claim
+        None if !search.complete => return Err(PlaceError::NoIncumbent),
+        None => return Err(PlaceError::Infeasible),
+    };
     let mut placement = prepared.expand_req(g, req, obj, &dense);
     placement.algorithm = if opts.contiguous {
         "IP (contiguous)".into()
@@ -156,6 +172,7 @@ pub fn solve_ctx(ctx: &ProblemCtx, opts: &IpOptions) -> Result<IpResult, PlaceEr
         elapsed: search.start.elapsed(),
         incumbent_at: search.incumbent_at,
         incumbent: (obj, dense),
+        truncated: search.budget_hit,
         placement,
     })
 }
@@ -220,7 +237,17 @@ struct Search<'a> {
     nodes: usize,
     status: SolveStatus,
     start: Instant,
+    /// Effective cutoff: `start + time_limit` clamped by the budget's
+    /// deadline (identical to the former `start + time_limit` when no
+    /// budget is set).
     deadline: Instant,
+    /// `start + time_limit` alone — `deadline < own_deadline` means the
+    /// caller's budget, not the engine's limit, is the binding cutoff.
+    own_deadline: Instant,
+    /// Deterministic node cap from the budget (`u64::MAX` = none).
+    node_cap: u64,
+    /// Set when the budget (deadline or node cap) stopped the search.
+    budget_hit: bool,
     complete: bool,
     /// Search telemetry (plain fields bumped in the hot loop, flushed to
     /// the obs registry once per solve — DESIGN.md §10). Never read by
@@ -277,7 +304,10 @@ impl<'a> Search<'a> {
             mem_cap,
             speed,
             class_of,
-            deadline: start + opts.time_limit,
+            deadline: opts.budget.clamp_deadline(start, opts.time_limit),
+            own_deadline: start + opts.time_limit,
+            node_cap: opts.budget.node_limit.unwrap_or(u64::MAX),
+            budget_hit: false,
             opts,
             reach,
             co_reach,
@@ -392,8 +422,18 @@ impl<'a> Search<'a> {
 
     fn dfs(&mut self, pos: usize) {
         self.nodes += 1;
+        // node cap first (deterministic, one compare; never trips at the
+        // u64::MAX default), then the amortized wall-clock check
+        if self.nodes as u64 >= self.node_cap {
+            self.complete = false;
+            self.budget_hit = true;
+            return;
+        }
         if self.nodes % 4096 == 0 && Instant::now() > self.deadline {
             self.complete = false;
+            if self.deadline < self.own_deadline {
+                self.budget_hit = true;
+            }
             return;
         }
         if pos == self.order.len() {
@@ -571,7 +611,12 @@ impl<'a> Search<'a> {
         let mut cur = dense;
         let mut cur_obj = obj;
         let mut improved_any = false;
-        let polish_deadline = Instant::now() + Duration::from_secs(5);
+        // own 5s cap, clamped by the caller's budget deadline (an expired
+        // budget makes this pass a no-op rather than a 5s overshoot)
+        let mut polish_deadline = Instant::now() + Duration::from_secs(5);
+        if let Some(d) = self.opts.budget.deadline {
+            polish_deadline = polish_deadline.min(d);
+        }
         'outer: loop {
             let mut best: Option<(f64, usize, usize)> = None;
             for v in 0..self.g.n() {

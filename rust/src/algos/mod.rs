@@ -42,6 +42,16 @@ pub enum PlaceError {
     /// The expert baseline was requested for a workload with no expert
     /// placement rule (operator-granularity graphs, §6).
     MissingExpertRule,
+    /// A solver panicked mid-solve. The planning service catches the unwind
+    /// at the registry boundary so one buggy solve fails one request — the
+    /// payload is the panic message, for diagnostics only (never matched
+    /// on).
+    SolverPanicked(String),
+    /// The service's admission controller shed this request: the concurrent
+    /// solve limit and its bounded wait queue were both full (or the
+    /// per-tenant in-flight cap was hit). Retry later; nothing about the
+    /// problem itself was proven.
+    Overloaded,
     /// Anything else (kept for forward compatibility of the `Solver` trait).
     Unsupported(String),
 }
@@ -56,6 +66,10 @@ impl std::fmt::Display for PlaceError {
             PlaceError::NotADag => write!(f, "graph is not a DAG after preprocessing"),
             PlaceError::NoIncumbent => write!(f, "no feasible placement found within budget"),
             PlaceError::MissingExpertRule => write!(f, "no expert rule for this workload"),
+            PlaceError::SolverPanicked(msg) => write!(f, "solver panicked: {msg}"),
+            PlaceError::Overloaded => {
+                write!(f, "planning service overloaded; request shed")
+            }
             PlaceError::Unsupported(s) => write!(f, "{s}"),
         }
     }

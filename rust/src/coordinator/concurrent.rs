@@ -5,7 +5,7 @@
 //! The single-threaded service serializes every tenant behind one `&mut
 //! self`; a production planner serves thousands of concurrent
 //! heterogeneous [`PlanRequest`]s. [`ConcurrentService`] takes planning to
-//! `&self` with three mechanisms, all on `std::sync` (the build stays
+//! `&self` with four mechanisms, all on `std::sync` (the build stays
 //! dependency-free):
 //!
 //! * **Fingerprint-sharded LRU.** Contexts are keyed by
@@ -22,7 +22,10 @@
 //!   its condvar and receive the builder's `Arc` — they never clone the
 //!   graph or recompute anything ([`ConcurrentService::dedup_waits`]
 //!   counts them). The builder publishes into the LRU *before* notifying,
-//!   so a waiter's wake always finds the value.
+//!   so a waiter's wake always finds the value. The published value is a
+//!   `Result`: if the build panics, the builder publishes the *error* and
+//!   every deduped waiter wakes with it — no request ever hangs on a dead
+//!   builder (DESIGN.md §11).
 //! * **Budget-keyed incumbent cache.** IP solves store their final
 //!   incumbent ([`WarmSeed`]) under `(fingerprint, warm_seed_key)` with
 //!   the budget that produced it; a repeat solve of the same problem and
@@ -34,6 +37,15 @@
 //!   LRU-resident fingerprints and are dropped on eviction and
 //!   [`ConcurrentService::clear`], so the cache is bounded by
 //!   `capacity × |keys|` and can never serve a stale problem.
+//! * **Fault containment and admission control.** Context builds and
+//!   solves run under an unwind envelope: a panic fails that one request
+//!   with [`PlaceError::SolverPanicked`] and leaves the service fully
+//!   operational. Shard locks recover from poisoning by evicting the
+//!   (rebuildable) cached state instead of propagating the panic. An
+//!   optional admission controller ([`ConcurrentService::with_admission`])
+//!   bounds concurrent solves with a bounded wait queue and a per-tenant
+//!   in-flight cap, shedding excess load as [`PlaceError::Overloaded`]
+//!   instead of letting queues grow without bound.
 
 use crate::algos::PlaceError;
 use crate::coordinator::context::{
@@ -45,9 +57,47 @@ use crate::graph::OpGraph;
 use crate::obs;
 use crate::workloads::Workload;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Where a fault-injection hook fires (chaos/test instrumentation): just
+/// before a context build or a solve, inside the service's unwind
+/// envelope. A hook that panics exercises exactly the recovery paths a
+/// buggy solver would.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// About to build a `ProblemCtx` (outside the shard lock).
+    ContextBuild,
+    /// About to run a solve for the given fingerprint.
+    Solve,
+}
+
+/// A process-wide fault-injection hook: `(point, fingerprint)`.
+pub type FaultHook = Arc<dyn Fn(FaultPoint, u64) + Send + Sync>;
+
+static FAULT_ARMED: AtomicBool = AtomicBool::new(false);
+static FAULT_HOOK: Mutex<Option<FaultHook>> = Mutex::new(None);
+
+/// Install (or with `None`, remove) the process-wide fault-injection
+/// hook. Test-only in spirit; when no hook is armed the per-solve cost is
+/// one relaxed atomic load.
+pub fn set_fault_hook(hook: Option<FaultHook>) {
+    let mut slot = FAULT_HOOK.lock().unwrap_or_else(|p| p.into_inner());
+    FAULT_ARMED.store(hook.is_some(), Ordering::Relaxed);
+    *slot = hook;
+}
+
+fn fire_fault(point: FaultPoint, fp: u64) {
+    if !FAULT_ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    let hook = FAULT_HOOK.lock().unwrap_or_else(|p| p.into_inner()).clone();
+    if let Some(h) = hook {
+        h(point, fp);
+    }
+}
 
 /// One shard's state: an LRU of contexts, the in-flight build registry,
 /// and the incumbent seeds of the resident fingerprints.
@@ -63,10 +113,32 @@ struct Shard {
     incumbents: Vec<((u64, u8), SeedEntry)>,
 }
 
+/// Lock a shard, recovering from poisoning: the cached entries and seeds
+/// are rebuildable derived state, so a panic that poisoned the lock costs
+/// us the shard's cache — never the service. In-flight registrations are
+/// kept (their builders publish a `Result` through their own unwind
+/// envelope, so waiters still wake).
+fn lock_shard(m: &Mutex<Shard>) -> MutexGuard<'_, Shard> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            m.clear_poison();
+            let mut guard = poisoned.into_inner();
+            guard.entries.clear();
+            guard.incumbents.clear();
+            obs::counter("plan_shard_poison_recoveries_total").inc();
+            guard
+        }
+    }
+}
+
 /// A context build in progress: waiters block on the condvar until the
-/// builder publishes the finished `Arc`.
+/// builder publishes the finished `Arc` — or, if the build panicked, the
+/// error. Publishing a `Result` (not a bare `Arc`) is what guarantees the
+/// "waiters always wake" invariant (DESIGN.md §11): every exit path of
+/// the builder, including unwinds, completes the flight.
 struct InFlight {
-    done: Mutex<Option<Arc<ProblemCtx>>>,
+    done: Mutex<Option<Result<Arc<ProblemCtx>, PlaceError>>>,
     cv: Condvar,
 }
 
@@ -75,18 +147,18 @@ impl InFlight {
         InFlight { done: Mutex::new(None), cv: Condvar::new() }
     }
 
-    fn wait(&self) -> Arc<ProblemCtx> {
-        let mut done = self.done.lock().expect("in-flight lock poisoned");
+    fn wait(&self) -> Result<Arc<ProblemCtx>, PlaceError> {
+        let mut done = self.done.lock().unwrap_or_else(|p| p.into_inner());
         loop {
-            if let Some(ctx) = done.as_ref() {
-                return Arc::clone(ctx);
+            if let Some(result) = done.as_ref() {
+                return result.clone();
             }
-            done = self.cv.wait(done).expect("in-flight lock poisoned");
+            done = self.cv.wait(done).unwrap_or_else(|p| p.into_inner());
         }
     }
 
-    fn publish(&self, ctx: Arc<ProblemCtx>) {
-        *self.done.lock().expect("in-flight lock poisoned") = Some(ctx);
+    fn publish(&self, result: Result<Arc<ProblemCtx>, PlaceError>) {
+        *self.done.lock().unwrap_or_else(|p| p.into_inner()) = Some(result);
         self.cv.notify_all();
     }
 }
@@ -123,6 +195,145 @@ impl ShardObs {
     }
 }
 
+/// Admission-controller limits: a hard cap on concurrent solves, a
+/// bounded FIFO wait queue behind it, and an optional per-tenant
+/// (per-fingerprint) in-flight cap so one hot tenant cannot monopolize
+/// the solve slots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmissionLimits {
+    /// Solves allowed to run at once (clamped to ≥ 1).
+    pub max_concurrent: usize,
+    /// Requests allowed to wait for a slot before shedding starts.
+    pub max_queue: usize,
+    /// Max in-flight requests per fingerprint class (0 = unlimited).
+    pub per_tenant: usize,
+}
+
+/// The admission controller: a counting semaphore with a bounded wait
+/// queue and per-tenant fairness, on `Mutex` + `Condvar`. Requests past
+/// both bounds are shed with [`PlaceError::Overloaded`] — the queue can
+/// never grow without bound, and a queued request whose deadline passes
+/// gives up (sheds) rather than solving uselessly late.
+struct Admission {
+    limits: AdmissionLimits,
+    state: Mutex<AdmState>,
+    cv: Condvar,
+    shed: AtomicUsize,
+    queue_waits: AtomicUsize,
+    shed_obs: Arc<obs::Counter>,
+    queue_obs: Arc<obs::Counter>,
+}
+
+struct AdmState {
+    active: usize,
+    queued: usize,
+    /// In-flight count per fingerprint class (tiny: at most
+    /// `max_concurrent + max_queue` distinct entries).
+    per_fp: Vec<(u64, usize)>,
+}
+
+impl Admission {
+    fn new(limits: AdmissionLimits) -> Admission {
+        Admission {
+            limits,
+            state: Mutex::new(AdmState { active: 0, queued: 0, per_fp: Vec::new() }),
+            cv: Condvar::new(),
+            shed: AtomicUsize::new(0),
+            queue_waits: AtomicUsize::new(0),
+            shed_obs: obs::counter("plan_admission_shed_total"),
+            queue_obs: obs::counter("plan_admission_queue_waits_total"),
+        }
+    }
+
+    fn shed_one(&self) -> PlaceError {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.shed_obs.inc();
+        PlaceError::Overloaded
+    }
+
+    /// Acquire a solve slot for `fp`, waiting (bounded) if the service is
+    /// at its concurrency limit. The returned permit releases the slot on
+    /// drop — including when the solve panics, so admission accounting
+    /// survives unwinds.
+    fn acquire(
+        &self,
+        fp: u64,
+        deadline: Option<Instant>,
+    ) -> Result<AdmissionPermit<'_>, PlaceError> {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        // per-tenant fairness: a class at its in-flight cap is shed
+        // immediately — it never consumes queue slots other tenants need
+        if self.limits.per_tenant > 0 {
+            let n = st.per_fp.iter().find(|(f, _)| *f == fp).map_or(0, |(_, n)| *n);
+            if n >= self.limits.per_tenant {
+                return Err(self.shed_one());
+            }
+        }
+        if st.active >= self.limits.max_concurrent {
+            if st.queued >= self.limits.max_queue {
+                return Err(self.shed_one());
+            }
+            st.queued += 1;
+            self.queue_waits.fetch_add(1, Ordering::Relaxed);
+            self.queue_obs.inc();
+            while st.active >= self.limits.max_concurrent {
+                match deadline {
+                    None => st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner()),
+                    Some(d) => {
+                        let left = d.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            // deadline passed while queued: solving now
+                            // would only produce a uselessly late answer
+                            st.queued -= 1;
+                            return Err(self.shed_one());
+                        }
+                        let (guard, _timed_out) =
+                            self.cv.wait_timeout(st, left).unwrap_or_else(|p| p.into_inner());
+                        st = guard;
+                    }
+                }
+            }
+            st.queued -= 1;
+        }
+        st.active += 1;
+        if self.limits.per_tenant > 0 {
+            match st.per_fp.iter_mut().find(|(f, _)| *f == fp) {
+                Some((_, n)) => *n += 1,
+                None => st.per_fp.push((fp, 1)),
+            }
+        }
+        Ok(AdmissionPermit { adm: self, fp })
+    }
+
+    fn release(&self, fp: u64) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.active = st.active.saturating_sub(1);
+        if self.limits.per_tenant > 0 {
+            if let Some(pos) = st.per_fp.iter().position(|(f, _)| *f == fp) {
+                st.per_fp[pos].1 -= 1;
+                if st.per_fp[pos].1 == 0 {
+                    st.per_fp.swap_remove(pos);
+                }
+            }
+        }
+        drop(st);
+        self.cv.notify_one();
+    }
+}
+
+/// RAII solve slot: releasing on drop keeps the admission counters exact
+/// even when a solve unwinds.
+struct AdmissionPermit<'a> {
+    adm: &'a Admission,
+    fp: u64,
+}
+
+impl Drop for AdmissionPermit<'_> {
+    fn drop(&mut self) {
+        self.adm.release(self.fp);
+    }
+}
+
 /// Concurrent, shareable planning service — see the module docs. All
 /// planning entry points take `&self`; wrap one in an `Arc` and hand
 /// clones to worker threads (or borrow it across a
@@ -135,6 +346,9 @@ pub struct ConcurrentService {
     shard_capacity: usize,
     /// Lattice enumeration cap for the contexts this service creates.
     ideal_cap: usize,
+    /// Optional admission controller (`None` = admit everything, the
+    /// historical behavior).
+    admission: Option<Admission>,
     hits: AtomicUsize,
     misses: AtomicUsize,
     dedup_waits: AtomicUsize,
@@ -170,9 +384,47 @@ impl ConcurrentService {
                 })
                 .collect(),
             ideal_cap,
+            admission: None,
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             dedup_waits: AtomicUsize::new(0),
+        }
+    }
+
+    /// Enable admission control with the given limits. Requests beyond
+    /// `max_concurrent` running + `max_queue` waiting — or beyond the
+    /// per-tenant in-flight cap — are shed with
+    /// [`PlaceError::Overloaded`].
+    pub fn with_admission(mut self, limits: AdmissionLimits) -> ConcurrentService {
+        let limits =
+            AdmissionLimits { max_concurrent: limits.max_concurrent.max(1), ..limits };
+        self.admission = Some(Admission::new(limits));
+        self
+    }
+
+    /// The configured admission limits, if admission control is on.
+    pub fn admission_limits(&self) -> Option<AdmissionLimits> {
+        self.admission.as_ref().map(|a| a.limits)
+    }
+
+    /// Requests shed by the admission controller so far (0 when off).
+    pub fn shed(&self) -> usize {
+        self.admission.as_ref().map_or(0, |a| a.shed.load(Ordering::Relaxed))
+    }
+
+    /// Requests that waited in the admission queue so far (0 when off).
+    pub fn queue_waits(&self) -> usize {
+        self.admission.as_ref().map_or(0, |a| a.queue_waits.load(Ordering::Relaxed))
+    }
+
+    fn admit(
+        &self,
+        fp: u64,
+        opts: &SolveOpts,
+    ) -> Result<Option<AdmissionPermit<'_>>, PlaceError> {
+        match &self.admission {
+            None => Ok(None),
+            Some(a) => a.acquire(fp, opts.budget.deadline).map(Some),
         }
     }
 
@@ -185,7 +437,7 @@ impl ConcurrentService {
     }
 
     /// The context for `(graph, scenario)` — the scalar adapter entry.
-    pub fn context(&self, g: &OpGraph, sc: &Scenario) -> Arc<ProblemCtx> {
+    pub fn context(&self, g: &OpGraph, sc: &Scenario) -> Result<Arc<ProblemCtx>, PlaceError> {
         self.context_request(g, &sc.to_request())
     }
 
@@ -194,18 +446,27 @@ impl ConcurrentService {
     /// freshly built (once, and cached) otherwise. Requests differing only
     /// in solver selectors (objective / contiguity / algorithm) share one
     /// context ([`fingerprint_req`] excludes them).
-    pub fn context_request(&self, g: &OpGraph, req: &PlanRequest) -> Arc<ProblemCtx> {
+    ///
+    /// A build that panics fails with [`PlaceError::SolverPanicked`] — for
+    /// the builder *and* every deduped waiter, which wake with the same
+    /// error instead of hanging. The fingerprint is not cached, so the
+    /// next request retries the build.
+    pub fn context_request(
+        &self,
+        g: &OpGraph,
+        req: &PlanRequest,
+    ) -> Result<Arc<ProblemCtx>, PlaceError> {
         let fp = fingerprint_req(g, req);
         let sobs = &self.shard_obs[self.shard_index(fp)];
         let shard = self.shard(fp);
         let flight = {
-            let mut s = shard.lock().expect("shard lock poisoned");
+            let mut s = lock_shard(shard);
             if let Some(pos) = s.entries.iter().position(|(key, _)| *key == fp) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 sobs.hits.inc();
                 let entry = s.entries.remove(pos).expect("position just found");
                 s.entries.push_back(entry.clone());
-                return entry.1;
+                return Ok(entry.1);
             }
             if let Some(f) = s.inflight.iter().find(|(key, _)| *key == fp) {
                 // another tenant is building this exact context right now:
@@ -223,32 +484,50 @@ impl ConcurrentService {
             s.inflight.push((fp, Arc::clone(&f)));
             f
         };
-        // build OUTSIDE the shard lock — hits and other builds proceed
-        let ctx = Arc::new(ProblemCtx::from_request_with_cap(
-            g.clone(),
-            req.clone(),
-            self.ideal_cap,
-        ));
-        {
-            let mut s = shard.lock().expect("shard lock poisoned");
-            s.inflight.retain(|(key, _)| *key != fp);
-            s.entries.push_back((fp, Arc::clone(&ctx)));
-            while s.entries.len() > self.shard_capacity {
-                if let Some((evicted, _)) = s.entries.pop_front() {
-                    // satellite invariant: evicting a context drops its
-                    // incumbent seeds — the cache stays bounded and can
-                    // never seed a fingerprint it no longer holds
-                    s.incumbents.retain(|((key, _), _)| *key != evicted);
+        // build OUTSIDE the shard lock — hits and other builds proceed —
+        // and inside an unwind envelope: every exit path below, panic
+        // included, deregisters the flight and publishes a Result
+        let built = catch_unwind(AssertUnwindSafe(|| {
+            fire_fault(FaultPoint::ContextBuild, fp);
+            Arc::new(ProblemCtx::from_request_with_cap(g.clone(), req.clone(), self.ideal_cap))
+        }));
+        match built {
+            Ok(ctx) => {
+                {
+                    let mut s = lock_shard(shard);
+                    s.inflight.retain(|(key, _)| *key != fp);
+                    s.entries.push_back((fp, Arc::clone(&ctx)));
+                    while s.entries.len() > self.shard_capacity {
+                        if let Some((evicted, _)) = s.entries.pop_front() {
+                            // satellite invariant: evicting a context drops its
+                            // incumbent seeds — the cache stays bounded and can
+                            // never seed a fingerprint it no longer holds
+                            s.incumbents.retain(|((key, _), _)| *key != evicted);
+                        }
+                    }
                 }
+                flight.publish(Ok(Arc::clone(&ctx)));
+                Ok(ctx)
+            }
+            Err(payload) => {
+                let err = PlaceError::SolverPanicked(format!(
+                    "context build: {}",
+                    planner::panic_message(&payload)
+                ));
+                {
+                    let mut s = lock_shard(shard);
+                    s.inflight.retain(|(key, _)| *key != fp);
+                }
+                obs::counter("plan_ctx_build_panics_total").inc();
+                flight.publish(Err(err.clone()));
+                Err(err)
             }
         }
-        flight.publish(Arc::clone(&ctx));
-        ctx
     }
 
     /// The cached incumbent seed for `(fingerprint, key)`, if any.
     fn lookup_seed(&self, fp: u64, key: u8) -> Option<WarmSeed> {
-        let s = self.shard(fp).lock().expect("shard lock poisoned");
+        let s = lock_shard(self.shard(fp));
         s.incumbents
             .iter()
             .find(|((f, k), _)| *f == fp && *k == key)
@@ -261,7 +540,7 @@ impl ConcurrentService {
     /// its equal-objective incumbent carries the stronger proof state).
     /// Dropped silently when the fingerprint is no longer LRU-resident.
     fn store_seed(&self, fp: u64, key: u8, seed: &WarmSeed, budget: Duration) {
-        let mut s = self.shard(fp).lock().expect("shard lock poisoned");
+        let mut s = lock_shard(self.shard(fp));
         if !s.entries.iter().any(|(f, _)| *f == fp) {
             return; // evicted while we were solving: do not resurrect
         }
@@ -290,8 +569,20 @@ impl ConcurrentService {
         alg: Algorithm,
         opts: &SolveOpts,
     ) -> Result<PlanResult, PlaceError> {
-        let ctx = self.context(g, sc);
-        alg.solver().solve(&ctx, opts)
+        let req = sc.to_request();
+        let fp = fingerprint_req(g, &req);
+        let _permit = self.admit(fp, opts)?;
+        let ctx = self.context_request(g, &req)?;
+        match catch_unwind(AssertUnwindSafe(|| {
+            fire_fault(FaultPoint::Solve, fp);
+            alg.solver().solve(&ctx, opts)
+        })) {
+            Ok(result) => result,
+            Err(payload) => {
+                obs::counter("plan_solver_panics_total").inc();
+                Err(PlaceError::SolverPanicked(planner::panic_message(&payload)))
+            }
+        }
     }
 
     /// Plan a [`PlanRequest`] (fleet + objective + algorithm selection,
@@ -300,6 +591,11 @@ impl ConcurrentService {
     /// ([`planner::warm_seed_key`]), the solve resumes from the best prior
     /// incumbent of the same `(problem, regime)` and its own final
     /// incumbent is stored back for the next tenant.
+    ///
+    /// Resilience: the request is first admitted (when admission control
+    /// is on — [`PlaceError::Overloaded`] on shed), and the whole solve
+    /// runs under an unwind envelope, so a panicking solver fails *this*
+    /// request with [`PlaceError::SolverPanicked`] and nothing else.
     pub fn plan_request(
         &self,
         g: &OpGraph,
@@ -308,18 +604,30 @@ impl ConcurrentService {
     ) -> Result<PlanResult, PlaceError> {
         let _span = obs::span_cat("plan_request", "planner");
         let started = Instant::now();
-        let ctx = self.context_request(g, req);
+        let fp = fingerprint_req(g, req);
+        let _permit = self.admit(fp, opts)?;
+        let ctx = self.context_request(g, req)?;
         let key = planner::warm_seed_key(req);
-        let result = match key {
-            None => planner::solve_request(&ctx, req, opts)?,
-            Some(k) => {
-                let mut seeded = opts.clone();
-                seeded.warm_seed = self.lookup_seed(ctx.fingerprint(), k);
-                let result = planner::solve_request(&ctx, req, &seeded)?;
-                if let Some(seed) = &result.warm_seed {
-                    self.store_seed(ctx.fingerprint(), k, seed, seeded.ip_budget);
+        let solved = catch_unwind(AssertUnwindSafe(|| {
+            fire_fault(FaultPoint::Solve, fp);
+            match key {
+                None => planner::solve_request(&ctx, req, opts),
+                Some(k) => {
+                    let mut seeded = opts.clone();
+                    seeded.warm_seed = self.lookup_seed(ctx.fingerprint(), k);
+                    let result = planner::solve_request(&ctx, req, &seeded)?;
+                    if let Some(seed) = &result.warm_seed {
+                        self.store_seed(ctx.fingerprint(), k, seed, seeded.ip_budget);
+                    }
+                    Ok(result)
                 }
-                result
+            }
+        }));
+        let result = match solved {
+            Ok(result) => result?,
+            Err(payload) => {
+                obs::counter("plan_solver_panics_total").inc();
+                return Err(PlaceError::SolverPanicked(planner::panic_message(&payload)));
             }
         };
         let sobs = &self.shard_obs[self.shard_index(ctx.fingerprint())];
@@ -360,10 +668,7 @@ impl ConcurrentService {
 
     /// Cached contexts currently held, across all shards.
     pub fn len(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|s| s.lock().expect("shard lock poisoned").entries.len())
-            .sum()
+        self.shards.iter().map(|s| lock_shard(s).entries.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -372,10 +677,7 @@ impl ConcurrentService {
 
     /// Incumbent seeds currently cached, across all shards.
     pub fn seeds_len(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|s| s.lock().expect("shard lock poisoned").incumbents.len())
-            .sum()
+        self.shards.iter().map(|s| lock_shard(s).incumbents.len()).sum()
     }
 
     /// Drop every cached context AND every incumbent seed (e.g. after an
@@ -384,7 +686,7 @@ impl ConcurrentService {
     /// completion.
     pub fn clear(&self) {
         for shard in &self.shards {
-            let mut s = shard.lock().expect("shard lock poisoned");
+            let mut s = lock_shard(shard);
             s.entries.clear();
             s.incumbents.clear();
         }
@@ -420,8 +722,8 @@ mod tests {
         let g = chain(6);
         let sc = Scenario::new(2, 1, f64::INFINITY);
         let svc = ConcurrentService::new(4, 8);
-        let a = svc.context(&g, &sc);
-        let b = svc.context(&g, &sc);
+        let a = svc.context(&g, &sc).unwrap();
+        let b = svc.context(&g, &sc).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(svc.hits(), 1);
         assert_eq!(svc.misses(), 1);
@@ -435,7 +737,7 @@ mod tests {
         let svc = ConcurrentService::new(4, 8);
         let ctxs: Vec<Arc<ProblemCtx>> = std::thread::scope(|scope| {
             let handles: Vec<_> =
-                (0..8).map(|_| scope.spawn(|| svc.context(&g, &sc))).collect();
+                (0..8).map(|_| scope.spawn(|| svc.context(&g, &sc).unwrap())).collect();
             handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
         });
         for c in &ctxs[1..] {
@@ -527,5 +829,22 @@ mod tests {
             s.incumbents[0].1.budget
         };
         assert_eq!(stored_long, long.ip_budget, "longer-budget solve takes over the seed");
+    }
+
+    #[test]
+    fn serial_load_under_admission_caps_is_never_shed() {
+        let g = chain(6);
+        let svc = ConcurrentService::new(1, 4).with_admission(AdmissionLimits {
+            max_concurrent: 1,
+            max_queue: 0,
+            per_tenant: 1,
+        });
+        let sc = Scenario::new(2, 1, f64::INFINITY);
+        // serial requests: each admits, solves, releases — never shed
+        let opts = SolveOpts::default();
+        svc.plan(&g, &sc, Algorithm::Dp, &opts).unwrap();
+        svc.plan(&g, &sc, Algorithm::Dp, &opts).unwrap();
+        assert_eq!(svc.shed(), 0, "serial load under the cap must not shed");
+        assert_eq!(svc.queue_waits(), 0);
     }
 }

@@ -30,7 +30,102 @@ use crate::graph::ideals::{IdealLattice, DEFAULT_IDEAL_CAP};
 use crate::graph::{topo, NodeId, OpGraph};
 use crate::util::arena::BitMatrix;
 use std::sync::OnceLock;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Cooperative cancellation budget for one solve. Checked *periodically*
+/// (every N search nodes) inside the branch-and-bound engines and the
+/// lattice enumerators, so an unbudgeted solve pays only an integer modulo
+/// per node and stays bitwise identical to the pre-budget behavior. On
+/// expiry a search stops and returns its best incumbent so far (tagged
+/// [`PlanQuality::Anytime`]) instead of erroring.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SolveBudget {
+    /// Absolute wall-clock cutoff; `None` = no deadline (the engines still
+    /// honor their own [`SolveOpts::ip_budget`] time limit).
+    pub deadline: Option<Instant>,
+    /// Cap on search nodes explored (branch-and-bound nodes for the IPs,
+    /// enumerated ideals for the lattice solvers); `None` = unlimited.
+    /// Deterministic, unlike the wall-clock deadline — tests pin anytime
+    /// behavior with this.
+    pub node_limit: Option<u64>,
+}
+
+impl SolveBudget {
+    /// No deadline, no node limit — the historical behavior.
+    pub const UNLIMITED: SolveBudget = SolveBudget { deadline: None, node_limit: None };
+
+    /// A budget whose deadline is `d` from now (node limit unset).
+    pub fn deadline_in(d: Duration) -> SolveBudget {
+        SolveBudget { deadline: Some(Instant::now() + d), node_limit: None }
+    }
+
+    /// True when neither constraint is set.
+    pub fn is_unlimited(&self) -> bool {
+        self.deadline.is_none() && self.node_limit.is_none()
+    }
+
+    /// True when the wall-clock deadline has already passed.
+    pub fn expired(&self) -> bool {
+        matches!(self.deadline, Some(d) if Instant::now() >= d)
+    }
+
+    /// The effective search cutoff: the earlier of the engine's own time
+    /// limit (`start + limit`) and this budget's deadline.
+    pub fn clamp_deadline(&self, start: Instant, limit: Duration) -> Instant {
+        let own = start + limit;
+        match self.deadline {
+            Some(d) if d < own => d,
+            _ => own,
+        }
+    }
+}
+
+/// Which rung of the degradation ladder produced a plan. Also the label
+/// vocabulary of the `plan_fallback_total{rung=...}` obs counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanRung {
+    /// The branch-and-bound IP engines.
+    Ip,
+    /// The exact DP over the ideal lattice.
+    Dp,
+    /// The DPL linearization heuristic.
+    Dpl,
+    /// The communication-oblivious greedy (always answers).
+    Greedy,
+}
+
+impl PlanRung {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanRung::Ip => "ip",
+            PlanRung::Dp => "dp",
+            PlanRung::Dpl => "dpl",
+            PlanRung::Greedy => "greedy",
+        }
+    }
+}
+
+/// Whether a plan came from a solver that ran to natural completion or
+/// from a budget-truncated (anytime) search. `Exact` means *untruncated*
+/// — a heuristic that finished normally is `Exact` quality even though
+/// its answer carries no optimality proof.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanQuality {
+    /// The solver ran to completion (proof closed, gap target met, or the
+    /// deterministic/heuristic algorithm simply finished).
+    Exact,
+    /// Best incumbent at a [`SolveBudget`] cutoff, from the named rung.
+    Anytime(PlanRung),
+}
+
+impl std::fmt::Display for PlanQuality {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanQuality::Exact => write!(f, "exact"),
+            PlanQuality::Anytime(rung) => write!(f, "anytime({})", rung.name()),
+        }
+    }
+}
 
 /// Planner outcome: a placement + run metadata for the tables.
 pub struct PlanResult {
@@ -45,6 +140,9 @@ pub struct PlanResult {
     /// incumbent cache stores so a later solve of the same problem resumes
     /// instead of restarting.
     pub warm_seed: Option<WarmSeed>,
+    /// `Exact` unless a [`SolveBudget`] truncated the search and this is
+    /// the best incumbent at the cutoff.
+    pub quality: PlanQuality,
 }
 
 impl PlanResult {
@@ -57,6 +155,7 @@ impl PlanResult {
             gap: None,
             note: String::new(),
             warm_seed: None,
+            quality: PlanQuality::Exact,
         }
     }
 }
@@ -118,6 +217,10 @@ pub struct SolveOpts {
     /// cache; `None` = cold solve, the historical behavior). Ignored by
     /// the non-IP solvers.
     pub warm_seed: Option<WarmSeed>,
+    /// Cooperative cancellation budget (deadline and/or node limit). The
+    /// default is [`SolveBudget::UNLIMITED`], which is bitwise-invisible:
+    /// every solver behaves exactly as it did before budgets existed.
+    pub budget: SolveBudget,
 }
 
 impl Default for SolveOpts {
@@ -131,6 +234,7 @@ impl Default for SolveOpts {
             ls_seed: 0xC0FFEE,
             scotch_seed: 0x5C07C4,
             warm_seed: None,
+            budget: SolveBudget::UNLIMITED,
         }
     }
 }

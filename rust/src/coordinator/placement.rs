@@ -579,6 +579,14 @@ impl Fleet {
             if name.is_empty() {
                 return Err(format!("empty class name in '{entry}'"));
             }
+            if count > crate::topo::MAX_SLOTS {
+                // fat-fingered or fuzzed counts: reject before anything
+                // downstream sizes per-device state off them
+                return Err(format!(
+                    "device count {count} in '{entry}' exceeds the {}-slot sanity bound",
+                    crate::topo::MAX_SLOTS
+                ));
+            }
             if !(speed.is_finite() && speed > 0.0) {
                 return Err(format!("speed must be positive in '{entry}'"));
             }

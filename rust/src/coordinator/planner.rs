@@ -9,10 +9,15 @@
 //! [`crate::coordinator::service::PlannerService`] to reuse the analysis.
 
 use crate::algos::hierarchy::Hierarchy;
-use crate::algos::{hierarchy, ip_latency, ip_throughput, objective, replication, PlaceError};
+use crate::algos::{
+    dp, hierarchy, ip_latency, ip_throughput, objective, replication, PlaceError,
+};
 use crate::baselines::{expert, greedy, local_search, pipedream, scotch_like};
-use crate::coordinator::context::{ProblemCtx, SolveOpts, Solver, WarmSeed};
+use crate::coordinator::context::{
+    PlanQuality, PlanRung, ProblemCtx, SolveOpts, Solver, WarmSeed,
+};
 use crate::coordinator::placement::{Objective, Placement, PlanRequest, Scenario};
+use crate::graph::ideals::IdealLattice;
 use crate::graph::OpGraph;
 use crate::workloads::Workload;
 use std::time::{Duration, Instant};
@@ -142,17 +147,60 @@ pub fn plan(
     run_traced(&*alg.solver(), &ctx, &opts)
 }
 
+/// [`plan`] with caller-supplied [`SolveOpts`] — the deadline-aware
+/// one-shot entry point (`partition --deadline-ms`). Routes through
+/// [`solve_request`], so a budget deadline engages the degradation ladder:
+/// a too-tight deadline degrades to a lower rung (result tagged
+/// [`PlanQuality::Anytime`]) instead of erroring. Without a deadline this
+/// is the plain registry dispatch, bitwise.
+pub fn plan_opts(
+    w: &Workload,
+    alg: Algorithm,
+    opts: &SolveOpts,
+) -> Result<PlanResult, PlaceError> {
+    let req = w.request().algorithm(AlgoChoice::Fixed(alg));
+    let ctx = ProblemCtx::from_request(w.graph.clone(), req.clone());
+    solve_request(&ctx, &req, opts)
+}
+
 /// Run a solver under an obs span named after it (`solve.dp`,
 /// `solve.ip-contiguous`, …) so solver phases nest inside whatever span
 /// the caller has open (a `--profile` run, a serving re-plan). Inert when
 /// recording is off; never changes the call itself.
+///
+/// This is also the panic-isolation boundary: a solver bug that unwinds is
+/// caught here and surfaced as [`PlaceError::SolverPanicked`], so one
+/// buggy solve fails one request instead of tearing down its thread (and,
+/// through a poisoned shard mutex, every tenant behind it). The
+/// `AssertUnwindSafe` is sound for observers: the shared [`ProblemCtx`]
+/// memoizes through `OnceLock`, whose `get_or_init` leaves the cell
+/// untouched when its initializer unwinds.
 fn run_traced(
     s: &dyn Solver,
     ctx: &ProblemCtx,
     opts: &SolveOpts,
 ) -> Result<PlanResult, PlaceError> {
     let _span = crate::obs::span_cat(&format!("solve.{}", s.name()), "solver");
-    s.solve(ctx, opts)
+    let name = s.name();
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| s.solve(ctx, opts))) {
+        Ok(r) => r,
+        Err(payload) => {
+            crate::obs::counter("plan_solver_panics_total").inc();
+            Err(PlaceError::SolverPanicked(format!("{name}: {}", panic_message(&payload))))
+        }
+    }
+}
+
+/// Best-effort text of a caught panic payload (`&str` and `String` cover
+/// every `panic!` in this crate).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// One-shot planning of a [`PlanRequest`] (fleet + objective + algorithm
@@ -184,6 +232,48 @@ pub fn solve_request(
     req: &PlanRequest,
     opts: &SolveOpts,
 ) -> Result<PlanResult, PlaceError> {
+    // No deadline ⇒ the historical dispatch, bitwise (a bare node limit
+    // still reaches the IP engines through `opts.budget`, but triggers no
+    // ladder — truncation surfaces as an `Anytime` result or an error).
+    if opts.budget.deadline.is_none() {
+        return dispatch_request(ctx, req, opts);
+    }
+    // Deadline set: degrade instead of erroring or overrunning.
+    if opts.budget.expired() {
+        crate::obs::counter("plan_deadline_hits_total").inc();
+        return fallback_ladder(ctx, req, opts, true);
+    }
+    match dispatch_request(ctx, req, opts) {
+        Ok(r) => {
+            if matches!(r.quality, PlanQuality::Anytime(_)) {
+                crate::obs::counter("plan_deadline_hits_total").inc();
+            }
+            Ok(r)
+        }
+        // Problem/config errors no amount of degrading fixes: a proven
+        // infeasibility, a cyclic graph, a missing expert rule.
+        Err(
+            e @ (PlaceError::Infeasible | PlaceError::NotADag | PlaceError::MissingExpertRule),
+        ) => Err(e),
+        // Budget-shaped failures (no incumbent, blown lattice cap, …):
+        // walk down the ladder.
+        Err(_) => {
+            crate::obs::counter("plan_deadline_hits_total").inc();
+            fallback_ladder(ctx, req, opts, false)
+        }
+    }
+}
+
+/// The pre-ladder dispatch (see [`solve_request`] docs). Under a deadline,
+/// `Auto` throughput requests go to the budget-aware IP first — the only
+/// engine with per-node cooperative cancellation — instead of the DP,
+/// whose lattice enumeration checks its budget only at the coarse
+/// ideal-count granularity.
+fn dispatch_request(
+    ctx: &ProblemCtx,
+    req: &PlanRequest,
+    opts: &SolveOpts,
+) -> Result<PlanResult, PlaceError> {
     match req.algorithm {
         AlgoChoice::Fixed(Algorithm::IpLatency) => {
             run_traced(&IpLatencySolver { contiguous: req.contiguous }, ctx, opts)
@@ -196,6 +286,9 @@ pub fn solve_request(
             Objective::Throughput if !req.contiguous => {
                 run_traced(&*Algorithm::IpNonContiguous.solver(), ctx, opts)
             }
+            Objective::Throughput if opts.budget.deadline.is_some() => {
+                run_traced(&*Algorithm::IpContiguous.solver(), ctx, opts)
+            }
             Objective::Throughput => match run_traced(&*Algorithm::Dp.solver(), ctx, opts) {
                 Err(PlaceError::TooManyIdeals(_)) => {
                     run_traced(&*Algorithm::Dpl.solver(), ctx, opts)
@@ -205,6 +298,95 @@ pub fn solve_request(
         },
     }
 }
+
+/// Ideal-count bound for the ladder's DP rung: the lattice solvers' coarse
+/// node-count budget check. A lattice that enumerates within this bound is
+/// complete (the rung's DP is exact); one that exceeds it aborts the rung
+/// instead of hanging the deadline on a full-cap enumeration.
+const LADDER_IDEAL_CAP: usize = 20_000;
+
+/// The deadline degradation ladder below the primary solver: exact DP
+/// (bounded enumeration) → DPL → greedy for throughput, straight to greedy
+/// for latency (the DP family doesn't speak that objective) or when the
+/// deadline has `expired` before any rung could search. Each rung bumps
+/// `plan_fallback_total{rung=…}`; the greedy floor always answers, so a
+/// deadline-budgeted request never errors for budget-shaped reasons.
+fn fallback_ladder(
+    ctx: &ProblemCtx,
+    req: &PlanRequest,
+    opts: &SolveOpts,
+    expired: bool,
+) -> Result<PlanResult, PlaceError> {
+    if req.objective == Objective::Throughput && !expired && !opts.budget.expired() {
+        if let Ok(r) = dp_rung(ctx) {
+            return Ok(r);
+        }
+    }
+    greedy_rung(ctx, req)
+}
+
+/// The ladder's DP rung. Exact DP from the context cache when that is
+/// free (lattice already built) or affordable (cap within
+/// [`LADDER_IDEAL_CAP`]); otherwise a LOCAL enumeration bounded by the
+/// same cap — never the context's full-cap enumeration on a deadline's
+/// clock. A bound-respecting enumeration is complete, so the rung's plan
+/// is the exact DP optimum; blowing the bound falls through to DPL.
+fn dp_rung(ctx: &ProblemCtx) -> Result<PlanResult, PlaceError> {
+    let start = Instant::now();
+    let prepared = ctx.prepared()?;
+    let solved = if ctx.lattice_if_built().is_some() || ctx.ideal_cap() <= LADDER_IDEAL_CAP {
+        ctx.dp_solution().map(Clone::clone)
+    } else {
+        IdealLattice::enumerate(&prepared.dp_graph, LADDER_IDEAL_CAP)
+            .map_err(PlaceError::TooManyIdeals)
+            .and_then(|lat| {
+                dp::solve_on_lattice_req(
+                    &prepared.dp_graph,
+                    ctx.request(),
+                    &lat,
+                    &prepared.bw_comm,
+                )
+            })
+    };
+    match solved {
+        Ok((obj, dense)) => {
+            let placement = prepared.expand_req(ctx.graph(), ctx.request(), obj, &dense);
+            crate::obs::counter("plan_fallback_total{rung=\"dp\"}").inc();
+            let mut r = PlanResult::basic(placement, start.elapsed());
+            r.note = "deadline fallback: dp".into();
+            r.quality = PlanQuality::Anytime(PlanRung::Dp);
+            Ok(r)
+        }
+        Err(_) => {
+            let (obj, dense) = ctx.dpl_solution()?.clone();
+            let mut placement =
+                ctx.prepared()?.expand_req(ctx.graph(), ctx.request(), obj, &dense);
+            placement.algorithm = "DPL".into();
+            crate::obs::counter("plan_fallback_total{rung=\"dpl\"}").inc();
+            let mut r = PlanResult::basic(placement, start.elapsed());
+            r.note = "deadline fallback: dpl".into();
+            r.quality = PlanQuality::Anytime(PlanRung::Dpl);
+            Ok(r)
+        }
+    }
+}
+
+/// The ladder's floor: the greedy baseline, re-scored under the request's
+/// objective. Always answers (greedy never fails), so the ladder cannot
+/// bottom out in an error.
+fn greedy_rung(ctx: &ProblemCtx, req: &PlanRequest) -> Result<PlanResult, PlaceError> {
+    let start = Instant::now();
+    let mut p = greedy::solve_req(ctx.graph(), ctx.request());
+    if req.objective == Objective::Latency {
+        p.objective = objective::latency_req(ctx.graph(), ctx.request(), &p);
+    }
+    crate::obs::counter("plan_fallback_total{rung=\"greedy\"}").inc();
+    let mut r = PlanResult::basic(p, start.elapsed());
+    r.note = "deadline fallback: greedy".into();
+    r.quality = PlanQuality::Anytime(PlanRung::Greedy);
+    Ok(r)
+}
+
 
 /// The warm-seed cache key of the IP engine [`solve_request`] will run for
 /// this request, or `None` when the request resolves to a deterministic or
@@ -254,10 +436,32 @@ impl Solver for DpSolver {
         "dp"
     }
 
-    fn solve(&self, ctx: &ProblemCtx, _opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+    fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
         let start = Instant::now();
+        // Coarse cooperative cancellation: the DP's unit of work is a
+        // whole memoized artifact (preprocessing, lattice, table), so the
+        // budget is checked between artifacts — never inside them, which
+        // would memoize a budget-dependent value into the shared context.
+        // `NoIncumbent` hands the deadline ladder the floor.
+        if opts.budget.expired() {
+            return Err(PlaceError::NoIncumbent);
+        }
+        let prepared = ctx.prepared()?;
+        if opts.budget.expired() {
+            return Err(PlaceError::NoIncumbent);
+        }
+        let lattice = ctx.lattice()?;
+        if let Some(limit) = opts.budget.node_limit {
+            // the lattice's ideals are this solver's "search nodes"
+            if lattice.len() as u64 > limit {
+                return Err(PlaceError::NoIncumbent);
+            }
+        }
+        if opts.budget.expired() {
+            return Err(PlaceError::NoIncumbent);
+        }
         let (obj, dense) = ctx.dp_solution()?.clone();
-        let placement = ctx.prepared()?.expand_req(ctx.graph(), ctx.request(), obj, &dense);
+        let placement = prepared.expand_req(ctx.graph(), ctx.request(), obj, &dense);
         Ok(PlanResult::basic(placement, start.elapsed()))
     }
 }
@@ -270,8 +474,13 @@ impl Solver for DplSolver {
         "dpl"
     }
 
-    fn solve(&self, ctx: &ProblemCtx, _opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
+    fn solve(&self, ctx: &ProblemCtx, opts: &SolveOpts) -> Result<PlanResult, PlaceError> {
         let start = Instant::now();
+        // same coarse between-artifact budget checks as the DP (the DPL's
+        // prefix lattice is |V|+1 ideals — building it is never the cost)
+        if opts.budget.expired() {
+            return Err(PlaceError::NoIncumbent);
+        }
         let (obj, dense) = ctx.dpl_solution()?.clone();
         let mut placement =
             ctx.prepared()?.expand_req(ctx.graph(), ctx.request(), obj, &dense);
@@ -308,6 +517,7 @@ impl Solver for IpThroughputSolver {
                 }
                 _ => None,
             },
+            budget: opts.budget,
             ..Default::default()
         };
         let r = ip_throughput::solve_ctx(ctx, &ip_opts)?;
@@ -319,6 +529,11 @@ impl Solver for IpThroughputSolver {
             gap: Some(r.gap),
             note: format!("{:?}", r.status),
             warm_seed: Some(WarmSeed::Throughput { objective: obj, dense }),
+            quality: if r.truncated {
+                PlanQuality::Anytime(PlanRung::Ip)
+            } else {
+                PlanQuality::Exact
+            },
         })
     }
 }
@@ -348,6 +563,7 @@ impl Solver for IpLatencySolver {
             gap_target: opts.gap_target,
             warm_starts: warm,
             contiguous: self.contiguous,
+            budget: opts.budget,
             ..Default::default()
         };
         let r = ip_latency::solve_ctx(ctx, &lat_opts)?;
@@ -359,6 +575,11 @@ impl Solver for IpLatencySolver {
             gap: Some(r.gap),
             note: format!("{:?}", r.status),
             warm_seed: Some(seed),
+            quality: if r.truncated {
+                PlanQuality::Anytime(PlanRung::Ip)
+            } else {
+                PlanQuality::Exact
+            },
         })
     }
 }

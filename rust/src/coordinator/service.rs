@@ -61,15 +61,25 @@ impl PlannerService {
 
     /// The context for `(graph, scenario)`: cached if its fingerprint is
     /// known, freshly created (and cached) otherwise. A scenario shares
-    /// its cache entry with the equivalent uniform-fleet request.
-    pub fn context(&mut self, g: &OpGraph, sc: &Scenario) -> Arc<ProblemCtx> {
+    /// its cache entry with the equivalent uniform-fleet request. Fails
+    /// with [`PlaceError::SolverPanicked`] only if the build itself
+    /// panicked (the engine's unwind envelope, DESIGN.md §11).
+    pub fn context(
+        &mut self,
+        g: &OpGraph,
+        sc: &Scenario,
+    ) -> Result<Arc<ProblemCtx>, PlaceError> {
         self.inner.context(g, sc)
     }
 
     /// The context for `(graph, request)` — the fleet-level entry point.
     /// Keyed by [`fingerprint_req`], so requests differing only in solver
     /// selectors (objective / contiguity / algorithm) share one context.
-    pub fn context_request(&mut self, g: &OpGraph, req: &PlanRequest) -> Arc<ProblemCtx> {
+    pub fn context_request(
+        &mut self,
+        g: &OpGraph,
+        req: &PlanRequest,
+    ) -> Result<Arc<ProblemCtx>, PlaceError> {
         self.inner.context_request(g, req)
     }
 
@@ -167,8 +177,8 @@ mod tests {
         let g = chain(6);
         let sc = Scenario::new(2, 1, f64::INFINITY);
         let mut svc = PlannerService::new(4);
-        let a = svc.context(&g, &sc);
-        let b = svc.context(&g, &sc);
+        let a = svc.context(&g, &sc).unwrap();
+        let b = svc.context(&g, &sc).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(svc.hits(), 1);
         assert_eq!(svc.misses(), 1);
@@ -178,12 +188,12 @@ mod tests {
     fn scenario_change_is_a_new_context_and_lru_evicts() {
         let g = chain(6);
         let mut svc = PlannerService::new(2);
-        let a = svc.context(&g, &Scenario::new(2, 1, f64::INFINITY));
-        let _b = svc.context(&g, &Scenario::new(1, 1, f64::INFINITY));
-        let _c = svc.context(&g, &Scenario::new(3, 1, f64::INFINITY));
+        let a = svc.context(&g, &Scenario::new(2, 1, f64::INFINITY)).unwrap();
+        let _b = svc.context(&g, &Scenario::new(1, 1, f64::INFINITY)).unwrap();
+        let _c = svc.context(&g, &Scenario::new(3, 1, f64::INFINITY)).unwrap();
         assert_eq!(svc.len(), 2, "capacity bound");
         // `a`'s problem was evicted: planning it again is a miss
-        let a2 = svc.context(&g, &Scenario::new(2, 1, f64::INFINITY));
+        let a2 = svc.context(&g, &Scenario::new(2, 1, f64::INFINITY)).unwrap();
         assert!(!Arc::ptr_eq(&a, &a2));
         assert_eq!(svc.misses(), 4);
     }

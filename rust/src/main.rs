@@ -21,6 +21,13 @@
 //! write a Chrome `trace_event` file loadable in Perfetto or
 //! `chrome://tracing` (DESIGN.md §10).
 //!
+//! `partition`, `bench-traffic` and `chaos` accept `--deadline-ms N`: each
+//! solve runs under a cooperative-cancellation budget and degrades through
+//! the anytime ladder (IP incumbent → exact DP → DPL → greedy) instead of
+//! overrunning — `partition` reports the answer's quality tag (`exact` vs
+//! `anytime(rung)`). `partition` additionally accepts `--node-limit N` to
+//! cap the search's explored nodes (DESIGN.md §11).
+//!
 //! Workload names: `bert3op`, `bert6op`, `bert12op`, `resnet50op`,
 //! `bert24`, `resnet50`, `inceptionv3`, `gnmt` — suffix `-train` for the
 //! training variant (e.g. `bert24-train`).
@@ -99,7 +106,7 @@
 //! classified shed causes, the hysteresis swap bound, near-oracle
 //! steady-state throughput. Exits non-zero on any violation.
 
-use dnn_partition::coordinator::context::SolveOpts;
+use dnn_partition::coordinator::context::{SolveBudget, SolveOpts};
 use dnn_partition::coordinator::placement::{AlgoChoice, Device, Fleet};
 use dnn_partition::coordinator::planner::{self, Algorithm};
 use dnn_partition::obs;
@@ -158,6 +165,8 @@ struct CliFlags {
     samples: Option<usize>,
     smoke: bool,
     profile: Option<String>,
+    deadline_ms: Option<u64>,
+    node_limit: Option<u64>,
 }
 
 /// Strip `--NAME VALUE` / `--NAME=VALUE` flags out of the argument list,
@@ -205,6 +214,16 @@ fn extract_flags(args: &[String]) -> Result<(Vec<String>, CliFlags), String> {
         } else if let Some(v) = valued("samples", &mut i)? {
             flags.samples = Some(
                 v.parse().map_err(|_| format!("bad --samples: '{v}' is not a count"))?,
+            );
+        } else if let Some(v) = valued("deadline-ms", &mut i)? {
+            flags.deadline_ms = Some(
+                v.parse()
+                    .map_err(|_| format!("bad --deadline-ms: '{v}' is not a millisecond count"))?,
+            );
+        } else if let Some(v) = valued("node-limit", &mut i)? {
+            flags.node_limit = Some(
+                v.parse()
+                    .map_err(|_| format!("bad --node-limit: '{v}' is not a node count"))?,
             );
         } else if a == "--assert-improves" {
             flags.assert_improves = true;
@@ -262,6 +281,20 @@ fn run(raw_args: &[String]) -> i32 {
     }
     if flags.smoke && cmd != Some("bench-traffic") {
         eprintln!("--smoke is only valid with `bench-traffic`");
+        return 2;
+    }
+    // deadline budgets only reach subcommands that honor them — anywhere
+    // else the flag would silently plan without the deadline
+    if flags.deadline_ms.is_some()
+        && !matches!(cmd, Some("partition" | "bench-traffic" | "chaos"))
+    {
+        eprintln!("--deadline-ms is only valid with partition/bench-traffic/chaos");
+        return 2;
+    }
+    if flags.node_limit.is_some() && cmd != Some("partition") {
+        // without a deadline there is no ladder under it: a blown node
+        // cap surfaces as an error, acceptable only where errors are loud
+        eprintln!("--node-limit is only valid with `partition`");
         return 2;
     }
     if flags.profile.is_some()
@@ -330,14 +363,21 @@ fn run(raw_args: &[String]) -> i32 {
             let budget = Duration::from_secs(
                 args.get(3).and_then(|s| s.parse().ok()).unwrap_or(20),
             );
-            match planner::plan(&w, alg, budget) {
+            let opts = SolveOpts {
+                ip_budget: budget,
+                expert: w.expert,
+                budget: solve_budget(&flags),
+                ..SolveOpts::default()
+            };
+            match planner::plan_opts(&w, alg, &opts) {
                 Ok(r) => {
                     println!(
-                        "{} {:?}: TPS {:.2}  runtime {:?}{}",
+                        "{} {:?}: TPS {:.2}  runtime {:?}  quality {}{}",
                         w.name,
                         alg,
                         r.placement.objective,
                         r.runtime,
+                        r.quality,
                         r.gap.map(|g| format!("  gap {:.1}%", g * 100.0)).unwrap_or_default()
                     );
                     print_split(&w, &r.placement);
@@ -631,6 +671,12 @@ fn run(raw_args: &[String]) -> i32 {
                 ..SolveOpts::default()
             };
             let mut serving = ServingPlanner::new(alg, opts);
+            if let Some(ms) = flags.deadline_ms {
+                // tight-deadline variant: every re-plan inside the
+                // monitored loop runs under this budget and degrades
+                // through the ladder instead of blowing the campaign
+                serving = serving.with_deadline(Duration::from_millis(ms));
+            }
             let camp = ChaosCampaign::new(&w.graph, &req, cfg);
             let report = camp.run(&mut serving);
             println!(
@@ -714,7 +760,7 @@ fn run(raw_args: &[String]) -> i32 {
                 }
             }
         }
-        Some("bench-traffic") => run_bench_traffic(flags.smoke),
+        Some("bench-traffic") => run_bench_traffic(flags.smoke, flags.deadline_ms),
         Some("stats") => run_stats(),
         _ => {
             eprintln!(
@@ -738,6 +784,19 @@ fn run(raw_args: &[String]) -> i32 {
         }
     }
     code
+}
+
+/// The cooperative-cancellation budget from `--deadline-ms`/`--node-limit`
+/// (unlimited when neither flag is given — bitwise the pre-budget CLI).
+/// Deadlines are relative to *now*, so call this right before the solve it
+/// budgets.
+fn solve_budget(flags: &CliFlags) -> SolveBudget {
+    let mut b = match flags.deadline_ms {
+        Some(ms) => SolveBudget::deadline_in(Duration::from_millis(ms)),
+        None => SolveBudget::UNLIMITED,
+    };
+    b.node_limit = flags.node_limit;
+    b
 }
 
 /// Assemble and write the `--profile` Chrome trace: recorder spans as
@@ -791,6 +850,16 @@ fn run_stats() -> i32 {
             return 1;
         }
     };
+    // a zero-budget Auto plan drives the degradation ladder, so the
+    // deadline/fallback counter families (plan_deadline_hits_total,
+    // plan_fallback_total{rung=…}) show up in the dump below — counters
+    // live per process, so the exercise must produce its own traffic
+    let tight =
+        SolveOpts { budget: SolveBudget::deadline_in(Duration::ZERO), ..opts.clone() };
+    if let Err(e) = svc.plan_request(&g, &sc.to_request(), &tight) {
+        eprintln!("stats exercise failed: {e}");
+        return 1;
+    }
     // a linked simulation (device utilization, per-pair link bytes)
     let req = sc.to_request();
     let cfg = SimConfig { link_bandwidth: Some(1.0), ..SimConfig::default() };
@@ -810,8 +879,11 @@ fn run_stats() -> i32 {
 /// tiny IP budgets, and hard assertions on the concurrency invariants
 /// (every request planned; hits + misses + dedup waits account for all of
 /// them; misses never exceed the distinct fingerprints — the single-flight
-/// bound).
-fn run_bench_traffic(smoke: bool) -> i32 {
+/// bound). `--deadline-ms` puts every request under a per-solve
+/// [`SolveBudget`] deadline: requests then answer through the anytime
+/// search or the degradation ladder, and the same invariants must still
+/// hold — a deadline may degrade an answer, never lose one.
+fn run_bench_traffic(smoke: bool, deadline_ms: Option<u64>) -> i32 {
     use dnn_partition::coordinator::concurrent::ConcurrentService;
     use dnn_partition::coordinator::context::fingerprint_req;
     use dnn_partition::coordinator::placement::{DeviceClass, Objective, PlanRequest};
@@ -875,7 +947,14 @@ fn run_bench_traffic(smoke: bool) -> i32 {
                             let i = next.fetch_add(1, Ordering::Relaxed);
                             let Some((g, req)) = stream.get(i) else { break };
                             let t = Instant::now();
-                            svc.plan_request(&graphs[*g], req, opts)
+                            // per-request budget: the deadline clock starts
+                            // when the request is picked up, not when the
+                            // stream was built
+                            let mut o = opts.clone();
+                            if let Some(ms) = deadline_ms {
+                                o.budget = SolveBudget::deadline_in(Duration::from_millis(ms));
+                            }
+                            svc.plan_request(&graphs[*g], req, &o)
                                 .expect("traffic request must plan");
                             mine.push(t.elapsed().as_secs_f64() * 1e3);
                         }
@@ -894,9 +973,10 @@ fn run_bench_traffic(smoke: bool) -> i32 {
     };
 
     println!(
-        "bench-traffic{}: {n_requests} requests over {} graphs × {} fleets \
+        "bench-traffic{}{}: {n_requests} requests over {} graphs × {} fleets \
          ({distinct} distinct problems)",
         if smoke { " --smoke" } else { "" },
+        deadline_ms.map(|ms| format!(" --deadline-ms {ms}")).unwrap_or_default(),
         graphs.len(),
         fleets.len(),
     );

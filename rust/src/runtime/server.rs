@@ -302,7 +302,7 @@ pub fn stage_factories(
 
 use crate::algos::PlaceError;
 use crate::coordinator::concurrent::ConcurrentService;
-use crate::coordinator::context::SolveOpts;
+use crate::coordinator::context::{SolveBudget, SolveOpts};
 use crate::coordinator::placement::{Device, Placement, PlanRequest, Scenario};
 use crate::coordinator::planner::Algorithm;
 use crate::graph::{topo, OpGraph};
@@ -319,6 +319,11 @@ pub struct ServingPlanner {
     service: Arc<ConcurrentService>,
     alg: Algorithm,
     opts: SolveOpts,
+    /// Per-solve re-plan deadline: when set, every plan call runs under a
+    /// fresh `SolveBudget::deadline_in(d)` — a live re-plan (device loss,
+    /// drift) degrades to an anytime answer instead of stalling the
+    /// serving loop (DESIGN.md §11).
+    replan_deadline: Option<Duration>,
 }
 
 /// A planned pipeline: the placement plus its stages in pipeline order.
@@ -342,7 +347,26 @@ impl ServingPlanner {
         alg: Algorithm,
         opts: SolveOpts,
     ) -> ServingPlanner {
-        ServingPlanner { service, alg, opts }
+        ServingPlanner { service, alg, opts, replan_deadline: None }
+    }
+
+    /// Give every subsequent plan call `d` of wall clock: past it the
+    /// solve degrades through the planner's fallback ladder (anytime IP →
+    /// exact DP → greedy) instead of blocking the serving loop. The
+    /// deadline is stamped per call, so each re-plan gets the full `d`.
+    pub fn with_deadline(mut self, d: Duration) -> ServingPlanner {
+        self.replan_deadline = Some(d);
+        self
+    }
+
+    /// The options for one solve: the planner's base options, with a
+    /// fresh deadline stamped if one is configured.
+    fn solve_opts(&self) -> SolveOpts {
+        let mut opts = self.opts.clone();
+        if let Some(d) = self.replan_deadline {
+            opts.budget = SolveBudget::deadline_in(d);
+        }
+        opts
     }
 
     /// Plan (or re-plan) `g` under `sc` with the planner's default
@@ -362,7 +386,7 @@ impl ServingPlanner {
         sc: &Scenario,
         alg: Algorithm,
     ) -> Result<PlannedStages, PlaceError> {
-        let r = self.service.plan(g, sc, alg, &self.opts)?;
+        let r = self.service.plan(g, sc, alg, &self.solve_opts())?;
         let stages = stages_of(g, &r.placement);
         Ok(PlannedStages { placement: r.placement, stages })
     }
@@ -378,7 +402,7 @@ impl ServingPlanner {
         g: &OpGraph,
         req: &PlanRequest,
     ) -> Result<PlannedStages, PlaceError> {
-        let r = self.service.plan_request(g, req, &self.opts)?;
+        let r = self.service.plan_request(g, req, &self.solve_opts())?;
         let stages = stages_of(g, &r.placement);
         Ok(PlannedStages { placement: r.placement, stages })
     }

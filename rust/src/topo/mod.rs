@@ -71,6 +71,14 @@ pub enum TopoSpec {
     Matrix { bw: Vec<Vec<f64>>, lat: Vec<Vec<f64>> },
 }
 
+/// Slot-count sanity bound for topology shapes and materialization. A
+/// materialized [`Topology`] holds n×n matrices, so fuzzed or
+/// fat-fingered counts (`islands:999999999x999999999@…`,
+/// `999999xacc,topo=uniform:900`) must be rejected instead of allocated
+/// (or usize-overflowed) on. Far above any deployment the simulator can
+/// drive; at the bound the matrices are ~33 MB each.
+pub const MAX_SLOTS: usize = 2048;
+
 fn parse_rate(s: &str, what: &str) -> Result<f64, String> {
     let v: f64 =
         s.parse().map_err(|_| format!("topology: bad {what} '{s}' (expected a number)"))?;
@@ -147,6 +155,11 @@ impl TopoSpec {
                 });
                 let groups = match block {
                     Some((g, sz)) => {
+                        if g.checked_mul(sz).map_or(true, |t| t > MAX_SLOTS) {
+                            return Err(format!(
+                                "islands spec '{s}' covers more than {MAX_SLOTS} slots"
+                            ));
+                        }
                         (0..g).map(|i| (i * sz..(i + 1) * sz).collect()).collect()
                     }
                     None => parse_groups(shape)?,
@@ -170,10 +183,22 @@ impl TopoSpec {
                         _ => Err(format!("tiered spec: bad {what} '{}'", dims[i])),
                     }
                 };
+                let hosts = dim(0, "host count")?;
+                let islands_per_host = dim(1, "islands-per-host")?;
+                let size = dim(2, "island size")?;
+                if hosts
+                    .checked_mul(islands_per_host)
+                    .and_then(|t| t.checked_mul(size))
+                    .map_or(true, |t| t > MAX_SLOTS)
+                {
+                    return Err(format!(
+                        "tiered spec '{s}' covers more than {MAX_SLOTS} slots"
+                    ));
+                }
                 Ok(TopoSpec::Tiered {
-                    hosts: dim(0, "host count")?,
-                    islands_per_host: dim(1, "islands-per-host")?,
-                    size: dim(2, "island size")?,
+                    hosts,
+                    islands_per_host,
+                    size,
                     nvlink: parse_rate(rs[0], "nvlink bandwidth")?,
                     pcie: parse_rate(rs[1], "pcie bandwidth")?,
                     net: parse_rate(rs[2], "network bandwidth")?,
@@ -324,6 +349,12 @@ impl Topology {
     /// slots (dense order: accelerators `0..k`, CPUs `k..k+l`).
     pub fn from_spec(spec: &TopoSpec, k: usize, l: usize) -> Result<Topology, String> {
         let n = k + l;
+        if n > MAX_SLOTS {
+            return Err(format!(
+                "topology: fleet has {n} slots, more than the {MAX_SLOTS} a \
+                 per-pair topology can cover"
+            ));
+        }
         if let Some(acc) = spec.acc_slots() {
             if acc != k {
                 return Err(format!(

@@ -24,7 +24,7 @@ pub enum Json {
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -208,9 +208,17 @@ impl std::fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Nesting bound for the recursive-descent parser. Each `[`/`{` level
+/// costs a few stack frames, so unbounded input like `[[[[…` would
+/// overflow the thread stack (an abort, not an `Err`) — fed to us by any
+/// malformed or hostile workload file. Far above any real workload's
+/// nesting, far below stack exhaustion.
+const MAX_DEPTH: usize = 512;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -239,8 +247,8 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Parser::object),
+            Some(b'[') => self.nested(Parser::array),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -257,6 +265,21 @@ impl<'a> Parser<'a> {
         } else {
             Err(self.err(&format!("expected '{}'", lit)))
         }
+    }
+
+    /// Run a container parse one nesting level down, restoring the level
+    /// on the way out; errors (not aborts) past [`MAX_DEPTH`].
+    fn nested(
+        &mut self,
+        f: fn(&mut Parser<'a>) -> Result<Json, JsonError>,
+    ) -> Result<Json, JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        let r = f(self);
+        self.depth -= 1;
+        r
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
@@ -437,6 +460,18 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        // one past the cap must error; an abort here is the bug
+        let deep = "[".repeat(MAX_DEPTH + 1);
+        assert!(Json::parse(&deep).is_err());
+        let deep_obj = "{\"a\":".repeat(MAX_DEPTH + 1);
+        assert!(Json::parse(&deep_obj).is_err());
+        // within the cap still parses
+        let ok = format!("{}{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

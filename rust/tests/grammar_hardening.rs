@@ -1,0 +1,209 @@
+//! Grammar hardening (PR-10 satellite): every user-facing parser —
+//! [`Fleet::parse`], [`TopoSpec::parse`], [`EventScript::parse`],
+//! [`Json::parse`] and the workload-JSON loader — must return `Err` on
+//! malformed input, never panic, hang, or allocate absurdly. These
+//! grammars are fed directly from CLI flags and on-disk files, so a
+//! malformed byte string is normal operation, not an edge case.
+//!
+//! Two corpora per grammar, both seeded and deterministic:
+//! * arbitrary byte strings (UTF-8-lossied), which exercise the lexer
+//!   paths, and
+//! * random mutations of *valid* strings, which get much deeper into the
+//!   grammar than noise ever would.
+//!
+//! Every probe runs under `catch_unwind`; the assertion is only "no
+//! panic" — whether the parse succeeds is the grammar's business.
+
+use dnn_partition::coordinator::placement::Fleet;
+use dnn_partition::simx::event::EventScript;
+use dnn_partition::topo::TopoSpec;
+use dnn_partition::util::json::Json;
+use dnn_partition::util::rng::Rng;
+use dnn_partition::workloads::{self, json as wjson};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Bytes that appear in the grammars under test, so random edits stay in
+/// the neighborhood of parseable input instead of failing at the first
+/// character.
+const GRAMMAR_BYTES: &[u8] = b"0123456789xXaccpufstlow@:/.,|;+-=*_\"{}[]einrghbwkmd ";
+
+fn arbitrary_bytes(rng: &mut Rng, max_len: usize) -> String {
+    let len = rng.gen_range(max_len + 1);
+    let bytes: Vec<u8> = (0..len).map(|_| rng.gen_range(256) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// One random edit: delete, insert, replace, truncate, or swap.
+fn mutate(rng: &mut Rng, s: &str) -> String {
+    let mut b: Vec<u8> = s.as_bytes().to_vec();
+    if b.is_empty() {
+        return String::from_utf8_lossy(&[*rng.choose(GRAMMAR_BYTES)]).into_owned();
+    }
+    let pos = rng.gen_range(b.len());
+    match rng.gen_range(5) {
+        0 => {
+            b.remove(pos);
+        }
+        1 => b.insert(pos, *rng.choose(GRAMMAR_BYTES)),
+        2 => b[pos] = *rng.choose(GRAMMAR_BYTES),
+        3 => b.truncate(pos),
+        _ => {
+            let pos2 = rng.gen_range(b.len());
+            b.swap(pos, pos2);
+        }
+    }
+    String::from_utf8_lossy(&b).into_owned()
+}
+
+/// Assert that `parse(input)` returns (Ok or Err) without panicking.
+fn assert_no_panic(what: &str, input: &str, parse: impl Fn(&str)) {
+    let shown: String = input.chars().take(120).collect();
+    assert!(
+        catch_unwind(AssertUnwindSafe(|| parse(input))).is_ok(),
+        "{what} panicked on input: {shown:?}"
+    );
+}
+
+const VALID_FLEETS: &[&str] = &[
+    "2xfast@2:32768,4xslow:16384,1xcpu",
+    "8xacc:32768,1xcpu,topo=islands:2x4@900/64",
+    "2xacc,bw=5",
+    "1xslot+acc,1xslot2+cpu",
+    "3xgpu@1.5:1024,topo=tiered:2x2x2@900/64/8",
+    "2xacc,topo=matrix:0;5/5;0",
+    "4xacc,1xcpu,topo=islands:0.2|1.3@900/64",
+];
+
+const VALID_TOPOS: &[&str] = &[
+    "uniform:900",
+    "islands:2x4@900/64",
+    "islands:0.2|1.3@900/64",
+    "tiered:2x2x2@900/64/8",
+    "matrix:0;5/5;0",
+    "matrix:0;5/5;0+0;1/1;0",
+];
+
+const VALID_EVENTS: &[&str] = &[
+    "fail:acc0@t=5,slow:acc1*0.5@t=9,spike:+8@t=12",
+    "fail:acc0@t=5,recover:acc0@t=12",
+    "slow:cpu0*0.25@t=3",
+    "spike:+16@t=1",
+];
+
+#[test]
+fn fleet_parse_never_panics() {
+    let mut rng = Rng::new(0xF1EE7);
+    for _ in 0..1500 {
+        let s = arbitrary_bytes(&mut rng, 64);
+        assert_no_panic("Fleet::parse", &s, |s| {
+            let _ = Fleet::parse(s);
+        });
+    }
+    for _ in 0..1500 {
+        let mut s = rng.choose(VALID_FLEETS).to_string();
+        for _ in 0..=rng.gen_range(4) {
+            s = mutate(&mut rng, &s);
+        }
+        assert_no_panic("Fleet::parse", &s, |s| {
+            let _ = Fleet::parse(s);
+        });
+    }
+}
+
+#[test]
+fn topo_parse_never_panics() {
+    let mut rng = Rng::new(0x7090);
+    for _ in 0..1500 {
+        let s = arbitrary_bytes(&mut rng, 64);
+        assert_no_panic("TopoSpec::parse", &s, |s| {
+            let _ = TopoSpec::parse(s);
+        });
+    }
+    for _ in 0..1500 {
+        let mut s = rng.choose(VALID_TOPOS).to_string();
+        for _ in 0..=rng.gen_range(4) {
+            s = mutate(&mut rng, &s);
+        }
+        assert_no_panic("TopoSpec::parse", &s, |s| {
+            let _ = TopoSpec::parse(s);
+        });
+    }
+}
+
+#[test]
+fn fuzzed_slot_counts_error_instead_of_allocating() {
+    // the shapes a fuzzer finds first: counts that would materialize
+    // absurd per-slot (or n²) state if parsed literally
+    for s in [
+        "islands:999999999x999999999@900/64",
+        "islands:18446744073709551615x2@900/64",
+        "tiered:999999x999999x999999@900/64/8",
+    ] {
+        assert!(TopoSpec::parse(s).is_err(), "{s} must be rejected");
+    }
+    assert!(Fleet::parse("999999999xacc,topo=uniform:900").is_err());
+    assert!(Fleet::parse("99999999999999999999xacc").is_err(), "count overflow");
+}
+
+#[test]
+fn event_script_parse_never_panics() {
+    let mut rng = Rng::new(0xE5E27);
+    for _ in 0..1500 {
+        let s = arbitrary_bytes(&mut rng, 64);
+        assert_no_panic("EventScript::parse", &s, |s| {
+            let _ = EventScript::parse(s);
+        });
+    }
+    for _ in 0..1500 {
+        let mut s = rng.choose(VALID_EVENTS).to_string();
+        for _ in 0..=rng.gen_range(4) {
+            s = mutate(&mut rng, &s);
+        }
+        assert_no_panic("EventScript::parse", &s, |s| {
+            let _ = EventScript::parse(s);
+        });
+    }
+}
+
+#[test]
+fn workload_json_loader_never_panics() {
+    let mut rng = Rng::new(0x15011);
+    // the real paper-format serialization of a real workload is the
+    // mutation seed — mutations land inside the schema, not just the lexer
+    let w = &workloads::table1_workloads()[0];
+    let valid = wjson::to_json(w).to_string();
+    let load = |text: &str| {
+        if let Ok(j) = Json::parse(text) {
+            let _ = wjson::from_json_workload(&j);
+            let _ = wjson::from_json(&j);
+        }
+    };
+    for _ in 0..400 {
+        let s = arbitrary_bytes(&mut rng, 128);
+        assert_no_panic("workload JSON loader", &s, load);
+    }
+    for _ in 0..400 {
+        let mut s = valid.clone();
+        for _ in 0..=rng.gen_range(6) {
+            s = mutate(&mut rng, &s);
+        }
+        assert_no_panic("workload JSON loader", &s, load);
+    }
+}
+
+#[test]
+fn json_parse_never_panics_and_bounds_recursion() {
+    let mut rng = Rng::new(0x150F2);
+    for _ in 0..2000 {
+        let s = arbitrary_bytes(&mut rng, 96);
+        assert_no_panic("Json::parse", &s, |s| {
+            let _ = Json::parse(s);
+        });
+    }
+    // the classic parser-killer: unbounded nesting must be an Err, not a
+    // stack overflow (which aborts the process — catch_unwind can't see it)
+    let bomb = "[".repeat(1_000_000);
+    assert!(Json::parse(&bomb).is_err());
+    let obj_bomb = "{\"a\":".repeat(1_000_000);
+    assert!(Json::parse(&obj_bomb).is_err());
+}

@@ -1,0 +1,404 @@
+//! PR-10 resilience contracts (DESIGN.md §11): deadline-aware anytime
+//! planning, panic isolation, and admission control over the concurrent
+//! service.
+//!
+//! * **Budget-off equivalence.** With no [`SolveBudget`] set, every
+//!   registry solver through the service is bitwise identical to a direct
+//!   solver call — the budget plumbing and unwind envelopes must be
+//!   invisible when unused.
+//! * **Deadlines degrade, never fail.** A 1 ms deadline on an IP-hard
+//!   instance answers through the anytime search or the degradation
+//!   ladder — never an error, never a hang.
+//! * **Anytime × warm start.** A node-limit-truncated solve stores its
+//!   incumbent; a larger-budget re-solve is never worse and
+//!   bitwise-matches an unbudgeted cold solve once the search closes.
+//! * **Panic isolation.** An injected solver panic fails exactly the
+//!   poisoned fingerprint's requests; everything else keeps planning and
+//!   the `hits + misses + dedup_waits == requests` accounting stays exact.
+//! * **Waiters always wake.** A context build that panics completes the
+//!   single-flight entry with the error — every deduped waiter returns
+//!   `Err`, none hang, and the fingerprint retries cleanly afterwards.
+//! * **Admission control.** Past `max_concurrent` + `max_queue`, requests
+//!   shed with [`PlaceError::Overloaded`] instead of queueing unboundedly.
+//!
+//! The fault-injection hook is process-wide, so the tests that arm it
+//! serialize behind one mutex and disarm it on every exit path.
+
+use dnn_partition::algos::PlaceError;
+use dnn_partition::baselines::expert::ExpertStyle;
+use dnn_partition::coordinator::concurrent::{
+    set_fault_hook, AdmissionLimits, ConcurrentService, FaultPoint,
+};
+use dnn_partition::coordinator::context::{
+    fingerprint_req, PlanQuality, PlanRung, ProblemCtx, SolveBudget, SolveOpts,
+};
+use dnn_partition::coordinator::placement::{AlgoChoice, Fleet, Objective, PlanRequest, Scenario};
+use dnn_partition::coordinator::planner::Algorithm;
+use dnn_partition::util::proptest::random_dag;
+use dnn_partition::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Duration;
+
+/// Serializes the tests that install the process-wide fault hook.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Disarms the fault hook on drop, so a failing assertion cannot leave a
+/// panicking hook armed for the rest of the process.
+struct HookGuard;
+
+impl Drop for HookGuard {
+    fn drop(&mut self) {
+        set_fault_hook(None);
+    }
+}
+
+fn exact_opts() -> SolveOpts {
+    SolveOpts {
+        ip_budget: Duration::from_secs(10),
+        // gap 0 ⇒ the IPs close these small instances to proven
+        // optimality, making re-solves comparable bitwise
+        gap_target: 0.0,
+        expert: Some(ExpertStyle::EqualStripes),
+        ..SolveOpts::default()
+    }
+}
+
+#[test]
+fn unbudgeted_service_solves_match_direct_solver_calls_for_every_algorithm() {
+    let mut rng = Rng::new(0xBEEF01);
+    let g = random_dag(&mut rng, 8, 0.3);
+    let sc = Scenario::new(2, 1, f64::INFINITY);
+    let opts = exact_opts();
+    assert!(opts.budget.is_unlimited(), "this sweep is the budget-off contract");
+
+    let ctx = ProblemCtx::from_request(g.clone(), sc.to_request());
+    let svc = ConcurrentService::new(4, 16);
+    for alg in Algorithm::ALL {
+        let direct = alg.solver().solve(&ctx, &opts).unwrap();
+        let via_svc = svc.plan(&g, &sc, alg, &opts).unwrap();
+        assert_eq!(
+            direct.placement.objective.to_bits(),
+            via_svc.placement.objective.to_bits(),
+            "{alg:?}: unbudgeted service solve must be bitwise identical"
+        );
+        assert_eq!(
+            direct.placement.assignment, via_svc.placement.assignment,
+            "{alg:?}: assignments must match"
+        );
+        assert_eq!(
+            via_svc.quality,
+            PlanQuality::Exact,
+            "{alg:?}: an untruncated solve is exact quality"
+        );
+    }
+}
+
+#[test]
+fn millisecond_deadline_on_hard_instance_answers_without_error() {
+    let mut rng = Rng::new(0xDEAD11);
+    // large enough that the contiguous IP cannot close it in 1 ms
+    let g = random_dag(&mut rng, 22, 0.35);
+    let req = PlanRequest::new(Fleet::uniform(4, 1, f64::INFINITY))
+        .objective(Objective::Throughput)
+        .algorithm(AlgoChoice::Auto);
+    let svc = ConcurrentService::new(2, 8);
+    let opts = SolveOpts {
+        ip_budget: Duration::from_secs(10),
+        budget: SolveBudget::deadline_in(Duration::from_millis(1)),
+        ..SolveOpts::default()
+    };
+    let r = svc
+        .plan_request(&g, &req, &opts)
+        .expect("a deadline may degrade the answer, never lose it");
+    assert!(!r.placement.assignment.is_empty());
+    // Exact is allowed (the machine may be fast enough), but most runs
+    // land on an anytime rung; either way the request answered.
+    match r.quality {
+        PlanQuality::Exact | PlanQuality::Anytime(_) => {}
+    }
+}
+
+#[test]
+fn already_expired_deadline_degrades_to_the_greedy_floor() {
+    let mut rng = Rng::new(0xDEAD22);
+    let g = random_dag(&mut rng, 10, 0.3);
+    let req = PlanRequest::new(Fleet::uniform(3, 1, f64::INFINITY))
+        .objective(Objective::Throughput)
+        .algorithm(AlgoChoice::Auto);
+    let svc = ConcurrentService::new(2, 8);
+    let opts = SolveOpts {
+        budget: SolveBudget::deadline_in(Duration::ZERO),
+        ..SolveOpts::default()
+    };
+    let r = svc.plan_request(&g, &req, &opts).expect("the ladder floor always answers");
+    assert_eq!(
+        r.quality,
+        PlanQuality::Anytime(PlanRung::Greedy),
+        "an expired deadline goes straight to the greedy floor"
+    );
+}
+
+#[test]
+fn node_limit_truncation_is_anytime_and_warm_start_stays_monotone() {
+    let mut rng = Rng::new(0xA11CE);
+    let g = random_dag(&mut rng, 10, 0.3);
+    let req = PlanRequest::new(Fleet::uniform(2, 1, f64::INFINITY))
+        .objective(Objective::Throughput)
+        .algorithm(AlgoChoice::Fixed(Algorithm::IpContiguous));
+    let svc = ConcurrentService::new(1, 4);
+
+    // node limits are deterministic (unlike wall-clock deadlines), so the
+    // truncation point — and hence this test — is reproducible
+    let truncated_opts = SolveOpts {
+        gap_target: 0.0,
+        budget: SolveBudget { deadline: None, node_limit: Some(1) },
+        ..exact_opts()
+    };
+    let truncated = svc
+        .plan_request(&g, &req, &truncated_opts)
+        .expect("the warm-started incumbent answers even a 1-node search");
+    assert_eq!(
+        truncated.quality,
+        PlanQuality::Anytime(PlanRung::Ip),
+        "a node-capped search that returns is anytime quality"
+    );
+    assert_eq!(svc.seeds_len(), 1, "the truncated solve must store its incumbent");
+
+    // re-solve with the budget lifted: resumes from the stored incumbent,
+    // closes the search, and may never be worse than the truncated answer
+    let full_opts = exact_opts();
+    let full = svc.plan_request(&g, &req, &full_opts).unwrap();
+    assert_eq!(full.quality, PlanQuality::Exact);
+    assert!(
+        full.placement.objective <= truncated.placement.objective + 1e-12,
+        "a longer-budget re-solve must never be worse than the truncated one"
+    );
+
+    // once closed, the warm-started answer is bitwise the cold unbudgeted
+    // answer — truncation must leave no trace in the final optimum
+    let cold_svc = ConcurrentService::new(1, 4);
+    let cold = cold_svc.plan_request(&g, &req, &full_opts).unwrap();
+    assert_eq!(
+        full.placement.objective.to_bits(),
+        cold.placement.objective.to_bits(),
+        "closed warm-started solve must bitwise-match the cold solve"
+    );
+    assert_eq!(full.placement.assignment, cold.placement.assignment);
+}
+
+#[test]
+fn injected_solver_panic_fails_only_the_poisoned_fingerprint() {
+    let _serial = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _disarm = HookGuard;
+    let mut rng = Rng::new(0xFA57);
+    let g = random_dag(&mut rng, 8, 0.3);
+    let reqs: Vec<PlanRequest> = (2..=4)
+        .map(|k| {
+            PlanRequest::new(Fleet::uniform(k, 1, f64::INFINITY))
+                .objective(Objective::Throughput)
+                .algorithm(AlgoChoice::Fixed(Algorithm::Dp))
+        })
+        .collect();
+    let poisoned_fp = fingerprint_req(&g, &reqs[1]);
+    set_fault_hook(Some(Arc::new(move |point, fp| {
+        if point == FaultPoint::Solve && fp == poisoned_fp {
+            panic!("injected solver fault");
+        }
+    })));
+
+    let svc = ConcurrentService::new(4, 16);
+    let opts = SolveOpts::default();
+    let rounds = 4;
+    let panicked = AtomicUsize::new(0);
+    let answered = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            scope.spawn(|| {
+                for _ in 0..rounds {
+                    for req in &reqs {
+                        match svc.plan_request(&g, req, &opts) {
+                            Ok(_) => {
+                                answered.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(PlaceError::SolverPanicked(_))
+                                if fingerprint_req(&g, req) == poisoned_fp =>
+                            {
+                                panicked.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => panic!("healthy request failed: {e}"),
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let total = 4 * rounds * reqs.len();
+    assert_eq!(
+        panicked.load(Ordering::Relaxed),
+        4 * rounds,
+        "every solve of the poisoned fingerprint fails with SolverPanicked"
+    );
+    assert_eq!(
+        answered.load(Ordering::Relaxed),
+        2 * 4 * rounds,
+        "every other request keeps planning"
+    );
+    assert_eq!(
+        svc.hits() + svc.misses() + svc.dedup_waits(),
+        total,
+        "the cache accounting identity survives injected panics"
+    );
+}
+
+#[test]
+fn context_build_panic_wakes_every_deduped_waiter_with_the_error() {
+    let _serial = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _disarm = HookGuard;
+    let mut rng = Rng::new(0xF1167);
+    let g = random_dag(&mut rng, 8, 0.3);
+    let sc = Scenario::new(3, 1, f64::INFINITY);
+    let fp = fingerprint_req(&g, &sc.to_request());
+    set_fault_hook(Some(Arc::new(move |point, hook_fp| {
+        if point == FaultPoint::ContextBuild && hook_fp == fp {
+            panic!("injected context-build fault");
+        }
+    })));
+
+    let svc = ConcurrentService::new(2, 8);
+    let workers = 6;
+    let gate = Barrier::new(workers);
+    // all workers request the same uncached fingerprint at once: one
+    // becomes the builder and panics; the rest dedup onto its flight (or
+    // retry the build) and every single one must return Err — the
+    // "waiters always wake" invariant. A hang here is the regression.
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                gate.wait();
+                let r = svc.context(&g, &sc);
+                assert!(
+                    matches!(r, Err(PlaceError::SolverPanicked(_))),
+                    "a dead builder must surface as SolverPanicked, got {r:?}"
+                );
+            });
+        }
+    });
+    assert!(svc.is_empty(), "a panicked build must not cache anything");
+
+    // disarm and retry: the fingerprint was never poisoned into the cache
+    set_fault_hook(None);
+    let ctx = svc.context(&g, &sc).expect("the next request rebuilds cleanly");
+    assert_eq!(ctx.fingerprint(), fp);
+}
+
+#[test]
+fn overload_sheds_with_overloaded_instead_of_queueing_unboundedly() {
+    let _serial = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _disarm = HookGuard;
+    let mut rng = Rng::new(0x10AD);
+    let g = random_dag(&mut rng, 8, 0.3);
+    let reqs: Vec<PlanRequest> = (2..=5)
+        .map(|k| {
+            PlanRequest::new(Fleet::uniform(k, 1, f64::INFINITY))
+                .objective(Objective::Throughput)
+                .algorithm(AlgoChoice::Fixed(Algorithm::Dp))
+        })
+        .collect();
+    let fps: Vec<u64> = reqs.iter().map(|r| fingerprint_req(&g, r)).collect();
+    // hold each admitted solve long enough that the others arrive while
+    // the single slot is taken (the hook fires inside the permit's scope)
+    set_fault_hook(Some(Arc::new(move |point, fp| {
+        if point == FaultPoint::Solve && fps.contains(&fp) {
+            std::thread::sleep(Duration::from_millis(300));
+        }
+    })));
+
+    let svc = ConcurrentService::new(4, 16).with_admission(AdmissionLimits {
+        max_concurrent: 1,
+        max_queue: 0,
+        per_tenant: 0,
+    });
+    let opts = SolveOpts::default();
+    let gate = Barrier::new(reqs.len());
+    let ok = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for req in &reqs {
+            scope.spawn(|| {
+                gate.wait();
+                match svc.plan_request(&g, req, &opts) {
+                    Ok(_) => {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(PlaceError::Overloaded) => {
+                        shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => panic!("unexpected error under overload: {e}"),
+                }
+            });
+        }
+    });
+    assert_eq!(ok.load(Ordering::Relaxed) + shed.load(Ordering::Relaxed), reqs.len());
+    assert!(ok.load(Ordering::Relaxed) >= 1, "the admitted request completes");
+    assert!(
+        shed.load(Ordering::Relaxed) >= 1,
+        "with one slot and no queue, simultaneous requests must shed"
+    );
+    assert_eq!(
+        svc.shed(),
+        shed.load(Ordering::Relaxed),
+        "the service's shed counter matches what callers observed"
+    );
+}
+
+#[test]
+fn per_tenant_cap_sheds_the_hot_fingerprint_only() {
+    let _serial = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _disarm = HookGuard;
+    let mut rng = Rng::new(0x7E4A47);
+    let g = random_dag(&mut rng, 8, 0.3);
+    let hot = PlanRequest::new(Fleet::uniform(2, 1, f64::INFINITY))
+        .objective(Objective::Throughput)
+        .algorithm(AlgoChoice::Fixed(Algorithm::Dp));
+    let hot_fp = fingerprint_req(&g, &hot);
+    set_fault_hook(Some(Arc::new(move |point, fp| {
+        if point == FaultPoint::Solve && fp == hot_fp {
+            std::thread::sleep(Duration::from_millis(300));
+        }
+    })));
+
+    // plenty of slots and queue, but one in-flight solve per tenant
+    let svc = ConcurrentService::new(4, 16).with_admission(AdmissionLimits {
+        max_concurrent: 8,
+        max_queue: 8,
+        per_tenant: 1,
+    });
+    let opts = SolveOpts::default();
+    let workers = 4;
+    let gate = Barrier::new(workers);
+    let ok = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                gate.wait();
+                match svc.plan_request(&g, &hot, &opts) {
+                    Ok(_) => {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(PlaceError::Overloaded) => {
+                        shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => panic!("unexpected error: {e}"),
+                }
+            });
+        }
+    });
+    assert_eq!(ok.load(Ordering::Relaxed) + shed.load(Ordering::Relaxed), workers);
+    assert!(ok.load(Ordering::Relaxed) >= 1);
+    assert!(
+        shed.load(Ordering::Relaxed) >= 1,
+        "a hot tenant past its in-flight cap is shed, not queued"
+    );
+}
